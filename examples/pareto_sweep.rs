@@ -1,0 +1,81 @@
+//! Design-space exploration: reproduce the shape of Figures 10-12 in one
+//! run — sweep methods × strategies × widths for multipliers and MACs,
+//! print Pareto frontiers and the paper's headline deltas (UFO-MAC vs the
+//! commercial proxy), and persist a JSON report.
+//!
+//! Run: `cargo run --release --example pareto_sweep -- --widths 8,16 [--mac]`
+
+use ufo_mac::baselines::Method;
+use ufo_mac::coordinator::{self, SweepConfig};
+use ufo_mac::util::{Args, Table};
+
+fn main() -> ufo_mac::Result<()> {
+    let args = Args::from_env();
+    let widths: Vec<usize> = args
+        .get("widths")
+        .unwrap_or("8,16")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let mac = args.has("mac");
+
+    let cfg = SweepConfig { widths: widths.clone(), mac, ..Default::default() };
+    let points = coordinator::run_sweep(&cfg);
+
+    for &n in &widths {
+        let subset: Vec<_> = points.iter().filter(|p| p.n == n).cloned().collect();
+        let mut table = Table::new(&["method", "strategy", "delay(ns)", "area(µm²)", "pareto"]);
+        let front = coordinator::pareto_front(&subset);
+        for (i, p) in subset.iter().enumerate() {
+            table.row(vec![
+                p.method.name().into(),
+                format!("{:?}", p.strategy),
+                format!("{:.4}", p.delay_ns),
+                format!("{:.1}", p.area_um2),
+                if front.contains(&i) { "◆".into() } else { "".into() },
+            ]);
+        }
+        println!(
+            "\n{}-bit {}:\n{}",
+            n,
+            if mac { "MACs (fused)" } else { "multipliers" },
+            table.render()
+        );
+
+        // Headline deltas: best UFO point vs best commercial point.
+        let best = |m: Method, key: fn(&coordinator::DesignPoint) -> f64| {
+            subset
+                .iter()
+                .filter(|p| p.method == m)
+                .map(key)
+                .fold(f64::INFINITY, f64::min)
+        };
+        let darea =
+            (1.0 - best(Method::UfoMac, |p| p.area_um2) / best(Method::Commercial, |p| p.area_um2))
+                * 100.0;
+        let ddelay =
+            (1.0 - best(Method::UfoMac, |p| p.delay_ns) / best(Method::Commercial, |p| p.delay_ns))
+                * 100.0;
+        println!("UFO-MAC vs commercial ({n}-bit): area −{darea:.1}%, delay −{ddelay:.1}%");
+
+        // Pareto-dominance count (the paper's qualitative claim).
+        let mut dominated = 0;
+        for p in subset.iter().filter(|p| p.method != Method::UfoMac) {
+            if subset
+                .iter()
+                .filter(|q| q.method == Method::UfoMac)
+                .any(|q| coordinator::dominates(q, p))
+            {
+                dominated += 1;
+            }
+        }
+        println!(
+            "UFO-MAC dominates {dominated}/{} baseline points",
+            subset.iter().filter(|p| p.method != Method::UfoMac).count()
+        );
+    }
+
+    coordinator::save_report("target/reports", "pareto_sweep", &coordinator::points_json(&points))?;
+    println!("\nreport: target/reports/pareto_sweep.json");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Quickstart: generate an 8×8 UFO-MAC multiplier, verify it exhaustively,
+//! inspect the compressor-tree arrival profile (the Figure-1 trapezoid),
+//! and compare against the commercial-IP proxy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ufo_mac::baselines::{build_design, BaselineBudget, Method};
+use ufo_mac::multiplier::{MultiplierSpec, Strategy};
+use ufo_mac::sta::Sta;
+
+fn main() -> ufo_mac::Result<()> {
+    // 1. One-liner: UFO-MAC 8×8 multiplier with the trade-off strategy.
+    let design = MultiplierSpec::new(8).strategy(Strategy::TradeOff).build()?;
+    let sta = Sta::default();
+    let rep = sta.analyze(&design.netlist);
+    println!("UFO-MAC 8×8 multiplier");
+    println!("  {} gates, {:.1} µm², {:.4} ns, {:.4} mW @1GHz",
+        rep.num_gates, rep.area_um2, rep.critical_delay_ns, rep.power_mw);
+
+    // 2. Exhaustive equivalence (all 65 536 operand pairs).
+    let equiv = ufo_mac::equiv::check_multiplier(&design)?;
+    assert!(equiv.passed && equiv.exhaustive);
+    println!("  equivalence: PASS ({} vectors, exhaustive)", equiv.vectors);
+
+    // 3. The non-uniform CT output profile that drives CPA optimization.
+    println!("\nCT arrival profile (ns):");
+    let max = design.profile.iter().copied().fold(0.0f64, f64::max);
+    for (j, t) in design.profile.iter().enumerate() {
+        println!("  col {j:>2}  {t:.4}  {}", "#".repeat((t / max * 40.0) as usize));
+    }
+    let (r1, r2) = ufo_mac::cpa::detect_regions(&design.profile);
+    println!("  → region 1 (RCA): [0,{r1})  region 2 (Sklansky): [{r1},{r2})  region 3 (carry-inc): [{r2},{})",
+        design.profile.len());
+
+    // 4. Head-to-head with the commercial proxy at the same strategy.
+    let com = build_design(Method::Commercial, 8, Strategy::TradeOff, false,
+        &BaselineBudget::default())?;
+    let rep_c = sta.analyze(&com.netlist);
+    println!("\nCommercial-IP proxy 8×8: {:.1} µm², {:.4} ns", rep_c.area_um2, rep_c.critical_delay_ns);
+    println!("UFO-MAC delta: area {:+.1}%, delay {:+.1}%",
+        (rep.area_um2 / rep_c.area_um2 - 1.0) * 100.0,
+        (rep.critical_delay_ns / rep_c.critical_delay_ns - 1.0) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! END-TO-END DRIVER (AI-acceleration scenario, paper §5.3 / Table 2).
+//!
+//! Exercises the full three-layer stack on a real small workload, proving
+//! all layers compose:
+//!
+//!   1. L3 generates an 8-bit UFO-MAC **fused MAC** gate netlist (the PE),
+//!      verifies it in the Rust simulator, then cross-checks it through
+//!      the **PJRT netlist-eval artifact** (L1 Pallas kernel, AOT-lowered).
+//!   2. L3 reports the 16×16 systolic array's area/WNS/power per method
+//!      (Table 2 shape).
+//!   3. L3 streams a real int8 GEMM workload — synthetic image patches ×
+//!      a fixed filter bank, the workload systolic arrays exist for —
+//!      through the **PJRT systolic artifact** tile by tile from the Rust
+//!      request loop (Python never runs here), cross-checks every tile
+//!      against the integer golden GEMM, and reports latency/throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example systolic_array`
+
+use std::time::Instant;
+use ufo_mac::baselines::Method;
+use ufo_mac::modules::systolic::{build_pe, systolic_report};
+use ufo_mac::multiplier::Strategy;
+use ufo_mac::runtime::{self, Runtime, K_STEPS, PES};
+use ufo_mac::util::Table;
+
+fn main() -> ufo_mac::Result<()> {
+    // ---- 1. Generate + verify the PE (fused MAC) ------------------------
+    let pe = build_pe(Method::UfoMac, 8, Strategy::TradeOff)?;
+    let equiv = ufo_mac::equiv::check_multiplier_with(&pe, 1 << 13)?;
+    assert!(equiv.passed, "PE failed simulator equivalence");
+    println!("PE (8-bit UFO-MAC fused MAC): simulator equivalence PASS ({} vectors)", equiv.vectors);
+
+    let rt = Runtime::new(runtime::default_artifact_dir())?;
+    if rt.has_artifact("netlist_eval_small") {
+        let ok = runtime::verify_design_pjrt(&rt, &pe, 4)?;
+        assert!(ok, "PE failed PJRT artifact equivalence");
+        println!("PE: PJRT netlist-eval equivalence PASS (platform: {})", rt.platform());
+    } else {
+        println!("PJRT artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+
+    // ---- 2. Array-level hardware report (Table 2 shape) ----------------
+    let mut table = Table::new(&["method", "WNS(ns)@1GHz", "area(µm²)", "power(mW)"]);
+    for m in Method::ALL {
+        let r = systolic_report(m, 8, Strategy::TradeOff, 1e9)?;
+        table.row(vec![
+            m.name().into(),
+            format!("{:.4}", r.wns_ns),
+            format!("{:.0}", r.area_um2),
+            format!("{:.3}", r.power_mw),
+        ]);
+    }
+    println!("\n16×16 systolic array, 8-bit PEs @ 1 GHz:\n{}", table.render());
+
+    // ---- 3. Real workload through the PJRT systolic artifact -----------
+    // Workload: 64 image patches (16×K each, int8, synthetic but
+    // structured) times a fixed 16-filter bank, tiled to the array.
+    let tiles = 64usize;
+    let mut rng = ufo_mac::util::Rng::seed_from_u64(0xA11C);
+    // filter bank: K_STEPS × PES, reused across tiles (weight-stationary
+    // reuse pattern at the workload level).
+    let filters: Vec<i32> = (0..K_STEPS * PES)
+        .map(|i| ((i * 37) % 255) as i32 - 127)
+        .collect();
+
+    let mut total_macs = 0u64;
+    let mut checked = 0usize;
+    let t0 = Instant::now();
+    for tile in 0..tiles {
+        // "image patch": PES × K_STEPS int8 with smooth structure + noise.
+        let patch: Vec<i32> = (0..PES * K_STEPS)
+            .map(|i| {
+                let base = ((i / K_STEPS) as f64 * 0.8 + (i % K_STEPS) as f64 * 0.15).sin();
+                ((base * 90.0) as i32 + (rng.below(21) as i32 - 10)).clamp(-128, 127)
+            })
+            .collect();
+        let acc = vec![0i32; PES * PES];
+        let out = rt.systolic(&patch, &filters, &acc, 8)?;
+        total_macs += (PES * PES * K_STEPS) as u64;
+        // Golden integer GEMM cross-check on every tile.
+        for i in 0..PES {
+            for j in 0..PES {
+                let want: i64 = (0..K_STEPS)
+                    .map(|k| i64::from(patch[i * K_STEPS + k]) * i64::from(filters[k * PES + j]))
+                    .sum();
+                assert_eq!(i64::from(out[i * PES + j]), want, "tile {tile} ({i},{j})");
+                checked += 1;
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("workload: {tiles} tiles ({} MACs) in {:.3} s through PJRT", total_macs, dt);
+    println!("  throughput: {:.2} M MAC/s (request-path, artifact-executed)", total_macs as f64 / dt / 1e6);
+    println!("  mean tile latency: {:.3} ms", dt / tiles as f64 * 1e3);
+    println!("  golden cross-check: {checked} outputs verified ✓");
+
+    // Hardware-model projection: the generated array at its achieved clock.
+    let r = systolic_report(Method::UfoMac, 8, Strategy::TimingDriven, 1e9)?;
+    let f_max_ghz = 1.0 / (r.period_ns() - r.wns_ns);
+    let hw_macs_per_s = f_max_ghz * 1e9 * (PES * PES) as f64;
+    println!(
+        "\nhardware projection: f_max ≈ {:.2} GHz ⇒ {:.1} G MAC/s for the generated array",
+        f_max_ghz,
+        hw_macs_per_s / 1e9
+    );
+    println!("END-TO-END OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Also writes ``manifest.json`` describing each
+artifact's argument shapes so the Rust side can size its buffers.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "netlist_eval_small": (
+        functools.partial(model.verify_netlist, size="small"),
+        ("netlist", "small"),
+    ),
+    "netlist_eval_large": (
+        functools.partial(model.verify_netlist, size="large"),
+        ("netlist", "large"),
+    ),
+    "systolic": (model.systolic_workload, ("systolic", None)),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, (kind, size)) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        args = model.example_args(kind, size or "small")
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "hlo_chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    man_path = os.path.join(out_dir, "manifest.json")
+    existing = {}
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(man_path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

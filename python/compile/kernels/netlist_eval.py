@@ -1,0 +1,133 @@
+"""Layer-1 Pallas kernel: bit-parallel gate-netlist evaluation.
+
+Evaluates an encoded gate-level netlist (the designs emitted by the Rust
+generators) on a batch of packed input vectors — 32 test vectors per uint32
+lane, ``BATCH`` words deep, so one execution checks ``32 × BATCH`` vectors.
+This is the functional-verification hot path the Rust coordinator drives
+through PJRT (see ``rust/src/runtime``): Python runs only at build time.
+
+Encoding (must match ``CellKind::opcode`` in ``rust/src/ir/cell.rs``):
+
+========  =======================================
+opcode    function
+========  =======================================
+0..10     BUF INV AND2 OR2 NAND2 NOR2 XOR2 XNOR2
+          AOI21 OAI21 MAJ3
+11        CONST0
+12        CONST1
+13        INPUT   (fanin0 = input ordinal)
+========  =======================================
+
+Node ``i``'s value lands in slot ``i`` of the evaluation buffer; fanin
+indices always reference earlier slots (the Rust IR is topologically
+ordered by construction).
+
+TPU mapping note (DESIGN.md §Hardware-Adaptation): the evaluation is a
+sequential scan over gates with a (BATCH,)-wide vector update per step —
+on real hardware the buffer tiles into VMEM and the scan becomes the
+grid's inner dimension; under ``interpret=True`` the same structure runs
+on CPU for correctness.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OP_BUF = 0
+OP_INV = 1
+OP_AND2 = 2
+OP_OR2 = 3
+OP_NAND2 = 4
+OP_NOR2 = 5
+OP_XOR2 = 6
+OP_XNOR2 = 7
+OP_AOI21 = 8
+OP_OAI21 = 9
+OP_MAJ3 = 10
+OP_CONST0 = 11
+OP_CONST1 = 12
+OP_INPUT = 13
+
+NUM_OPS = 14
+
+# Artifact size buckets (padded): (max_nodes, max_inputs).
+SIZES = {
+    "small": (2048, 72),
+    "large": (8192, 144),
+}
+BATCH = 8  # uint32 words per input node => 256 vectors per execution
+
+
+def _gate_value(op, a, b, c, inp, ones):
+    """Value of one gate given operand words (uint32)."""
+    zeros = jnp.zeros_like(a)
+    branches = [
+        a,                                  # BUF
+        ~a,                                 # INV
+        a & b,                              # AND2
+        a | b,                              # OR2
+        ~(a & b),                           # NAND2
+        ~(a | b),                           # NOR2
+        a ^ b,                              # XOR2
+        ~(a ^ b),                           # XNOR2
+        ~((a & b) | c),                     # AOI21
+        ~((a | b) & c),                     # OAI21
+        (a & b) | (a & c) | (b & c),        # MAJ3
+        zeros,                              # CONST0
+        ones,                               # CONST1
+        inp,                                # INPUT
+    ]
+    stacked = jnp.stack(branches)            # [NUM_OPS, BATCH]
+    return jnp.take(stacked, op, axis=0)
+
+
+def _eval_body(ops, f0, f1, f2, words):
+    """Shared evaluation loop (used by the kernel and exported for ref)."""
+    ops = jnp.asarray(ops)
+    f0 = jnp.asarray(f0)
+    f1 = jnp.asarray(f1)
+    f2 = jnp.asarray(f2)
+    words = jnp.asarray(words)
+    n = ops.shape[0]
+    batch = words.shape[0]
+    ones = jnp.full((batch,), 0xFFFFFFFF, dtype=jnp.uint32)
+
+    def step(i, buf):
+        op = ops[i]
+        a = jnp.take(buf, f0[i], axis=1)
+        b = jnp.take(buf, f1[i], axis=1)
+        c = jnp.take(buf, f2[i], axis=1)
+        inp = jnp.take(words, jnp.minimum(f0[i], words.shape[1] - 1), axis=1)
+        val = _gate_value(op, a, b, c, inp, ones)
+        return jax.lax.dynamic_update_slice(buf, val[:, None], (0, i))
+
+    buf0 = jnp.zeros((batch, n), dtype=jnp.uint32)
+    return jax.lax.fori_loop(0, n, step, buf0)
+
+
+def _kernel(ops_ref, f0_ref, f1_ref, f2_ref, words_ref, out_ref):
+    out_ref[...] = _eval_body(
+        ops_ref[...], f0_ref[...], f1_ref[...], f2_ref[...], words_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def netlist_eval(ops, f0, f1, f2, words, *, size="small"):
+    """Evaluate a padded netlist encoding on packed vectors.
+
+    Args:
+      ops, f0, f1, f2: int32[max_nodes] padded with OP_CONST0.
+      words: uint32[BATCH, max_inputs] packed input vectors.
+      size: bucket name from ``SIZES``.
+
+    Returns:
+      uint32[BATCH, max_nodes] — the value of every node.
+    """
+    max_nodes, _ = SIZES[size]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((words.shape[0], max_nodes), jnp.uint32),
+        interpret=True,
+    )(ops, f0, f1, f2, words)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth (pytest compares kernel vs. ref on random instances, and ref
+itself is validated against a python-int golden model)."""
+
+import jax.numpy as jnp
+
+from . import netlist_eval as ne
+
+
+def netlist_eval_ref(ops, f0, f1, f2, words):
+    """Reference netlist evaluation: same semantics, no pallas_call."""
+    return ne._eval_body(ops, f0, f1, f2, words)
+
+
+def systolic_ref(a, b, c):
+    """Reference systolic MAC: exact integer GEMM + accumulate."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32)) + c
+
+
+def eval_netlist_python(ops, f0, f1, f2, words):
+    """Slow python-int golden model of the netlist encoding (32-bit lanes)."""
+    n = len(ops)
+    batch = len(words)
+    mask = 0xFFFFFFFF
+    buf = [[0] * n for _ in range(batch)]
+    for i in range(n):
+        for lane in range(batch):
+            a = buf[lane][f0[i]] if f0[i] < n else 0
+            b = buf[lane][f1[i]] if f1[i] < n else 0
+            c = buf[lane][f2[i]] if f2[i] < n else 0
+            op = ops[i]
+            if op == ne.OP_BUF:
+                v = a
+            elif op == ne.OP_INV:
+                v = ~a
+            elif op == ne.OP_AND2:
+                v = a & b
+            elif op == ne.OP_OR2:
+                v = a | b
+            elif op == ne.OP_NAND2:
+                v = ~(a & b)
+            elif op == ne.OP_NOR2:
+                v = ~(a | b)
+            elif op == ne.OP_XOR2:
+                v = a ^ b
+            elif op == ne.OP_XNOR2:
+                v = ~(a ^ b)
+            elif op == ne.OP_AOI21:
+                v = ~((a & b) | c)
+            elif op == ne.OP_OAI21:
+                v = ~((a | b) & c)
+            elif op == ne.OP_MAJ3:
+                v = (a & b) | (a & c) | (b & c)
+            elif op == ne.OP_CONST0:
+                v = 0
+            elif op == ne.OP_CONST1:
+                v = mask
+            elif op == ne.OP_INPUT:
+                v = words[lane][min(f0[i], len(words[lane]) - 1)]
+            else:
+                raise ValueError(f"bad opcode {op}")
+            buf[lane][i] = v & mask
+    return buf

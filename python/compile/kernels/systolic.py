@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: output-stationary systolic-array MAC step.
+
+Emulates the paper's 16×16 processing-element array (§5.3, Table 2): each
+PE holds an accumulator and performs one fused multiply-accumulate per
+cycle — exactly the datapath of the fused MAC the Rust generator builds in
+gates. The kernel computes ``C += A @ B`` as `K` rank-1 MAC waves, the
+dataflow an output-stationary array executes, with exact integer
+arithmetic (int8/int16 operands, int32 accumulation).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (16, 16) accumulator
+tile lives in VMEM; the K-loop is a `fori_loop` whose body is the rank-1
+MXU-feedable update. ``interpret=True`` executes the identical structure
+on CPU for correctness and for the PJRT-driven example workload.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Array geometry (the paper's systolic arrays are 16×16 PEs).
+PES = 16
+# Workload depth per execution (columns of A / rows of B streamed through).
+K_STEPS = 64
+
+
+def _kernel(a_ref, b_ref, c_ref, out_ref):
+    a = a_ref[...]                     # [PES, K] int32 (int8/int16-range)
+    b = b_ref[...]                     # [K, PES]
+    acc0 = c_ref[...]                  # [PES, PES] int32
+
+    def step(k, acc):
+        # One systolic wave: every PE(i,j) does acc += a[i,k] * b[k,j].
+        col = jax.lax.dynamic_slice(a, (0, k), (PES, 1))   # [PES, 1]
+        row = jax.lax.dynamic_slice(b, (k, 0), (1, PES))   # [1, PES]
+        return acc + col * row
+
+    out_ref[...] = jax.lax.fori_loop(0, a.shape[1], step, acc0)
+
+
+@jax.jit
+def systolic_mac(a, b, c):
+    """C + A@B on the 16×16 output-stationary array.
+
+    Operands travel as int32 (the PJRT bridge's narrowest integer literal)
+    but carry int8/int16-range values — the Rust caller enforces the range
+    contract of the hardware variant it is modelling; arithmetic is exact
+    either way.
+
+    Args:
+      a: int32 [PES, K_STEPS] west-edge operand stream.
+      b: int32 [K_STEPS, PES] north-edge operand stream.
+      c: int32 [PES, PES] resident accumulators.
+
+    Returns:
+      int32 [PES, PES] updated accumulators.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((PES, PES), jnp.int32),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,56 @@
+"""Layer-2 JAX evaluation workloads (build-time only).
+
+Two compute graphs, both calling the Layer-1 Pallas kernels, AOT-lowered
+to HLO text by :mod:`compile.aot` and executed from Rust via PJRT:
+
+* :func:`verify_netlist` — functional-verification workload: evaluate an
+  encoded gate netlist on 256 packed random vectors (8 uint32 words × 32
+  lanes per input).
+* :func:`systolic_workload` — the 16×16 output-stationary systolic GEMM
+  tile (fused-MAC semantics) used by the end-to-end example to stream a
+  real int8 workload through the architecture the generated MAC hardware
+  implements.
+
+Nothing in this module runs at request time; the Rust coordinator loads
+the lowered artifacts once and feeds them concrete buffers.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import netlist_eval as ne
+from .kernels import systolic as sy
+
+
+def verify_netlist(ops, f0, f1, f2, words, *, size="small"):
+    """Evaluate every node of the encoded netlist on packed vectors.
+
+    Returns the full node-value buffer; the Rust side extracts the output
+    slots it cares about (it knows the node indices).
+    """
+    return (ne.netlist_eval(ops, f0, f1, f2, words, size=size),)
+
+
+def systolic_workload(a, b, c):
+    """One 16×16×K_STEPS fused-MAC tile: ``C + A @ B`` (int32 exact)."""
+    return (sy.systolic_mac(a, b, c),)
+
+
+def example_args(kind, size="small"):
+    """Shape/dtype specs used for AOT lowering."""
+    if kind == "netlist":
+        max_nodes, max_inputs = ne.SIZES[size]
+        i32 = lambda n: jnp.zeros((n,), jnp.int32)  # noqa: E731
+        return (
+            i32(max_nodes),
+            i32(max_nodes),
+            i32(max_nodes),
+            i32(max_nodes),
+            jnp.zeros((ne.BATCH, max_inputs), jnp.uint32),
+        )
+    if kind == "systolic":
+        return (
+            jnp.zeros((sy.PES, sy.K_STEPS), jnp.int32),
+            jnp.zeros((sy.K_STEPS, sy.PES), jnp.int32),
+            jnp.zeros((sy.PES, sy.PES), jnp.int32),
+        )
+    raise ValueError(f"unknown artifact kind {kind}")

@@ -1,0 +1,56 @@
+"""Systolic MAC kernel vs. reference (exact integer GEMM)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import systolic as sy
+
+
+@pytest.mark.parametrize("dtype,lo,hi", [(np.int32, -128, 127), (np.int32, -32768, 32767)])
+def test_kernel_matches_ref(dtype, lo, hi):
+    rng = np.random.default_rng(0)
+    a = rng.integers(lo, hi + 1, size=(sy.PES, sy.K_STEPS)).astype(dtype)
+    b = rng.integers(lo, hi + 1, size=(sy.K_STEPS, sy.PES)).astype(dtype)
+    c = rng.integers(-(2**20), 2**20, size=(sy.PES, sy.PES)).astype(np.int32)
+    out = np.asarray(sy.systolic_mac(a, b, c))
+    want = np.asarray(ref.systolic_ref(a, b, c))
+    np.testing.assert_array_equal(out, want)
+
+
+def test_matches_python_integer_gemm():
+    rng = np.random.default_rng(7)
+    a = rng.integers(-128, 128, size=(sy.PES, sy.K_STEPS)).astype(np.int32)
+    b = rng.integers(-128, 128, size=(sy.K_STEPS, sy.PES)).astype(np.int32)
+    c = np.zeros((sy.PES, sy.PES), dtype=np.int32)
+    out = np.asarray(sy.systolic_mac(a, b, c))
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(out.astype(np.int64), want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_accumulation_chains(seed):
+    """Chained executions = one big GEMM (the runtime's streaming mode)."""
+    rng = np.random.default_rng(seed)
+    a1 = rng.integers(-128, 128, size=(sy.PES, sy.K_STEPS)).astype(np.int32)
+    b1 = rng.integers(-128, 128, size=(sy.K_STEPS, sy.PES)).astype(np.int32)
+    a2 = rng.integers(-128, 128, size=(sy.PES, sy.K_STEPS)).astype(np.int32)
+    b2 = rng.integers(-128, 128, size=(sy.K_STEPS, sy.PES)).astype(np.int32)
+    c0 = np.zeros((sy.PES, sy.PES), dtype=np.int32)
+    c1 = np.asarray(sy.systolic_mac(a1, b1, c0))
+    c2 = np.asarray(sy.systolic_mac(a2, b2, c1))
+    big_a = np.concatenate([a1, a2], axis=1).astype(np.int64)
+    big_b = np.concatenate([b1, b2], axis=0).astype(np.int64)
+    np.testing.assert_array_equal(c2.astype(np.int64), big_a @ big_b)
+
+
+def test_saturating_free_exactness_at_extremes():
+    """All-extreme operands stay exact in int32 (no silent overflow at
+    this K: 64 × 128 × 128 ≈ 2^20 ≪ 2^31)."""
+    a = np.full((sy.PES, sy.K_STEPS), -128, dtype=np.int8)
+    b = np.full((sy.K_STEPS, sy.PES), 127, dtype=np.int8)
+    c = np.zeros((sy.PES, sy.PES), dtype=np.int32)
+    out = np.asarray(sy.systolic_mac(a, b, c))
+    assert (out == -128 * 127 * sy.K_STEPS).all()

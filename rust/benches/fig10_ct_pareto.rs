@@ -1,0 +1,78 @@
+//! Figure 10 — Pareto frontiers of synthesized compressor trees
+//! (8/16/32-bit). Methods: UFO-MAC CT, RL-MUL CT, commercial-proxy (Dadda)
+//! CT. GOMIL is excluded exactly as in the paper ("GOMIL's compressor tree
+//! is merged into its RTL and cannot be exactly decoupled").
+
+use ufo_mac::baselines::rlmul;
+use ufo_mac::bench::Bench;
+use ufo_mac::ct::{self, CtArchitecture, OrderStrategy};
+use ufo_mac::ir::{CellLib, Netlist};
+use ufo_mac::sta::Sta;
+use ufo_mac::synth::CompressorTiming;
+
+#[derive(Clone, Copy)]
+struct Point {
+    delay_ns: f64,
+    area_um2: f64,
+}
+
+fn ct_point(n: usize, arch: Option<CtArchitecture>, rlmul_iters: Option<usize>) -> Point {
+    let lib = CellLib::nangate45();
+    let tm = CompressorTiming::from_lib(&lib);
+    let mut nl = Netlist::new("ct");
+    let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+    let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+    let m = ufo_mac::ppg::and_array(&mut nl, &lib, &a, &b);
+    let out = match (arch, rlmul_iters) {
+        (Some(arch), _) => ct::synthesize(&mut nl, &tm, m.columns, arch, None),
+        (None, Some(iters)) => {
+            let res = rlmul::search(&m.columns, iters, 0xF16);
+            let mut cols = m.columns;
+            cols.resize(res.plan.width().max(cols.len()), Vec::new());
+            ct::build_ct(&mut nl, &tm, cols, &res.plan, OrderStrategy::Naive)
+        }
+        _ => unreachable!(),
+    };
+    for (j, col) in out.rows.iter().enumerate() {
+        for (k, s) in col.iter().enumerate() {
+            nl.output(format!("o{j}_{k}"), s.node);
+        }
+    }
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+    let rep = sta.analyze(&nl);
+    Point { delay_ns: rep.critical_delay_ns, area_um2: rep.area_um2 }
+}
+
+fn main() {
+    let bench = Bench::new("fig10_ct_pareto");
+    let quick = std::env::var("UFO_BENCH_QUICK").is_ok();
+    let widths: &[usize] = if quick { &[8, 16] } else { &[8, 16, 32] };
+    let rl_iters = if quick { 8 } else { 40 };
+
+    println!("\nFigure 10 reproduction: compressor-tree (delay, area) points");
+    for &n in widths {
+        let ufo = ct_point(n, Some(CtArchitecture::UfoMac), None);
+        let rl = ct_point(n, None, Some(rl_iters));
+        let com = ct_point(n, Some(CtArchitecture::Dadda), None);
+        let wal = ct_point(n, Some(CtArchitecture::Wallace), None);
+        println!("  {n:>2}-bit  UFO-MAC    {:.4} ns  {:.1} µm²", ufo.delay_ns, ufo.area_um2);
+        println!("  {n:>2}-bit  RL-MUL     {:.4} ns  {:.1} µm²", rl.delay_ns, rl.area_um2);
+        println!("  {n:>2}-bit  commercial {:.4} ns  {:.1} µm²", com.delay_ns, com.area_um2);
+        println!("  {n:>2}-bit  (wallace)  {:.4} ns  {:.1} µm²", wal.delay_ns, wal.area_um2);
+        bench.metric(&format!("ufo_delay_{n}"), ufo.delay_ns, "ns");
+        bench.metric(&format!("ufo_area_{n}"), ufo.area_um2, "um2");
+        bench.metric(&format!("rlmul_delay_{n}"), rl.delay_ns, "ns");
+        bench.metric(&format!("rlmul_area_{n}"), rl.area_um2, "um2");
+        bench.metric(&format!("commercial_delay_{n}"), com.delay_ns, "ns");
+        bench.metric(&format!("commercial_area_{n}"), com.area_um2, "um2");
+
+        // Paper's qualitative claim: UFO-MAC CT is not dominated.
+        let dominated = (rl.delay_ns <= ufo.delay_ns && rl.area_um2 < ufo.area_um2)
+            || (com.delay_ns <= ufo.delay_ns && com.area_um2 < ufo.area_um2)
+            || (rl.delay_ns < ufo.delay_ns && rl.area_um2 <= ufo.area_um2)
+            || (com.delay_ns < ufo.delay_ns && com.area_um2 <= ufo.area_um2);
+        assert!(!dominated, "{n}-bit: UFO-MAC CT dominated by a baseline");
+    }
+
+    bench.bench("ufo_ct_build_16bit", || ct_point(16, Some(CtArchitecture::UfoMac), None));
+}

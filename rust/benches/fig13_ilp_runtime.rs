@@ -1,0 +1,83 @@
+//! Figure 13 — ILP runtime vs. bit width.
+//!
+//! The paper plots Gurobi wall-time for the compressor-assignment and
+//! interconnect-order ILPs (3600 s cap, 128 threads). We time the in-tree
+//! solvers on the same two problem families: the exact §3.3 stage
+//! assignment MILP (branch & bound; time-limited exactly like the paper's
+//! runs) and the per-slice §3.5 interconnect assignment solved across a
+//! full CT construction. The reproducible signal is the growth *shape*
+//! (fast at 8 bits, steep growth toward 32).
+
+use std::time::{Duration, Instant};
+use ufo_mac::bench::Bench;
+use ufo_mac::ct::{assign_ilp, CtCounts, OrderStrategy};
+use ufo_mac::ilp::SolveOptions;
+use ufo_mac::ir::{CellLib, Netlist};
+use ufo_mac::synth::CompressorTiming;
+
+fn mult_counts(n: usize) -> CtCounts {
+    let pp: Vec<usize> = (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect();
+    CtCounts::from_populations(&pp)
+}
+
+fn interconnect_time(n: usize) -> f64 {
+    let lib = CellLib::nangate45();
+    let tm = CompressorTiming::from_lib(&lib);
+    let mut nl = Netlist::new("ct");
+    let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+    let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+    let m = ufo_mac::ppg::and_array(&mut nl, &lib, &a, &b);
+    let counts = CtCounts::from_populations(&m.counts());
+    let plan = ufo_mac::ct::assign_greedy(&counts);
+    let mut cols = m.columns;
+    cols.resize(counts.width(), vec![]);
+    let t = Instant::now();
+    let _ = ufo_mac::ct::build_ct(&mut nl, &tm, cols, &plan, OrderStrategy::Optimized);
+    t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let bench = Bench::new("fig13_ilp_runtime");
+    let quick = std::env::var("UFO_BENCH_QUICK").is_ok();
+    // Paper cap: 3600 s. Scaled cap for this testbed.
+    let cap = if quick { Duration::from_secs(5) } else { Duration::from_secs(60) };
+
+    println!("\nFigure 13 reproduction: optimization runtime vs width");
+    println!("  stage-assignment MILP (cap {:?}):", cap);
+    let widths: &[usize] = if quick { &[4, 6, 8] } else { &[4, 6, 8, 12, 16] };
+    let mut last = 0.0f64;
+    for &n in widths {
+        let counts = mult_counts(n);
+        let opts = SolveOptions { time_limit: cap, ..Default::default() };
+        let t = Instant::now();
+        let (plan, nodes) = assign_ilp(&counts, &opts);
+        let dt = t.elapsed().as_secs_f64();
+        plan.validate(&counts).unwrap();
+        println!("    {n:>2}-bit: {dt:>8.3} s  ({nodes} B&B nodes, {} stages)", plan.stages());
+        bench.metric(&format!("stage_ilp_seconds_{n}"), dt, "s");
+        last = last.max(dt);
+    }
+
+    println!("  interconnect-order optimization (full CT, exact per-slice):");
+    for &n in if quick { &[8usize, 16][..] } else { &[8usize, 16, 32, 64][..] } {
+        let dt = interconnect_time(n);
+        println!("    {n:>2}-bit: {dt:>8.3} s");
+        bench.metric(&format!("interconnect_seconds_{n}"), dt, "s");
+    }
+
+    // Growth-shape sanity: the largest stage-ILP width costs the most.
+    let t_small = {
+        let counts = mult_counts(4);
+        let opts = SolveOptions { time_limit: cap, ..Default::default() };
+        let t = Instant::now();
+        let _ = assign_ilp(&counts, &opts);
+        t.elapsed().as_secs_f64()
+    };
+    assert!(last >= t_small, "runtime must grow with width");
+
+    bench.bench("stage_ilp_6bit", || {
+        let counts = mult_counts(6);
+        let opts = SolveOptions { time_limit: Duration::from_secs(10), ..Default::default() };
+        assign_ilp(&counts, &opts)
+    });
+}

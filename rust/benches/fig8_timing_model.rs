@@ -1,0 +1,83 @@
+//! Figure 8 — fidelity of the timing models (logic depth, mpfo, FDC).
+//!
+//! The paper fits each model on 10 000 paths from 1 100 adders and reports
+//! R² / MAPE; FDC wins (0.816 / 4.63%) over depth (0.541 / 9.30%) and mpfo
+//! (0.469 / 10.91%). We regenerate the experiment on a random prefix-adder
+//! dataset, using the STA engine as delay ground truth, and check the
+//! *ordering* (FDC > depth, FDC > mpfo).
+
+use ufo_mac::bench::Bench;
+use ufo_mac::cpa::netlist::standalone_adder;
+use ufo_mac::cpa::timing::{
+    depth_per_bit, fdc_features, fidelity, least_squares, mpfo,
+};
+use ufo_mac::cpa::random_adder_dataset;
+use ufo_mac::sta::Sta;
+
+fn main() {
+    let bench = Bench::new("fig8_timing_model");
+    let quick = std::env::var("UFO_BENCH_QUICK").is_ok();
+    let n_adders = if quick { 60 } else { 1100 };
+    let widths = [8usize, 12, 16, 24, 32];
+
+    let dataset = random_adder_dataset(&widths, n_adders, 0xF16_8);
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+
+    // Collect (features, truth) samples per model: one sample per output
+    // bit of every adder (≈ n_adders × mean-width ≈ 10k paths at full size).
+    let mut xs_fdc: Vec<Vec<f64>> = Vec::new();
+    let mut xs_depth: Vec<Vec<f64>> = Vec::new();
+    let mut xs_mpfo: Vec<Vec<f64>> = Vec::new();
+    let mut truth: Vec<f64> = Vec::new();
+    for g in &dataset {
+        let (nl, sums) = standalone_adder(g, None);
+        let at = sta.arrivals_ns(&nl);
+        let fdc = fdc_features(g);
+        let dep = depth_per_bit(g);
+        let mp = mpfo(g);
+        for bit in 1..g.n {
+            // truth: measured arrival of sum bit `bit` (drives through
+            // the sub-prefix tree rooted at bit-1's carry).
+            let t = at[sums[bit].index()];
+            if t <= 0.0 {
+                continue;
+            }
+            truth.push(t);
+            let f = &fdc[bit - 1];
+            xs_fdc.push(vec![f.f_black, f.f_blue, f.n_black, f.n_blue]);
+            xs_depth.push(vec![dep[bit - 1]]);
+            xs_mpfo.push(vec![mp[bit - 1]]);
+        }
+    }
+    println!("\nFigure 8 reproduction: {} paths from {} adders", truth.len(), dataset.len());
+
+    let eval = |name: &str, xs: &[Vec<f64>]| {
+        let (w, b) = least_squares(xs, &truth);
+        let pred: Vec<f64> = xs
+            .iter()
+            .map(|x| x.iter().zip(&w).map(|(v, k)| v * k).sum::<f64>() + b)
+            .collect();
+        let fid = fidelity(&pred, &truth);
+        println!("  {name:<12} R² {:.3}   MAPE {:.2}%", fid.r2, fid.mape * 100.0);
+        fid
+    };
+    let f_depth = eval("logic depth", &xs_depth);
+    let f_mpfo = eval("mpfo", &xs_mpfo);
+    let f_fdc = eval("FDC", &xs_fdc);
+    println!("  (paper: depth 0.541/9.30%, mpfo 0.469/10.91%, FDC 0.816/4.63%)");
+
+    bench.metric("r2_depth", f_depth.r2, "");
+    bench.metric("r2_mpfo", f_mpfo.r2, "");
+    bench.metric("r2_fdc", f_fdc.r2, "");
+    bench.metric("mape_depth_pct", f_depth.mape * 100.0, "%");
+    bench.metric("mape_mpfo_pct", f_mpfo.mape * 100.0, "%");
+    bench.metric("mape_fdc_pct", f_fdc.mape * 100.0, "%");
+
+    // O(n) feature-extraction cost claim: time one 32-bit extraction.
+    let g32 = &dataset[0];
+    bench.bench("fdc_features_extract", || fdc_features(g32));
+
+    assert!(f_fdc.r2 > f_depth.r2, "FDC must beat depth (paper's ordering)");
+    assert!(f_fdc.r2 > f_mpfo.r2, "FDC must beat mpfo (paper's ordering)");
+    assert!(f_fdc.mape < f_depth.mape && f_fdc.mape < f_mpfo.mape);
+}

@@ -1,0 +1,75 @@
+//! Hot-path microbenchmarks — the profiling substrate for the §Perf pass
+//! (EXPERIMENTS.md): STA sweeps dominate the Pareto experiments, the
+//! bit-parallel simulator dominates equivalence checks + power estimation,
+//! bottleneck assignment dominates CT construction, and full design
+//! builds dominate the coordinator's jobs.
+
+use ufo_mac::bench::Bench;
+use ufo_mac::ilp::assignment::bottleneck_assignment;
+use ufo_mac::multiplier::MultiplierSpec;
+use ufo_mac::sim::Simulator;
+use ufo_mac::sta::Sta;
+use ufo_mac::util::Rng;
+
+fn main() {
+    let bench = Bench::new("hotpath");
+
+    // Pre-built 16-bit design shared by the passive benches.
+    let design = MultiplierSpec::new(16).build().unwrap();
+    let nl = &design.netlist;
+    println!("16-bit UFO multiplier: {} nodes / {} gates", nl.len(), nl.num_gates());
+
+    // STA arrival sweep (the Pareto-sweep inner loop).
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+    bench.bench("sta_arrivals_16bit", || sta.arrivals_ns(nl));
+    bench.bench("sta_analyze_16bit_no_power_sim", || sta.analyze(nl));
+
+    // Bit-parallel simulation (equivalence + toggle power inner loop).
+    let mut sim = Simulator::new();
+    let mut rng = Rng::seed_from_u64(1);
+    let words: Vec<u64> = (0..nl.num_inputs()).map(|_| rng.next_u64()).collect();
+    bench.bench("sim_run_16bit_64lanes", || {
+        sim.run(nl, &words);
+        sim.word(design.product[0])
+    });
+
+    // Toggle-activity power extraction (16 rounds × 64 lanes).
+    bench.bench("toggle_activity_16bit_16rounds", || {
+        ufo_mac::sim::toggle_activity(nl, 16, 7)
+    });
+
+    // Bottleneck assignment at CT-slice scale (m = 16 and 32).
+    for m in [16usize, 32] {
+        let mut r = Rng::seed_from_u64(m as u64);
+        let cost: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..m).map(|_| r.f64()).collect()).collect();
+        bench.bench(&format!("bottleneck_assignment_{m}x{m}"), || {
+            bottleneck_assignment(&cost)
+        });
+    }
+
+    // Full design construction (the coordinator job body).
+    bench.bench("build_ufo_multiplier_8bit", || MultiplierSpec::new(8).build().unwrap());
+    bench.bench("build_ufo_multiplier_16bit", || MultiplierSpec::new(16).build().unwrap());
+
+    // Stage assignment at 32/64 bits (greedy hot path).
+    for n in [32usize, 64] {
+        let pp: Vec<usize> =
+            (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect();
+        let counts = ufo_mac::ct::CtCounts::from_populations(&pp);
+        bench.bench(&format!("assign_greedy_{n}bit"), || {
+            ufo_mac::ct::assign_greedy(&counts)
+        });
+    }
+
+    // Netlist encoding for the PJRT bridge.
+    bench.bench("encode_netlist_16bit", || {
+        ufo_mac::runtime::encode_netlist(nl).unwrap()
+    });
+
+    // Equivalence sampling batch (64 vectors incl. packing).
+    let d8 = MultiplierSpec::new(8).build().unwrap();
+    bench.bench("equiv_sampled_1k_8bit", || {
+        ufo_mac::equiv::check_multiplier_with(&d8, 1024).unwrap()
+    });
+}

@@ -1,0 +1,66 @@
+//! Table 2 — 16×16 systolic arrays of fused MACs (8- and 16-bit PEs),
+//! three constraint regimes, four methods. Reports Freq/WNS/Area/Power.
+
+use ufo_mac::baselines::Method;
+use ufo_mac::bench::Bench;
+use ufo_mac::modules::systolic_report;
+use ufo_mac::multiplier::Strategy;
+use ufo_mac::util::Table;
+
+fn main() {
+    let bench = Bench::new("table2_systolic");
+    let quick = std::env::var("UFO_BENCH_QUICK").is_ok();
+    let widths: &[usize] = if quick { &[8] } else { &[8, 16] };
+
+    // Paper's Table 2 clock targets: (8-bit, 16-bit).
+    let regimes: [(&str, Strategy, [f64; 2]); 3] = [
+        ("area-driven", Strategy::AreaDriven, [660e6, 400e6]),
+        ("timing-driven", Strategy::TimingDriven, [2e9, 1e9]),
+        ("trade-off", Strategy::TradeOff, [1e9, 660e6]),
+    ];
+
+    println!("\nTable 2 reproduction: 16×16 systolic arrays");
+    for (label, strategy, freqs) in regimes {
+        for (wi, &n) in widths.iter().enumerate() {
+            let freq = freqs[wi];
+            let mut table =
+                Table::new(&["method", "freq", "WNS(ns)", "area(µm²)", "power(mW)"]);
+            let mut rows = Vec::new();
+            for m in Method::ALL {
+                let r = systolic_report(m, n, strategy, freq).unwrap();
+                table.row(vec![
+                    m.name().into(),
+                    format!("{:.0}M", freq / 1e6),
+                    format!("{:.4}", r.wns_ns),
+                    format!("{:.0}", r.area_um2),
+                    format!("{:.3}", r.power_mw),
+                ]);
+                rows.push((m, r));
+            }
+            println!("\n{label}, {n}-bit PEs @ {:.0} MHz:\n{}", freq / 1e6, table.render());
+            let ufo = rows.iter().find(|(m, _)| *m == Method::UfoMac).unwrap().1.clone();
+            let com =
+                rows.iter().find(|(m, _)| *m == Method::Commercial).unwrap().1.clone();
+            bench.metric(&format!("{label}_{n}_ufo_area"), ufo.area_um2, "um2");
+            bench.metric(&format!("{label}_{n}_ufo_wns"), ufo.wns_ns, "ns");
+            bench.metric(&format!("{label}_{n}_commercial_area"), com.area_um2, "um2");
+            bench.metric(&format!("{label}_{n}_commercial_wns"), com.wns_ns, "ns");
+            // Table-2 shape: under the area regime UFO-MAC's array is the
+            // smallest across methods (the paper's consistent outcome).
+            if matches!(strategy, Strategy::AreaDriven) {
+                let min_area =
+                    rows.iter().map(|(_, r)| r.area_um2).fold(f64::INFINITY, f64::min);
+                assert!(
+                    ufo.area_um2 <= min_area * 1.001,
+                    "{label} {n}-bit: UFO area {:.0} vs best {:.0}",
+                    ufo.area_um2,
+                    min_area
+                );
+            }
+        }
+    }
+
+    bench.bench("systolic_report_ufo_8bit", || {
+        systolic_report(Method::UfoMac, 8, Strategy::TradeOff, 1e9).unwrap()
+    });
+}

@@ -1,0 +1,156 @@
+//! Minimal benchmark harness (criterion is not vendored in this image).
+//!
+//! Provides warmup + repeated timed runs with mean/median/min and a
+//! machine-readable JSON line per benchmark, so `cargo bench` output can be
+//! captured into `bench_output.txt` and EXPERIMENTS.md the same way a
+//! criterion run would be.
+
+use crate::util::Json;
+use std::time::{Duration, Instant};
+
+/// One measured statistic set, in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub samples: usize,
+}
+
+impl Stats {
+    fn from_samples(mut ns: Vec<f64>) -> Stats {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        Stats {
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            median_ns: ns[n / 2],
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            samples: n,
+        }
+    }
+}
+
+fn fmt_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner. Each `cargo bench` target constructs one of these.
+pub struct Bench {
+    suite: String,
+    /// Target per-benchmark measurement budget.
+    pub budget: Duration,
+    /// Max sample count per benchmark.
+    pub max_samples: usize,
+}
+
+impl Bench {
+    pub fn new(suite: impl Into<String>) -> Self {
+        // Honour a quick mode for CI-style smoke runs.
+        let quick = std::env::var("UFO_BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.into(),
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_samples: if quick { 5 } else { 30 },
+        }
+    }
+
+    /// Time `f` repeatedly; prints one human line + one JSON line.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup.
+        let t0 = Instant::now();
+        let mut warm = 0;
+        while t0.elapsed() < self.budget / 10 && warm < 3 {
+            std::hint::black_box(f());
+            warm += 1;
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_samples
+            && (samples.len() < 3 || start.elapsed() < self.budget)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64() * 1e9);
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "bench {}/{name}: mean {} median {} min {} ({} samples)",
+            self.suite,
+            fmt_time(stats.mean_ns),
+            fmt_time(stats.median_ns),
+            fmt_time(stats.min_ns),
+            stats.samples
+        );
+        println!(
+            "BENCH_JSON {}",
+            Json::obj(vec![
+                ("suite", Json::str(self.suite.clone())),
+                ("name", Json::str(name)),
+                ("mean_ns", Json::num(stats.mean_ns)),
+                ("median_ns", Json::num(stats.median_ns)),
+                ("min_ns", Json::num(stats.min_ns)),
+                ("samples", Json::num(stats.samples as f64)),
+            ])
+            .render()
+        );
+        stats
+    }
+
+    /// Report a scalar metric (area, delay, R², …) rather than a time — the
+    /// figure/table benches are metric reproductions, not microbenchmarks.
+    pub fn metric(&self, name: &str, value: f64, unit: &str) {
+        println!("metric {}/{name}: {value:.6} {unit}", self.suite);
+        println!(
+            "BENCH_JSON {}",
+            Json::obj(vec![
+                ("suite", Json::str(self.suite.clone())),
+                ("name", Json::str(name)),
+                ("value", Json::num(value)),
+                ("unit", Json::str(unit)),
+            ])
+            .render()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 3.0);
+        assert_eq!(s.median_ns, 2.0);
+        assert!((s.mean_ns - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(500.0).contains("ns"));
+        assert!(fmt_time(5_000.0).contains("µs"));
+        assert!(fmt_time(5_000_000.0).contains("ms"));
+        assert!(fmt_time(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("UFO_BENCH_QUICK", "1");
+        let b = Bench::new("test");
+        let s = b.bench("noop", || 1 + 1);
+        assert!(s.samples >= 3);
+        assert!(s.min_ns >= 0.0);
+    }
+}

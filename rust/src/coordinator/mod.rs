@@ -1,0 +1,301 @@
+//! Design-space-exploration coordinator.
+//!
+//! Orchestrates the experiment sweeps behind the paper's Pareto plots and
+//! tables: fan out (method × width × strategy) generation jobs over a
+//! thread pool, evaluate each design with the STA engine (and optionally
+//! verify it through the PJRT netlist-eval artifact), extract Pareto
+//! frontiers, and persist JSON reports.
+
+pub mod pool;
+
+use crate::baselines::{build_design, BaselineBudget, Method};
+use crate::multiplier::Strategy;
+use crate::runtime::Runtime;
+use crate::sta::Sta;
+use crate::util::Json;
+use crate::Result;
+use std::path::Path;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub method: Method,
+    pub n: usize,
+    pub strategy: Strategy,
+    pub mac: bool,
+    pub delay_ns: f64,
+    pub area_um2: f64,
+    pub power_mw: f64,
+    pub num_gates: usize,
+    pub ct_stages: usize,
+    /// Simulator-based equivalence result.
+    pub verified: bool,
+    /// PJRT artifact cross-check (None if artifacts unavailable).
+    pub pjrt_verified: Option<bool>,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub widths: Vec<usize>,
+    pub methods: Vec<Method>,
+    pub strategies: Vec<Strategy>,
+    pub mac: bool,
+    pub workers: usize,
+    pub budget: BaselineBudget,
+    /// Sampled-equivalence vector budget for non-exhaustive widths.
+    pub verify_vectors: usize,
+    /// Cross-check through PJRT when artifacts exist.
+    pub use_pjrt: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            widths: vec![8, 16, 32],
+            methods: Method::ALL.to_vec(),
+            strategies: vec![
+                Strategy::AreaDriven,
+                Strategy::TimingDriven,
+                Strategy::TradeOff,
+            ],
+            mac: false,
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            budget: BaselineBudget::default(),
+            verify_vectors: 1 << 12,
+            use_pjrt: false,
+        }
+    }
+}
+
+/// Evaluate one (method, width, strategy) point.
+pub fn evaluate_point(
+    method: Method,
+    n: usize,
+    strategy: Strategy,
+    mac: bool,
+    budget: &BaselineBudget,
+    verify_vectors: usize,
+    rt: Option<&Runtime>,
+) -> Result<DesignPoint> {
+    let design = build_design(method, n, strategy, mac, budget)?;
+    let sta = Sta::default();
+    let rep = sta.analyze(&design.netlist);
+    let equiv = crate::equiv::check_multiplier_with(&design, verify_vectors)?;
+    let pjrt_verified = match rt {
+        Some(rt) if rt.has_artifact("netlist_eval_small") => {
+            crate::runtime::verify_design_pjrt(rt, &design, 1).ok()
+        }
+        _ => None,
+    };
+    Ok(DesignPoint {
+        method,
+        n,
+        strategy,
+        mac,
+        delay_ns: rep.critical_delay_ns,
+        area_um2: rep.area_um2,
+        power_mw: rep.power_mw,
+        num_gates: rep.num_gates,
+        ct_stages: design.ct_stages,
+        verified: equiv.passed,
+        pjrt_verified,
+    })
+}
+
+/// Run a full sweep in parallel.
+pub fn run_sweep(cfg: &SweepConfig) -> Vec<DesignPoint> {
+    let mut items = Vec::new();
+    for &n in &cfg.widths {
+        for &m in &cfg.methods {
+            for &s in &cfg.strategies {
+                items.push((m, n, s));
+            }
+        }
+    }
+    let mac = cfg.mac;
+    let budget = cfg.budget;
+    let vectors = cfg.verify_vectors;
+    let use_pjrt = cfg.use_pjrt;
+    pool::par_map(cfg.workers, items, move |(m, n, s)| {
+        let rt = if use_pjrt {
+            Runtime::new(crate::runtime::default_artifact_dir()).ok()
+        } else {
+            None
+        };
+        evaluate_point(m, n, s, mac, &budget, vectors, rt.as_ref())
+    })
+    .into_iter()
+    .filter_map(|r| r.ok())
+    .collect()
+}
+
+/// Indices of the (delay, area) Pareto frontier, sorted by delay.
+pub fn pareto_front(points: &[DesignPoint]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .delay_ns
+            .partial_cmp(&points[b].delay_ns)
+            .unwrap()
+            .then(points[a].area_um2.partial_cmp(&points[b].area_um2).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_area = f64::INFINITY;
+    for i in idx {
+        if points[i].area_um2 < best_area - 1e-9 {
+            best_area = points[i].area_um2;
+            front.push(i);
+        }
+    }
+    front
+}
+
+/// True iff `a` Pareto-dominates `b` (≤ in both, < in one).
+pub fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
+    a.delay_ns <= b.delay_ns + 1e-12
+        && a.area_um2 <= b.area_um2 + 1e-9
+        && (a.delay_ns < b.delay_ns - 1e-12 || a.area_um2 < b.area_um2 - 1e-9)
+}
+
+/// Serialize points as a JSON report.
+pub fn points_json(points: &[DesignPoint]) -> Json {
+    Json::arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("method", Json::str(p.method.name())),
+                    ("n", Json::num(p.n as f64)),
+                    ("strategy", Json::str(format!("{:?}", p.strategy))),
+                    ("mac", Json::Bool(p.mac)),
+                    ("delay_ns", Json::num(p.delay_ns)),
+                    ("area_um2", Json::num(p.area_um2)),
+                    ("power_mw", Json::num(p.power_mw)),
+                    ("num_gates", Json::num(p.num_gates as f64)),
+                    ("ct_stages", Json::num(p.ct_stages as f64)),
+                    ("verified", Json::Bool(p.verified)),
+                    (
+                        "pjrt_verified",
+                        match p.pjrt_verified {
+                            Some(v) => Json::Bool(v),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Persist a JSON report under `dir`.
+pub fn save_report(dir: impl AsRef<Path>, name: &str, json: &Json) -> Result<()> {
+    std::fs::create_dir_all(dir.as_ref())?;
+    let path = dir.as_ref().join(format!("{name}.json"));
+    std::fs::write(&path, json.render())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluate_point_verifies_and_reports() {
+        let p = evaluate_point(
+            Method::UfoMac,
+            8,
+            Strategy::TradeOff,
+            false,
+            &BaselineBudget { rlmul_iters: 4, seed: 3 },
+            1 << 10,
+            None,
+        )
+        .unwrap();
+        assert!(p.verified);
+        assert!(p.delay_ns > 0.0 && p.area_um2 > 0.0);
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let cfg = SweepConfig {
+            widths: vec![4],
+            methods: vec![Method::UfoMac, Method::Gomil],
+            strategies: vec![Strategy::TradeOff],
+            mac: false,
+            workers: 2,
+            budget: BaselineBudget { rlmul_iters: 2, seed: 1 },
+            verify_vectors: 256,
+            use_pjrt: false,
+        };
+        let points = run_sweep(&cfg);
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.verified));
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let mk = |d: f64, a: f64| DesignPoint {
+            method: Method::UfoMac,
+            n: 8,
+            strategy: Strategy::TradeOff,
+            mac: false,
+            delay_ns: d,
+            area_um2: a,
+            power_mw: 0.0,
+            num_gates: 0,
+            ct_stages: 0,
+            verified: true,
+            pjrt_verified: None,
+        };
+        let pts = vec![mk(1.0, 10.0), mk(2.0, 5.0), mk(1.5, 20.0), mk(3.0, 4.0), mk(0.5, 30.0)];
+        let front = pareto_front(&pts);
+        // Front: (0.5,30) (1.0,10) (2.0,5) (3.0,4); (1.5,20) dominated.
+        assert_eq!(front.len(), 4);
+        assert!(!front.contains(&2));
+        // strictly decreasing area along increasing delay
+        for w in front.windows(2) {
+            assert!(pts[w[0]].delay_ns <= pts[w[1]].delay_ns);
+            assert!(pts[w[0]].area_um2 > pts[w[1]].area_um2);
+        }
+    }
+
+    #[test]
+    fn dominates_semantics() {
+        let mk = |d: f64, a: f64| DesignPoint {
+            method: Method::UfoMac,
+            n: 8,
+            strategy: Strategy::TradeOff,
+            mac: false,
+            delay_ns: d,
+            area_um2: a,
+            power_mw: 0.0,
+            num_gates: 0,
+            ct_stages: 0,
+            verified: true,
+            pjrt_verified: None,
+        };
+        assert!(dominates(&mk(1.0, 1.0), &mk(2.0, 2.0)));
+        assert!(dominates(&mk(1.0, 1.0), &mk(1.0, 2.0)));
+        assert!(!dominates(&mk(1.0, 3.0), &mk(2.0, 2.0)));
+        assert!(!dominates(&mk(1.0, 1.0), &mk(1.0, 1.0)));
+    }
+
+    #[test]
+    fn report_serializes() {
+        let p = evaluate_point(
+            Method::Commercial,
+            4,
+            Strategy::AreaDriven,
+            false,
+            &BaselineBudget { rlmul_iters: 2, seed: 2 },
+            256,
+            None,
+        )
+        .unwrap();
+        let j = points_json(&[p]);
+        let s = j.render();
+        assert!(s.contains("Commercial IP"));
+        assert!(s.contains("delay_ns"));
+    }
+}

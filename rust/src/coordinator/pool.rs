@@ -1,0 +1,85 @@
+//! Minimal work-stealing-free thread pool (std-only; the image vendors no
+//! async runtime). Jobs are closures producing `T`; results arrive in
+//! completion order through an mpsc channel.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job<T> = Box<dyn FnOnce() -> T + Send + 'static>;
+
+/// Run `jobs` on `workers` threads, returning results in completion order.
+pub fn run_jobs<T: Send + 'static>(workers: usize, jobs: Vec<Job<T>>) -> Vec<T> {
+    let workers = workers.max(1);
+    let queue = Arc::new(Mutex::new(jobs));
+    let (tx, rx) = mpsc::channel();
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let job = { queue.lock().unwrap().pop() };
+            match job {
+                Some(j) => {
+                    // A panicking job poisons nothing: catch and skip.
+                    if let Ok(v) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)) {
+                        let _ = tx.send(v);
+                    }
+                }
+                None => break,
+            }
+        }));
+    }
+    drop(tx);
+    let results: Vec<T> = rx.into_iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    results
+}
+
+/// Convenience: map a function over items in parallel.
+pub fn par_map<I, T, F>(workers: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + 'static,
+    T: Send + 'static,
+    F: Fn(I) -> T + Send + Sync + Clone + 'static,
+{
+    let jobs: Vec<Job<T>> = items
+        .into_iter()
+        .map(|item| {
+            let f = f.clone();
+            Box::new(move || f(item)) as Job<T>
+        })
+        .collect();
+    run_jobs(workers, jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_jobs() {
+        let mut out = par_map(4, (0..100).collect::<Vec<i32>>(), |x| x * 2);
+        out.sort();
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let out = par_map(1, vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn panicking_job_is_skipped() {
+        let out = par_map(2, vec![0, 1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+        assert_eq!(out.len(), 3);
+    }
+}

@@ -1,0 +1,574 @@
+//! Parallel-prefix graph IR and the regular adder structures (§2.2, §4.1).
+//!
+//! A [`PrefixGraph`] computes, for every bit `i`, the group generate
+//! `G[i:0]` (= carry `c_i` with `c_in = 0`) through a DAG of associative
+//! `∘` nodes over the bitwise `(g_i, p_i)` leaves. Each internal node has
+//! exactly two fan-ins: the *trivial* fan-in `tf` (shares the node's MSB)
+//! and the *non-trivial* fan-in `ntf` (the lower span) — the vocabulary
+//! Algorithm 2's transformations are written in.
+//!
+//! Provided constructions: ripple (serial), Sklansky, Kogge-Stone,
+//! Brent-Kung, Han-Carlson, carry-increment, and the paper's §4.1
+//! region-segmented hybrid for non-uniform arrival profiles.
+
+use std::collections::HashMap;
+
+/// Index into [`PrefixGraph::nodes`].
+pub type PIdx = usize;
+
+/// A prefix node covering the span `[msb:lsb]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PNode {
+    pub msb: usize,
+    pub lsb: usize,
+    /// Trivial fan-in: covers `[msb:k]`. `NONE` for leaves.
+    pub tf: PIdx,
+    /// Non-trivial fan-in: covers `[k-1:lsb]`. `NONE` for leaves.
+    pub ntf: PIdx,
+}
+
+pub const NONE: PIdx = usize::MAX;
+
+impl PNode {
+    pub fn is_leaf(&self) -> bool {
+        self.tf == NONE
+    }
+    pub fn span(&self) -> usize {
+        self.msb - self.lsb + 1
+    }
+}
+
+/// A prefix carry graph over `n` bits.
+#[derive(Debug, Clone)]
+pub struct PrefixGraph {
+    pub n: usize,
+    /// `nodes[0..n]` are the leaves `(i,i)`; internal nodes follow in
+    /// topological order (fan-ins precede consumers).
+    pub nodes: Vec<PNode>,
+    /// For each bit `i`, the node computing `G[i:0]`.
+    pub roots: Vec<PIdx>,
+}
+
+impl PrefixGraph {
+    /// Fresh graph with only the `n` leaves; `roots[i]` defaults to the
+    /// leaf for bit 0 and `NONE` elsewhere until a builder fills them.
+    pub fn leaves(n: usize) -> Self {
+        assert!(n >= 1);
+        let nodes = (0..n).map(|i| PNode { msb: i, lsb: i, tf: NONE, ntf: NONE }).collect();
+        let mut roots = vec![NONE; n];
+        roots[0] = 0;
+        PrefixGraph { n, nodes, roots }
+    }
+
+    /// Add the combine node `[msb(tf) : lsb(ntf)] = tf ∘ ntf`.
+    pub fn combine(&mut self, tf: PIdx, ntf: PIdx) -> PIdx {
+        let (t, u) = (self.nodes[tf], self.nodes[ntf]);
+        assert_eq!(t.lsb, u.msb + 1, "non-adjacent spans {t:?} ∘ {u:?}");
+        self.nodes.push(PNode { msb: t.msb, lsb: u.lsb, tf, ntf });
+        self.nodes.len() - 1
+    }
+
+    pub fn node(&self, i: PIdx) -> PNode {
+        self.nodes[i]
+    }
+
+    /// Internal (non-leaf) node count — the size/area proxy used in the
+    /// prefix-adder literature.
+    pub fn size(&self) -> usize {
+        self.nodes.len() - self.n
+    }
+
+    /// Logic depth per node (leaves = 0).
+    pub fn depths(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.nodes.len()];
+        for i in self.n..self.nodes.len() {
+            let nd = self.nodes[i];
+            d[i] = 1 + d[nd.tf].max(d[nd.ntf]);
+        }
+        d
+    }
+
+    /// Max depth over live roots.
+    pub fn depth(&self) -> usize {
+        let d = self.depths();
+        self.roots.iter().filter(|&&r| r != NONE).map(|&r| d[r]).max().unwrap_or(0)
+    }
+
+    /// Fanout per node counting tf/ntf consumers among live nodes, plus one
+    /// for each root (the sum XOR it drives).
+    pub fn fanouts(&self) -> Vec<usize> {
+        let live = self.live_mask();
+        let mut fo = vec![0usize; self.nodes.len()];
+        for i in self.n..self.nodes.len() {
+            if !live[i] {
+                continue;
+            }
+            let nd = self.nodes[i];
+            fo[nd.tf] += 1;
+            fo[nd.ntf] += 1;
+        }
+        for &r in &self.roots {
+            if r != NONE {
+                fo[r] += 1;
+            }
+        }
+        fo
+    }
+
+    /// Mask of nodes reachable from the live roots.
+    pub fn live_mask(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<PIdx> = self.roots.iter().copied().filter(|&r| r != NONE).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            let nd = self.nodes[i];
+            if !nd.is_leaf() {
+                stack.push(nd.tf);
+                stack.push(nd.ntf);
+            }
+        }
+        live
+    }
+
+    /// Drop dead internal nodes, preserving topological order.
+    pub fn prune(&mut self) {
+        let live = self.live_mask();
+        let mut remap = vec![NONE; self.nodes.len()];
+        let mut new_nodes = Vec::with_capacity(self.nodes.len());
+        for (i, nd) in self.nodes.iter().enumerate() {
+            if i < self.n || live[i] {
+                let mut m = *nd;
+                if !m.is_leaf() {
+                    m.tf = remap[m.tf];
+                    m.ntf = remap[m.ntf];
+                    debug_assert!(m.tf != NONE && m.ntf != NONE);
+                }
+                remap[i] = new_nodes.len();
+                new_nodes.push(m);
+            }
+        }
+        for r in self.roots.iter_mut() {
+            if *r != NONE {
+                *r = remap[*r];
+            }
+        }
+        self.nodes = new_nodes;
+    }
+
+    /// Structural validation: spans compose, roots cover `[i:0]`.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, nd) in self.nodes.iter().enumerate() {
+            if i < self.n {
+                if !nd.is_leaf() || nd.msb != i || nd.lsb != i {
+                    return Err(format!("leaf {i} malformed: {nd:?}"));
+                }
+            } else {
+                if nd.is_leaf() {
+                    return Err(format!("internal node {i} has no fan-ins"));
+                }
+                if nd.tf >= i || nd.ntf >= i {
+                    return Err(format!("node {i}: forward reference"));
+                }
+                let t = self.nodes[nd.tf];
+                let u = self.nodes[nd.ntf];
+                if t.lsb != u.msb + 1 || t.msb != nd.msb || u.lsb != nd.lsb {
+                    return Err(format!("node {i}: bad span composition"));
+                }
+            }
+        }
+        for (bit, &r) in self.roots.iter().enumerate() {
+            if r == NONE {
+                return Err(format!("bit {bit}: no root"));
+            }
+            let nd = self.nodes[r];
+            if nd.msb != bit || nd.lsb != 0 {
+                return Err(format!("bit {bit}: root covers [{}:{}]", nd.msb, nd.lsb));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Regular structures
+// ---------------------------------------------------------------------------
+
+/// Named regular prefix structures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixStructure {
+    Ripple,
+    Sklansky,
+    KoggeStone,
+    BrentKung,
+    HanCarlson,
+    /// Carry-increment with the given block size.
+    CarryIncrement(usize),
+}
+
+/// Build a regular structure over `n` bits.
+pub fn build(structure: PrefixStructure, n: usize) -> PrefixGraph {
+    match structure {
+        PrefixStructure::Ripple => ripple(n),
+        PrefixStructure::Sklansky => sklansky(n),
+        PrefixStructure::KoggeStone => kogge_stone(n),
+        PrefixStructure::BrentKung => brent_kung(n),
+        PrefixStructure::HanCarlson => han_carlson(n),
+        PrefixStructure::CarryIncrement(b) => carry_increment(n, b.max(1)),
+    }
+}
+
+/// Serial ripple chain: `roots[i] = leaf_i ∘ roots[i-1]`.
+pub fn ripple(n: usize) -> PrefixGraph {
+    let mut g = PrefixGraph::leaves(n);
+    for i in 1..n {
+        let r = g.combine(i, g.roots[i - 1]);
+        g.roots[i] = r;
+    }
+    g
+}
+
+/// Sklansky (conditional-sum): recursive doubling with shared low spans —
+/// minimal depth `⌈log₂ n⌉`, high fanout.
+pub fn sklansky(n: usize) -> PrefixGraph {
+    let mut g = PrefixGraph::leaves(n);
+    // span_node[(msb, lsb)] memo; built recursively.
+    let mut memo: HashMap<(usize, usize), PIdx> = HashMap::new();
+    for i in 0..n {
+        memo.insert((i, i), i);
+    }
+    fn span(
+        g: &mut PrefixGraph,
+        memo: &mut HashMap<(usize, usize), PIdx>,
+        msb: usize,
+        lsb: usize,
+    ) -> PIdx {
+        if let Some(&idx) = memo.get(&(msb, lsb)) {
+            return idx;
+        }
+        let size = msb - lsb + 1;
+        // Split at the largest power of two ≤ size-1 below msb:
+        let half = (size.next_power_of_two()) / 2;
+        let k = lsb + half; // low part [k-1:lsb] has `half` bits
+        let hi = span(g, memo, msb, k);
+        let lo = span(g, memo, k - 1, lsb);
+        let idx = g.combine(hi, lo);
+        memo.insert((msb, lsb), idx);
+        idx
+    }
+    for i in 1..n {
+        let r = span(&mut g, &mut memo, i, 0);
+        g.roots[i] = r;
+    }
+    g
+}
+
+/// Kogge-Stone: minimal depth, fanout ≤ 2, many nodes.
+pub fn kogge_stone(n: usize) -> PrefixGraph {
+    let mut g = PrefixGraph::leaves(n);
+    // cur[i] = node covering [i : i-2^level+1] (clamped at 0).
+    let mut cur: Vec<PIdx> = (0..n).collect();
+    let mut reach = vec![0usize; n]; // lsb of cur[i]
+    for (i, r) in reach.iter_mut().enumerate() {
+        *r = i;
+    }
+    let mut dist = 1usize;
+    while dist < n {
+        let prev = cur.clone();
+        let prev_reach = reach.clone();
+        for i in (0..n).rev() {
+            if prev_reach[i] == 0 {
+                continue; // already covers [i:0]
+            }
+            let j = prev_reach[i] - 1; // combine with span ending just below
+            let lo = prev[j];
+            let node = g.combine(prev[i], lo);
+            cur[i] = node;
+            reach[i] = prev_reach[j];
+        }
+        dist *= 2;
+    }
+    for i in 0..n {
+        g.roots[i] = cur[i];
+    }
+    g.prune();
+    g
+}
+
+/// Brent-Kung: up-sweep/down-sweep, ~2·log₂ n depth, minimal-ish size.
+pub fn brent_kung(n: usize) -> PrefixGraph {
+    let mut g = PrefixGraph::leaves(n);
+    let mut memo: HashMap<(usize, usize), PIdx> = HashMap::new();
+    for i in 0..n {
+        memo.insert((i, i), i);
+    }
+    // Up-sweep: power-of-two aligned spans.
+    let mut span = 2usize;
+    while span <= n.next_power_of_two() {
+        let mut msb = span - 1;
+        while msb < n {
+            let lsb = msb + 1 - span;
+            let mid = lsb + span / 2;
+            if let (Some(&hi), Some(&lo)) = (memo.get(&(msb, mid)), memo.get(&(mid - 1, lsb))) {
+                let idx = g.combine(hi, lo);
+                memo.insert((msb, lsb), idx);
+            }
+            msb += span;
+        }
+        span *= 2;
+    }
+    // Down-sweep: build [i:0] for every bit by combining aligned blocks.
+    fn root_for(
+        g: &mut PrefixGraph,
+        memo: &mut HashMap<(usize, usize), PIdx>,
+        i: usize,
+    ) -> PIdx {
+        if let Some(&idx) = memo.get(&(i, 0)) {
+            return idx;
+        }
+        // Largest aligned block [i : k] with k = i+1 - 2^t dividing cleanly:
+        // take the lowest set bit of (i+1).
+        let blk = (i + 1) & (i + 1).wrapping_neg();
+        let k = i + 1 - blk;
+        debug_assert!(k > 0);
+        let hi = *memo.get(&(i, k)).expect("aligned span missing");
+        let lo = root_for(g, memo, k - 1);
+        let idx = g.combine(hi, lo);
+        memo.insert((i, 0), idx);
+        idx
+    }
+    for i in 1..n {
+        let r = root_for(&mut g, &mut memo, i);
+        g.roots[i] = r;
+    }
+    g.prune();
+    g
+}
+
+/// Han-Carlson: Kogge-Stone on even bits, one ripple level for odd bits.
+pub fn han_carlson(n: usize) -> PrefixGraph {
+    let mut g = PrefixGraph::leaves(n);
+    if n <= 2 {
+        return ripple(n);
+    }
+    // Pair up (2k, 2k+1) into spans, Kogge-Stone over pairs, then fix odds.
+    let mut pair: Vec<PIdx> = Vec::new(); // pair[k] covers [2k+1 : 2k] (or last single)
+    let mut pair_lsb: Vec<usize> = Vec::new();
+    let mut k = 0;
+    while 2 * k < n {
+        if 2 * k + 1 < n {
+            let node = g.combine(2 * k + 1, 2 * k);
+            pair.push(node);
+        } else {
+            pair.push(2 * k);
+        }
+        pair_lsb.push(2 * k);
+        k += 1;
+    }
+    let m = pair.len();
+    // Kogge-Stone over the pair nodes.
+    let mut cur = pair.clone();
+    let mut reach = pair_lsb.clone();
+    let mut dist = 1usize;
+    while dist < m {
+        let prev = cur.clone();
+        let prev_reach = reach.clone();
+        for i in (0..m).rev() {
+            if prev_reach[i] == 0 {
+                continue;
+            }
+            let j = prev_reach[i] / 2 - 1;
+            let node = g.combine(prev[i], prev[j]);
+            cur[i] = node;
+            reach[i] = prev_reach[j];
+        }
+        dist *= 2;
+    }
+    // cur[k] covers [min(2k+1, n-1) : 0]; odd bits roots come directly,
+    // even bits (>0) need one extra combine with the pair below.
+    for i in 1..n {
+        if i % 2 == 1 {
+            g.roots[i] = cur[i / 2];
+        } else {
+            let node = g.combine(i, cur[i / 2 - 1]);
+            g.roots[i] = node;
+        }
+    }
+    g.prune();
+    g
+}
+
+/// Carry-increment adder with fixed block size: serial chains inside each
+/// block plus one increment combine per bit with the previous block's
+/// carry — the §4.1 choice for the negative-slope region 3.
+pub fn carry_increment(n: usize, block: usize) -> PrefixGraph {
+    let mut g = PrefixGraph::leaves(n);
+    let mut lo = 0usize;
+    let mut prev_root: Option<PIdx> = None;
+    while lo < n {
+        let hi = (lo + block - 1).min(n - 1);
+        // Local serial spans [i:lo].
+        let mut local: Vec<PIdx> = Vec::with_capacity(hi - lo + 1);
+        local.push(lo);
+        for i in lo + 1..=hi {
+            let node = g.combine(i, *local.last().unwrap());
+            local.push(node);
+        }
+        for i in lo..=hi {
+            let l = local[i - lo];
+            g.roots[i] = match prev_root {
+                None => l,
+                Some(pr) => g.combine(l, pr),
+            };
+        }
+        prev_root = Some(g.roots[hi]);
+        lo = hi + 1;
+    }
+    g
+}
+
+/// §4.1 region-segmented hybrid initial structure for a non-uniform arrival
+/// profile: ripple in the rising region 1, Sklansky in the flat (late)
+/// region 2, carry-increment in the falling region 3. `r1 ≤ r2` are the
+/// region boundaries (bit indices).
+pub fn hybrid_regions(n: usize, r1: usize, r2: usize, ci_block: usize) -> PrefixGraph {
+    let r1 = r1.min(n);
+    let r2 = r2.clamp(r1, n);
+    let mut g = PrefixGraph::leaves(n);
+    // Region 1: ripple [0, r1)
+    for i in 1..r1 {
+        let r = g.combine(i, g.roots[i - 1]);
+        g.roots[i] = r;
+    }
+    let mut prev_root = if r1 > 0 { Some(g.roots[r1 - 1]) } else { None };
+    // Region 2: Sklansky over [r1, r2), each span [i:r1] + increment.
+    if r2 > r1 {
+        let mut memo: HashMap<(usize, usize), PIdx> = HashMap::new();
+        for i in r1..r2 {
+            memo.insert((i, i), i);
+        }
+        fn span(
+            g: &mut PrefixGraph,
+            memo: &mut HashMap<(usize, usize), PIdx>,
+            msb: usize,
+            lsb: usize,
+        ) -> PIdx {
+            if let Some(&idx) = memo.get(&(msb, lsb)) {
+                return idx;
+            }
+            let size = msb - lsb + 1;
+            let half = size.next_power_of_two() / 2;
+            let k = lsb + half;
+            let hi = span(g, memo, msb, k);
+            let lo = span(g, memo, k - 1, lsb);
+            let idx = g.combine(hi, lo);
+            memo.insert((msb, lsb), idx);
+            idx
+        }
+        for i in r1..r2 {
+            let local = span(&mut g, &mut memo, i, r1);
+            g.roots[i] = match prev_root {
+                None => local,
+                Some(pr) => g.combine(local, pr),
+            };
+        }
+        prev_root = Some(g.roots[r2 - 1]);
+    }
+    // Region 3: carry-increment blocks over [r2, n).
+    let mut lo = r2;
+    while lo < n {
+        let hi = (lo + ci_block - 1).min(n - 1);
+        let mut chain = lo;
+        g.roots[lo] = match prev_root {
+            None => lo,
+            Some(pr) => g.combine(lo, pr),
+        };
+        for i in lo + 1..=hi {
+            chain = g.combine(i, chain);
+            g.roots[i] = match prev_root {
+                None => chain,
+                Some(pr) => g.combine(chain, pr),
+            };
+        }
+        prev_root = Some(g.roots[hi]);
+        lo = hi + 1;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_structures(n: usize) -> Vec<(&'static str, PrefixGraph)> {
+        vec![
+            ("ripple", ripple(n)),
+            ("sklansky", sklansky(n)),
+            ("kogge-stone", kogge_stone(n)),
+            ("brent-kung", brent_kung(n)),
+            ("han-carlson", han_carlson(n)),
+            ("carry-increment", carry_increment(n, 4)),
+            ("hybrid", hybrid_regions(n, n / 4, 3 * n / 4, 4)),
+        ]
+    }
+
+    #[test]
+    fn structures_validate_across_widths() {
+        for n in [1, 2, 3, 5, 8, 13, 16, 24, 32, 64] {
+            for (name, g) in all_structures(n) {
+                g.validate().unwrap_or_else(|e| panic!("{name} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn depth_properties() {
+        let n = 32;
+        assert_eq!(ripple(n).depth(), n - 1);
+        assert_eq!(sklansky(n).depth(), 5); // ⌈log2 32⌉
+        assert_eq!(kogge_stone(n).depth(), 5);
+        let bk = brent_kung(n).depth();
+        assert!(bk > 5 && bk <= 2 * 5, "brent-kung depth {bk}");
+        let hc = han_carlson(n).depth();
+        assert!(hc <= 6, "han-carlson depth {hc}");
+    }
+
+    #[test]
+    fn size_properties() {
+        let n = 32;
+        // Kogge-Stone is the node-count heavyweight; ripple the lightest.
+        assert!(kogge_stone(n).size() > sklansky(n).size());
+        assert_eq!(ripple(n).size(), n - 1);
+        // Brent-Kung ≈ 2n - log2 n - 2 nodes.
+        assert!(brent_kung(n).size() < kogge_stone(n).size());
+    }
+
+    #[test]
+    fn sklansky_fanout_exceeds_kogge_stone() {
+        let n = 32;
+        let fs = *sklansky(n).fanouts().iter().max().unwrap();
+        let fk = *kogge_stone(n).fanouts().iter().max().unwrap();
+        assert!(fs > fk, "sklansky {fs} vs kogge-stone {fk}");
+    }
+
+    #[test]
+    fn prune_removes_dead_nodes() {
+        let mut g = ripple(8);
+        // Orphan node: combine leaves 5,4 (span [5:4]) never used as root.
+        g.combine(5, 4);
+        let before = g.nodes.len();
+        g.prune();
+        assert_eq!(g.nodes.len(), before - 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn hybrid_degenerate_regions() {
+        // all-region-1, all-region-2 and all-region-3 degenerate cleanly
+        hybrid_regions(16, 16, 16, 4).validate().unwrap();
+        hybrid_regions(16, 0, 16, 4).validate().unwrap();
+        hybrid_regions(16, 0, 0, 4).validate().unwrap();
+    }
+}

@@ -1,0 +1,225 @@
+//! Prefix graph → gate-level netlist expansion.
+//!
+//! Consumes the two compressed rows from the CT (or two adder operands) and
+//! a [`PrefixGraph`], emitting pg logic, black/blue prefix cells and the
+//! final sum XORs. Columns whose second operand bit is absent short-circuit
+//! to `p = a, g = 0`; the graph's generate chain still treats them
+//! uniformly (the constant is a real node, folded by the simulator).
+
+use super::graph::{PrefixGraph, NONE};
+use super::timing::blue_mask;
+use crate::ir::{Netlist, NodeId};
+use crate::synth::{black_node, blue_node, Sig};
+
+/// One CPA input column: the first bit and (optionally) the second.
+#[derive(Debug, Clone, Copy)]
+pub struct CpaColumn {
+    pub a: Sig,
+    pub b: Option<Sig>,
+}
+
+/// Result of CPA expansion.
+#[derive(Debug, Clone)]
+pub struct CpaOut {
+    /// Sum bits, LSB first — `width` bits plus the carry-out appended as
+    /// the MSB (so callers get the full `width+1`-bit result).
+    pub sum: Vec<NodeId>,
+}
+
+/// Expand `graph` over `cols` into `nl`.
+///
+/// `graph.n` must equal `cols.len()`. The carry-out (`G[n-1:0]`) becomes the
+/// final sum bit.
+pub fn expand(nl: &mut Netlist, graph: &PrefixGraph, cols: &[CpaColumn]) -> CpaOut {
+    let n = graph.n;
+    assert_eq!(n, cols.len(), "CPA width mismatch");
+    let blue = blue_mask(graph);
+
+    // pg generation per bit.
+    let mut p = Vec::with_capacity(n);
+    let mut g = Vec::with_capacity(n);
+    let mut zero: Option<NodeId> = None;
+    for c in cols {
+        match c.b {
+            Some(b) => {
+                p.push(nl.xor2(c.a.node, b.node));
+                g.push(nl.and2(c.a.node, b.node));
+            }
+            None => {
+                let z = *zero.get_or_insert_with(|| nl.constant(false));
+                p.push(c.a.node);
+                g.push(z);
+            }
+        }
+    }
+
+    // Prefix nodes in topological order.
+    let mut node_g: Vec<NodeId> = vec![NodeId(0); graph.nodes.len()];
+    let mut node_p: Vec<Option<NodeId>> = vec![None; graph.nodes.len()];
+    for i in 0..n {
+        node_g[i] = g[i];
+        node_p[i] = Some(p[i]);
+    }
+    let live = graph.live_mask();
+    for i in n..graph.nodes.len() {
+        if !live[i] {
+            continue;
+        }
+        let nd = graph.node(i);
+        let (gh, ph) = (node_g[nd.tf], node_p[nd.tf].expect("tf propagate required"));
+        let gl = node_g[nd.ntf];
+        if blue[i] {
+            node_g[i] = blue_node(nl, gh, ph, gl);
+        } else {
+            let pl = node_p[nd.ntf].expect("ntf propagate required for black node");
+            let (gg, pp) = black_node(nl, gh, ph, gl, pl);
+            node_g[i] = gg;
+            node_p[i] = Some(pp);
+        }
+    }
+
+    // Sums: s_0 = p_0; s_i = p_i ⊕ c_{i-1}; s_n = c_{n-1} (carry-out).
+    let mut sum = Vec::with_capacity(n + 1);
+    sum.push(p[0]);
+    for i in 1..n {
+        let c_prev = node_g[graph.roots[i - 1]];
+        sum.push(nl.xor2(p[i], c_prev));
+    }
+    sum.push(node_g[graph.roots[n - 1]]);
+    CpaOut { sum }
+}
+
+/// Convenience: build a standalone `n`-bit adder netlist (fresh inputs,
+/// given prefix graph), returning the netlist and its sum outputs. Used by
+/// the Figure-8 dataset generator and adder unit tests.
+pub fn standalone_adder(graph: &PrefixGraph, arrivals: Option<&[f64]>) -> (Netlist, Vec<NodeId>) {
+    let n = graph.n;
+    let mut nl = Netlist::new(format!("adder{n}"));
+    let cols: Vec<CpaColumn> = (0..n)
+        .map(|i| {
+            let t = arrivals.map_or(0.0, |a| a[i]);
+            let a = nl.input_at(format!("a{i}"), t);
+            let b = nl.input_at(format!("b{i}"), t);
+            CpaColumn { a: Sig::new(a, t), b: Some(Sig::new(b, t)) }
+        })
+        .collect();
+    let out = expand(&mut nl, graph, &cols);
+    for (i, &s) in out.sum.iter().enumerate() {
+        nl.output(format!("s{i}"), s);
+    }
+    (nl, out.sum)
+}
+
+/// Check that a root for every bit exists (pruned graphs keep roots).
+pub fn check_roots(graph: &PrefixGraph) -> bool {
+    graph.roots.iter().all(|&r| r != NONE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpa::graph::{
+        brent_kung, carry_increment, han_carlson, hybrid_regions, kogge_stone, ripple, sklansky,
+        PrefixGraph,
+    };
+    use crate::sim::{lane_value, pack_lanes, Simulator};
+
+    fn exhaustive_add_check(graph: &PrefixGraph) {
+        let n = graph.n;
+        let (nl, sum) = standalone_adder(graph, None);
+        nl.validate().unwrap();
+        let mut sim = Simulator::new();
+        let all: Vec<(u32, u32)> =
+            (0..1u32 << n).flat_map(|x| (0..1u32 << n).map(move |y| (x, y))).collect();
+        for chunk in all.chunks(64) {
+            let assigns: Vec<Vec<bool>> = chunk
+                .iter()
+                .map(|(x, y)| {
+                    (0..n)
+                        .flat_map(|k| [x >> k & 1 != 0, y >> k & 1 != 0])
+                        .collect()
+                })
+                .collect();
+            let words = pack_lanes(&assigns);
+            let vals = sim.run(&nl, &words).to_vec();
+            for (lane, (x, y)) in chunk.iter().enumerate() {
+                let got = lane_value(&vals, &sum, lane as u32);
+                assert_eq!(got, u128::from(x + y), "{} + {}", x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn adders_exhaustive_5bit() {
+        for g in [
+            ripple(5),
+            sklansky(5),
+            kogge_stone(5),
+            brent_kung(5),
+            han_carlson(5),
+            carry_increment(5, 2),
+            hybrid_regions(5, 1, 3, 2),
+        ] {
+            exhaustive_add_check(&g);
+        }
+    }
+
+    #[test]
+    fn adders_exhaustive_4bit_and_3bit() {
+        for n in [3usize, 4] {
+            for g in [ripple(n), sklansky(n), kogge_stone(n), brent_kung(n), han_carlson(n)] {
+                exhaustive_add_check(&g);
+            }
+        }
+    }
+
+    #[test]
+    fn random_check_16bit() {
+        let mut rng = crate::util::Rng::seed_from_u64(77);
+        for g in [sklansky(16), brent_kung(16), kogge_stone(16), hybrid_regions(16, 4, 10, 4)] {
+            let (nl, sum) = standalone_adder(&g, None);
+            let mut sim = Simulator::new();
+            let pairs: Vec<(u32, u32)> = (0..64)
+                .map(|_| (rng.next_u64() as u32 & 0xffff, rng.next_u64() as u32 & 0xffff))
+                .collect();
+            let assigns: Vec<Vec<bool>> = pairs
+                .iter()
+                .map(|(x, y)| (0..16).flat_map(|k| [x >> k & 1 != 0, y >> k & 1 != 0]).collect())
+                .collect();
+            let words = pack_lanes(&assigns);
+            let vals = sim.run(&nl, &words).to_vec();
+            for (lane, (x, y)) in pairs.iter().enumerate() {
+                assert_eq!(lane_value(&vals, &sum, lane as u32), u128::from(x + y));
+            }
+        }
+    }
+
+    #[test]
+    fn missing_second_operand_column() {
+        // 3-column CPA where column 1 has a single bit.
+        let g = ripple(3);
+        let mut nl = Netlist::new("c");
+        let a0 = nl.input("a0");
+        let b0 = nl.input("b0");
+        let a1 = nl.input("a1");
+        let a2 = nl.input("a2");
+        let b2 = nl.input("b2");
+        let cols = vec![
+            CpaColumn { a: Sig::new(a0, 0.0), b: Some(Sig::new(b0, 0.0)) },
+            CpaColumn { a: Sig::new(a1, 0.0), b: None },
+            CpaColumn { a: Sig::new(a2, 0.0), b: Some(Sig::new(b2, 0.0)) },
+        ];
+        let out = expand(&mut nl, &g, &cols);
+        let mut sim = Simulator::new();
+        for v in 0..32u32 {
+            let bits = [v & 1 != 0, v >> 1 & 1 != 0, v >> 2 & 1 != 0, v >> 3 & 1 != 0, v >> 4 & 1 != 0];
+            let words = pack_lanes(&[bits.to_vec()]);
+            let vals = sim.run(&nl, &words).to_vec();
+            let got = lane_value(&vals, &out.sum, 0);
+            let expect = (bits[0] as u32 + bits[1] as u32)
+                + 2 * (bits[2] as u32)
+                + 4 * ((bits[3] as u32) + (bits[4] as u32));
+            assert_eq!(got, u128::from(expect), "v={v}");
+        }
+    }
+}

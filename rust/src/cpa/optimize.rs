@@ -1,0 +1,379 @@
+//! §4.3 / Algorithm 2 — timing-driven prefix-graph optimization.
+//!
+//! Sweeps bits MSB→LSB; for each bit whose estimated delay (input arrival
+//! profile + FDC model over the extracted sub-prefix tree) violates the
+//! target, applies one of the two Figure-9 transformations:
+//!
+//! - **depth-opt** — re-associate the deepest critical-path node
+//!   (`GRAPHOPT`), trading a duplicated span for one level less depth;
+//! - **fanout-opt** — the same re-association applied at the node whose
+//!   non-trivial fan-in has the highest fanout, splitting a hot node.
+//!
+//! `GRAPHOPT(p)`: with `x = ntf(p)` internal, create `s = tf(p) ∘ tf(x)`
+//! and rewire `p = s ∘ ntf(x)`. The graph is re-topologized after each
+//! application (our IR keeps fan-ins before consumers).
+
+use super::graph::{PIdx, PNode, PrefixGraph, NONE};
+use super::timing::{fdc_features, FdcModel};
+
+/// Per-bit delay estimate: an *arrival-aware* DP over the graph applying
+/// the FDC cost model node by node — `est(node) = max(est(children)) +
+/// k_type + k_fanout·(fanout − 1)` with leaves seeded by the input
+/// arrival profile. This is the Eq.-27 model evaluated along real timing
+/// paths rather than the depth-critical path, so Algorithm 2's
+/// accept/reject decisions track the STA (fanout splits on early-but-hot
+/// nodes are visible as improvements).
+pub fn estimate_bit_delays(g: &PrefixGraph, arrivals: &[f64], model: &FdcModel) -> Vec<f64> {
+    let fo = g.fanouts();
+    let blue = super::timing::blue_mask(g);
+    let mut est = vec![0.0f64; g.nodes.len()];
+    for i in 0..g.nodes.len() {
+        let nd = g.node(i);
+        if nd.is_leaf() {
+            // pg stage (half of the intercept) happens at the leaf.
+            est[i] = arrivals.get(nd.msb).copied().unwrap_or(0.0) + model.b * 0.5;
+        } else {
+            let (k_node, k_fan) =
+                if blue[i] { (model.k[3], model.k[1]) } else { (model.k[2], model.k[0]) };
+            let cost = k_node + k_fan * (fo[i].saturating_sub(1)) as f64;
+            est[i] = est[nd.tf].max(est[nd.ntf]) + cost;
+        }
+    }
+    (0..g.n)
+        .map(|bit| {
+            let r = g.roots[bit];
+            if r == NONE {
+                0.0
+            } else {
+                // final sum XOR = the other half of the intercept.
+                est[r] + model.b * 0.5
+            }
+        })
+        .collect()
+}
+
+/// FDC-feature-based prediction per bit (Eq. 27 evaluated on the critical
+/// path features) — kept for the Figure-8 fidelity study.
+pub fn predict_bit_delays(g: &PrefixGraph, model: &FdcModel) -> Vec<f64> {
+    fdc_features(g).iter().map(|f| model.predict(f)).collect()
+}
+
+/// Apply `GRAPHOPT` at node `p`. Returns false if `ntf(p)` is a leaf (no
+/// transformation possible). The graph is re-topologized on success.
+pub fn graphopt(g: &mut PrefixGraph, p: PIdx) -> bool {
+    let pn = g.node(p);
+    if pn.is_leaf() {
+        return false;
+    }
+    let x = pn.ntf;
+    let xn = g.node(x);
+    if xn.is_leaf() {
+        return false;
+    }
+    // s = tf(p) ∘ tf(x): spans [msb_p : lsb(tf(x))].
+    let tf_p = g.node(pn.tf);
+    let tf_x = g.node(xn.tf);
+    debug_assert_eq!(tf_p.lsb, tf_x.msb + 1);
+    let s = PNode { msb: tf_p.msb, lsb: tf_x.lsb, tf: pn.tf, ntf: xn.tf };
+    g.nodes.push(s);
+    let s_idx = g.nodes.len() - 1;
+    g.nodes[p].tf = s_idx;
+    g.nodes[p].ntf = xn.ntf;
+    retopologize(g);
+    true
+}
+
+/// Restore the fan-ins-before-consumers node order after in-place rewiring
+/// (DFS from the roots; dead nodes dropped).
+pub fn retopologize(g: &mut PrefixGraph) {
+    let mut remap = vec![NONE; g.nodes.len()];
+    let mut out: Vec<PNode> = Vec::with_capacity(g.nodes.len());
+    for i in 0..g.n {
+        remap[i] = i;
+        out.push(g.nodes[i]);
+    }
+    // Iterative postorder.
+    let mut stack: Vec<(PIdx, bool)> =
+        g.roots.iter().filter(|&&r| r != NONE).map(|&r| (r, false)).collect();
+    while let Some((i, expanded)) = stack.pop() {
+        if remap[i] != NONE {
+            continue;
+        }
+        let nd = g.nodes[i];
+        if nd.is_leaf() {
+            continue; // already mapped
+        }
+        if expanded {
+            let mut m = nd;
+            m.tf = remap[nd.tf];
+            m.ntf = remap[nd.ntf];
+            debug_assert!(m.tf != NONE && m.ntf != NONE, "child not mapped");
+            remap[i] = out.len();
+            out.push(m);
+        } else {
+            stack.push((i, true));
+            stack.push((nd.tf, false));
+            stack.push((nd.ntf, false));
+        }
+    }
+    for r in g.roots.iter_mut() {
+        if *r != NONE {
+            *r = remap[*r];
+        }
+    }
+    g.nodes = out;
+}
+
+/// Critical (deepest, fanout tie-break) path from `root` down to a leaf.
+fn critical_path(g: &PrefixGraph, root: PIdx) -> Vec<PIdx> {
+    let depths = g.depths();
+    let fo = g.fanouts();
+    let mut path = Vec::new();
+    let mut cur = root;
+    loop {
+        path.push(cur);
+        let nd = g.node(cur);
+        if nd.is_leaf() {
+            break;
+        }
+        let (dt, du) = (depths[nd.tf], depths[nd.ntf]);
+        cur = if dt > du || (dt == du && fo[nd.tf] >= fo[nd.ntf]) { nd.tf } else { nd.ntf };
+    }
+    path
+}
+
+/// Nodes of the sub-prefix tree rooted at `root`.
+fn subtree(g: &PrefixGraph, root: PIdx) -> Vec<PIdx> {
+    let mut seen = vec![false; g.nodes.len()];
+    let mut stack = vec![root];
+    let mut out = Vec::new();
+    while let Some(i) = stack.pop() {
+        if seen[i] {
+            continue;
+        }
+        seen[i] = true;
+        out.push(i);
+        let nd = g.node(i);
+        if !nd.is_leaf() {
+            stack.push(nd.tf);
+            stack.push(nd.ntf);
+        }
+    }
+    out
+}
+
+/// Outcome of one optimization run.
+#[derive(Debug, Clone)]
+pub struct OptReport {
+    pub transforms: usize,
+    pub met_all: bool,
+    pub worst_delay_est: f64,
+}
+
+/// Algorithm 2: optimize `g` so each bit's estimated delay meets
+/// `target_ns`, given the CT output `arrivals` profile.
+pub fn optimize(
+    g: &mut PrefixGraph,
+    arrivals: &[f64],
+    target_ns: f64,
+    model: &FdcModel,
+    max_transforms: usize,
+) -> OptReport {
+    let mut transforms = 0usize;
+    // Track the best graph seen globally (a transform can improve its
+    // target bit while regressing another; never return worse than start).
+    let worst_of = |g: &PrefixGraph| {
+        estimate_bit_delays(g, arrivals, model).iter().copied().fold(0.0f64, f64::max)
+    };
+    let mut best_graph = g.clone();
+    let mut best_worst = worst_of(g);
+    'outer: loop {
+        let est = estimate_bit_delays(g, arrivals, model);
+        let violated: Vec<usize> = (0..g.n).rev().filter(|&j| est[j] > target_ns + 1e-12).collect();
+        if violated.is_empty() {
+            break;
+        }
+        let mut improved_any = false;
+        for j in violated {
+            if transforms >= max_transforms {
+                break 'outer;
+            }
+            let root = g.roots[j];
+            if root == NONE {
+                continue;
+            }
+            let depths = g.depths();
+            let span = g.node(root).span();
+            let min_depth = (span as f64).log2().ceil() as usize;
+            let before = estimate_bit_delays(g, arrivals, model)[j];
+            let snapshot = g.clone();
+            // Line 7: depth-opt when depth exceeds the log2 bound (+1 for
+            // LSB-side pg grouping); fanout-opt otherwise.
+            let applied = if depths[root] > min_depth + 1 {
+                // depth-opt: deepest critical-path node with internal ntf.
+                let path = critical_path(g, root);
+                let target = path
+                    .iter()
+                    .copied()
+                    .filter(|&p| !g.node(p).is_leaf() && !g.node(g.node(p).ntf).is_leaf())
+                    .max_by_key(|&p| depths[p]);
+                target.map(|p| graphopt(g, p)).unwrap_or(false)
+            } else {
+                // fanout-opt: node whose ntf has the highest fanout (> 1).
+                let fo = g.fanouts();
+                let target = subtree(g, root)
+                    .into_iter()
+                    .filter(|&p| {
+                        let nd = g.node(p);
+                        !nd.is_leaf() && !g.node(nd.ntf).is_leaf() && fo[nd.ntf] > 1
+                    })
+                    .max_by_key(|&p| fo[g.node(p).ntf]);
+                target.map(|p| graphopt(g, p)).unwrap_or(false)
+            };
+            if applied {
+                let after = estimate_bit_delays(g, arrivals, model);
+                if after[j] < before - 1e-12 {
+                    transforms += 1;
+                    improved_any = true;
+                    let w = after.iter().copied().fold(0.0f64, f64::max);
+                    if w < best_worst - 1e-12 {
+                        best_worst = w;
+                        best_graph = g.clone();
+                    }
+                } else {
+                    // Non-improving transform: revert (keeps area in check
+                    // and guarantees monotone progress / termination).
+                    *g = snapshot;
+                }
+            }
+        }
+        if !improved_any {
+            break;
+        }
+    }
+    if worst_of(g) > best_worst + 1e-12 {
+        *g = best_graph;
+    }
+    g.prune();
+    let est = estimate_bit_delays(g, arrivals, model);
+    let worst = est.iter().copied().fold(0.0f64, f64::max);
+    OptReport {
+        transforms,
+        met_all: est.iter().all(|&e| e <= target_ns + 1e-9),
+        worst_delay_est: worst,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpa::graph::{ripple, sklansky};
+    use crate::cpa::netlist::standalone_adder;
+    use crate::sim::{lane_value, pack_lanes, Simulator};
+
+    fn check_adds(g: &PrefixGraph) {
+        let n = g.n;
+        let (nl, sum) = standalone_adder(g, None);
+        nl.validate().unwrap();
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let mut sim = Simulator::new();
+        let mask = (1u64 << n) - 1;
+        let pairs: Vec<(u64, u64)> =
+            (0..64).map(|_| (rng.next_u64() & mask, rng.next_u64() & mask)).collect();
+        let assigns: Vec<Vec<bool>> = pairs
+            .iter()
+            .map(|(x, y)| (0..n).flat_map(|k| [x >> k & 1 != 0, y >> k & 1 != 0]).collect())
+            .collect();
+        let words = pack_lanes(&assigns);
+        let vals = sim.run(&nl, &words).to_vec();
+        for (lane, (x, y)) in pairs.iter().enumerate() {
+            assert_eq!(lane_value(&vals, &sum, lane as u32), u128::from(x + y));
+        }
+    }
+
+    #[test]
+    fn graphopt_preserves_function_and_reduces_depth() {
+        // On a ripple chain, repeated depth-opt must approach log depth.
+        let mut g = ripple(16);
+        let d0 = g.depth();
+        let model = FdcModel::default_prior();
+        let arrivals = vec![0.0; 16];
+        optimize(&mut g, &arrivals, 0.0 /* unreachable target */, &model, 200);
+        g.validate().unwrap();
+        assert!(g.depth() < d0, "depth {} not reduced from {}", g.depth(), d0);
+        check_adds(&g);
+    }
+
+    #[test]
+    fn graphopt_single_step_valid() {
+        let mut g = ripple(8);
+        // root of bit 7 has ntf = root of bit 6 (internal) — transformable.
+        let p = g.roots[7];
+        assert!(graphopt(&mut g, p));
+        g.validate().unwrap();
+        check_adds(&g);
+    }
+
+    #[test]
+    fn optimize_meets_loose_target_without_transforms() {
+        let mut g = sklansky(16);
+        let model = FdcModel::default_prior();
+        let rep = optimize(&mut g, &vec![0.0; 16], 100.0, &model, 100);
+        assert!(rep.met_all);
+        assert_eq!(rep.transforms, 0);
+    }
+
+    #[test]
+    fn optimize_respects_arrival_profile() {
+        // Late-arriving middle bits (the CT trapezoid) drive estimates.
+        let arr: Vec<f64> =
+            (0..16).map(|i| if (4..12).contains(&i) { 0.3 } else { 0.1 }).collect();
+        let g = ripple(16);
+        let model = FdcModel::default_prior();
+        let est = estimate_bit_delays(&g, &arr, &model);
+        // Bit 15's subtree includes the late middle bits ⇒ est must exceed
+        // the model-only delay.
+        let est0 = estimate_bit_delays(&g, &vec![0.0; 16], &model);
+        assert!(est[15] > est0[15]);
+    }
+
+    #[test]
+    fn fanout_opt_splits_hot_nodes() {
+        // One fanout-opt application at the node whose ntf is hottest must
+        // lower that ntf's fanout by one and preserve the function.
+        let mut g = sklansky(32);
+        let fo = g.fanouts();
+        let (p, hot_span, hot_fo) = (g.n..g.nodes.len())
+            .filter(|&p| {
+                let nd = g.node(p);
+                !g.node(nd.ntf).is_leaf() && fo[nd.ntf] > 1
+            })
+            .map(|p| {
+                let x = g.node(p).ntf;
+                (p, (g.node(x).msb, g.node(x).lsb), fo[x])
+            })
+            .max_by_key(|&(_, _, f)| f)
+            .unwrap();
+        assert!(graphopt(&mut g, p));
+        g.validate().unwrap();
+        // The hot span's total fanout (summed over duplicates) dropped.
+        let fo2 = g.fanouts();
+        let hot_fo_after: usize = (g.n..g.nodes.len())
+            .filter(|&i| (g.node(i).msb, g.node(i).lsb) == hot_span)
+            .map(|i| fo2[i])
+            .max()
+            .unwrap_or(0);
+        assert!(hot_fo_after < hot_fo, "hot fanout {hot_fo}→{hot_fo_after}");
+        check_adds(&g);
+    }
+
+    #[test]
+    fn optimize_with_unreachable_target_terminates_and_stays_correct() {
+        let mut g = sklansky(32);
+        let model = FdcModel::default_prior();
+        let rep = optimize(&mut g, &vec![0.0; 32], 0.0, &model, 64);
+        assert!(!rep.met_all);
+        g.validate().unwrap();
+        check_adds(&g);
+    }
+}

@@ -1,0 +1,312 @@
+//! §4.2 — timing models for prefix adders: depth, mpfo, and the paper's
+//! fanout-depth-combination (FDC) model, plus the linear-regression fitting
+//! and fidelity metrics behind Figure 8.
+//!
+//! FDC features for bit `i` are extracted from the sub-prefix tree rooted at
+//! `roots[i]`: along the critical path (deepest; fanout-sum tie-break) we
+//! accumulate the fanouts and counts of *black* nodes (internal nodes whose
+//! group propagate is consumed) and *blue* nodes (generate-only, final-level
+//! nodes driving a single sum), giving
+//! `d_i = k0·F_black + k1·F_blue + k2·N_black + k3·N_blue + b`  (Eq. 27).
+
+use super::graph::{PrefixGraph, NONE};
+
+/// Per-bit feature vector of the FDC model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FdcFeatures {
+    pub f_black: f64,
+    pub f_blue: f64,
+    pub n_black: f64,
+    pub n_blue: f64,
+}
+
+impl FdcFeatures {
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.f_black, self.f_blue, self.n_black, self.n_blue]
+    }
+}
+
+/// Fitted FDC coefficients (`k0..k3`, intercept `b`), in ns.
+#[derive(Debug, Clone, Copy)]
+pub struct FdcModel {
+    pub k: [f64; 4],
+    pub b: f64,
+}
+
+impl FdcModel {
+    /// A reasonable logical-effort-derived prior (used before fitting and
+    /// by Algorithm 2 when the caller provides no fitted model).
+    pub fn default_prior() -> Self {
+        Self::from_lib(&crate::ir::CellLib::nangate45())
+    }
+
+    /// Derive the coefficients from a cell library: a black node is an
+    /// And2→Or2 pair (G path) whose output load grows with fanout; blue
+    /// nodes are the same pair driving a single sum XOR; the intercept
+    /// carries the pg stage and the final sum XOR.
+    pub fn from_lib(lib: &crate::ir::CellLib) -> Self {
+        use crate::ir::CellKind::*;
+        let tau = lib.tau_ns;
+        let base_load = 1.5; // one downstream prefix input
+        let intrinsic = |k: crate::ir::CellKind| lib.delay_ns(k, base_load);
+        let black = intrinsic(And2) + intrinsic(Or2);
+        // Extra delay per additional unit of fanout on the G output.
+        let per_fanout = lib.params(Or2).logical_effort * 1.5 / lib.params(Or2).input_cap * tau;
+        let pg = intrinsic(Xor2).max(intrinsic(And2));
+        let sum = intrinsic(Xor2);
+        FdcModel {
+            k: [per_fanout, per_fanout * 0.8, black, black * 0.92],
+            b: pg + sum,
+        }
+    }
+
+    pub fn predict(&self, f: &FdcFeatures) -> f64 {
+        let x = f.as_array();
+        self.k.iter().zip(x.iter()).map(|(k, v)| k * v).sum::<f64>() + self.b
+    }
+}
+
+/// Which internal nodes are "blue" (generate-only): their group propagate
+/// has no consumer among live nodes.
+pub fn blue_mask(g: &PrefixGraph) -> Vec<bool> {
+    let live = g.live_mask();
+    // A node's P is consumed if the node is a tf of any live parent, or it
+    // is an ntf of a live parent whose own P is consumed. Compute by
+    // reverse-topological propagation of `p_needed`.
+    let mut p_needed = vec![false; g.nodes.len()];
+    for i in (g.n..g.nodes.len()).rev() {
+        if !live[i] {
+            continue;
+        }
+        let nd = g.node(i);
+        // Parent consumes tf's P always (for its G and P).
+        p_needed[nd.tf] = true;
+        // Parent consumes ntf's P only if the parent's P is itself needed.
+        if p_needed[i] {
+            p_needed[nd.ntf] = true;
+        }
+    }
+    (0..g.nodes.len())
+        .map(|i| i >= g.n && live[i] && !p_needed[i])
+        .collect()
+}
+
+/// Extract FDC features for every bit of the graph. `O(nodes)` per the
+/// paper's complexity claim: one DP pass computes, per node, the critical
+/// path (max depth, fanout-sum tie-break) feature accumulation.
+pub fn fdc_features(g: &PrefixGraph) -> Vec<FdcFeatures> {
+    let fo = g.fanouts();
+    let blue = blue_mask(g);
+    let depths = g.depths();
+    // DP over nodes: features of the critical path from leaves to node i
+    // (inclusive of node i's own contribution).
+    let mut feat: Vec<FdcFeatures> = vec![FdcFeatures::default(); g.nodes.len()];
+    let mut key: Vec<(usize, f64)> = vec![(0, 0.0); g.nodes.len()]; // (depth, fanout-sum)
+    for i in g.n..g.nodes.len() {
+        let nd = g.node(i);
+        let (kt, ku) = (key[nd.tf], key[nd.ntf]);
+        let child = if (depths[nd.tf], kt.1) >= (depths[nd.ntf], ku.1) { nd.tf } else { nd.ntf };
+        let mut f = feat[child];
+        if blue[i] {
+            f.f_blue += fo[i] as f64;
+            f.n_blue += 1.0;
+        } else {
+            f.f_black += fo[i] as f64;
+            f.n_black += 1.0;
+        }
+        feat[i] = f;
+        key[i] = (depths[i], key[child].1 + fo[i] as f64);
+    }
+    g.roots.iter().map(|&r| if r == NONE { FdcFeatures::default() } else { feat[r] }).collect()
+}
+
+/// Max-path-fanout (mpfo) per bit — the prior-work model the paper compares
+/// against: max over root-to-leaf paths of the fanout sum.
+pub fn mpfo(g: &PrefixGraph) -> Vec<f64> {
+    let fo = g.fanouts();
+    let mut acc = vec![0.0f64; g.nodes.len()];
+    for i in g.n..g.nodes.len() {
+        let nd = g.node(i);
+        acc[i] = acc[nd.tf].max(acc[nd.ntf]) + fo[i] as f64;
+    }
+    g.roots.iter().map(|&r| if r == NONE { 0.0 } else { acc[r] }).collect()
+}
+
+/// Logic depth per bit (the GOMIL/Zimmermann-era model).
+pub fn depth_per_bit(g: &PrefixGraph) -> Vec<f64> {
+    let d = g.depths();
+    g.roots.iter().map(|&r| if r == NONE { 0.0 } else { d[r] as f64 }).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Regression + fidelity metrics (Figure 8)
+// ---------------------------------------------------------------------------
+
+/// Ordinary least squares for `y ≈ X·w + b`. Returns `(w, b)`.
+/// Solves the (k+1)-dimensional normal equations by Gaussian elimination.
+pub fn least_squares(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
+    let n = xs.len();
+    assert!(n > 0 && n == ys.len());
+    let k = xs[0].len();
+    let dim = k + 1;
+    // Normal matrix A = Zᵀ Z, rhs = Zᵀ y, where Z = [X | 1].
+    let mut a = vec![vec![0.0f64; dim]; dim];
+    let mut rhs = vec![0.0f64; dim];
+    for (x, &y) in xs.iter().zip(ys.iter()) {
+        let z: Vec<f64> = x.iter().copied().chain(std::iter::once(1.0)).collect();
+        for i in 0..dim {
+            for j in 0..dim {
+                a[i][j] += z[i] * z[j];
+            }
+            rhs[i] += z[i] * y;
+        }
+    }
+    // Ridge epsilon for singular feature sets.
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += 1e-9;
+    }
+    // Gaussian elimination with partial pivoting.
+    for col in 0..dim {
+        let piv = (col..dim)
+            .max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        rhs.swap(col, piv);
+        let d = a[col][col];
+        for r in 0..dim {
+            if r != col && a[r][col].abs() > 0.0 {
+                let f = a[r][col] / d;
+                for c in col..dim {
+                    a[r][c] -= f * a[col][c];
+                }
+                rhs[r] -= f * rhs[col];
+            }
+        }
+    }
+    let w: Vec<f64> = (0..k).map(|i| rhs[i] / a[i][i]).collect();
+    let b = rhs[k] / a[k][k];
+    (w, b)
+}
+
+/// Fidelity metrics of a prediction vector.
+#[derive(Debug, Clone, Copy)]
+pub struct Fidelity {
+    pub r2: f64,
+    pub mape: f64,
+}
+
+pub fn fidelity(pred: &[f64], truth: &[f64]) -> Fidelity {
+    let n = truth.len() as f64;
+    let mean = truth.iter().sum::<f64>() / n;
+    let ss_tot: f64 = truth.iter().map(|y| (y - mean).powi(2)).sum();
+    let ss_res: f64 = pred.iter().zip(truth).map(|(p, y)| (p - y).powi(2)).sum();
+    let r2 = 1.0 - ss_res / ss_tot.max(1e-12);
+    let mape = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, y)| ((p - y) / y.abs().max(1e-9)).abs())
+        .sum::<f64>()
+        / n;
+    Fidelity { r2, mape }
+}
+
+/// Fit the FDC model on (features, measured delay) samples.
+pub fn fit_fdc(samples: &[(FdcFeatures, f64)]) -> FdcModel {
+    let xs: Vec<Vec<f64>> = samples.iter().map(|(f, _)| f.as_array().to_vec()).collect();
+    let ys: Vec<f64> = samples.iter().map(|(_, y)| *y).collect();
+    let (w, b) = least_squares(&xs, &ys);
+    FdcModel { k: [w[0], w[1], w[2], w[3]], b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpa::graph::{kogge_stone, ripple, sklansky};
+
+    #[test]
+    fn blue_nodes_are_final_level() {
+        // In a ripple chain every root node except the last is consumed by
+        // the next node as ntf — the parent's P is needed only when the
+        // parent's P is consumed… top node's P is never consumed, so the
+        // chain is blue from the top down until a node serves as tf.
+        let g = ripple(8);
+        let blue = blue_mask(&g);
+        // leaf nodes are never blue
+        for i in 0..g.n {
+            assert!(!blue[i]);
+        }
+        // In a ripple graph no internal node is a tf of another node —
+        // leaves are the tfs — so every internal node is blue.
+        for i in g.n..g.nodes.len() {
+            assert!(blue[i], "node {i}");
+        }
+        // Sklansky has true black nodes.
+        let s = sklansky(16);
+        let bs = blue_mask(&s);
+        assert!(bs.iter().any(|&b| b));
+        assert!((s.n..s.nodes.len()).any(|i| !bs[i]));
+    }
+
+    #[test]
+    fn fdc_features_monotone_in_bit_position() {
+        let g = ripple(16);
+        let f = fdc_features(&g);
+        // Deeper bits accumulate more nodes along the critical path.
+        assert!(f[15].n_black + f[15].n_blue > f[3].n_black + f[3].n_blue);
+    }
+
+    #[test]
+    fn mpfo_and_depth_sane() {
+        let g = sklansky(16);
+        let d = depth_per_bit(&g);
+        assert_eq!(d[15], 4.0);
+        assert!(d[1] <= 1.0 + 1e-9);
+        let m = mpfo(&g);
+        assert!(m[15] >= d[15], "mpfo accumulates fanout ≥ 1 per level");
+        let ks = kogge_stone(16);
+        // Kogge-Stone bounded fanout ⇒ lower mpfo at the MSB than Sklansky.
+        assert!(mpfo(&ks)[15] <= m[15]);
+    }
+
+    #[test]
+    fn least_squares_recovers_plane() {
+        // y = 2x0 - 3x1 + 0.5 with a deterministic pseudo-random design.
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let xs: Vec<Vec<f64>> =
+            (0..200).map(|_| vec![rng.f64() * 10.0, rng.f64() * 4.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] - 3.0 * x[1] + 0.5).collect();
+        let (w, b) = least_squares(&xs, &ys);
+        assert!((w[0] - 2.0).abs() < 1e-6);
+        assert!((w[1] + 3.0).abs() < 1e-6);
+        assert!((b - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fidelity_metrics() {
+        let truth = vec![1.0, 2.0, 3.0, 4.0];
+        let perfect = fidelity(&truth, &truth);
+        assert!((perfect.r2 - 1.0).abs() < 1e-12);
+        assert!(perfect.mape < 1e-12);
+        let off = fidelity(&[1.1, 2.2, 3.3, 4.4], &truth);
+        assert!(off.r2 < 1.0 && off.r2 > 0.9);
+        assert!((off.mape - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_fdc_reduces_error_vs_prior() {
+        // Synthetic ground truth generated from a known linear model.
+        let truth_model = FdcModel { k: [0.01, 0.005, 0.04, 0.03], b: 0.06 };
+        let mut samples = Vec::new();
+        for n in [8usize, 12, 16, 24] {
+            for g in [sklansky(n), kogge_stone(n), ripple(n)] {
+                for f in fdc_features(&g) {
+                    samples.push((f, truth_model.predict(&f)));
+                }
+            }
+        }
+        let fitted = fit_fdc(&samples);
+        for (f, y) in &samples {
+            assert!((fitted.predict(f) - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Baseline compressor-tree structures: Wallace and Dadda.
+//!
+//! These are the textbook reduction schedules the paper's comparisons build
+//! on (the commercial-IP proxy uses Dadda; RL-MUL's search starts from a
+//! Wallace-like column schedule). Both are expressed as [`StagePlan`]s so
+//! they share the interconnect builder with the UFO-MAC tree.
+
+use super::stage::StagePlan;
+
+/// Wallace's row-grouping reduction: at each stage, rows are grouped in
+/// threes; within a group a column holding 3 bits gets a full adder, 2 bits
+/// a half adder, 1 bit passes — until at most two rows remain. Expressed
+/// column-wise by treating the per-column population as rows dense from the
+/// bottom (exact for multiplier-style matrices).
+pub fn wallace_plan(initial: &[usize]) -> StagePlan {
+    let w = initial.len() + 4;
+    let mut avail = initial.to_vec();
+    avail.resize(w, 0);
+    let mut plan = StagePlan { f: vec![], h: vec![] };
+    for _ in 0..64 {
+        let maxh = avail.iter().copied().max().unwrap_or(0);
+        if maxh <= 2 {
+            break;
+        }
+        let groups = maxh / 3; // full groups of 3 rows; remainder passes
+        let mut fi = vec![0usize; w];
+        let mut hi = vec![0usize; w];
+        let mut next = avail.clone();
+        for j in 0..w {
+            let mut f = 0usize;
+            let mut h = 0usize;
+            for k in 0..groups {
+                let cnt = avail[j].saturating_sub(3 * k).min(3);
+                match cnt {
+                    3 => f += 1,
+                    2 => h += 1,
+                    _ => {}
+                }
+            }
+            fi[j] = f;
+            hi[j] = h;
+            next[j] -= 2 * f + h;
+            if j + 1 < w {
+                next[j + 1] += f + h;
+            }
+        }
+        plan.f.push(fi);
+        plan.h.push(hi);
+        avail = next;
+    }
+    trim_width(&mut plan, initial);
+    plan
+}
+
+/// Dadda's just-in-time schedule: reduce only as much as needed to hit the
+/// next height in the sequence 2, 3, 4, 6, 9, 13, 19, 28, 42, …
+pub fn dadda_plan(initial: &[usize]) -> StagePlan {
+    let max_h = initial.iter().copied().max().unwrap_or(0);
+    // Height targets strictly below the current max, descending to 2.
+    let mut seq = vec![2usize];
+    while *seq.last().unwrap() < max_h {
+        let d = *seq.last().unwrap();
+        seq.push(d * 3 / 2);
+    }
+    seq.pop(); // last element ≥ max_h is not a target
+    seq.reverse(); // descending targets
+
+    let w = initial.len() + 4;
+    let mut avail = initial.to_vec();
+    avail.resize(w, 0);
+    let mut plan = StagePlan { f: vec![], h: vec![] };
+    for stage in 0..64 {
+        if avail.iter().all(|&m| m <= 2) {
+            break;
+        }
+        let target = seq.get(stage).copied().unwrap_or(2);
+        let mut fi = vec![0usize; w];
+        let mut hi = vec![0usize; w];
+        let mut next = vec![0usize; w];
+        let mut inflow = 0usize; // carries generated into column j this stage
+        for j in 0..w {
+            let m = avail[j] + inflow;
+            let (mut f, mut h) = if m <= target {
+                (0, 0)
+            } else {
+                let r = m - target;
+                // each FA removes 2 from this column, each HA removes 1
+                (r / 2, r % 2)
+            };
+            // Compressor inputs can only come from signals present at this
+            // stage (carries produced this stage arrive at the next one);
+            // legalize and let a later stage absorb any shortfall.
+            if 3 * f + 2 * h > avail[j] {
+                f = f.min(avail[j] / 3);
+                h = h.min((avail[j] - 3 * f) / 2).min(1);
+            }
+            fi[j] = f;
+            hi[j] = h;
+            next[j] = m - 2 * f - h;
+            inflow = f + h;
+        }
+        plan.f.push(fi);
+        plan.h.push(hi);
+        avail = next;
+    }
+    debug_assert!(avail.iter().all(|&m| m <= 2));
+    trim_width(&mut plan, initial);
+    plan
+}
+
+/// Shrink the plan's width to the columns that are actually used, keeping
+/// at least the width implied by the initial populations + final carries.
+fn trim_width(plan: &mut StagePlan, initial: &[usize]) {
+    let w = plan.width();
+    let mut used = initial.len();
+    for j in (0..w).rev() {
+        if (0..plan.stages()).any(|i| plan.f[i][j] + plan.h[i][j] > 0) {
+            used = used.max(j + 2); // compressors in j carry into j+1
+            break;
+        }
+    }
+    let used = used.min(w);
+    for i in 0..plan.stages() {
+        plan.f[i].truncate(used);
+        plan.h[i].truncate(used);
+    }
+}
+
+/// Per-column totals of a plan (for area metrics / validation).
+pub fn plan_totals(plan: &StagePlan) -> (Vec<usize>, Vec<usize>) {
+    let w = plan.width();
+    let mut f = vec![0usize; w];
+    let mut h = vec![0usize; w];
+    for i in 0..plan.stages() {
+        for j in 0..w {
+            f[j] += plan.f[i][j];
+            h[j] += plan.h[i][j];
+        }
+    }
+    (f, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::counts::CtCounts;
+
+    fn mult_pp(n: usize) -> Vec<usize> {
+        (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect()
+    }
+
+    /// Replay a plan to check populations stay legal and end ≤ 2.
+    fn replay(plan: &StagePlan, initial: &[usize]) {
+        let w = plan.width();
+        let mut avail = initial.to_vec();
+        avail.resize(w, 0);
+        for i in 0..plan.stages() {
+            let mut next = avail.clone();
+            for j in 0..w {
+                let (f, h) = (plan.f[i][j], plan.h[i][j]);
+                assert!(3 * f + 2 * h <= avail[j], "stage {i} col {j}");
+                next[j] -= 2 * f + h;
+                if j + 1 < w {
+                    next[j + 1] += f + h;
+                }
+            }
+            avail = next;
+        }
+        assert!(avail.iter().all(|&m| m <= 2), "final populations {avail:?}");
+    }
+
+    #[test]
+    fn wallace_and_dadda_are_legal() {
+        for n in [3, 4, 8, 16, 32] {
+            replay(&wallace_plan(&mult_pp(n)), &mult_pp(n));
+            replay(&dadda_plan(&mult_pp(n)), &mult_pp(n));
+        }
+    }
+
+    #[test]
+    fn dadda_uses_fewer_compressors_than_wallace() {
+        let pp = mult_pp(16);
+        let (wf, wh) = plan_totals(&wallace_plan(&pp));
+        let (df, dh) = plan_totals(&dadda_plan(&pp));
+        let warea: usize = 3 * wf.iter().sum::<usize>() + 2 * wh.iter().sum::<usize>();
+        let darea: usize = 3 * df.iter().sum::<usize>() + 2 * dh.iter().sum::<usize>();
+        assert!(darea <= warea, "dadda {darea} vs wallace {warea}");
+    }
+
+    #[test]
+    fn stage_counts_match_theory() {
+        for (n, expect) in [(8usize, 4usize), (16, 6), (32, 8)] {
+            let wp = wallace_plan(&mult_pp(n));
+            let dp = dadda_plan(&mult_pp(n));
+            assert_eq!(dp.stages(), expect, "dadda n={n}");
+            assert!(wp.stages() <= expect + 1, "wallace n={n}: {}", wp.stages());
+        }
+    }
+
+    #[test]
+    fn ufo_counts_beat_or_match_dadda_area() {
+        // Algorithm 1 is area-optimal; Dadda should not use less.
+        for n in [8, 16] {
+            let pp = mult_pp(n);
+            let c = CtCounts::from_populations(&pp);
+            let (df, dh) = plan_totals(&dadda_plan(&pp));
+            let darea = 3 * df.iter().sum::<usize>() + 2 * dh.iter().sum::<usize>();
+            assert!(c.area_metric() <= darea, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! §3.4/§3.5 — interconnection-order optimization and CT construction.
+//!
+//! Given a [`StagePlan`], this module instantiates the compressor tree into
+//! a netlist slice by slice (`Slice_{i,j}` = the compressors of stage `i`,
+//! column `j`). Within each slice, the bijection between arriving partial
+//! products (sources) and compressor ports / pass-throughs (sinks) is the
+//! design space the paper opens up (Figure 4 shows >10 % delay spread over
+//! random orders). Strategies:
+//!
+//! - [`OrderStrategy::Optimized`] — the paper's ILP objective solved
+//!   exactly per slice: the permutation-matrix program (Eq. 19-23)
+//!   restricted to one slice *is* a bottleneck assignment problem, which
+//!   [`crate::ilp::assignment::bottleneck_assignment`] solves exactly
+//!   (min-max completion, min-sum tie-break). Slices are processed in
+//!   stage order so each slice sees the exact arrival times produced by
+//!   the previous one — the same information flow as the monolithic ILP,
+//!   decomposed for tractability (documented in DESIGN.md).
+//! - [`OrderStrategy::Naive`] — sources connect to ports in arrival order
+//!   (what a straightforward RTL generator does).
+//! - [`OrderStrategy::Random`] — a seeded random bijection (drives the
+//!   Figure-4 experiment).
+
+use super::stage::StagePlan;
+use crate::ilp::assignment::bottleneck_assignment;
+use crate::ir::Netlist;
+use crate::synth::{full_adder, half_adder, CompressorTiming, Sig};
+use crate::util::Rng;
+
+/// Interconnect-order strategy for CT construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderStrategy {
+    Optimized,
+    Naive,
+    Random(u64),
+}
+
+/// The compressed output: per column, the (at most two) result bits, plus
+/// the arrival estimate profile that drives CPA optimization.
+#[derive(Debug, Clone)]
+pub struct CtOutput {
+    /// `rows[j]` = the 1-2 output bits of column `j`.
+    pub rows: Vec<Vec<Sig>>,
+    /// Worst model-estimated arrival per column (the Figure-1 trapezoid).
+    pub profile: Vec<f64>,
+    /// Stages actually realized.
+    pub stages: usize,
+}
+
+impl CtOutput {
+    /// Worst arrival estimate over all columns.
+    pub fn max_arrival(&self) -> f64 {
+        self.profile.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Port descriptor used for slice assignment.
+#[derive(Debug, Clone, Copy)]
+enum Sink {
+    Fa { comp: usize, port: usize },
+    Ha { comp: usize, port: usize },
+    Pass,
+}
+
+/// Build the compressor tree into `nl` following `plan`, using `strategy`
+/// for intra-slice interconnection order.
+///
+/// `columns` provides the initial per-column signals (from the PPG) and is
+/// consumed. Panics if `plan` is inconsistent with the column populations
+/// (callers validate plans against Algorithm-1 counts first).
+pub fn build_ct(
+    nl: &mut Netlist,
+    tm: &CompressorTiming,
+    columns: Vec<Vec<Sig>>,
+    plan: &StagePlan,
+    strategy: OrderStrategy,
+) -> CtOutput {
+    let w = plan.width().max(columns.len());
+    let mut state: Vec<Vec<Sig>> = columns;
+    state.resize(w, Vec::new());
+    let mut rng = match strategy {
+        OrderStrategy::Random(seed) => Some(Rng::seed_from_u64(seed)),
+        _ => None,
+    };
+
+    for i in 0..plan.stages() {
+        let mut next: Vec<Vec<Sig>> = vec![Vec::new(); w];
+        for j in 0..w {
+            let (nf, nh) = if j < plan.width() {
+                (plan.f[i][j], plan.h[i][j])
+            } else {
+                (0, 0)
+            };
+            let sources = std::mem::take(&mut state[j]);
+            let m = sources.len();
+            assert!(
+                3 * nf + 2 * nh <= m,
+                "slice ({i},{j}): {m} sources cannot feed {nf}×3:2 + {nh}×2:2"
+            );
+
+            // Sink list: FA ports, HA ports, then pass-throughs.
+            let mut sinks: Vec<Sink> = Vec::with_capacity(m);
+            for c in 0..nf {
+                for p in 0..3 {
+                    sinks.push(Sink::Fa { comp: c, port: p });
+                }
+            }
+            for c in 0..nh {
+                for p in 0..2 {
+                    sinks.push(Sink::Ha { comp: c, port: p });
+                }
+            }
+            while sinks.len() < m {
+                sinks.push(Sink::Pass);
+            }
+
+            // Decide the bijection source→sink.
+            let perm: Vec<usize> = match strategy {
+                OrderStrategy::Naive => (0..m).collect(),
+                OrderStrategy::Random(_) => {
+                    let mut p: Vec<usize> = (0..m).collect();
+                    rng.as_mut().unwrap().shuffle(&mut p);
+                    p
+                }
+                OrderStrategy::Optimized => {
+                    if m == 0 {
+                        vec![]
+                    } else {
+                        // cost[u][v] = arrival(u) + worst port→output delay(v)
+                        let cost: Vec<Vec<f64>> = sources
+                            .iter()
+                            .map(|s| {
+                                sinks
+                                    .iter()
+                                    .map(|snk| {
+                                        s.t + match snk {
+                                            Sink::Fa { port, .. } => tm.fa_port_worst(*port),
+                                            Sink::Ha { .. } => tm.ha_port_worst(),
+                                            Sink::Pass => 0.0,
+                                        }
+                                    })
+                                    .collect()
+                            })
+                            .collect();
+                        bottleneck_assignment(&cost).0
+                    }
+                }
+            };
+
+            // Gather per-compressor inputs.
+            let mut fa_in: Vec<[Option<Sig>; 3]> = vec![[None; 3]; nf];
+            let mut ha_in: Vec<[Option<Sig>; 2]> = vec![[None; 2]; nh];
+            for (u, &v) in perm.iter().enumerate() {
+                match sinks[v] {
+                    Sink::Fa { comp, port } => fa_in[comp][port] = Some(sources[u]),
+                    Sink::Ha { comp, port } => ha_in[comp][port] = Some(sources[u]),
+                    Sink::Pass => next[j].push(sources[u]),
+                }
+            }
+
+            // Instantiate.
+            for ins in fa_in {
+                let out = full_adder(nl, tm, ins[0].unwrap(), ins[1].unwrap(), ins[2].unwrap());
+                next[j].push(out.sum);
+                if j + 1 < w {
+                    next[j + 1].push(out.carry);
+                }
+            }
+            for ins in ha_in {
+                let out = half_adder(nl, tm, ins[0].unwrap(), ins[1].unwrap());
+                next[j].push(out.sum);
+                if j + 1 < w {
+                    next[j + 1].push(out.carry);
+                }
+            }
+        }
+        state = next;
+    }
+
+    for (j, col) in state.iter().enumerate() {
+        assert!(col.len() <= 2, "column {j} ended with {} bits", col.len());
+    }
+    let profile: Vec<f64> =
+        state.iter().map(|c| c.iter().map(|s| s.t).fold(0.0, f64::max)).collect();
+    CtOutput { rows: state, profile, stages: plan.stages() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::counts::CtCounts;
+    use crate::ct::stage::assign_greedy;
+    use crate::ir::{CellLib, Netlist};
+    use crate::sim::{pack_lanes, Simulator};
+
+    /// Build a full CT for an n×n AND-array and check the two output rows
+    /// sum to a·b for every (a, b).
+    fn check_ct(n: usize, strategy: OrderStrategy) {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let mut nl = Netlist::new("ct");
+        let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+        let m = crate::ppg::and_array(&mut nl, &lib, &a, &b);
+        let counts = CtCounts::from_populations(&m.counts());
+        let plan = assign_greedy(&counts);
+        plan.validate(&counts).unwrap();
+        let mut cols = m.columns;
+        cols.resize(counts.width(), vec![]);
+        let out = build_ct(&mut nl, &tm, cols, &plan, strategy);
+        nl.validate().unwrap();
+
+        let mut sim = Simulator::new();
+        let all: Vec<(u32, u32)> =
+            (0..1u32 << n).flat_map(|x| (0..1u32 << n).map(move |y| (x, y))).collect();
+        for chunk in all.chunks(64) {
+            let assigns: Vec<Vec<bool>> = chunk
+                .iter()
+                .map(|(x, y)| {
+                    (0..n).map(|k| x >> k & 1 != 0).chain((0..n).map(|k| y >> k & 1 != 0)).collect()
+                })
+                .collect();
+            let words = pack_lanes(&assigns);
+            let vals = sim.run(&nl, &words).to_vec();
+            for (lane, (x, y)) in chunk.iter().enumerate() {
+                let mut total = 0u128;
+                for (j, col) in out.rows.iter().enumerate() {
+                    for s in col {
+                        total += u128::from(vals[s.node.index()] >> lane as u32 & 1) << j;
+                    }
+                }
+                assert_eq!(total, u128::from(*x) * u128::from(*y), "{strategy:?} {x}*{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn ct_4x4_correct_all_strategies() {
+        check_ct(4, OrderStrategy::Naive);
+        check_ct(4, OrderStrategy::Optimized);
+        check_ct(4, OrderStrategy::Random(17));
+    }
+
+    #[test]
+    fn ct_5x5_correct_optimized() {
+        check_ct(5, OrderStrategy::Optimized);
+    }
+
+    #[test]
+    fn optimized_order_not_slower_than_naive() {
+        // Model-estimate comparison on a 16-bit CT.
+        let n = 16;
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let build = |strategy| {
+            let mut nl = Netlist::new("ct");
+            let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+            let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+            let m = crate::ppg::and_array(&mut nl, &lib, &a, &b);
+            let counts = CtCounts::from_populations(&m.counts());
+            let plan = assign_greedy(&counts);
+            let mut cols = m.columns;
+            cols.resize(counts.width(), vec![]);
+            build_ct(&mut nl, &tm, cols, &plan, strategy).max_arrival()
+        };
+        let opt = build(OrderStrategy::Optimized);
+        let naive = build(OrderStrategy::Naive);
+        assert!(opt <= naive + 1e-9, "optimized {opt} vs naive {naive}");
+    }
+
+    #[test]
+    fn random_orders_spread_delays() {
+        // Figure 4's premise: order affects delay. Ten random seeds must
+        // produce at least two distinct arrival estimates.
+        let n = 8;
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let mut seen = Vec::new();
+        for seed in 0..10 {
+            let mut nl = Netlist::new("ct");
+            let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+            let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+            let m = crate::ppg::and_array(&mut nl, &lib, &a, &b);
+            let counts = CtCounts::from_populations(&m.counts());
+            let plan = assign_greedy(&counts);
+            let mut cols = m.columns;
+            cols.resize(counts.width(), vec![]);
+            let out = build_ct(&mut nl, &tm, cols, &plan, OrderStrategy::Random(seed));
+            seen.push(out.max_arrival());
+        }
+        let min = seen.iter().copied().fold(f64::MAX, f64::min);
+        let max = seen.iter().copied().fold(f64::MIN, f64::max);
+        assert!(max > min, "no delay spread across random orders");
+    }
+}

@@ -1,0 +1,149 @@
+//! Compressor-tree optimization (§3 of the paper).
+//!
+//! Pipeline: [`counts`] (Algorithm 1 optimal compressor counts) →
+//! [`stage`] (§3.3 stage assignment: greedy ASAP / exact ILP /
+//! GOMIL-style column-serial) → [`interconnect`] (§3.5 interconnection
+//! order: exact per-slice assignment / naive / random) → a gate-level
+//! netlist plus the non-uniform output arrival profile that drives CPA
+//! optimization (§4). [`baseline`] provides Wallace and Dadda schedules on
+//! the same plumbing.
+
+pub mod baseline;
+pub mod counts;
+pub mod interconnect;
+pub mod stage;
+
+pub use baseline::{dadda_plan, plan_totals, wallace_plan};
+pub use counts::CtCounts;
+pub use interconnect::{build_ct, CtOutput, OrderStrategy};
+pub use stage::{assign_column_serial, assign_greedy, assign_ilp, StagePlan};
+
+use crate::ilp::SolveOptions;
+use crate::ir::Netlist;
+use crate::synth::{CompressorTiming, Sig};
+
+/// Compressor-tree family selector used by the multiplier/MAC generators
+/// and the benchmark sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtArchitecture {
+    /// UFO-MAC: Algorithm-1 counts + min-stage assignment + optimized
+    /// interconnection order.
+    UfoMac,
+    /// UFO-MAC counts/stages with the exact §3.3 ILP stage assigner.
+    UfoMacIlp,
+    /// Wallace ASAP schedule, naive order.
+    Wallace,
+    /// Dadda just-in-time schedule, naive order (commercial-IP proxy CT).
+    Dadda,
+    /// GOMIL proxy: area-optimal counts, column-serial stages, naive order.
+    Gomil,
+}
+
+/// Build a compressor tree of the chosen architecture over `columns`.
+///
+/// Returns the compressed two-row output; the netlist gains all compressor
+/// cells. `order_override` forces a specific interconnect strategy (used by
+/// the Figure-4 experiment); otherwise each architecture uses its default.
+pub fn synthesize(
+    nl: &mut Netlist,
+    tm: &CompressorTiming,
+    columns: Vec<Vec<Sig>>,
+    arch: CtArchitecture,
+    order_override: Option<OrderStrategy>,
+) -> CtOutput {
+    let populations: Vec<usize> = columns.iter().map(|c| c.len()).collect();
+    let (plan, default_order) = match arch {
+        CtArchitecture::UfoMac => {
+            let c = CtCounts::from_populations(&populations);
+            (assign_greedy(&c), OrderStrategy::Optimized)
+        }
+        CtArchitecture::UfoMacIlp => {
+            let c = CtCounts::from_populations(&populations);
+            let opts = SolveOptions {
+                time_limit: std::time::Duration::from_secs(30),
+                ..Default::default()
+            };
+            (assign_ilp(&c, &opts).0, OrderStrategy::Optimized)
+        }
+        CtArchitecture::Wallace => (wallace_plan(&populations), OrderStrategy::Naive),
+        CtArchitecture::Dadda => (dadda_plan(&populations), OrderStrategy::Naive),
+        CtArchitecture::Gomil => {
+            let c = CtCounts::from_populations(&populations);
+            (assign_column_serial(&c), OrderStrategy::Naive)
+        }
+    };
+    let order = order_override.unwrap_or(default_order);
+    let mut cols = columns;
+    cols.resize(plan.width().max(cols.len()), Vec::new());
+    build_ct(nl, tm, cols, &plan, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::CellLib;
+    use crate::sim::{pack_lanes, Simulator};
+
+    fn exhaustive_check(arch: CtArchitecture, n: usize) {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let mut nl = Netlist::new("ct");
+        let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+        let m = crate::ppg::and_array(&mut nl, &lib, &a, &b);
+        let out = synthesize(&mut nl, &tm, m.columns, arch, None);
+        let mut sim = Simulator::new();
+        let all: Vec<(u32, u32)> =
+            (0..1u32 << n).flat_map(|x| (0..1u32 << n).map(move |y| (x, y))).collect();
+        for chunk in all.chunks(64) {
+            let assigns: Vec<Vec<bool>> = chunk
+                .iter()
+                .map(|(x, y)| {
+                    (0..n).map(|k| x >> k & 1 != 0).chain((0..n).map(|k| y >> k & 1 != 0)).collect()
+                })
+                .collect();
+            let words = pack_lanes(&assigns);
+            let vals = sim.run(&nl, &words).to_vec();
+            for (lane, (x, y)) in chunk.iter().enumerate() {
+                let mut total = 0u128;
+                for (j, col) in out.rows.iter().enumerate() {
+                    for s in col {
+                        total += u128::from(vals[s.node.index()] >> lane as u32 & 1) << j;
+                    }
+                }
+                assert_eq!(total, u128::from(*x) * u128::from(*y), "{arch:?} {x}*{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_architectures_correct_4x4() {
+        for arch in [
+            CtArchitecture::UfoMac,
+            CtArchitecture::Wallace,
+            CtArchitecture::Dadda,
+            CtArchitecture::Gomil,
+        ] {
+            exhaustive_check(arch, 4);
+        }
+    }
+
+    #[test]
+    fn ilp_architecture_correct_3x3() {
+        exhaustive_check(CtArchitecture::UfoMacIlp, 3);
+    }
+
+    #[test]
+    fn gomil_tree_is_taller_than_ufo() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let stages = |arch| {
+            let mut nl = Netlist::new("ct");
+            let a: Vec<_> = (0..8).map(|i| nl.input(format!("a{i}"))).collect();
+            let b: Vec<_> = (0..8).map(|i| nl.input(format!("b{i}"))).collect();
+            let m = crate::ppg::and_array(&mut nl, &lib, &a, &b);
+            synthesize(&mut nl, &tm, m.columns, arch, None).stages
+        };
+        assert!(stages(CtArchitecture::Gomil) > stages(CtArchitecture::UfoMac));
+    }
+}

@@ -1,0 +1,324 @@
+//! §3.3 — compressor-to-stage assignment.
+//!
+//! Given Algorithm 1's per-column counts, decide at which stage each
+//! compressor fires. Two engines:
+//!
+//! - [`assign_greedy`] — ASAP placement (each stage consumes as many of the
+//!   column's remaining compressors as its current population permits).
+//!   This realizes the minimum stage count for Algorithm-1 count vectors
+//!   (§3.2's optimality argument) in O(stages × columns).
+//! - [`assign_ilp`] — the paper's exact ILP (Eq. 6-12) solved with the
+//!   in-tree MILP engine; used at small-to-medium widths and by the Fig-13
+//!   runtime study. Tests assert it matches the greedy stage count.
+//!
+//! GOMIL's behaviour (no stage objective) is modelled by
+//! [`assign_column_serial`], which compresses each column depth-first and
+//! produces the taller trees the paper criticizes.
+
+use super::counts::CtCounts;
+use crate::ilp::{self, LinExpr, Model, Sense, SolveOptions};
+
+/// A stage-by-column placement: `f[i][j]` 3:2s and `h[i][j]` 2:2s fire at
+/// stage `i` in column `j`.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub f: Vec<Vec<usize>>,
+    pub h: Vec<Vec<usize>>,
+}
+
+impl StagePlan {
+    pub fn stages(&self) -> usize {
+        self.f.len()
+    }
+    pub fn width(&self) -> usize {
+        self.f.first().map_or(0, |r| r.len())
+    }
+
+    /// Verify the plan against the counts: totals match (Eq. 6/7), stagewise
+    /// populations never go negative and support the placed compressors
+    /// (Eq. 8/9), and the final population is ≤ 2 per column.
+    pub fn validate(&self, counts: &CtCounts) -> Result<(), String> {
+        let w = counts.width();
+        let mut tot_f = vec![0usize; w];
+        let mut tot_h = vec![0usize; w];
+        let mut avail: Vec<usize> = counts.initial.clone();
+        for i in 0..self.stages() {
+            let mut next = avail.clone();
+            for j in 0..w {
+                let (fij, hij) = (self.f[i][j], self.h[i][j]);
+                if 3 * fij + 2 * hij > avail[j] {
+                    return Err(format!(
+                        "stage {i} col {j}: {fij}×3:2+{hij}×2:2 exceeds population {}",
+                        avail[j]
+                    ));
+                }
+                tot_f[j] += fij;
+                tot_h[j] += hij;
+                next[j] -= 2 * fij + hij; // 3 consumed, 1 sum emitted (net −2)
+                if j + 1 < w {
+                    next[j + 1] += fij + hij;
+                }
+            }
+            avail = next;
+        }
+        if tot_f != counts.f || tot_h != counts.h {
+            return Err("stage totals disagree with Algorithm 1 counts".into());
+        }
+        for (j, &a) in avail.iter().enumerate() {
+            if a > 2 {
+                return Err(format!("column {j}: {a} bits remain after final stage"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// ASAP greedy assignment (minimum stages for Algorithm-1 counts).
+pub fn assign_greedy(counts: &CtCounts) -> StagePlan {
+    let w = counts.width();
+    let mut rem_f = counts.f.clone();
+    let mut rem_h = counts.h.clone();
+    let mut avail: Vec<usize> = counts.initial.clone();
+    let mut plan = StagePlan { f: vec![], h: vec![] };
+    let max_stages = 4 * counts.stage_lower_bound() + 8;
+    for _ in 0..max_stages {
+        if rem_f.iter().all(|&x| x == 0) && rem_h.iter().all(|&x| x == 0) {
+            break;
+        }
+        let mut fi = vec![0usize; w];
+        let mut hi = vec![0usize; w];
+        let mut next = avail.clone();
+        for j in 0..w {
+            let mut pop = avail[j];
+            let fij = rem_f[j].min(pop / 3);
+            pop -= 3 * fij;
+            let hij = rem_h[j].min(pop / 2);
+            fi[j] = fij;
+            hi[j] = hij;
+            rem_f[j] -= fij;
+            rem_h[j] -= hij;
+            next[j] -= 2 * fij + hij;
+            if j + 1 < w {
+                next[j + 1] += fij + hij;
+            }
+        }
+        plan.f.push(fi);
+        plan.h.push(hi);
+        avail = next;
+    }
+    debug_assert!(
+        rem_f.iter().all(|&x| x == 0) && rem_h.iter().all(|&x| x == 0),
+        "greedy stage assignment did not converge"
+    );
+    plan
+}
+
+/// GOMIL-style column-serial assignment: each column is fully compressed by
+/// chaining its compressors depth-first (one per stage), ignoring the global
+/// stage count — reproducing the baseline's taller CT.
+pub fn assign_column_serial(counts: &CtCounts) -> StagePlan {
+    let w = counts.width();
+    let mut rem_f = counts.f.clone();
+    let mut rem_h = counts.h.clone();
+    let mut avail: Vec<usize> = counts.initial.clone();
+    let mut plan = StagePlan { f: vec![], h: vec![] };
+    // Upper bound: total compressors (each fires on its own stage at worst).
+    let cap: usize = counts.f.iter().sum::<usize>() + counts.h.iter().sum::<usize>() + 2;
+    for _ in 0..cap {
+        if rem_f.iter().all(|&x| x == 0) && rem_h.iter().all(|&x| x == 0) {
+            break;
+        }
+        let mut fi = vec![0usize; w];
+        let mut hi = vec![0usize; w];
+        let mut next = avail.clone();
+        for j in 0..w {
+            // at most ONE compressor per column per stage (serial chains)
+            let mut pop = avail[j];
+            if rem_f[j] > 0 && pop >= 3 {
+                fi[j] = 1;
+                rem_f[j] -= 1;
+                pop -= 3;
+                next[j] -= 2;
+                if j + 1 < w {
+                    next[j + 1] += 1;
+                }
+            } else if rem_h[j] > 0 && pop >= 2 {
+                hi[j] = 1;
+                rem_h[j] -= 1;
+                next[j] -= 1;
+                if j + 1 < w {
+                    next[j + 1] += 1;
+                }
+            }
+            let _ = pop;
+        }
+        plan.f.push(fi);
+        plan.h.push(hi);
+        avail = next;
+    }
+    plan
+}
+
+/// Exact §3.3 ILP (Eq. 6-12). Returns the plan and the solver's node count
+/// (reported by the Fig-13 bench). Falls back to the greedy plan if the
+/// solver hits its limits without an incumbent.
+pub fn assign_ilp(counts: &CtCounts, opts: &SolveOptions) -> (StagePlan, u64) {
+    let w = counts.width();
+    let greedy = assign_greedy(counts);
+    let stage_max = greedy.stages().max(1); // optimum is ≤ greedy
+    let mut m = Model::new();
+
+    // Variables.
+    let fmax = *counts.f.iter().max().unwrap_or(&0) as f64;
+    let hmax = *counts.h.iter().max().unwrap_or(&0) as f64;
+    let f_v: Vec<Vec<_>> = (0..stage_max)
+        .map(|i| (0..w).map(|j| m.int(format!("f{i}_{j}"), 0.0, fmax)).collect())
+        .collect();
+    let h_v: Vec<Vec<_>> = (0..stage_max)
+        .map(|i| (0..w).map(|j| m.int(format!("h{i}_{j}"), 0.0, hmax)).collect())
+        .collect();
+    let pp_v: Vec<Vec<_>> = (0..=stage_max)
+        .map(|i| (0..w).map(|j| m.cont(format!("pp{i}_{j}"), 0.0, 1e4)).collect())
+        .collect();
+    let y_v: Vec<Vec<_>> = (0..stage_max)
+        .map(|i| (0..w).map(|j| m.bin(format!("y{i}_{j}"))).collect())
+        .collect();
+    let s_v = m.cont("S", 0.0, stage_max as f64);
+    let big = 1e3;
+
+    for j in 0..w {
+        // Eq. 6/7: totals match Algorithm 1.
+        let fsum: Vec<_> = (0..stage_max).map(|i| (f_v[i][j], 1.0)).collect();
+        m.constrain(LinExpr::of(&fsum), Sense::Eq, counts.f[j] as f64);
+        let hsum: Vec<_> = (0..stage_max).map(|i| (h_v[i][j], 1.0)).collect();
+        m.constrain(LinExpr::of(&hsum), Sense::Eq, counts.h[j] as f64);
+        // Initial populations.
+        m.constrain(LinExpr::of(&[(pp_v[0][j], 1.0)]), Sense::Eq, counts.initial[j] as f64);
+    }
+    for i in 0..stage_max {
+        for j in 0..w {
+            // Eq. 8: population recurrence.
+            let mut e = LinExpr::new();
+            e.add(pp_v[i + 1][j], 1.0);
+            e.add(pp_v[i][j], -1.0);
+            e.add(f_v[i][j], 2.0);
+            e.add(h_v[i][j], 1.0);
+            if j > 0 {
+                e.add(f_v[i][j - 1], -1.0);
+                e.add(h_v[i][j - 1], -1.0);
+            }
+            m.constrain(e, Sense::Eq, 0.0);
+            // Eq. 9: compressors fit the population.
+            m.constrain(
+                LinExpr::of(&[(f_v[i][j], 3.0), (h_v[i][j], 2.0), (pp_v[i][j], -1.0)]),
+                Sense::Le,
+                0.0,
+            );
+            // Eq. 10/11: stage-use indicators.
+            m.constrain(
+                LinExpr::of(&[(s_v, 1.0), (y_v[i][j], -((i + 1) as f64))]),
+                Sense::Ge,
+                0.0,
+            );
+            m.constrain(
+                LinExpr::of(&[(y_v[i][j], big), (f_v[i][j], -1.0), (h_v[i][j], -1.0)]),
+                Sense::Ge,
+                0.0,
+            );
+        }
+    }
+    // Final populations ≤ 2 (the two-row output requirement).
+    for j in 0..w {
+        m.constrain(LinExpr::of(&[(pp_v[stage_max][j], 1.0)]), Sense::Le, 2.0);
+    }
+    m.minimize(LinExpr::of(&[(s_v, 1.0)]));
+
+    let sol = ilp::solve(&m, opts);
+    if !sol.ok() {
+        return (greedy, sol.nodes);
+    }
+    let used = sol.value(s_v).round() as usize;
+    let mut plan = StagePlan {
+        f: vec![vec![0; w]; used.max(1)],
+        h: vec![vec![0; w]; used.max(1)],
+    };
+    for i in 0..used.max(1).min(stage_max) {
+        for j in 0..w {
+            plan.f[i][j] = sol.int_value(f_v[i][j]) as usize;
+            plan.h[i][j] = sol.int_value(h_v[i][j]) as usize;
+        }
+    }
+    if plan.validate(counts).is_err() {
+        return (greedy, sol.nodes);
+    }
+    (plan, sol.nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mult_counts(n: usize) -> CtCounts {
+        let pp: Vec<usize> = (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect();
+        CtCounts::from_populations(&pp)
+    }
+
+    #[test]
+    fn greedy_is_valid_and_hits_lower_bound() {
+        for n in [3, 4, 8, 16, 32] {
+            let c = mult_counts(n);
+            let plan = assign_greedy(&c);
+            plan.validate(&c).unwrap_or_else(|e| panic!("n={n}: {e}"));
+            assert_eq!(
+                plan.stages(),
+                c.stage_lower_bound(),
+                "n={n}: greedy {} vs bound {}",
+                plan.stages(),
+                c.stage_lower_bound()
+            );
+        }
+    }
+
+    #[test]
+    fn column_serial_is_valid_but_taller() {
+        let c = mult_counts(8);
+        let serial = assign_column_serial(&c);
+        serial.validate(&c).unwrap();
+        let greedy = assign_greedy(&c);
+        assert!(
+            serial.stages() > greedy.stages(),
+            "serial {} vs greedy {}",
+            serial.stages(),
+            greedy.stages()
+        );
+    }
+
+    #[test]
+    fn ilp_matches_greedy_optimum_small() {
+        for n in [3, 4] {
+            let c = mult_counts(n);
+            let opts = SolveOptions {
+                time_limit: std::time::Duration::from_secs(20),
+                ..Default::default()
+            };
+            let (plan, _) = assign_ilp(&c, &opts);
+            plan.validate(&c).unwrap();
+            assert_eq!(plan.stages(), assign_greedy(&c).stages(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn mac_shapes_assign_cleanly() {
+        for n in [4, 8] {
+            let mut pp: Vec<usize> =
+                (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect();
+            pp.push(0);
+            for p in pp.iter_mut() {
+                *p += 1;
+            }
+            let c = CtCounts::from_populations(&pp);
+            let plan = assign_greedy(&c);
+            plan.validate(&c).unwrap();
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Functional equivalence checking (the paper's ABC step, §5.1).
+//!
+//! Combinational designs are verified against the integer golden model:
+//! exhaustively for small operand widths (formally complete), and with
+//! structured + random vectors beyond that (corner patterns — all-zeros,
+//! all-ones, walking ones, alternating masks — plus packed random lanes).
+//! The PJRT-backed variant (netlist-eval artifact executed from the Rust
+//! request path) lives in [`crate::runtime`] and is exercised by the
+//! examples.
+
+use crate::multiplier::Design;
+use crate::sim::{lane_value, CompiledNetlist};
+use crate::Result;
+
+/// Outcome of an equivalence run.
+#[derive(Debug, Clone)]
+pub struct EquivReport {
+    pub passed: bool,
+    pub vectors: usize,
+    pub exhaustive: bool,
+    /// First failing `(a, b, c, got, want)` if any.
+    pub counterexample: Option<(u128, u128, u128, u128, u128)>,
+}
+
+/// Verify a multiplier/MAC design. Exhaustive when the total input space
+/// `2^(bits)` is at most `2^20`; sampled otherwise (`vectors` lanes).
+pub fn check_multiplier(design: &Design) -> Result<EquivReport> {
+    check_multiplier_with(design, 1 << 14)
+}
+
+/// As [`check_multiplier`] with an explicit sampled-vector budget.
+pub fn check_multiplier_with(design: &Design, budget: usize) -> Result<EquivReport> {
+    let n = design.n;
+    let c_bits = design.c.len();
+    let total_bits = 2 * n + c_bits;
+    if total_bits <= 20 {
+        exhaustive(design)
+    } else {
+        sampled(design, budget)
+    }
+}
+
+fn run_batch(
+    design: &Design,
+    comp: &CompiledNetlist,
+    buf: &mut Vec<u64>,
+    batch: &[(u128, u128, u128)],
+) -> Option<(u128, u128, u128, u128, u128)> {
+    // Pack operands straight into lane words (inputs are created in
+    // a-then-b-then-c order by the generators) — no per-vector Vec<bool>
+    // round-trip, no buffer copy. This is the §Perf-optimized form; see
+    // EXPERIMENTS.md.
+    let n = design.n;
+    let c_bits = design.c.len();
+    let mut words = vec![0u64; 2 * n + c_bits];
+    for (lane, (a, b, c)) in batch.iter().enumerate() {
+        let bit = 1u64 << lane;
+        for k in 0..n {
+            if a >> k & 1 == 1 {
+                words[k] |= bit;
+            }
+            if b >> k & 1 == 1 {
+                words[n + k] |= bit;
+            }
+        }
+        for k in 0..c_bits {
+            if c >> k & 1 == 1 {
+                words[2 * n + k] |= bit;
+            }
+        }
+    }
+    comp.run_into(buf, &words);
+    for (lane, (a, b, c)) in batch.iter().enumerate() {
+        let got = lane_value(buf, &design.product, lane as u32);
+        let want = design.golden(*a, *b, *c);
+        if got != want {
+            return Some((*a, *b, *c, got, want));
+        }
+    }
+    None
+}
+
+fn exhaustive(design: &Design) -> Result<EquivReport> {
+    let n = design.n as u32;
+    let c_bits = design.c.len() as u32;
+    let comp = CompiledNetlist::compile(&design.netlist);
+    let mut buf: Vec<u64> = Vec::new();
+    let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
+    let mut vectors = 0usize;
+    let na = 1u128 << n;
+    let nc = 1u128 << c_bits;
+    let mut a = 0u128;
+    while a < na {
+        let mut b = 0u128;
+        while b < na {
+            let mut c = 0u128;
+            while c < nc {
+                batch.push((a, b, c));
+                vectors += 1;
+                if batch.len() == 64 {
+                    if let Some(cex) = run_batch(design, &comp, &mut buf, &batch) {
+                        return Ok(EquivReport {
+                            passed: false,
+                            vectors,
+                            exhaustive: true,
+                            counterexample: Some(cex),
+                        });
+                    }
+                    batch.clear();
+                }
+                c += 1;
+            }
+            b += 1;
+        }
+        a += 1;
+    }
+    if !batch.is_empty() {
+        if let Some(cex) = run_batch(design, &comp, &mut buf, &batch) {
+            return Ok(EquivReport {
+                passed: false,
+                vectors,
+                exhaustive: true,
+                counterexample: Some(cex),
+            });
+        }
+    }
+    Ok(EquivReport { passed: true, vectors, exhaustive: true, counterexample: None })
+}
+
+fn sampled(design: &Design, budget: usize) -> Result<EquivReport> {
+    let n = design.n;
+    let c_bits = design.c.len();
+    let amask = (1u128 << n) - 1;
+    let cmask = if c_bits == 0 { 0 } else { (1u128 << c_bits) - 1 };
+    let mut rng = crate::util::Rng::seed_from_u64(0xE9E9);
+    let comp = CompiledNetlist::compile(&design.netlist);
+    let mut buf: Vec<u64> = Vec::new();
+    let mut vectors = 0usize;
+
+    // Corner vectors: boundary operands and walking ones.
+    let mut corners: Vec<u128> = vec![0, 1, amask, amask - 1, amask >> 1, (amask >> 1) + 1];
+    for k in 0..n {
+        corners.push(1u128 << k);
+        corners.push(amask ^ (1u128 << k));
+    }
+    corners.sort();
+    corners.dedup();
+    let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
+    let flush = |batch: &mut Vec<(u128, u128, u128)>,
+                 buf: &mut Vec<u64>,
+                 vectors: &mut usize|
+     -> Option<(u128, u128, u128, u128, u128)> {
+        *vectors += batch.len();
+        let r = run_batch(design, &comp, buf, batch);
+        batch.clear();
+        r
+    };
+    for &a in &corners {
+        for &b in &corners {
+            let c = (a.wrapping_mul(31) ^ b) & cmask;
+            batch.push((a, b, c));
+            if batch.len() == 64 {
+                if let Some(cex) = flush(&mut batch, &mut buf, &mut vectors) {
+                    return Ok(EquivReport {
+                        passed: false,
+                        vectors,
+                        exhaustive: false,
+                        counterexample: Some(cex),
+                    });
+                }
+            }
+        }
+    }
+    // Random lanes.
+    while vectors < budget {
+        while batch.len() < 64 {
+            let a = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & amask;
+            let b = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & amask;
+            let c = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & cmask;
+            batch.push((a, b, c));
+        }
+        if let Some(cex) = flush(&mut batch, &mut buf, &mut vectors) {
+            return Ok(EquivReport {
+                passed: false,
+                vectors,
+                exhaustive: false,
+                counterexample: Some(cex),
+            });
+        }
+    }
+    Ok(EquivReport { passed: true, vectors, exhaustive: false, counterexample: None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::MultiplierSpec;
+
+    #[test]
+    fn passes_correct_small_multiplier() {
+        let d = MultiplierSpec::new(4).build().unwrap();
+        let r = check_multiplier(&d).unwrap();
+        assert!(r.passed);
+        assert!(r.exhaustive);
+        assert_eq!(r.vectors, 256);
+    }
+
+    #[test]
+    fn passes_correct_mac_exhaustive() {
+        let d = MultiplierSpec::new(3).fused_mac(true).build().unwrap();
+        let r = check_multiplier(&d).unwrap();
+        assert!(r.passed && r.exhaustive);
+        assert_eq!(r.vectors, 1 << 12); // 3+3+6 bits
+    }
+
+    #[test]
+    fn sampled_mode_for_16bit() {
+        let d = MultiplierSpec::new(16).build().unwrap();
+        let r = check_multiplier_with(&d, 2048).unwrap();
+        assert!(r.passed);
+        assert!(!r.exhaustive);
+        assert!(r.vectors >= 2048);
+    }
+
+    #[test]
+    fn detects_injected_fault() {
+        // Break the design by remapping one product bit to another node.
+        let mut d = MultiplierSpec::new(4).build().unwrap();
+        d.product[3] = d.product[4];
+        let r = check_multiplier(&d).unwrap();
+        assert!(!r.passed);
+        let (a, b, c, got, want) = r.counterexample.unwrap();
+        assert_eq!(got, {
+            let _ = (a, b, c);
+            got
+        });
+        assert_ne!(got, want);
+    }
+}

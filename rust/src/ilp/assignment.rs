@@ -1,0 +1,270 @@
+//! Exact assignment-problem solvers.
+//!
+//! The §3.5 interconnect-order ILP is, per slice, a bijection between
+//! arriving partial products (sources) and compressor ports (sinks) that
+//! minimizes the worst completion time — a *bottleneck assignment problem*.
+//! Its permutation-matrix formulation is what the paper hands to Gurobi; we
+//! solve it exactly with binary search over the completion-time threshold +
+//! bipartite matching, then break ties by minimizing the *sum* of completion
+//! times with a Hungarian pass restricted to threshold-feasible edges (so
+//! non-critical ports are also assigned sensibly, which matters for the
+//! next stage's profile).
+
+/// Maximum-cardinality bipartite matching (Kuhn's algorithm) restricted to
+/// `allowed[u][v]`. Returns `match_of_sink[v] = Some(u)`.
+fn kuhn_matching(n: usize, allowed: &[Vec<bool>]) -> Vec<Option<usize>> {
+    let mut match_v: Vec<Option<usize>> = vec![None; n];
+    fn try_augment(
+        u: usize,
+        allowed: &[Vec<bool>],
+        seen: &mut [bool],
+        match_v: &mut [Option<usize>],
+    ) -> bool {
+        for v in 0..allowed[u].len() {
+            if allowed[u][v] && !seen[v] {
+                seen[v] = true;
+                if match_v[v].is_none()
+                    || try_augment(match_v[v].unwrap(), allowed, seen, match_v)
+                {
+                    match_v[v] = Some(u);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+    for u in 0..n {
+        let mut seen = vec![false; n];
+        try_augment(u, allowed, &mut seen, &mut match_v);
+    }
+    match_v
+}
+
+/// Exact bottleneck assignment: find a permutation `perm` (source u → sink
+/// `perm[u]`) minimizing `max_u cost[u][perm[u]]`; among those, minimize the
+/// sum of costs. `cost` must be square.
+pub fn bottleneck_assignment(cost: &[Vec<f64>]) -> (Vec<usize>, f64) {
+    let n = cost.len();
+    if n == 0 {
+        return (vec![], 0.0);
+    }
+    debug_assert!(cost.iter().all(|r| r.len() == n));
+
+    // Binary search over the sorted set of distinct costs.
+    let mut values: Vec<f64> = cost.iter().flatten().copied().collect();
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    values.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+
+    let feasible = |thr: f64| -> bool {
+        let allowed: Vec<Vec<bool>> =
+            cost.iter().map(|row| row.iter().map(|&c| c <= thr + 1e-12).collect()).collect();
+        kuhn_matching(n, &allowed).iter().filter(|m| m.is_some()).count() == n
+    };
+
+    let (mut lo, mut hi) = (0usize, values.len() - 1);
+    debug_assert!(feasible(values[hi]));
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(values[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let threshold = values[lo];
+
+    // Min-sum refinement among threshold-feasible edges (Hungarian).
+    let big = threshold * (n as f64) + 1e6;
+    let masked: Vec<Vec<f64>> = cost
+        .iter()
+        .map(|row| row.iter().map(|&c| if c <= threshold + 1e-12 { c } else { big }).collect())
+        .collect();
+    let perm = hungarian(&masked);
+    (perm, threshold)
+}
+
+/// Hungarian algorithm (Jonker-Volgenant style O(n³)) for min-sum
+/// assignment on a square cost matrix. Returns `perm[u] = v`.
+pub fn hungarian(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    if n == 0 {
+        return vec![];
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials/links per the classic formulation.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut perm = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] != 0 {
+            perm[p[j] - 1] = j - 1;
+        }
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_cost(cost: &[Vec<f64>], perm: &[usize]) -> f64 {
+        perm.iter().enumerate().map(|(u, &v)| cost[u][v]).fold(f64::MIN, f64::max)
+    }
+
+    #[test]
+    fn hungarian_known_optimum() {
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let perm = hungarian(&cost);
+        let total: f64 = perm.iter().enumerate().map(|(u, &v)| cost[u][v]).sum();
+        assert!((total - 5.0).abs() < 1e-9, "total {total} perm {perm:?}");
+    }
+
+    #[test]
+    fn bottleneck_beats_greedy_diagonal() {
+        // Diagonal has max 9; optimal bottleneck is 3.
+        let cost = vec![
+            vec![9.0, 1.0, 2.0],
+            vec![1.0, 9.0, 3.0],
+            vec![2.0, 3.0, 9.0],
+        ];
+        let (perm, thr) = bottleneck_assignment(&cost);
+        assert!(thr <= 3.0 + 1e-9, "thr {thr}");
+        assert!((max_cost(&cost, &perm) - thr).abs() < 1e-9);
+        // perm is a permutation
+        let mut seen = vec![false; 3];
+        for &v in &perm {
+            assert!(!seen[v]);
+            seen[v] = true;
+        }
+    }
+
+    #[test]
+    fn bottleneck_exhaustive_cross_check() {
+        // Compare against brute force on random 5×5 matrices.
+        let mut seed = 0xdeadbeefu64;
+        let mut rng = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            (seed % 1000) as f64 / 100.0
+        };
+        for _ in 0..20 {
+            let n = 5;
+            let cost: Vec<Vec<f64>> = (0..n).map(|_| (0..n).map(|_| rng()).collect()).collect();
+            let (_, thr) = bottleneck_assignment(&cost);
+            // brute force over permutations
+            let mut best = f64::INFINITY;
+            let mut idx: Vec<usize> = (0..n).collect();
+            permute(&mut idx, 0, &mut |perm| {
+                let m = perm.iter().enumerate().map(|(u, &v)| cost[u][v]).fold(f64::MIN, f64::max);
+                if m < best {
+                    best = m;
+                }
+            });
+            assert!((thr - best).abs() < 1e-9, "thr {thr} best {best}");
+        }
+    }
+
+    fn permute(idx: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == idx.len() {
+            f(idx);
+            return;
+        }
+        for i in k..idx.len() {
+            idx.swap(k, i);
+            permute(idx, k + 1, f);
+            idx.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn matches_ilp_formulation_on_small_instance() {
+        // The paper's permutation-matrix ILP (Eq. 19-23) and the
+        // combinatorial solver must agree on the bottleneck value.
+        use crate::ilp::{solve, LinExpr, Model, Sense, SolveOptions};
+        let cost = vec![
+            vec![3.0, 7.0, 1.0],
+            vec![5.0, 2.0, 6.0],
+            vec![4.0, 4.0, 8.0],
+        ];
+        let n = 3;
+        let mut m = Model::new();
+        let mut z = vec![vec![]; n];
+        for u in 0..n {
+            for v in 0..n {
+                z[u].push(m.bin(format!("z{u}{v}")));
+            }
+        }
+        let mx = m.cont("M", 0.0, 1e4);
+        for u in 0..n {
+            let row: Vec<_> = (0..n).map(|v| (z[u][v], 1.0)).collect();
+            m.constrain(LinExpr::of(&row), Sense::Eq, 1.0);
+            let col: Vec<_> = (0..n).map(|v| (z[v][u], 1.0)).collect();
+            m.constrain(LinExpr::of(&col), Sense::Eq, 1.0);
+            for v in 0..n {
+                // M >= cost[u][v] * z[u][v]
+                m.constrain(
+                    LinExpr::of(&[(mx, 1.0), (z[u][v], -cost[u][v])]),
+                    Sense::Ge,
+                    0.0,
+                );
+            }
+        }
+        m.minimize(LinExpr::of(&[(mx, 1.0)]));
+        let sol = solve(&m, &SolveOptions::default());
+        assert!(sol.ok());
+        let (_, thr) = bottleneck_assignment(&cost);
+        assert!((sol.value(mx) - thr).abs() < 1e-6, "ilp {} comb {thr}", sol.value(mx));
+    }
+}

@@ -1,0 +1,218 @@
+//! From-scratch MILP solver.
+//!
+//! The paper drives both of its optimization passes (compressor-tree stage
+//! assignment, §3.3, and interconnection-order optimization, §3.5) with
+//! Gurobi. This module is the in-repo substitute: a dense primal simplex for
+//! LP relaxations ([`simplex`]), a best-first branch-and-bound wrapper for
+//! integrality ([`branch_bound`]), and an exact bottleneck-assignment solver
+//! ([`assignment`]) for the per-slice interconnect permutation problem
+//! (which is an assignment polytope and deserves a combinatorial algorithm
+//! rather than a tableau).
+//!
+//! The public surface is the [`Model`] builder + [`solve`].
+
+pub mod assignment;
+pub mod branch_bound;
+pub mod simplex;
+
+
+
+/// Variable handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Var(pub usize);
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear expression `Σ coef·var`.
+#[derive(Debug, Clone, Default)]
+pub struct LinExpr {
+    pub terms: Vec<(Var, f64)>,
+}
+
+impl LinExpr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn term(mut self, v: Var, c: f64) -> Self {
+        self.terms.push((v, c));
+        self
+    }
+    pub fn add(&mut self, v: Var, c: f64) -> &mut Self {
+        self.terms.push((v, c));
+        self
+    }
+    pub fn of(terms: &[(Var, f64)]) -> Self {
+        LinExpr { terms: terms.to_vec() }
+    }
+    /// Evaluate against a solution vector.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.terms.iter().map(|(v, c)| c * x[v.0]).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct VarDef {
+    pub name: String,
+    pub lb: f64,
+    pub ub: f64,
+    pub integer: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub expr: LinExpr,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// MILP model builder (minimization).
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    pub vars: Vec<VarDef>,
+    pub cons: Vec<Constraint>,
+    pub objective: LinExpr,
+}
+
+impl Model {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Continuous variable in `[lb, ub]` (`ub` may be `f64::INFINITY`).
+    pub fn cont(&mut self, name: impl Into<String>, lb: f64, ub: f64) -> Var {
+        self.vars.push(VarDef { name: name.into(), lb, ub, integer: false });
+        Var(self.vars.len() - 1)
+    }
+
+    /// Integer variable in `[lb, ub]`.
+    pub fn int(&mut self, name: impl Into<String>, lb: f64, ub: f64) -> Var {
+        self.vars.push(VarDef { name: name.into(), lb, ub, integer: true });
+        Var(self.vars.len() - 1)
+    }
+
+    /// Binary variable.
+    pub fn bin(&mut self, name: impl Into<String>) -> Var {
+        self.int(name, 0.0, 1.0)
+    }
+
+    pub fn constrain(&mut self, expr: LinExpr, sense: Sense, rhs: f64) {
+        self.cons.push(Constraint { expr, sense, rhs });
+    }
+
+    /// Set the (minimization) objective.
+    pub fn minimize(&mut self, expr: LinExpr) {
+        self.objective = expr;
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+    pub fn num_cons(&self) -> usize {
+        self.cons.len()
+    }
+
+    /// Check a candidate point against all constraints/bounds.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        for (i, v) in self.vars.iter().enumerate() {
+            if x[i] < v.lb - tol || x[i] > v.ub + tol {
+                return false;
+            }
+            if v.integer && (x[i] - x[i].round()).abs() > tol {
+                return false;
+            }
+        }
+        self.cons.iter().all(|c| {
+            let lhs = c.expr.eval(x);
+            match c.sense {
+                Sense::Le => lhs <= c.rhs + tol,
+                Sense::Ge => lhs >= c.rhs - tol,
+                Sense::Eq => (lhs - c.rhs).abs() <= tol,
+            }
+        })
+    }
+}
+
+/// Solve status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Optimal,
+    /// Feasible incumbent returned but optimality not proven (time limit).
+    Feasible,
+    Infeasible,
+    Unbounded,
+    /// No incumbent found within the time limit.
+    TimeLimit,
+}
+
+/// Solution returned by the solvers.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub status: Status,
+    pub objective: f64,
+    pub values: Vec<f64>,
+    /// Branch-and-bound nodes explored (0 for pure LPs).
+    pub nodes: u64,
+}
+
+impl Solution {
+    pub fn value(&self, v: Var) -> f64 {
+        self.values[v.0]
+    }
+    pub fn int_value(&self, v: Var) -> i64 {
+        self.values[v.0].round() as i64
+    }
+    pub fn ok(&self) -> bool {
+        matches!(self.status, Status::Optimal | Status::Feasible)
+    }
+}
+
+/// Solver knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOptions {
+    pub time_limit: std::time::Duration,
+    /// Relative MIP gap at which B&B stops.
+    pub mip_gap: f64,
+    pub max_nodes: u64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            time_limit: std::time::Duration::from_secs(60),
+            mip_gap: 1e-6,
+            max_nodes: 2_000_000,
+        }
+    }
+}
+
+/// Solve a model: pure LP via simplex, MILP via branch & bound.
+pub fn solve(model: &Model, opts: &SolveOptions) -> Solution {
+    if model.vars.iter().any(|v| v.integer) {
+        branch_bound::solve_milp(model, opts)
+    } else {
+        simplex::solve_lp(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_builder_and_feasibility() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, 10.0);
+        let y = m.int("y", 0.0, 5.0);
+        m.constrain(LinExpr::of(&[(x, 1.0), (y, 2.0)]), Sense::Le, 8.0);
+        m.minimize(LinExpr::of(&[(x, -1.0), (y, -1.0)]));
+        assert!(m.is_feasible(&[2.0, 3.0], 1e-9));
+        assert!(!m.is_feasible(&[2.0, 3.5], 1e-9)); // fractional integer
+        assert!(!m.is_feasible(&[9.0, 0.0], 1e-9)); // violates constraint? 9 <= 8 no
+    }
+}

@@ -1,0 +1,354 @@
+//! Dense primal simplex with Big-M artificials.
+//!
+//! Solves the LP relaxation of a [`Model`]: minimize `c'x` subject to the
+//! model's linear constraints and variable bounds. Variables are shifted to
+//! `x' = x - lb ≥ 0`; finite upper bounds become explicit rows. `≥`/`=`
+//! rows receive artificial variables priced at Big-M.
+//!
+//! This is deliberately a straightforward tableau implementation — the
+//! paper's ILPs are small and structured; robustness (Bland's rule
+//! anti-cycling fallback, relative tolerances) matters more than sparse
+//! factorization here. The bottleneck-assignment solver handles the one
+//! family that would genuinely be large.
+
+use super::{Model, Sense, Solution, Status};
+
+const EPS: f64 = 1e-9;
+/// Reduced-cost tolerance.
+const RC_TOL: f64 = 1e-7;
+
+/// Solve the LP relaxation of `model` (integrality dropped).
+pub fn solve_lp(model: &Model) -> Solution {
+    let n = model.vars.len();
+
+    // Shift lower bounds to zero: x = x' + lb.
+    let lbs: Vec<f64> = model.vars.iter().map(|v| v.lb).collect();
+
+    // Build row list: model constraints with adjusted rhs, then finite
+    // upper-bound rows x' <= ub - lb.
+    struct Row {
+        coefs: Vec<(usize, f64)>,
+        sense: Sense,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(model.cons.len());
+    for c in &model.cons {
+        let mut shift = 0.0;
+        let mut merged: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+        for (v, coef) in &c.expr.terms {
+            shift += coef * lbs[v.0];
+            *merged.entry(v.0).or_insert(0.0) += coef;
+        }
+        rows.push(Row {
+            coefs: merged.into_iter().filter(|(_, c)| c.abs() > EPS).collect(),
+            sense: c.sense,
+            rhs: c.rhs - shift,
+        });
+    }
+    for (i, v) in model.vars.iter().enumerate() {
+        if v.ub.is_finite() {
+            let span = v.ub - v.lb;
+            if span < -EPS {
+                return infeasible(n);
+            }
+            rows.push(Row { coefs: vec![(i, 1.0)], sense: Sense::Le, rhs: span });
+        }
+    }
+
+    // Normalize rhs >= 0.
+    for r in rows.iter_mut() {
+        if r.rhs < 0.0 {
+            r.rhs = -r.rhs;
+            for (_, c) in r.coefs.iter_mut() {
+                *c = -*c;
+            }
+            r.sense = match r.sense {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+        }
+    }
+
+    let m = rows.len();
+    // Column layout: [structural n][slack/surplus s][artificial a].
+    let n_slack = rows.iter().filter(|r| r.sense != Sense::Eq).count();
+    let n_art = rows.iter().filter(|r| r.sense != Sense::Le).count();
+    let total = n + n_slack + n_art;
+
+    // Big-M scaled to the objective magnitude.
+    let cmax = model
+        .objective
+        .terms
+        .iter()
+        .map(|(_, c)| c.abs())
+        .fold(1.0f64, f64::max);
+    let big_m = cmax * 1e7;
+
+    // Tableau: m rows × (total + 1) columns (last = rhs).
+    let w = total + 1;
+    let mut t = vec![0.0f64; m * w];
+    let mut basis = vec![0usize; m];
+    let mut cost = vec![0.0f64; total];
+    for (v, c) in &model.objective.terms {
+        cost[v.0] += *c;
+    }
+
+    let mut s_idx = n;
+    let mut a_idx = n + n_slack;
+    for (ri, r) in rows.iter().enumerate() {
+        for (vi, c) in &r.coefs {
+            t[ri * w + vi] += c;
+        }
+        t[ri * w + total] = r.rhs;
+        match r.sense {
+            Sense::Le => {
+                t[ri * w + s_idx] = 1.0;
+                basis[ri] = s_idx;
+                s_idx += 1;
+            }
+            Sense::Ge => {
+                t[ri * w + s_idx] = -1.0;
+                s_idx += 1;
+                t[ri * w + a_idx] = 1.0;
+                cost[a_idx] = big_m;
+                basis[ri] = a_idx;
+                a_idx += 1;
+            }
+            Sense::Eq => {
+                t[ri * w + a_idx] = 1.0;
+                cost[a_idx] = big_m;
+                basis[ri] = a_idx;
+                a_idx += 1;
+            }
+        }
+    }
+
+    // Reduced-cost row: z_j - c_j computed incrementally. Start with
+    // objective row = -cost, then add M-weighted basis rows (standard Big-M
+    // tableau: objective row r0[j] = Σ_B c_B·a_ij − c_j).
+    let mut obj = vec![0.0f64; w];
+    for j in 0..total {
+        obj[j] = -cost[j];
+    }
+    for ri in 0..m {
+        let cb = cost[basis[ri]];
+        if cb != 0.0 {
+            for j in 0..w {
+                obj[j] += cb * t[ri * w + j];
+            }
+        }
+    }
+
+    let max_iters = 50 * (m + total).max(100);
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        if iters > max_iters {
+            // Numerical trouble; report best effort as infeasible.
+            return infeasible(n);
+        }
+        let use_bland = iters > 10 * (m + total).max(50);
+        // Entering column: most positive obj[j] (z_j - c_j > 0 improves min).
+        let mut enter = None;
+        if use_bland {
+            for j in 0..total {
+                if obj[j] > RC_TOL {
+                    enter = Some(j);
+                    break;
+                }
+            }
+        } else {
+            let mut best = RC_TOL;
+            for j in 0..total {
+                if obj[j] > best {
+                    best = obj[j];
+                    enter = Some(j);
+                }
+            }
+        }
+        let Some(e) = enter else { break };
+
+        // Ratio test.
+        let mut leave = None;
+        let mut best_ratio = f64::INFINITY;
+        for ri in 0..m {
+            let a = t[ri * w + e];
+            if a > EPS {
+                let ratio = t[ri * w + total] / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map_or(true, |l: usize| basis[ri] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(ri);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return Solution {
+                status: Status::Unbounded,
+                objective: f64::NEG_INFINITY,
+                values: vec![0.0; n],
+                nodes: 0,
+            };
+        };
+
+        // Pivot on (l, e).
+        let piv = t[l * w + e];
+        for j in 0..w {
+            t[l * w + j] /= piv;
+        }
+        for ri in 0..m {
+            if ri != l {
+                let f = t[ri * w + e];
+                if f.abs() > EPS {
+                    for j in 0..w {
+                        t[ri * w + j] -= f * t[l * w + j];
+                    }
+                }
+            }
+        }
+        let f = obj[e];
+        if f.abs() > EPS {
+            for j in 0..w {
+                obj[j] -= f * t[l * w + j];
+            }
+        }
+        basis[l] = e;
+    }
+
+    // Artificials still basic at positive level ⇒ infeasible.
+    for ri in 0..m {
+        if basis[ri] >= n + n_slack && t[ri * w + total] > 1e-6 {
+            return infeasible(n);
+        }
+    }
+
+    let mut x = vec![0.0f64; n];
+    for ri in 0..m {
+        if basis[ri] < n {
+            x[basis[ri]] = t[ri * w + total];
+        }
+    }
+    // Un-shift bounds.
+    for i in 0..n {
+        x[i] += lbs[i];
+    }
+    let objective = model.objective.eval(&x);
+    Solution { status: Status::Optimal, objective, values: x, nodes: 0 }
+}
+
+fn infeasible(n: usize) -> Solution {
+    Solution {
+        status: Status::Infeasible,
+        objective: f64::INFINITY,
+        values: vec![0.0; n],
+        nodes: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::{LinExpr, Model};
+
+    #[test]
+    fn textbook_lp() {
+        // max 3x + 2y s.t. x + y <= 4, x + 3y <= 6, x,y >= 0 → (4,0), obj 12.
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, f64::INFINITY);
+        let y = m.cont("y", 0.0, f64::INFINITY);
+        m.constrain(LinExpr::of(&[(x, 1.0), (y, 1.0)]), Sense::Le, 4.0);
+        m.constrain(LinExpr::of(&[(x, 1.0), (y, 3.0)]), Sense::Le, 6.0);
+        m.minimize(LinExpr::of(&[(x, -3.0), (y, -2.0)]));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective + 12.0).abs() < 1e-6, "obj {}", s.objective);
+        assert!((s.value(x) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        // min x + y s.t. x + y = 10, x >= 3, y >= 2 → obj 10.
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, f64::INFINITY);
+        let y = m.cont("y", 0.0, f64::INFINITY);
+        m.constrain(LinExpr::of(&[(x, 1.0), (y, 1.0)]), Sense::Eq, 10.0);
+        m.constrain(LinExpr::of(&[(x, 1.0)]), Sense::Ge, 3.0);
+        m.constrain(LinExpr::of(&[(y, 1.0)]), Sense::Ge, 2.0);
+        m.minimize(LinExpr::of(&[(x, 1.0), (y, 1.0)]));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, 1.0);
+        m.constrain(LinExpr::of(&[(x, 1.0)]), Sense::Ge, 5.0);
+        m.minimize(LinExpr::of(&[(x, 1.0)]));
+        assert_eq!(solve_lp(&m).status, Status::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, f64::INFINITY);
+        m.minimize(LinExpr::of(&[(x, -1.0)]));
+        assert_eq!(solve_lp(&m).status, Status::Unbounded);
+    }
+
+    #[test]
+    fn respects_bounds_and_shifts() {
+        // min x s.t. x >= 0 with lb 2.5, ub 7 → 2.5; max → 7.
+        let mut m = Model::new();
+        let x = m.cont("x", 2.5, 7.0);
+        m.minimize(LinExpr::of(&[(x, 1.0)]));
+        let s = solve_lp(&m);
+        assert!((s.value(x) - 2.5).abs() < 1e-6);
+        let mut m2 = Model::new();
+        let x2 = m2.cont("x", 2.5, 7.0);
+        m2.minimize(LinExpr::of(&[(x2, -1.0)]));
+        let s2 = solve_lp(&m2);
+        assert!((s2.value(x2) - 7.0).abs() < 1e-6, "{}", s2.value(x2));
+    }
+
+    #[test]
+    fn negative_lower_bounds() {
+        // min x + y, x in [-5, 5], y in [-2, 2], x + y >= -4 → obj -4... but
+        // unconstrained pair hits (-5,-2) = -7 < -4 violating; optimum -4.
+        let mut m = Model::new();
+        let x = m.cont("x", -5.0, 5.0);
+        let y = m.cont("y", -2.0, 2.0);
+        m.constrain(LinExpr::of(&[(x, 1.0), (y, 1.0)]), Sense::Ge, -4.0);
+        m.minimize(LinExpr::of(&[(x, 1.0), (y, 1.0)]));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective + 4.0).abs() < 1e-6, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Known cycling-prone structure; Bland fallback must terminate.
+        let mut m = Model::new();
+        let v: Vec<_> = (0..4).map(|i| m.cont(format!("x{i}"), 0.0, f64::INFINITY)).collect();
+        m.constrain(
+            LinExpr::of(&[(v[0], 0.25), (v[1], -8.0), (v[2], -1.0), (v[3], 9.0)]),
+            Sense::Le,
+            0.0,
+        );
+        m.constrain(
+            LinExpr::of(&[(v[0], 0.5), (v[1], -12.0), (v[2], -0.5), (v[3], 3.0)]),
+            Sense::Le,
+            0.0,
+        );
+        m.constrain(LinExpr::of(&[(v[2], 1.0)]), Sense::Le, 1.0);
+        m.minimize(LinExpr::of(&[(v[0], -0.75), (v[1], 150.0), (v[2], -0.02), (v[3], 6.0)]));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, Status::Optimal);
+        // Optimum: x = (1, 0, 1, 0) → obj = −0.75 − 0.02 = −0.77.
+        assert!((s.objective + 0.77).abs() < 1e-6, "obj {}", s.objective);
+    }
+}

@@ -1,0 +1,11 @@
+//! Netlist intermediate representation and standard-cell library.
+//!
+//! This is the substrate every other module builds on: the paper's
+//! generators emit [`Netlist`]s, the STA engine times them, the simulator
+//! and the PJRT-backed evaluator execute them.
+
+pub mod cell;
+pub mod netlist;
+
+pub use cell::{CellKind, CellLib, CellParams};
+pub use netlist::{Netlist, Node, NodeId};

@@ -1,0 +1,330 @@
+//! Gate-level netlist IR.
+//!
+//! A [`Netlist`] is a topologically-ordered DAG of standard cells over
+//! primary inputs and constants. Nodes are created append-only and may only
+//! reference already-created nodes, so every forward pass (simulation, STA,
+//! power) is a single linear sweep — the property the coordinator's hot
+//! paths rely on.
+
+use super::cell::{CellKind, CellLib};
+
+use std::collections::HashMap;
+
+/// Index of a node (primary input, constant, or gate output) in a netlist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A netlist node.
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// Primary input with an externally supplied arrival time (ns).
+    Input { name: String, arrival_ns: f64 },
+    /// Constant 0 / 1.
+    Const(bool),
+    /// A standard cell instance; `fanin.len() == kind.arity()`.
+    Gate { kind: CellKind, fanin: Vec<NodeId> },
+}
+
+/// Gate-level netlist with named primary outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub name: String,
+    nodes: Vec<Node>,
+    outputs: Vec<(String, NodeId)>,
+    n_inputs: usize,
+}
+
+impl Netlist {
+    pub fn new(name: impl Into<String>) -> Self {
+        Netlist { name: name.into(), ..Default::default() }
+    }
+
+    /// Add a primary input arriving at t=0.
+    pub fn input(&mut self, name: impl Into<String>) -> NodeId {
+        self.input_at(name, 0.0)
+    }
+
+    /// Add a primary input with a non-zero arrival time (ns) — the mechanism
+    /// behind the paper's non-uniform CPA arrival profiles.
+    pub fn input_at(&mut self, name: impl Into<String>, arrival_ns: f64) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node::Input { name: name.into(), arrival_ns });
+        self.n_inputs += 1;
+        id
+    }
+
+    /// Add a constant node.
+    pub fn constant(&mut self, value: bool) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node::Const(value));
+        id
+    }
+
+    /// Instantiate a gate. Panics if arity mismatches or a fanin is a
+    /// forward reference (which would break topological order).
+    pub fn gate(&mut self, kind: CellKind, fanin: &[NodeId]) -> NodeId {
+        assert_eq!(fanin.len(), kind.arity(), "{kind:?} arity");
+        let id = NodeId(self.nodes.len() as u32);
+        for f in fanin {
+            assert!(f.0 < id.0, "fanin {f:?} is a forward reference");
+        }
+        self.nodes.push(Node::Gate { kind, fanin: fanin.to_vec() });
+        id
+    }
+
+    // -- convenience constructors used throughout the synthesizer --------
+    pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::And2, &[a, b])
+    }
+    pub fn or2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Or2, &[a, b])
+    }
+    pub fn nand2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Nand2, &[a, b])
+    }
+    pub fn nor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Nor2, &[a, b])
+    }
+    pub fn xor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Xor2, &[a, b])
+    }
+    pub fn xnor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Xnor2, &[a, b])
+    }
+    pub fn inv(&mut self, a: NodeId) -> NodeId {
+        self.gate(CellKind::Inv, &[a])
+    }
+    pub fn buf(&mut self, a: NodeId) -> NodeId {
+        self.gate(CellKind::Buf, &[a])
+    }
+    pub fn aoi21(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        self.gate(CellKind::Aoi21, &[a, b, c])
+    }
+    pub fn oai21(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        self.gate(CellKind::Oai21, &[a, b, c])
+    }
+    pub fn maj3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        self.gate(CellKind::Maj3, &[a, b, c])
+    }
+
+    /// Register a named primary output.
+    pub fn output(&mut self, name: impl Into<String>, id: NodeId) {
+        self.outputs.push((name.into(), id));
+    }
+
+    // -- accessors --------------------------------------------------------
+    #[inline]
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+    #[inline]
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+    pub fn outputs(&self) -> &[(String, NodeId)] {
+        &self.outputs
+    }
+    pub fn num_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Number of gate instances (excludes inputs/constants).
+    pub fn num_gates(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Gate { .. })).count()
+    }
+
+    /// Primary inputs in creation order.
+    pub fn inputs(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n, Node::Input { .. }))
+            .map(|(i, _)| NodeId(i as u32))
+            .collect()
+    }
+
+    /// Map input name → node id.
+    pub fn input_map(&self) -> HashMap<String, NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                Node::Input { name, .. } => Some((name.clone(), NodeId(i as u32))),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total cell area in µm².
+    pub fn area_um2(&self, lib: &CellLib) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                Node::Gate { kind, .. } => lib.params(*kind).area_um2,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    /// Fanout count per node (number of gate inputs each node drives;
+    /// primary outputs add `1` each).
+    pub fn fanout_counts(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.nodes.len()];
+        for n in &self.nodes {
+            if let Node::Gate { fanin, .. } = n {
+                for f in fanin {
+                    fo[f.index()] += 1;
+                }
+            }
+        }
+        for (_, id) in &self.outputs {
+            fo[id.index()] += 1;
+        }
+        fo
+    }
+
+    /// Capacitive load per node in unit loads (sum of driven input caps;
+    /// primary outputs add `lib.output_load`).
+    pub fn loads(&self, lib: &CellLib) -> Vec<f64> {
+        let mut load = vec![0.0f64; self.nodes.len()];
+        for n in &self.nodes {
+            if let Node::Gate { kind, fanin } = n {
+                let cin = lib.params(*kind).input_cap;
+                for f in fanin {
+                    load[f.index()] += cin;
+                }
+            }
+        }
+        for (_, id) in &self.outputs {
+            load[id.index()] += lib.output_load;
+        }
+        load
+    }
+
+    /// Logic depth (gate count) per node; inputs/constants are depth 0.
+    pub fn depths(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Node::Gate { fanin, .. } = n {
+                d[i] = 1 + fanin.iter().map(|f| d[f.index()]).max().unwrap_or(0);
+            }
+        }
+        d
+    }
+
+    /// Maximum logic depth over primary outputs.
+    pub fn depth(&self) -> u32 {
+        let d = self.depths();
+        self.outputs.iter().map(|(_, id)| d[id.index()]).max().unwrap_or(0)
+    }
+
+    /// Histogram of cell kinds, for reports.
+    pub fn cell_histogram(&self) -> HashMap<CellKind, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            if let Node::Gate { kind, .. } = n {
+                *h.entry(*kind).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    /// Structural validation: arities and topological order. Returns a
+    /// human-readable error description on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Node::Gate { kind, fanin } = n {
+                if fanin.len() != kind.arity() {
+                    return Err(format!("node {i}: {kind:?} with {} fanins", fanin.len()));
+                }
+                for f in fanin {
+                    if f.index() >= i {
+                        return Err(format!("node {i}: forward/self reference to {}", f.0));
+                    }
+                }
+            }
+        }
+        for (name, id) in &self.outputs {
+            if id.index() >= self.nodes.len() {
+                return Err(format!("output {name}: dangling node {}", id.0));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_chain(n: usize) -> Netlist {
+        let mut nl = Netlist::new("xorchain");
+        let mut prev = nl.input("i0");
+        for k in 1..=n {
+            let i = nl.input(format!("i{k}"));
+            prev = nl.xor2(prev, i);
+        }
+        nl.output("o", prev);
+        nl
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let nl = xor_chain(7);
+        nl.validate().unwrap();
+        assert_eq!(nl.num_inputs(), 8);
+        assert_eq!(nl.num_gates(), 7);
+        assert_eq!(nl.depth(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut nl = Netlist::new("bad");
+        let a = nl.input("a");
+        nl.gate(CellKind::Xor2, &[a]);
+    }
+
+    #[test]
+    fn fanout_and_load_accounting() {
+        let mut nl = Netlist::new("fan");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x = nl.xor2(a, b);
+        let y = nl.and2(x, a);
+        let z = nl.or2(x, y);
+        nl.output("z", z);
+        let fo = nl.fanout_counts();
+        assert_eq!(fo[x.index()], 2); // x drives y and z
+        assert_eq!(fo[a.index()], 2); // a drives x and y
+        let lib = CellLib::nangate45();
+        let loads = nl.loads(&lib);
+        let expect = lib.params(CellKind::And2).input_cap + lib.params(CellKind::Or2).input_cap;
+        assert!((loads[x.index()] - expect).abs() < 1e-12);
+        // output z carries the default output load
+        assert!((loads[z.index()] - lib.output_load).abs() < 1e-12);
+    }
+
+    #[test]
+    fn area_sums_cells_only() {
+        let nl = xor_chain(3);
+        let lib = CellLib::nangate45();
+        let expect = 3.0 * lib.params(CellKind::Xor2).area_um2;
+        assert!((nl.area_um2(&lib) - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,52 @@
+//! # UFO-MAC — Unified Framework for Optimization of Multipliers and MACs
+//!
+//! A full reproduction of *"UFO-MAC: A Unified Framework for Optimization of
+//! High-Performance Multipliers and Multiply-Accumulators"* (Zuo et al.,
+//! ICCAD 2024), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the arithmetic-synthesis framework: partial
+//!   product generation, optimal compressor trees with ILP stage assignment
+//!   and interconnect-order optimization, non-uniform-arrival CPA synthesis
+//!   with the FDC timing model, fused MACs, baselines (GOMIL, RL-MUL,
+//!   commercial-IP proxy), a from-scratch MILP solver, a gate-level netlist
+//!   IR with logical-effort STA, equivalence checking, functional modules
+//!   (FIR filter, systolic array) and a design-space-exploration coordinator.
+//! - **Layer 2 (python/compile/model.py)** — JAX evaluation workloads
+//!   (batched netlist functional verification, systolic-array GEMM).
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for those
+//!   workloads, AOT-lowered to HLO text and executed from Rust via PJRT
+//!   (`runtime` module). Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ufo_mac::multiplier::{MultiplierSpec, Strategy};
+//! use ufo_mac::sta::Sta;
+//!
+//! let spec = MultiplierSpec::new(8).strategy(Strategy::TradeOff);
+//! let design = spec.build().unwrap();
+//! let report = Sta::default().analyze(&design.netlist);
+//! assert!(report.critical_delay_ns > 0.0);
+//! assert!(ufo_mac::equiv::check_multiplier(&design).unwrap().passed);
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod cpa;
+pub mod ct;
+pub mod equiv;
+pub mod ilp;
+pub mod ir;
+pub mod modules;
+pub mod multiplier;
+pub mod ppg;
+pub mod runtime;
+pub mod sim;
+pub mod sta;
+pub mod synth;
+
+pub mod bench;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

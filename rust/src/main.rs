@@ -1,0 +1,268 @@
+//! `ufo-mac` — CLI for the UFO-MAC arithmetic-synthesis framework.
+//!
+//! Subcommands:
+//!   generate  --width N [--method ufo|gomil|rlmul|commercial]
+//!             [--strategy area|timing|tradeoff] [--mac] [--booth]
+//!             Generate one design, verify it, print the STA report.
+//!   sweep     --widths 8,16,32 [--mac] [--pjrt] [--out reports/]
+//!             Full method×strategy DSE sweep; prints Pareto frontiers.
+//!   profile   --width N   Print the CT output arrival profile (Figure 1).
+//!   fir       --width N --freq 1e9     Table-1 style FIR report.
+//!   systolic  --width N --freq 1e9     Table-2 style systolic report.
+//!   verify    --width N [--mac]        Simulator + PJRT equivalence.
+//!   ablation  --width N                Per-ingredient ablation table.
+
+use ufo_mac::baselines::{build_design, BaselineBudget, Method};
+use ufo_mac::coordinator::{self, SweepConfig};
+use ufo_mac::ct::CtArchitecture;
+use ufo_mac::multiplier::{MultiplierSpec, Strategy};
+use ufo_mac::ppg::PpgKind;
+use ufo_mac::sta::Sta;
+use ufo_mac::util::{Args, Table};
+use ufo_mac::Result;
+
+fn parse_method(s: &str) -> Method {
+    match s {
+        "gomil" => Method::Gomil,
+        "rlmul" => Method::RlMul,
+        "commercial" => Method::Commercial,
+        _ => Method::UfoMac,
+    }
+}
+
+fn parse_strategy(s: &str) -> Strategy {
+    match s {
+        "area" => Strategy::AreaDriven,
+        "timing" => Strategy::TimingDriven,
+        _ => Strategy::TradeOff,
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 8);
+    let method = parse_method(args.get("method").unwrap_or("ufo"));
+    let strategy = parse_strategy(args.get("strategy").unwrap_or("tradeoff"));
+    let mac = args.has("mac");
+    let design = if args.has("booth") {
+        MultiplierSpec::new(n).strategy(strategy).fused_mac(mac).ppg(PpgKind::Booth4).build()?
+    } else {
+        build_design(method, n, strategy, mac, &BaselineBudget::default())?
+    };
+    let rep = Sta::default().analyze(&design.netlist);
+    let equiv = ufo_mac::equiv::check_multiplier(&design)?;
+    println!(
+        "{} {}×{}{} [{strategy:?}]",
+        method.name(),
+        n,
+        n,
+        if mac { " fused-MAC" } else { "" }
+    );
+    println!("  gates:       {}", rep.num_gates);
+    println!("  area:        {:.1} µm²", rep.area_um2);
+    println!("  delay:       {:.4} ns", rep.critical_delay_ns);
+    println!("  power@1GHz:  {:.4} mW", rep.power_mw);
+    println!("  CT stages:   {}", design.ct_stages);
+    println!(
+        "  equivalence: {} ({} vectors{})",
+        if equiv.passed { "PASS" } else { "FAIL" },
+        equiv.vectors,
+        if equiv.exhaustive { ", exhaustive" } else { "" }
+    );
+    if let Some(path) = args.get("verilog") {
+        std::fs::write(path, ufo_mac::synth::verilog::emit(&design.netlist))?;
+        println!("  verilog:     {path}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 16);
+    let design = MultiplierSpec::new(n).build()?;
+    println!("CT output arrival profile ({n}×{n}, model estimate, ns):");
+    let max = design.profile.iter().copied().fold(0.0f64, f64::max);
+    for (j, t) in design.profile.iter().enumerate() {
+        let bar = "#".repeat((t / max.max(1e-12) * 50.0) as usize);
+        println!("  col {j:>3}  {t:>7.4}  {bar}");
+    }
+    let (r1, r2) = ufo_mac::cpa::detect_regions(&design.profile);
+    println!("regions: 1 = [0,{r1}), 2 = [{r1},{r2}), 3 = [{r2},{})", design.profile.len());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let widths: Vec<usize> = args
+        .get("widths")
+        .unwrap_or("8,16")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let cfg = SweepConfig {
+        widths,
+        mac: args.has("mac"),
+        use_pjrt: args.has("pjrt"),
+        ..Default::default()
+    };
+    let points = coordinator::run_sweep(&cfg);
+    let mut table = Table::new(&[
+        "method", "n", "strategy", "delay(ns)", "area(µm²)", "power(mW)", "ok",
+    ]);
+    for p in &points {
+        table.row(vec![
+            p.method.name().into(),
+            p.n.to_string(),
+            format!("{:?}", p.strategy),
+            format!("{:.4}", p.delay_ns),
+            format!("{:.1}", p.area_um2),
+            format!("{:.3}", p.power_mw),
+            format!(
+                "{}{}",
+                if p.verified { "sim" } else { "SIM-FAIL" },
+                match p.pjrt_verified {
+                    Some(true) => "+pjrt",
+                    Some(false) => "+PJRT-FAIL",
+                    None => "",
+                }
+            ),
+        ]);
+    }
+    println!("{}", table.render());
+    for &n in &cfg.widths {
+        let subset: Vec<_> = points.iter().filter(|p| p.n == n).cloned().collect();
+        let front = coordinator::pareto_front(&subset);
+        let names: Vec<String> = front
+            .iter()
+            .map(|&i| format!("{}/{:?}", subset[i].method.name(), subset[i].strategy))
+            .collect();
+        println!("pareto {n}-bit: {}", names.join(", "));
+    }
+    if let Some(dir) = args.get("out") {
+        coordinator::save_report(dir, "sweep", &coordinator::points_json(&points))?;
+        println!("report written to {dir}/sweep.json");
+    }
+    Ok(())
+}
+
+fn cmd_fir(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 8);
+    let freq = args.get_f64("freq", 1e9);
+    let mut table = Table::new(&["method", "freq(MHz)", "WNS(ns)", "area(µm²)", "power(mW)"]);
+    for m in Method::ALL {
+        let r = ufo_mac::modules::fir_report(m, n, Strategy::TradeOff, freq)?;
+        table.row(vec![
+            m.name().into(),
+            format!("{:.0}", freq / 1e6),
+            format!("{:.4}", r.wns_ns),
+            format!("{:.0}", r.area_um2),
+            format!("{:.3}", r.power_mw),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_systolic(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 8);
+    let freq = args.get_f64("freq", 1e9);
+    let mut table = Table::new(&["method", "freq(MHz)", "WNS(ns)", "area(µm²)", "power(mW)"]);
+    for m in Method::ALL {
+        let r = ufo_mac::modules::systolic_report(m, n, Strategy::TradeOff, freq)?;
+        table.row(vec![
+            m.name().into(),
+            format!("{:.0}", freq / 1e6),
+            format!("{:.4}", r.wns_ns),
+            format!("{:.0}", r.area_um2),
+            format!("{:.3}", r.power_mw),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 8);
+    let mac = args.has("mac");
+    let design = MultiplierSpec::new(n).fused_mac(mac).build()?;
+    let equiv = ufo_mac::equiv::check_multiplier(&design)?;
+    println!(
+        "simulator equivalence: {} ({} vectors)",
+        if equiv.passed { "PASS" } else { "FAIL" },
+        equiv.vectors
+    );
+    let dir = ufo_mac::runtime::default_artifact_dir();
+    let rt = ufo_mac::runtime::Runtime::new(&dir)?;
+    if rt.has_artifact("netlist_eval_small") {
+        let ok = ufo_mac::runtime::verify_design_pjrt(&rt, &design, 4)?;
+        println!(
+            "PJRT artifact equivalence ({}): {}",
+            rt.platform(),
+            if ok { "PASS" } else { "FAIL" }
+        );
+    } else {
+        println!("PJRT artifacts not built (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    // Ablation: isolate each UFO-MAC ingredient (DESIGN.md §4).
+    let n = args.get_usize("width", 16);
+    let sta = Sta::default();
+    let mut table = Table::new(&["variant", "delay(ns)", "area(µm²)", "stages"]);
+    let variants: Vec<(&str, MultiplierSpec)> = vec![
+        ("full UFO-MAC", MultiplierSpec::new(n)),
+        (
+            "naive interconnect order",
+            MultiplierSpec::new(n).order(ufo_mac::ct::OrderStrategy::Naive),
+        ),
+        (
+            "no stage optimization (column-serial)",
+            MultiplierSpec::new(n).ct(CtArchitecture::Gomil),
+        ),
+        (
+            "regular Sklansky CPA (no profile opt)",
+            MultiplierSpec::new(n).cpa(ufo_mac::multiplier::CpaChoice::Regular(
+                ufo_mac::cpa::PrefixStructure::Sklansky,
+            )),
+        ),
+        ("wallace CT", MultiplierSpec::new(n).ct(CtArchitecture::Wallace)),
+        ("dadda CT", MultiplierSpec::new(n).ct(CtArchitecture::Dadda)),
+    ];
+    for (name, spec) in variants {
+        let d = spec.build()?;
+        let r = sta.analyze(&d.netlist);
+        table.row(vec![
+            name.into(),
+            format!("{:.4}", r.critical_delay_ns),
+            format!("{:.1}", r.area_um2),
+            d.ct_stages.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "generate" => cmd_generate(&args),
+        "sweep" => cmd_sweep(&args),
+        "profile" => cmd_profile(&args),
+        "fir" => cmd_fir(&args),
+        "systolic" => cmd_systolic(&args),
+        "verify" => cmd_verify(&args),
+        "ablation" => cmd_ablation(&args),
+        _ => {
+            println!(
+                "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
+                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation> [flags]\n\
+                 see rust/src/main.rs header for flags"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

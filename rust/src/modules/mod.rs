@@ -1,0 +1,34 @@
+//! Functional modules for §5.3: the 5-tap FIR filter (Table 1) and the
+//! 16×16 systolic array (Table 2), assembled from generated multiplier /
+//! MAC designs so every method is evaluated inside the same larger-scale
+//! context the paper uses.
+//!
+//! Sequential elements are modelled with NanGate-like DFF constants
+//! (area/energy): the synthesizable combinational path between register
+//! boundaries comes from the real generated netlists, and module-level
+//! area/power aggregate the per-instance STA reports plus register costs.
+
+pub mod fir;
+pub mod systolic;
+
+pub use fir::{build_fir_stage, fir_report, FirReport};
+pub use systolic::{build_pe, systolic_report, SystolicReport};
+
+/// NanGate45 DFF_X1-like flip-flop model.
+pub const DFF_AREA_UM2: f64 = 4.522;
+pub const DFF_ENERGY_FJ: f64 = 2.5;
+
+/// A module-level synthesis report row (one cell of Table 1/2).
+#[derive(Debug, Clone)]
+pub struct ModuleReport {
+    pub freq_hz: f64,
+    pub wns_ns: f64,
+    pub area_um2: f64,
+    pub power_mw: f64,
+}
+
+impl ModuleReport {
+    pub fn period_ns(&self) -> f64 {
+        1e9 / self.freq_hz
+    }
+}

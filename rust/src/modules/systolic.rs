@@ -1,0 +1,77 @@
+//! 16×16 output-stationary systolic array (Table 2).
+//!
+//! Each processing element is a fused MAC (`acc ← acc + a·b`) plus operand
+//! and accumulator registers; the array's achievable frequency is set by
+//! the PE's combinational MAC path, and array area/power scale the PE by
+//! the 256 instances plus operand-forwarding registers. The PE netlist is
+//! the *real* generated MAC design — the hardware twin of the Pallas
+//! `systolic` kernel the runtime executes for the end-to-end workload.
+
+use super::{ModuleReport, DFF_AREA_UM2, DFF_ENERGY_FJ};
+use crate::baselines::{build_design, BaselineBudget, Method};
+use crate::multiplier::{Design, Strategy};
+use crate::sta::Sta;
+use crate::Result;
+
+/// Array geometry (the paper's configuration).
+pub const ROWS: usize = 16;
+pub const COLS: usize = 16;
+
+pub type SystolicReport = ModuleReport;
+
+/// Build one PE: an `n×n` fused MAC with a `2n`-bit accumulator operand.
+pub fn build_pe(method: Method, n: usize, strategy: Strategy) -> Result<Design> {
+    build_design(method, n, strategy, true, &BaselineBudget::default())
+}
+
+/// Table-2 style report for the full array at a clock target.
+pub fn systolic_report(
+    method: Method,
+    n: usize,
+    strategy: Strategy,
+    freq_hz: f64,
+) -> Result<SystolicReport> {
+    let pe = build_pe(method, n, strategy)?;
+    let sta = Sta { clock_ghz: freq_hz / 1e9, ..Sta::default() };
+    let rep = sta.analyze(&pe.netlist);
+    let period_ns = 1e9 / freq_hz;
+    let wns_ns = period_ns - rep.critical_delay_ns;
+
+    let pes = (ROWS * COLS) as f64;
+    // Per PE: two n-bit operand registers (a, b forwarding) + a 2n+1-bit
+    // accumulator register.
+    let regs_per_pe = (2 * n + 2 * n + 1) as f64;
+    let area_um2 = pes * (rep.area_um2 + regs_per_pe * DFF_AREA_UM2);
+    let power_mw =
+        pes * (rep.power_mw + regs_per_pe * DFF_ENERGY_FJ * (freq_hz / 1e9) / 1000.0);
+    Ok(SystolicReport { freq_hz, wns_ns, area_um2, power_mw })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_is_a_verified_fused_mac() {
+        let pe = build_pe(Method::UfoMac, 3, Strategy::TradeOff).unwrap();
+        assert!(pe.is_mac);
+        let r = crate::equiv::check_multiplier(&pe).unwrap();
+        assert!(r.passed && r.exhaustive);
+    }
+
+    #[test]
+    fn report_scales_with_array_size() {
+        let r = systolic_report(Method::UfoMac, 8, Strategy::AreaDriven, 660e6).unwrap();
+        let pe = build_pe(Method::UfoMac, 8, Strategy::AreaDriven).unwrap();
+        let pe_area = crate::sta::Sta::default().analyze(&pe.netlist).area_um2;
+        assert!(r.area_um2 > 256.0 * pe_area, "array must include register overhead");
+        assert!(r.power_mw > 0.0);
+    }
+
+    #[test]
+    fn higher_clock_tightens_wns() {
+        let slow = systolic_report(Method::UfoMac, 8, Strategy::TimingDriven, 660e6).unwrap();
+        let fast = systolic_report(Method::UfoMac, 8, Strategy::TimingDriven, 2e9).unwrap();
+        assert!(fast.wns_ns < slow.wns_ns);
+    }
+}

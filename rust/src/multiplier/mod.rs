@@ -1,0 +1,377 @@
+//! End-to-end multiplier and fused-MAC assembly (PPG → CT → CPA).
+//!
+//! [`MultiplierSpec`] is the public entry point: pick a bit width, a CT
+//! architecture, a CPA choice and a strategy, call [`MultiplierSpec::build`]
+//! and get a [`Design`] — a self-contained gate netlist with named operand
+//! inputs and product outputs, plus the structural metadata the benchmarks
+//! report. The fused-MAC path (§2.3) injects the accumulator rows into the
+//! CT; the non-fused variant (conventional MAC: multiply, then add) exists
+//! as the ablation the paper's Figure-12 discussion implies.
+
+use crate::cpa::{self, CpaColumn, CpaStrategy, FdcModel, PrefixStructure};
+use crate::ct::{self, CtArchitecture, OrderStrategy, StagePlan};
+use crate::ir::{CellLib, Netlist, NodeId};
+use crate::ppg::{self, PpgKind};
+use crate::synth::{CompressorTiming, Sig};
+use crate::Result;
+use anyhow::bail;
+
+/// Which CPA the design uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpaChoice {
+    /// UFO-MAC §4: hybrid initial structure from the CT profile +
+    /// Algorithm-2 timing-driven optimization.
+    ProfileOptimized,
+    /// A fixed regular prefix structure (baselines).
+    Regular(PrefixStructure),
+}
+
+/// Overall design strategy (maps to the paper's three synthesis presets).
+pub type Strategy = CpaStrategy;
+
+/// Specification for a multiplier / MAC design.
+#[derive(Debug, Clone)]
+pub struct MultiplierSpec {
+    pub n: usize,
+    pub ppg: PpgKind,
+    pub ct: CtArchitecture,
+    pub order_override: Option<OrderStrategy>,
+    /// Custom stage plan (used by the RL-MUL baseline's searched trees).
+    pub ct_plan: Option<StagePlan>,
+    pub cpa: CpaChoice,
+    pub strategy: Strategy,
+    /// Fuse a `2n`-bit accumulator into the CT (§2.3).
+    pub fused_mac: bool,
+    /// Conventional MAC: multiply then add with a separate CPA.
+    pub separate_mac: bool,
+    pub fdc_model: FdcModel,
+}
+
+impl MultiplierSpec {
+    /// UFO-MAC defaults for an `n×n` multiplier.
+    pub fn new(n: usize) -> Self {
+        MultiplierSpec {
+            n,
+            ppg: PpgKind::AndArray,
+            ct: CtArchitecture::UfoMac,
+            order_override: None,
+            ct_plan: None,
+            cpa: CpaChoice::ProfileOptimized,
+            strategy: CpaStrategy::TradeOff,
+            fused_mac: false,
+            separate_mac: false,
+            fdc_model: FdcModel::default_prior(),
+        }
+    }
+
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+    pub fn ct(mut self, ct: CtArchitecture) -> Self {
+        self.ct = ct;
+        self
+    }
+    pub fn cpa(mut self, cpa: CpaChoice) -> Self {
+        self.cpa = cpa;
+        self
+    }
+    pub fn ppg(mut self, ppg: PpgKind) -> Self {
+        self.ppg = ppg;
+        self
+    }
+    pub fn fused_mac(mut self, yes: bool) -> Self {
+        self.fused_mac = yes;
+        self
+    }
+    pub fn separate_mac(mut self, yes: bool) -> Self {
+        self.separate_mac = yes;
+        self
+    }
+    pub fn order(mut self, o: OrderStrategy) -> Self {
+        self.order_override = Some(o);
+        self
+    }
+    pub fn with_plan(mut self, plan: StagePlan) -> Self {
+        self.ct_plan = Some(plan);
+        self
+    }
+    pub fn fdc(mut self, m: FdcModel) -> Self {
+        self.fdc_model = m;
+        self
+    }
+
+    /// Build the gate-level design.
+    pub fn build(&self) -> Result<Design> {
+        if self.n < 2 {
+            bail!("multiplier width must be ≥ 2");
+        }
+        if self.fused_mac && self.separate_mac {
+            bail!("fused_mac and separate_mac are mutually exclusive");
+        }
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let n = self.n;
+        let mut nl = Netlist::new(format!(
+            "{}{}x{}",
+            if self.fused_mac || self.separate_mac { "mac" } else { "mul" },
+            n,
+            n
+        ));
+        let a: Vec<NodeId> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<NodeId> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+        let c: Vec<NodeId> = if self.fused_mac || self.separate_mac {
+            (0..2 * n).map(|i| nl.input(format!("c{i}"))).collect()
+        } else {
+            vec![]
+        };
+
+        // PPG. Fused MACs produce a 2n+1-bit result, so a Booth matrix
+        // must stay exact one column further (its compaction is modular).
+        let mut matrix = if self.ppg == PpgKind::Booth4 && self.fused_mac {
+            ppg::booth4_wide(&mut nl, &lib, &a, &b, 2 * n + 1)
+        } else {
+            ppg::generate(&mut nl, &lib, self.ppg, &a, &b)
+        };
+        if self.fused_mac {
+            let addend: Vec<Sig> = c.iter().map(|&id| Sig::new(id, 0.0)).collect();
+            matrix.add_addend(&addend);
+        }
+
+        // CT.
+        let ct_out = match &self.ct_plan {
+            Some(plan) => {
+                let mut cols = matrix.columns;
+                cols.resize(plan.width().max(cols.len()), Vec::new());
+                ct::build_ct(
+                    &mut nl,
+                    &tm,
+                    cols,
+                    plan,
+                    self.order_override.unwrap_or(OrderStrategy::Naive),
+                )
+            }
+            None => ct::synthesize(&mut nl, &tm, matrix.columns, self.ct, self.order_override),
+        };
+
+        // CPA over the two compressed rows.
+        let width = ct_out.rows.len();
+        let cpa_cols: Vec<CpaColumn> = (0..width)
+            .map(|j| {
+                let col = &ct_out.rows[j];
+                match col.len() {
+                    0 => {
+                        let z = nl.constant(false);
+                        CpaColumn { a: Sig::new(z, 0.0), b: None }
+                    }
+                    1 => CpaColumn { a: col[0], b: None },
+                    _ => CpaColumn { a: col[0], b: Some(col[1]) },
+                }
+            })
+            .collect();
+        let graph = match self.cpa {
+            CpaChoice::ProfileOptimized => {
+                let (g, _rep) =
+                    cpa::synthesize_for_profile(&ct_out.profile, self.strategy, &self.fdc_model);
+                g
+            }
+            CpaChoice::Regular(s) => cpa::build(s, width),
+        };
+        let cpa_out = cpa::expand(&mut nl, &graph, &cpa_cols);
+
+        // Product bits: 2n for a multiplier, 2n+1 for a fused MAC.
+        let want = if self.fused_mac || self.separate_mac { 2 * n + 1 } else { 2 * n };
+        let mut product: Vec<NodeId> = cpa_out.sum;
+        // The CPA yields width+1 bits; pad (never expected) or trim to want.
+        while product.len() < want {
+            let z = nl.constant(false);
+            product.push(z);
+        }
+        product.truncate(want);
+
+        // Conventional MAC: a second, separate CPA adds the accumulator.
+        if self.separate_mac {
+            let add_w = 2 * n;
+            let cols2: Vec<CpaColumn> = (0..add_w)
+                .map(|j| CpaColumn {
+                    a: Sig::new(product[j], 0.0),
+                    b: Some(Sig::new(c[j], 0.0)),
+                })
+                .collect();
+            let g2 = match self.cpa {
+                CpaChoice::Regular(s) => cpa::build(s, add_w),
+                CpaChoice::ProfileOptimized => {
+                    // No CT profile here: uniform arrival, Sklansky-style.
+                    cpa::build(PrefixStructure::Sklansky, add_w)
+                }
+            };
+            let out2 = cpa::expand(&mut nl, &g2, &cols2);
+            product = out2.sum;
+            product.truncate(2 * n + 1);
+        }
+
+        for (i, &p) in product.iter().enumerate() {
+            nl.output(format!("p{i}"), p);
+        }
+        nl.validate().map_err(|e| anyhow::anyhow!("netlist invalid: {e}"))?;
+        Ok(Design {
+            n,
+            is_mac: self.fused_mac || self.separate_mac,
+            netlist: nl,
+            a,
+            b,
+            c,
+            product,
+            ct_stages: ct_out.stages,
+            profile: ct_out.profile,
+            cpa_nodes: graph.size(),
+        })
+    }
+}
+
+/// A built design: netlist + interface + structural metadata.
+#[derive(Debug, Clone)]
+pub struct Design {
+    pub n: usize,
+    pub is_mac: bool,
+    pub netlist: Netlist,
+    pub a: Vec<NodeId>,
+    pub b: Vec<NodeId>,
+    pub c: Vec<NodeId>,
+    pub product: Vec<NodeId>,
+    pub ct_stages: usize,
+    /// CT output arrival-estimate profile (ns) per column.
+    pub profile: Vec<f64>,
+    pub cpa_nodes: usize,
+}
+
+impl Design {
+    /// Golden reference: what the hardware must compute.
+    pub fn golden(&self, a: u128, b: u128, c: u128) -> u128 {
+        let mask = (1u128 << self.product.len()) - 1;
+        (a * b + if self.is_mac { c } else { 0 }) & mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{lane_value, pack_lanes, Simulator};
+
+    fn exhaustive(spec: &MultiplierSpec) {
+        let d = spec.build().unwrap();
+        let n = d.n;
+        let mut sim = Simulator::new();
+        let na = 1u32 << n;
+        let all: Vec<(u32, u32, u32)> = (0..na)
+            .flat_map(|x| (0..na).map(move |y| (x, y, (x.wrapping_mul(13) ^ y) & (1 << (2 * n)) - 1)))
+            .collect();
+        for chunk in all.chunks(64) {
+            let assigns: Vec<Vec<bool>> = chunk
+                .iter()
+                .map(|(x, y, z)| {
+                    let mut v: Vec<bool> = (0..n).map(|k| x >> k & 1 != 0).collect();
+                    v.extend((0..n).map(|k| y >> k & 1 != 0));
+                    if d.is_mac {
+                        v.extend((0..2 * n).map(|k| z >> k & 1 != 0));
+                    }
+                    v
+                })
+                .collect();
+            let words = pack_lanes(&assigns);
+            let vals = sim.run(&d.netlist, &words).to_vec();
+            for (lane, (x, y, z)) in chunk.iter().enumerate() {
+                let got = lane_value(&vals, &d.product, lane as u32);
+                let want = d.golden(u128::from(*x), u128::from(*y), u128::from(*z));
+                assert_eq!(got, want, "a={x} b={y} c={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn ufo_multiplier_4x4_exhaustive() {
+        exhaustive(&MultiplierSpec::new(4));
+    }
+
+    #[test]
+    fn ufo_multiplier_strategies_4x4() {
+        for s in [CpaStrategy::AreaDriven, CpaStrategy::TimingDriven] {
+            exhaustive(&MultiplierSpec::new(4).strategy(s));
+        }
+    }
+
+    #[test]
+    fn baseline_cts_4x4() {
+        for ct in [CtArchitecture::Wallace, CtArchitecture::Dadda, CtArchitecture::Gomil] {
+            exhaustive(
+                &MultiplierSpec::new(4)
+                    .ct(ct)
+                    .cpa(CpaChoice::Regular(PrefixStructure::KoggeStone)),
+            );
+        }
+    }
+
+    #[test]
+    fn booth_multiplier_4x4() {
+        exhaustive(&MultiplierSpec::new(4).ppg(PpgKind::Booth4));
+    }
+
+    #[test]
+    fn fused_mac_3x3_exhaustive() {
+        exhaustive(&MultiplierSpec::new(3).fused_mac(true));
+    }
+
+    #[test]
+    fn separate_mac_3x3_exhaustive() {
+        exhaustive(
+            &MultiplierSpec::new(3)
+                .separate_mac(true)
+                .cpa(CpaChoice::Regular(PrefixStructure::Sklansky)),
+        );
+    }
+
+    #[test]
+    fn fused_mac_beats_separate_mac() {
+        // §2.3: fusing the accumulator into the CT eliminates a whole CPA
+        // stage. With an identical CPA structure on both variants, the
+        // fused design must be strictly faster and no more than marginally
+        // larger (it trades a full prefix network for ~2n compressors).
+        let sta = crate::sta::Sta::default();
+        let fused = MultiplierSpec::new(8)
+            .fused_mac(true)
+            .cpa(CpaChoice::Regular(PrefixStructure::Sklansky))
+            .build()
+            .unwrap();
+        let sep = MultiplierSpec::new(8)
+            .separate_mac(true)
+            .cpa(CpaChoice::Regular(PrefixStructure::Sklansky))
+            .build()
+            .unwrap();
+        let rf = sta.analyze(&fused.netlist);
+        let rs = sta.analyze(&sep.netlist);
+        assert!(
+            rf.critical_delay_ns < rs.critical_delay_ns,
+            "delay {} vs {}",
+            rf.critical_delay_ns,
+            rs.critical_delay_ns
+        );
+        assert!(rf.area_um2 < rs.area_um2 * 1.05, "area {} vs {}", rf.area_um2, rs.area_um2);
+    }
+
+    #[test]
+    fn profile_is_trapezoidal_for_16bit() {
+        // Figure 1: middle columns arrive last.
+        let d = MultiplierSpec::new(16).build().unwrap();
+        let w = d.profile.len();
+        let mid = d.profile[w / 2];
+        assert!(mid >= d.profile[1], "mid {} vs lsb {}", mid, d.profile[1]);
+        assert!(mid >= d.profile[w - 1], "mid {} vs msb {}", mid, d.profile[w - 1]);
+        assert!(mid > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(MultiplierSpec::new(1).build().is_err());
+        assert!(MultiplierSpec::new(4).fused_mac(true).separate_mac(true).build().is_err());
+    }
+}

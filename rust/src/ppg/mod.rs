@@ -1,0 +1,320 @@
+//! Partial product generation (§2.1).
+//!
+//! Produces the column-wise partial-product bit matrix that the compressor
+//! tree consumes. Two generators are provided:
+//!
+//! - [`PpgKind::AndArray`] — the paper's baseline `N²`-AND-gate PPG;
+//! - [`PpgKind::Booth4`] — radix-4 (modified) Booth recoding for unsigned
+//!   operands, halving the number of partial-product rows (the structure
+//!   commercial multiplier IP uses at larger widths).
+//!
+//! For the fused MAC architecture (§2.3) the accumulator operand is injected
+//! directly as extra rows of the matrix (see [`PpMatrix::add_addend`]), so
+//! the CT absorbs the accumulation for free — the paper's headline MAC
+//! optimization.
+
+use crate::ir::{CellLib, Netlist, NodeId};
+use crate::synth::Sig;
+
+/// Partial-product generator selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PpgKind {
+    AndArray,
+    Booth4,
+}
+
+/// Column-indexed partial-product matrix: `columns[j]` holds the bits of
+/// weight `2^j`, each with the timing-model arrival estimate.
+#[derive(Debug, Clone)]
+pub struct PpMatrix {
+    pub columns: Vec<Vec<Sig>>,
+    /// Operand widths that produced the matrix (for reports).
+    pub n_bits: usize,
+}
+
+impl PpMatrix {
+    /// Column population counts — the `PP_j` input of Algorithm 1.
+    pub fn counts(&self) -> Vec<usize> {
+        self.columns.iter().map(|c| c.len()).collect()
+    }
+
+    /// Widen to at least `n` columns.
+    pub fn ensure_columns(&mut self, n: usize) {
+        while self.columns.len() < n {
+            self.columns.push(Vec::new());
+        }
+    }
+
+    /// Inject an addend operand (for fused MACs): bit `k` of `bits` lands in
+    /// column `k`.
+    pub fn add_addend(&mut self, bits: &[Sig]) {
+        self.ensure_columns(bits.len());
+        for (k, s) in bits.iter().enumerate() {
+            self.columns[k].push(*s);
+        }
+    }
+
+    /// Max column height (reported as the CT's input rank).
+    pub fn max_height(&self) -> usize {
+        self.columns.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+}
+
+/// Build the AND-array PPG for `a[0..n] × b[0..n]` into `nl`.
+///
+/// Returns the matrix over `2n-1` columns; arrival estimates equal one AND
+/// stage at nominal load.
+pub fn and_array(nl: &mut Netlist, lib: &CellLib, a: &[NodeId], b: &[NodeId]) -> PpMatrix {
+    let n = a.len();
+    assert_eq!(n, b.len(), "and_array expects equal operand widths");
+    let d_and = lib.delay_ns(crate::ir::CellKind::And2, 2.0);
+    let mut columns = vec![Vec::new(); 2 * n - 1];
+    for (i, &ai) in a.iter().enumerate() {
+        for (j, &bj) in b.iter().enumerate() {
+            let g = nl.and2(ai, bj);
+            columns[i + j].push(Sig::new(g, d_and));
+        }
+    }
+    PpMatrix { columns, n_bits: n }
+}
+
+/// Radix-4 Booth digit selector output for one row bit.
+///
+/// Digit `d ∈ {-2,-1,0,1,2}` is encoded by (neg, one, two):
+/// `pp_bit_k = neg ⊕ (one·a_k + two·a_{k-1})`, with the +1 correction for
+/// negative digits injected as a separate LSB bit.
+struct BoothRow {
+    bits: Vec<Sig>,
+    neg: Sig,
+}
+
+/// Build a radix-4 Booth PPG for unsigned `a × b`.
+///
+/// Unsigned operands are zero-extended by two bits so that the top digit is
+/// non-negative; rows are sign-extended with the standard `~s, s, s`
+/// compaction trick and negative rows add their `+1` correction bit into the
+/// row's LSB column.
+pub fn booth4(nl: &mut Netlist, lib: &CellLib, a: &[NodeId], b: &[NodeId]) -> PpMatrix {
+    let n = a.len();
+    booth4_wide(nl, lib, a, b, 2 * n)
+}
+
+/// Radix-4 Booth PPG exact mod `2^out_cols` — fused MACs need one extra
+/// column (`2n+1`) so the accumulator sum's MSB stays exact.
+pub fn booth4_wide(
+    nl: &mut Netlist,
+    lib: &CellLib,
+    a: &[NodeId],
+    b: &[NodeId],
+    out_cols: usize,
+) -> PpMatrix {
+    use crate::ir::CellKind::*;
+    let n = a.len();
+    assert_eq!(n, b.len());
+    assert!(out_cols >= 2 * n);
+    let zero = nl.constant(false);
+    let d_sel = lib.delay_ns(Xor2, 2.0) + lib.delay_ns(Aoi21, 2.0) + lib.delay_ns(Inv, 2.0);
+
+    // Booth digits over b (zero-extended): digit i looks at b[2i+1], b[2i], b[2i-1].
+    let n_rows = n / 2 + 1;
+    let bit = |idx: isize, nl: &Netlist| -> NodeId {
+        let _ = nl;
+        if idx < 0 || idx as usize >= n {
+            zero
+        } else {
+            b[idx as usize]
+        }
+    };
+
+    let mut rows: Vec<BoothRow> = Vec::with_capacity(n_rows);
+    for r in 0..n_rows {
+        let hi = bit(2 * r as isize + 1, nl);
+        let mid = bit(2 * r as isize, nl);
+        let lo = bit(2 * r as isize - 1, nl);
+        // one  = mid ⊕ lo  (|d| == 1)
+        // two  = hi ⊕ mid ? …precisely: two = (hi·!mid·!lo) + (!hi·mid·lo)
+        // neg  = hi·!(mid·lo)  → for zero-extended unsigned top digit hi=0.
+        let one = nl.xor2(mid, lo);
+        let eq_ml = nl.xnor2(mid, lo);
+        let two = {
+            let x = nl.xor2(hi, mid);
+            nl.and2(x, eq_ml)
+        };
+        let neg = {
+            let ml = nl.and2(mid, lo);
+            let nml = nl.inv(ml);
+            nl.and2(hi, nml)
+        };
+        // Row bits k = 0..n: pp_k = neg ⊕ (one·a_k | two·a_{k-1})
+        let mut bits = Vec::with_capacity(n + 1);
+        for k in 0..=n {
+            let ak = if k < n { a[k] } else { zero };
+            let ak1 = if k >= 1 { a[k - 1] } else { zero };
+            let t1 = nl.and2(one, ak);
+            let t2 = nl.and2(two, ak1);
+            let or = nl.or2(t1, t2);
+            let pp = nl.xor2(or, neg);
+            bits.push(Sig::new(pp, d_sel));
+        }
+        rows.push(BoothRow { bits, neg: Sig::new(neg, d_sel) });
+    }
+
+    // Assemble columns with exact sign-extension compaction. Row r (base
+    // column 2r, bits over base..base+n) contributes, mod 2^{2n}:
+    //
+    //   bits  +  neg·2^base            (the +1 of the two's complement)
+    //         +  neg·(ones ≥ base+n+1) (sign extension)
+    //
+    // and  neg·(ones ≥ base+n+1) ≡ (~neg)·2^{base+n+1} − 2^{base+n+1}.
+    // The per-row `−2^{base+n+1}` terms fold into one global constant C
+    // injected as constant bits — the standard "(~s) + constant" trick,
+    // made exact mod 2^{2n}.
+    let mut columns = vec![Vec::new(); out_cols];
+    for (r, row) in rows.iter().enumerate() {
+        let base = 2 * r;
+        for (k, s) in row.bits.iter().enumerate() {
+            if base + k < columns.len() {
+                columns[base + k].push(*s);
+            }
+        }
+        // +1 correction for negative rows lands at the row LSB column.
+        columns[base].push(row.neg);
+        // (~neg) at base+n+1.
+        if base + n + 1 < columns.len() {
+            let ns = nl.inv(row.neg.node);
+            columns[base + n + 1].push(Sig::new(ns, d_sel));
+        }
+    }
+    // Global constant C = (− Σ_r 2^{2r+n+1}) mod 2^{2n}.
+    let modulus = 1u128 << out_cols;
+    let mut c_const = 0u128;
+    for r in 0..rows.len() {
+        let shift = 2 * r + n + 1;
+        if shift < out_cols {
+            c_const = (c_const + modulus - (1u128 << shift)) % modulus;
+        }
+    }
+    if c_const != 0 {
+        let one_const = nl.constant(true);
+        for j in 0..out_cols {
+            if c_const >> j & 1 == 1 {
+                columns[j].push(Sig::new(one_const, 0.0));
+            }
+        }
+    }
+    PpMatrix { columns, n_bits: n }
+}
+
+/// Build a PPG of the requested kind.
+pub fn generate(
+    nl: &mut Netlist,
+    lib: &CellLib,
+    kind: PpgKind,
+    a: &[NodeId],
+    b: &[NodeId],
+) -> PpMatrix {
+    match kind {
+        PpgKind::AndArray => and_array(nl, lib, a, b),
+        PpgKind::Booth4 => booth4(nl, lib, a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{CellLib, Netlist};
+    use crate::sim::{pack_lanes, Simulator};
+
+    /// Sum a PP matrix numerically per lane (golden reduction).
+    fn matrix_value(vals: &[u64], m: &PpMatrix, lane: u32) -> u128 {
+        let mut total = 0u128;
+        for (j, col) in m.columns.iter().enumerate() {
+            for s in col {
+                total += u128::from(vals[s.node.index()] >> lane & 1) << j;
+            }
+        }
+        total
+    }
+
+    fn check_ppg(kind: PpgKind, n: usize, mask: u128) {
+        let lib = CellLib::nangate45();
+        let mut nl = Netlist::new("ppg");
+        let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+        let m = generate(&mut nl, &lib, kind, &a, &b);
+        nl.validate().unwrap();
+        let mut sim = Simulator::new();
+        // Exhaust 4-bit × 4-bit in 64-lane batches.
+        let all: Vec<(u32, u32)> =
+            (0..1u32 << n).flat_map(|x| (0..1u32 << n).map(move |y| (x, y))).collect();
+        for chunk in all.chunks(64) {
+            let assigns: Vec<Vec<bool>> = chunk
+                .iter()
+                .map(|(x, y)| {
+                    (0..n).map(|k| x >> k & 1 != 0).chain((0..n).map(|k| y >> k & 1 != 0)).collect()
+                })
+                .collect();
+            let words = pack_lanes(&assigns);
+            let vals = sim.run(&nl, &words).to_vec();
+            for (lane, (x, y)) in chunk.iter().enumerate() {
+                let got = matrix_value(&vals, &m, lane as u32) & mask;
+                assert_eq!(
+                    got,
+                    u128::from(*x) * u128::from(*y) & mask,
+                    "{kind:?} {x}*{y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn and_array_4x4_exhaustive() {
+        check_ppg(PpgKind::AndArray, 4, !0);
+    }
+
+    #[test]
+    fn booth4_4x4_exhaustive_mod_2n() {
+        // Booth rows are exact mod 2^(2n) after compaction-trim.
+        check_ppg(PpgKind::Booth4, 4, (1u128 << 8) - 1);
+    }
+
+    #[test]
+    fn booth4_3x3_exhaustive_mod_2n() {
+        check_ppg(PpgKind::Booth4, 3, (1u128 << 6) - 1);
+    }
+
+    #[test]
+    fn and_array_counts_are_triangular() {
+        let lib = CellLib::nangate45();
+        let mut nl = Netlist::new("ppg");
+        let a: Vec<_> = (0..8).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..8).map(|i| nl.input(format!("b{i}"))).collect();
+        let m = and_array(&mut nl, &lib, &a, &b);
+        assert_eq!(m.counts(), vec![1, 2, 3, 4, 5, 6, 7, 8, 7, 6, 5, 4, 3, 2, 1]);
+        assert_eq!(m.max_height(), 8);
+    }
+
+    #[test]
+    fn booth_has_fewer_rows() {
+        let lib = CellLib::nangate45();
+        let mut nl = Netlist::new("ppg");
+        let a: Vec<_> = (0..16).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..16).map(|i| nl.input(format!("b{i}"))).collect();
+        let mb = booth4(&mut nl, &lib, &a, &b);
+        // Radix-4 Booth max column height ≈ n/2+2 < n for n = 16.
+        assert!(mb.max_height() <= 11, "booth height {}", mb.max_height());
+    }
+
+    #[test]
+    fn addend_injection_for_mac() {
+        let lib = CellLib::nangate45();
+        let mut nl = Netlist::new("mac-ppg");
+        let a: Vec<_> = (0..4).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..4).map(|i| nl.input(format!("b{i}"))).collect();
+        let c: Vec<_> = (0..8).map(|i| nl.input(format!("c{i}"))).collect();
+        let mut m = and_array(&mut nl, &lib, &a, &b);
+        m.add_addend(&c.iter().map(|&n| Sig::new(n, 0.0)).collect::<Vec<_>>());
+        // columns 0..6 are the 4×4 triangle +1; column 7 holds only c7
+        assert_eq!(m.counts(), vec![2, 3, 4, 5, 4, 3, 2, 1]);
+    }
+}

@@ -1,0 +1,374 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! coordinator's request path. Python never runs here — `make artifacts`
+//! lowers the Layer-1/2 kernels once; this module compiles and caches the
+//! executables on the in-process PJRT CPU client.
+//!
+//! Two workloads (see `python/compile/model.py`):
+//! - `netlist_eval_{small,large}` — batched functional verification of an
+//!   encoded gate netlist (u32-packed lanes);
+//! - `systolic{8,16}` — the 16×16 output-stationary fused-MAC GEMM tile.
+
+use crate::ir::{Netlist, Node};
+use crate::multiplier::Design;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Size buckets — keep in sync with `python/compile/kernels/netlist_eval.py`.
+pub const SMALL: (usize, usize) = (2048, 72);
+pub const LARGE: (usize, usize) = (8192, 144);
+/// uint32 words per input (256 vectors per execution).
+pub const BATCH: usize = 8;
+/// Systolic geometry — keep in sync with `python/compile/kernels/systolic.py`.
+pub const PES: usize = 16;
+pub const K_STEPS: usize = 64;
+
+/// Opcodes of the artifact encoding (extends `CellKind::opcode`).
+const OP_CONST0: i32 = 11;
+const OP_CONST1: i32 = 12;
+const OP_INPUT: i32 = 13;
+
+/// A netlist encoded for the PJRT evaluator.
+#[derive(Debug, Clone)]
+pub struct EncodedNetlist {
+    pub ops: Vec<i32>,
+    pub f0: Vec<i32>,
+    pub f1: Vec<i32>,
+    pub f2: Vec<i32>,
+    pub n_nodes: usize,
+    pub n_inputs: usize,
+    /// Bucket name: "small" or "large".
+    pub bucket: &'static str,
+}
+
+/// Encode a netlist into the padded artifact format.
+pub fn encode_netlist(nl: &Netlist) -> Result<EncodedNetlist> {
+    let n_nodes = nl.len();
+    let n_inputs = nl.num_inputs();
+    let (bucket, (max_nodes, _max_inputs)) = if n_nodes <= SMALL.0 && n_inputs <= SMALL.1 {
+        ("small", SMALL)
+    } else if n_nodes <= LARGE.0 && n_inputs <= LARGE.1 {
+        ("large", LARGE)
+    } else {
+        bail!("netlist too large for artifacts: {n_nodes} nodes / {n_inputs} inputs");
+    };
+    let mut ops = vec![OP_CONST0; max_nodes];
+    let mut f0 = vec![0i32; max_nodes];
+    let mut f1 = vec![0i32; max_nodes];
+    let mut f2 = vec![0i32; max_nodes];
+    let mut input_ordinal = 0i32;
+    for (i, node) in nl.nodes().iter().enumerate() {
+        match node {
+            Node::Input { .. } => {
+                ops[i] = OP_INPUT;
+                f0[i] = input_ordinal;
+                input_ordinal += 1;
+            }
+            Node::Const(v) => {
+                ops[i] = if *v { OP_CONST1 } else { OP_CONST0 };
+            }
+            Node::Gate { kind, fanin } => {
+                ops[i] = kind.opcode();
+                f0[i] = fanin[0].0 as i32;
+                if let Some(f) = fanin.get(1) {
+                    f1[i] = f.0 as i32;
+                }
+                if let Some(f) = fanin.get(2) {
+                    f2[i] = f.0 as i32;
+                }
+            }
+        }
+    }
+    Ok(EncodedNetlist { ops, f0, f1, f2, n_nodes, n_inputs, bucket })
+}
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (default `artifacts/`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            exes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// True if the artifact file exists (lets callers degrade gracefully
+    /// before `make artifacts` has run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        self.ensure_compiled(name)?;
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(name).unwrap();
+        let result =
+            exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        lit.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Evaluate an encoded netlist on `BATCH` packed uint32 words per input.
+    /// Returns the full node-value buffer `[BATCH][max_nodes]`.
+    pub fn eval_netlist(
+        &self,
+        enc: &EncodedNetlist,
+        words: &[Vec<u32>], // [BATCH][n_inputs]
+    ) -> Result<Vec<Vec<u32>>> {
+        let (max_nodes, max_inputs) = if enc.bucket == "small" { SMALL } else { LARGE };
+        assert_eq!(words.len(), BATCH);
+        let ops = xla::Literal::vec1(enc.ops.as_slice());
+        let f0 = xla::Literal::vec1(enc.f0.as_slice());
+        let f1 = xla::Literal::vec1(enc.f1.as_slice());
+        let f2 = xla::Literal::vec1(enc.f2.as_slice());
+        let mut flat = vec![0u32; BATCH * max_inputs];
+        for (b, row) in words.iter().enumerate() {
+            assert!(row.len() <= max_inputs);
+            flat[b * max_inputs..b * max_inputs + row.len()].copy_from_slice(row);
+        }
+        let words_lit = xla::Literal::vec1(flat.as_slice())
+            .reshape(&[BATCH as i64, max_inputs as i64])
+            .map_err(|e| anyhow!("reshape words: {e:?}"))?;
+        let name = format!("netlist_eval_{}", enc.bucket);
+        let out = self.run(&name, &[ops, f0, f1, f2, words_lit])?;
+        let v: Vec<u32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        assert_eq!(v.len(), BATCH * max_nodes);
+        Ok(v.chunks(max_nodes).map(|c| c.to_vec()).collect())
+    }
+
+    /// One systolic tile: `c + a·b`. Operands travel as i32 but must be in
+    /// the range of the modelled hardware variant (int8 or int16 MACs) —
+    /// checked here, matching the generated gate-level PE's width contract.
+    pub fn systolic(
+        &self,
+        a: &[i32], // [PES][K_STEPS] row-major
+        b: &[i32], // [K_STEPS][PES]
+        c: &[i32], // [PES][PES]
+        operand_bits: u32,
+    ) -> Result<Vec<i32>> {
+        assert_eq!(a.len(), PES * K_STEPS);
+        assert_eq!(b.len(), K_STEPS * PES);
+        assert_eq!(c.len(), PES * PES);
+        let lim = 1i32 << (operand_bits - 1);
+        if a.iter().chain(b).any(|&v| v < -lim || v >= lim) {
+            bail!("operand outside int{operand_bits} range");
+        }
+        let a_lit = xla::Literal::vec1(a)
+            .reshape(&[PES as i64, K_STEPS as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let b_lit = xla::Literal::vec1(b)
+            .reshape(&[K_STEPS as i64, PES as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let c_lit = xla::Literal::vec1(c)
+            .reshape(&[PES as i64, PES as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = self.run("systolic", &[a_lit, b_lit, c_lit])?;
+        out.to_vec().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// Verify a design through the PJRT netlist-eval artifact on `rounds`
+/// batches of 256 random vectors each + corner vectors. This is the
+/// cross-check between the Rust simulator semantics and the AOT kernel.
+pub fn verify_design_pjrt(rt: &Runtime, design: &Design, rounds: usize) -> Result<bool> {
+    let enc = encode_netlist(&design.netlist)?;
+    let mut rng = crate::util::Rng::seed_from_u64(0x7e57);
+    let n = design.n;
+    let c_bits = design.c.len();
+    let amask = (1u128 << n) - 1;
+    let cmask = if c_bits == 0 { 0u128 } else { (1u128 << c_bits) - 1 };
+    for round in 0..rounds {
+        // 256 vectors: lane l of word w encodes test (w*32 + l).
+        let mut tests: Vec<(u128, u128, u128)> = Vec::with_capacity(BATCH * 32);
+        for t in 0..BATCH * 32 {
+            let tv = if round == 0 && t < 4 {
+                [(0, 0, 0), (amask, amask, 0), (amask, 1, 1 & cmask), (1, amask, cmask)][t]
+            } else {
+                (
+                    u128::from(rng.next_u64()) & amask,
+                    u128::from(rng.next_u64()) & amask,
+                    u128::from(rng.next_u64()) & cmask,
+                )
+            };
+            tests.push(tv);
+        }
+        // Pack into words per input node order (a bits, b bits, c bits).
+        let mut words = vec![vec![0u32; enc.n_inputs]; BATCH];
+        for (t, (a, b, c)) in tests.iter().enumerate() {
+            let (w, lane) = (t / 32, t % 32);
+            let mut idx = 0;
+            for k in 0..n {
+                if a >> k & 1 == 1 {
+                    words[w][idx] |= 1 << lane;
+                }
+                idx += 1;
+            }
+            for k in 0..n {
+                if b >> k & 1 == 1 {
+                    words[w][idx] |= 1 << lane;
+                }
+                idx += 1;
+            }
+            for k in 0..c_bits {
+                if c >> k & 1 == 1 {
+                    words[w][idx] |= 1 << lane;
+                }
+                idx += 1;
+            }
+        }
+        let buf = rt.eval_netlist(&enc, &words)?;
+        for (t, (a, b, c)) in tests.iter().enumerate() {
+            let (w, lane) = (t / 32, t % 32);
+            let mut got = 0u128;
+            for (k, bit) in design.product.iter().enumerate() {
+                got |= u128::from(buf[w][bit.index()] >> lane & 1) << k;
+            }
+            if got != design.golden(*a, *b, *c) {
+                return Ok(false);
+            }
+        }
+    }
+    Ok(true)
+}
+
+/// Default artifact directory (workspace-relative).
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::MultiplierSpec;
+
+    #[test]
+    fn encoding_matches_simulator_semantics() {
+        // encode → interpret in Rust must equal the Simulator.
+        let d = MultiplierSpec::new(4).build().unwrap();
+        let enc = encode_netlist(&d.netlist).unwrap();
+        assert_eq!(enc.bucket, "small");
+        assert_eq!(enc.n_inputs, 8);
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let words: Vec<u32> = (0..enc.n_inputs).map(|_| rng.next_u64() as u32).collect();
+        // kernel-semantics interpreter (u32 lanes)
+        let mut buf = vec![0u32; enc.n_nodes];
+        for i in 0..enc.n_nodes {
+            let a = buf.get(enc.f0[i] as usize).copied().unwrap_or(0);
+            let b = buf.get(enc.f1[i] as usize).copied().unwrap_or(0);
+            let c = buf.get(enc.f2[i] as usize).copied().unwrap_or(0);
+            buf[i] = match enc.ops[i] {
+                0 => a,
+                1 => !a,
+                2 => a & b,
+                3 => a | b,
+                4 => !(a & b),
+                5 => !(a | b),
+                6 => a ^ b,
+                7 => !(a ^ b),
+                8 => !((a & b) | c),
+                9 => !((a | b) & c),
+                10 => (a & b) | (a & c) | (b & c),
+                11 => 0,
+                12 => !0,
+                13 => words[enc.f0[i] as usize],
+                op => panic!("bad opcode {op}"),
+            };
+        }
+        // simulator on the same lanes
+        let mut sim = crate::sim::Simulator::new();
+        let w64: Vec<u64> = words.iter().map(|&w| u64::from(w)).collect();
+        let vals = sim.run(&d.netlist, &w64);
+        for i in 0..enc.n_nodes {
+            assert_eq!(buf[i], vals[i] as u32, "node {i}");
+        }
+    }
+
+    #[test]
+    fn encoding_rejects_oversized() {
+        let mut nl = crate::ir::Netlist::new("big");
+        let a = nl.input("a");
+        let mut last = a;
+        for _ in 0..LARGE.0 {
+            last = nl.inv(last);
+        }
+        nl.output("o", last);
+        assert!(encode_netlist(&nl).is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let small = MultiplierSpec::new(8).build().unwrap();
+        assert_eq!(encode_netlist(&small.netlist).unwrap().bucket, "small");
+        let large = MultiplierSpec::new(32).build().unwrap();
+        assert_eq!(encode_netlist(&large.netlist).unwrap().bucket, "large");
+    }
+
+    #[test]
+    fn pjrt_roundtrip_if_artifacts_present() {
+        // Full PJRT path — exercised once `make artifacts` has run.
+        let dir = default_artifact_dir();
+        if !dir.join("netlist_eval_small.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&dir).unwrap();
+        let d = MultiplierSpec::new(8).build().unwrap();
+        assert!(verify_design_pjrt(&rt, &d, 2).unwrap());
+    }
+
+    #[test]
+    fn systolic_pjrt_if_artifacts_present() {
+        let dir = default_artifact_dir();
+        if !dir.join("systolic.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&dir).unwrap();
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        let a: Vec<i32> = (0..PES * K_STEPS).map(|_| i32::from(rng.next_u64() as i8)).collect();
+        let b: Vec<i32> = (0..K_STEPS * PES).map(|_| i32::from(rng.next_u64() as i8)).collect();
+        let c: Vec<i32> = vec![0; PES * PES];
+        let out = rt.systolic(&a, &b, &c, 8).unwrap();
+        for i in 0..PES {
+            for j in 0..PES {
+                let want: i64 = (0..K_STEPS)
+                    .map(|k| i64::from(a[i * K_STEPS + k]) * i64::from(b[k * PES + j]))
+                    .sum();
+                assert_eq!(i64::from(out[i * PES + j]), want, "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Bit-parallel netlist simulation.
+//!
+//! Simulates a [`Netlist`] on 64 input vectors at a time by packing one
+//! vector per bit lane of a `u64` word — the classic "parallel pattern"
+//! simulation trick. This is the engine behind equivalence checking
+//! ([`crate::equiv`]) and the toggle-based dynamic-power estimate in
+//! [`crate::sta`]; the same levelized evaluation is what the Pallas
+//! `netlist_eval` kernel performs on the PJRT side with u32 lanes.
+
+use crate::ir::{Netlist, Node, NodeId};
+
+/// A netlist pre-compiled to a flat instruction stream: one `(op, f0, f1,
+/// f2)` record per node, no per-gate heap indirection. Compiling once and
+/// replaying is ~2× faster than walking [`Node`]s — the §Perf-optimized
+/// inner loop for equivalence checking and toggle extraction.
+#[derive(Debug, Clone)]
+pub struct CompiledNetlist {
+    ops: Vec<u8>,
+    fanin: Vec<[u32; 3]>,
+    n_inputs: usize,
+}
+
+/// Opcodes: 0-10 = `CellKind::opcode`, 11 = const0, 12 = const1,
+/// 13 = input (f0 = input ordinal). Matches the PJRT artifact encoding.
+const OP_CONST0: u8 = 11;
+const OP_CONST1: u8 = 12;
+const OP_INPUT: u8 = 13;
+
+impl CompiledNetlist {
+    pub fn compile(nl: &Netlist) -> Self {
+        let mut ops = Vec::with_capacity(nl.len());
+        let mut fanin = Vec::with_capacity(nl.len());
+        let mut next_input = 0u32;
+        for node in nl.nodes() {
+            match node {
+                Node::Input { .. } => {
+                    ops.push(OP_INPUT);
+                    fanin.push([next_input, 0, 0]);
+                    next_input += 1;
+                }
+                Node::Const(v) => {
+                    ops.push(if *v { OP_CONST1 } else { OP_CONST0 });
+                    fanin.push([0, 0, 0]);
+                }
+                Node::Gate { kind, fanin: f } => {
+                    ops.push(kind.opcode() as u8);
+                    let mut rec = [0u32; 3];
+                    for (k, id) in f.iter().enumerate() {
+                        rec[k] = id.0;
+                    }
+                    fanin.push(rec);
+                }
+            }
+        }
+        CompiledNetlist { ops, fanin, n_inputs: next_input as usize }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+    pub fn num_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Evaluate into `buf` (resized as needed). `input_words[k]` feeds the
+    /// k-th primary input.
+    pub fn run_into(&self, buf: &mut Vec<u64>, input_words: &[u64]) {
+        assert_eq!(input_words.len(), self.n_inputs, "input word count");
+        if buf.len() != self.ops.len() {
+            buf.resize(self.ops.len(), 0);
+        }
+        let b = buf.as_mut_slice();
+        for i in 0..self.ops.len() {
+            let [f0, f1, f2] = self.fanin[i];
+            // SAFETY: `compile` records fanins from a validated `Netlist`
+            // whose construction (`Netlist::gate`) enforces `fanin < i <
+            // len`, and input ordinals are bounded by the asserted
+            // `input_words` length. Dropping the bounds checks is worth
+            // ~20% on the equivalence-sweep hot loop (EXPERIMENTS.md §Perf).
+            let v = unsafe {
+                let g = |k: u32| *b.get_unchecked(k as usize);
+                match self.ops[i] {
+                    0 => g(f0),
+                    1 => !g(f0),
+                    2 => g(f0) & g(f1),
+                    3 => g(f0) | g(f1),
+                    4 => !(g(f0) & g(f1)),
+                    5 => !(g(f0) | g(f1)),
+                    6 => g(f0) ^ g(f1),
+                    7 => !(g(f0) ^ g(f1)),
+                    8 => !((g(f0) & g(f1)) | g(f2)),
+                    9 => !((g(f0) | g(f1)) & g(f2)),
+                    10 => {
+                        let (a, bb, c) = (g(f0), g(f1), g(f2));
+                        (a & bb) | (a & c) | (bb & c)
+                    }
+                    OP_CONST0 => 0,
+                    OP_CONST1 => !0,
+                    _ => *input_words.get_unchecked(f0 as usize),
+                }
+            };
+            b[i] = v;
+        }
+    }
+}
+
+/// Reusable simulation buffer (one word per node).
+#[derive(Debug, Default)]
+pub struct Simulator {
+    words: Vec<u64>,
+}
+
+impl Simulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate the netlist on 64 packed input vectors.
+    ///
+    /// `input_words[k]` holds lane-packed values for the k-th primary input
+    /// (in creation order). Returns the packed words of every node; index
+    /// with [`NodeId::index`].
+    pub fn run(&mut self, nl: &Netlist, input_words: &[u64]) -> &[u64] {
+        let nodes = nl.nodes();
+        if self.words.len() != nodes.len() {
+            self.words.resize(nodes.len(), 0);
+        }
+        let mut next_input = 0usize;
+        for (i, node) in nodes.iter().enumerate() {
+            self.words[i] = match node {
+                Node::Input { .. } => {
+                    let w = input_words[next_input];
+                    next_input += 1;
+                    w
+                }
+                Node::Const(v) => {
+                    if *v {
+                        !0u64
+                    } else {
+                        0u64
+                    }
+                }
+                Node::Gate { kind, fanin } => {
+                    let a = self.words[fanin[0].index()];
+                    let b = fanin.get(1).map_or(0, |f| self.words[f.index()]);
+                    let c = fanin.get(2).map_or(0, |f| self.words[f.index()]);
+                    kind.eval(a, b, c)
+                }
+            };
+        }
+        assert_eq!(next_input, nl.num_inputs(), "input word count mismatch");
+        &self.words
+    }
+
+    /// Packed word for one node after [`Simulator::run`].
+    #[inline]
+    pub fn word(&self, id: NodeId) -> u64 {
+        self.words[id.index()]
+    }
+
+    /// Extract the named outputs as packed words.
+    pub fn output_words(&self, nl: &Netlist) -> Vec<(String, u64)> {
+        nl.outputs().iter().map(|(n, id)| (n.clone(), self.words[id.index()])).collect()
+    }
+}
+
+/// Interpret a slice of output nodes as a little-endian unsigned integer for
+/// one specific lane.
+pub fn lane_value(words: &[u64], bits: &[NodeId], lane: u32) -> u128 {
+    let mut v = 0u128;
+    for (k, b) in bits.iter().enumerate() {
+        v |= u128::from(words[b.index()] >> lane & 1) << k;
+    }
+    v
+}
+
+/// Pack per-lane bit values into input words: `assignments[lane][input]`.
+pub fn pack_lanes(assignments: &[Vec<bool>]) -> Vec<u64> {
+    assert!(!assignments.is_empty() && assignments.len() <= 64);
+    let n_inputs = assignments[0].len();
+    let mut words = vec![0u64; n_inputs];
+    for (lane, assign) in assignments.iter().enumerate() {
+        assert_eq!(assign.len(), n_inputs);
+        for (i, bit) in assign.iter().enumerate() {
+            if *bit {
+                words[i] |= 1u64 << lane;
+            }
+        }
+    }
+    words
+}
+
+/// Count output toggles between consecutive random vectors for every node —
+/// the activity factor feeding the dynamic-power report.
+///
+/// Runs `rounds`×64 random vectors (xorshift-seeded, deterministic) and
+/// returns per-node toggle probability in [0,1].
+pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
+    let comp = CompiledNetlist::compile(nl);
+    let mut state = seed | 1;
+    let mut rng = move || {
+        // xorshift64* — deterministic, dependency-free
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    };
+    let n_in = nl.num_inputs();
+    let mut prev: Option<Vec<u64>> = None;
+    let mut toggles = vec![0u64; nl.len()];
+    let mut total_pairs = 0u64;
+    let mut buf: Vec<u64> = Vec::new();
+    for _ in 0..rounds {
+        let words: Vec<u64> = (0..n_in).map(|_| rng()).collect();
+        comp.run_into(&mut buf, &words);
+        if let Some(p) = &mut prev {
+            for i in 0..buf.len() {
+                toggles[i] += (buf[i] ^ p[i]).count_ones() as u64;
+            }
+            total_pairs += 64;
+            std::mem::swap(p, &mut buf);
+        } else {
+            prev = Some(buf.clone());
+        }
+    }
+    toggles
+        .iter()
+        .map(|&t| if total_pairs == 0 { 0.0 } else { t as f64 / total_pairs as f64 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Netlist;
+
+    /// 2-bit ripple adder built from discrete gates.
+    fn adder2() -> (Netlist, Vec<NodeId>) {
+        let mut nl = Netlist::new("add2");
+        let a: Vec<_> = (0..2).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..2).map(|i| nl.input(format!("b{i}"))).collect();
+        // bit 0: half adder
+        let s0 = nl.xor2(a[0], b[0]);
+        let c0 = nl.and2(a[0], b[0]);
+        // bit 1: full adder
+        let x1 = nl.xor2(a[1], b[1]);
+        let s1 = nl.xor2(x1, c0);
+        let g1 = nl.and2(a[1], b[1]);
+        let p1 = nl.and2(x1, c0);
+        let c1 = nl.or2(g1, p1);
+        nl.output("s0", s0);
+        nl.output("s1", s1);
+        nl.output("c", c1);
+        (nl, vec![s0, s1, c1])
+    }
+
+    #[test]
+    fn adder2_exhaustive() {
+        let (nl, bits) = adder2();
+        // all 16 combinations fit in 16 lanes
+        let assigns: Vec<Vec<bool>> = (0..16u32)
+            .map(|v| vec![v & 1 != 0, v >> 1 & 1 != 0, v >> 2 & 1 != 0, v >> 3 & 1 != 0])
+            .collect();
+        let words = pack_lanes(&assigns);
+        let mut sim = Simulator::new();
+        let vals = sim.run(&nl, &words).to_vec();
+        for v in 0..16u32 {
+            let a = v & 3;
+            let b = v >> 2 & 3;
+            let got = lane_value(&vals, &bits, v);
+            assert_eq!(got, u128::from(a + b), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn constants_evaluate() {
+        let mut nl = Netlist::new("c");
+        let one = nl.constant(true);
+        let zero = nl.constant(false);
+        let o = nl.and2(one, zero);
+        let o2 = nl.or2(one, zero);
+        nl.output("and", o);
+        nl.output("or", o2);
+        let mut sim = Simulator::new();
+        sim.run(&nl, &[]);
+        assert_eq!(sim.word(o), 0);
+        assert_eq!(sim.word(o2), !0);
+    }
+
+    #[test]
+    fn toggle_activity_sane() {
+        let (nl, _) = adder2();
+        let act = toggle_activity(&nl, 32, 42);
+        // inputs are random ⇒ toggle prob near 0.5; all activities in [0,1]
+        for (i, a) in act.iter().enumerate() {
+            assert!((0.0..=1.0).contains(a), "node {i} activity {a}");
+        }
+        let inputs = nl.inputs();
+        for id in inputs {
+            assert!((act[id.index()] - 0.5).abs() < 0.1);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Static timing analysis, area and power reporting.
+//!
+//! Replaces the paper's Synopsys Design Compiler reports with a
+//! logical-effort timing engine (`d = p + g·h` per stage, load computed
+//! from actual fanout) applied uniformly to every generator — preserving
+//! the *relative* comparisons that the paper's tables and Pareto plots
+//! report. Arrival times honour per-input arrival offsets, which is how the
+//! CPA sees the compressor tree's non-uniform ("trapezoidal") profile.
+
+use crate::ir::{CellLib, Netlist, Node, NodeId};
+
+
+/// Timing/area/power report for one netlist.
+#[derive(Debug, Clone)]
+pub struct StaReport {
+    /// Worst arrival time over primary outputs, ns.
+    pub critical_delay_ns: f64,
+    /// Total standard-cell area, µm².
+    pub area_um2: f64,
+    /// Estimated dynamic power at `clock_ghz`, mW.
+    pub power_mw: f64,
+    /// Arrival time per primary output, ns (output order of the netlist).
+    pub output_arrivals_ns: Vec<f64>,
+    /// Gate count.
+    pub num_gates: usize,
+    /// Max logic depth over outputs.
+    pub depth: u32,
+}
+
+impl StaReport {
+    /// Worst negative slack against a clock period (ns): `period - delay`.
+    /// Negative means the design misses timing (as in the paper's tables).
+    pub fn wns_ns(&self, period_ns: f64) -> f64 {
+        period_ns - self.critical_delay_ns
+    }
+}
+
+/// The STA engine. Holds the cell library and power-model knobs.
+#[derive(Debug, Clone)]
+pub struct Sta {
+    pub lib: CellLib,
+    /// Clock used to convert switching energy to power, GHz.
+    pub clock_ghz: f64,
+    /// Rounds of 64 random vectors for toggle-rate extraction. `0` selects a
+    /// constant-activity fallback (fast path for huge module-level runs).
+    pub activity_rounds: usize,
+    /// Activity factor used when `activity_rounds == 0`.
+    pub default_activity: f64,
+}
+
+impl Default for Sta {
+    fn default() -> Self {
+        Sta { lib: CellLib::nangate45(), clock_ghz: 1.0, activity_rounds: 16, default_activity: 0.15 }
+    }
+}
+
+impl Sta {
+    pub fn with_lib(lib: CellLib) -> Self {
+        Sta { lib, ..Default::default() }
+    }
+
+    /// Arrival time (ns) of every node: one levelized forward sweep.
+    pub fn arrivals_ns(&self, nl: &Netlist) -> Vec<f64> {
+        let loads = nl.loads(&self.lib);
+        let mut at = vec![0.0f64; nl.len()];
+        for (i, node) in nl.nodes().iter().enumerate() {
+            at[i] = match node {
+                Node::Input { arrival_ns, .. } => *arrival_ns,
+                Node::Const(_) => 0.0,
+                Node::Gate { kind, fanin } => {
+                    let worst = fanin.iter().map(|f| at[f.index()]).fold(f64::MIN, f64::max);
+                    worst + self.lib.delay_ns(*kind, loads[i])
+                }
+            };
+        }
+        at
+    }
+
+    /// Full report: timing + area + toggle-based dynamic power.
+    pub fn analyze(&self, nl: &Netlist) -> StaReport {
+        let at = self.arrivals_ns(nl);
+        let output_arrivals_ns: Vec<f64> =
+            nl.outputs().iter().map(|(_, id)| at[id.index()]).collect();
+        let critical_delay_ns =
+            output_arrivals_ns.iter().copied().fold(0.0f64, f64::max);
+        let area_um2 = nl.area_um2(&self.lib);
+        let power_mw = self.dynamic_power_mw(nl);
+        StaReport {
+            critical_delay_ns,
+            area_um2,
+            power_mw,
+            output_arrivals_ns,
+            num_gates: nl.num_gates(),
+            depth: nl.depth(),
+        }
+    }
+
+    /// Dynamic power: `P = Σ_g activity_g · E_g · f_clk`.
+    pub fn dynamic_power_mw(&self, nl: &Netlist) -> f64 {
+        let activities: Vec<f64> = if self.activity_rounds > 0 && nl.num_inputs() > 0 {
+            crate::sim::toggle_activity(nl, self.activity_rounds, 0x5eed)
+        } else {
+            vec![self.default_activity; nl.len()]
+        };
+        let mut energy_fj_per_cycle = 0.0;
+        for (i, node) in nl.nodes().iter().enumerate() {
+            if let Node::Gate { kind, .. } = node {
+                energy_fj_per_cycle += activities[i] * self.lib.params(*kind).switch_energy_fj;
+            }
+        }
+        // fJ/cycle × GHz = µW; report mW.
+        energy_fj_per_cycle * self.clock_ghz / 1000.0
+    }
+
+    /// Arrival profile (ns) for a set of labelled output groups — used to
+    /// extract the compressor tree's per-column profile that drives CPA
+    /// optimization (Figure 1 of the paper).
+    pub fn arrival_profile(&self, nl: &Netlist, groups: &[Vec<NodeId>]) -> Vec<f64> {
+        let at = self.arrivals_ns(nl);
+        groups
+            .iter()
+            .map(|g| g.iter().map(|id| at[id.index()]).fold(0.0f64, f64::max))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Netlist;
+
+    fn xor_chain(n: usize) -> Netlist {
+        let mut nl = Netlist::new("xorchain");
+        let mut prev = nl.input("i0");
+        for k in 1..=n {
+            let i = nl.input(format!("i{k}"));
+            prev = nl.xor2(prev, i);
+        }
+        nl.output("o", prev);
+        nl
+    }
+
+    #[test]
+    fn delay_scales_with_depth() {
+        let sta = Sta::default();
+        let d4 = sta.analyze(&xor_chain(4)).critical_delay_ns;
+        let d8 = sta.analyze(&xor_chain(8)).critical_delay_ns;
+        assert!(d8 > d4 * 1.5, "d4={d4} d8={d8}");
+    }
+
+    #[test]
+    fn input_arrival_offsets_propagate() {
+        let mut nl = Netlist::new("arr");
+        let a = nl.input_at("a", 1.0);
+        let b = nl.input("b");
+        let o = nl.xor2(a, b);
+        nl.output("o", o);
+        let sta = Sta::default();
+        let rep = sta.analyze(&nl);
+        assert!(rep.critical_delay_ns > 1.0);
+        assert!(rep.critical_delay_ns < 1.2);
+    }
+
+    #[test]
+    fn fanout_increases_delay() {
+        // The same XOR driving 8 loads must be slower than driving 1 —
+        // the premise of the paper's FDC model.
+        let build = |fanout: usize| {
+            let mut nl = Netlist::new("f");
+            let a = nl.input("a");
+            let b = nl.input("b");
+            let x = nl.xor2(a, b);
+            let mut last = x;
+            for _ in 0..fanout {
+                last = nl.inv(x);
+            }
+            nl.output("o", last);
+            let _ = last;
+            nl
+        };
+        let sta = Sta::default();
+        let a1 = sta.arrivals_ns(&build(1));
+        let a8 = sta.arrivals_ns(&build(8));
+        // arrival at the XOR output node (index 2) grows with fanout
+        assert!(a8[2] > a1[2]);
+    }
+
+    #[test]
+    fn wns_sign_convention() {
+        let rep = StaReport {
+            critical_delay_ns: 1.5,
+            area_um2: 0.0,
+            power_mw: 0.0,
+            output_arrivals_ns: vec![],
+            num_gates: 0,
+            depth: 0,
+        };
+        assert!(rep.wns_ns(1.0) < 0.0); // 1 GHz clock missed
+        assert!(rep.wns_ns(2.0) > 0.0);
+    }
+
+    #[test]
+    fn power_positive_and_activity_sensitive() {
+        let nl = xor_chain(16);
+        let sta = Sta::default();
+        let p = sta.dynamic_power_mw(&nl);
+        assert!(p > 0.0);
+        let fast = Sta { activity_rounds: 0, ..Sta::default() };
+        assert!(fast.dynamic_power_mw(&nl) > 0.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Gate-level synthesis primitives shared by the CT and CPA generators.
+//!
+//! Maps the paper's structural elements — 3:2 / 2:2 compressors (Figure 2),
+//! prefix pg/black/blue nodes (§2.2, §4.2) — onto [`crate::ir::CellKind`]
+//! instances, and exports the port-to-port delay constants (`T_xy` of
+//! Eq. 13-16) that the interconnect-order ILP consumes.
+
+pub mod verilog;
+
+use crate::ir::{CellLib, Netlist, NodeId};
+
+/// A signal during datapath construction: netlist node + the arrival-time
+/// estimate the ILP timing model tracks (Eq. 13-16).
+#[derive(Debug, Clone, Copy)]
+pub struct Sig {
+    pub node: NodeId,
+    pub t: f64,
+}
+
+impl Sig {
+    pub fn new(node: NodeId, t: f64) -> Self {
+        Sig { node, t }
+    }
+}
+
+/// Port-to-port delay constants (ns) of the compressor cells under a
+/// nominal internal load — the `T_xy` of the paper's Eq. (13)/(14).
+#[derive(Debug, Clone, Copy)]
+pub struct CompressorTiming {
+    // 3:2 compressor (full adder): sum = XOR(XOR(a,b),cin),
+    // cout = NAND(NAND(a,b), NAND(XOR(a,b),cin)).
+    pub t_as: f64,
+    pub t_bs: f64,
+    pub t_cs: f64,
+    pub t_ac: f64,
+    pub t_bc: f64,
+    pub t_cc: f64,
+    // 2:2 compressor (half adder): sum = XOR(a,b), carry = AND(a,b).
+    pub h_as: f64,
+    pub h_ac: f64,
+}
+
+impl CompressorTiming {
+    /// Derive the constants from the cell library at a nominal load.
+    pub fn from_lib(lib: &CellLib) -> Self {
+        use crate::ir::CellKind::*;
+        let nominal = 2.0;
+        let dx = lib.delay_ns(Xor2, nominal);
+        let dn = lib.delay_ns(Nand2, nominal);
+        let da = lib.delay_ns(And2, nominal);
+        CompressorTiming {
+            t_as: 2.0 * dx,
+            t_bs: 2.0 * dx,
+            t_cs: dx,
+            // a/b reach cout through XOR→NAND→NAND (via the shared p term)
+            // and NAND→NAND (via the g term); the former dominates.
+            t_ac: dx + 2.0 * dn,
+            t_bc: dx + 2.0 * dn,
+            t_cc: 2.0 * dn,
+            h_as: dx,
+            h_ac: da,
+        }
+    }
+
+    /// Input→worst-output delay for 3:2 ports (0 = A, 1 = B, 2 = Cin).
+    pub fn fa_port_worst(&self, port: usize) -> f64 {
+        match port {
+            0 => self.t_as.max(self.t_ac),
+            1 => self.t_bs.max(self.t_bc),
+            _ => self.t_cs.max(self.t_cc),
+        }
+    }
+
+    /// Input→worst-output delay for 2:2 ports (both symmetric).
+    pub fn ha_port_worst(&self) -> f64 {
+        self.h_as.max(self.h_ac)
+    }
+}
+
+/// Result of instantiating a compressor.
+#[derive(Debug, Clone, Copy)]
+pub struct CompOut {
+    pub sum: Sig,
+    pub carry: Sig,
+}
+
+/// Instantiate a 3:2 compressor (full adder). Returns sum (same column) and
+/// carry (next column), with ILP-model arrival estimates attached.
+pub fn full_adder(nl: &mut Netlist, tm: &CompressorTiming, a: Sig, b: Sig, cin: Sig) -> CompOut {
+    let x = nl.xor2(a.node, b.node);
+    let sum = nl.xor2(x, cin.node);
+    let n1 = nl.nand2(a.node, b.node);
+    let n2 = nl.nand2(x, cin.node);
+    let cout = nl.nand2(n1, n2);
+    let ts = (a.t + tm.t_as).max(b.t + tm.t_bs).max(cin.t + tm.t_cs);
+    let tc = (a.t + tm.t_ac).max(b.t + tm.t_bc).max(cin.t + tm.t_cc);
+    CompOut { sum: Sig::new(sum, ts), carry: Sig::new(cout, tc) }
+}
+
+/// Instantiate a 2:2 compressor (half adder).
+pub fn half_adder(nl: &mut Netlist, tm: &CompressorTiming, a: Sig, b: Sig) -> CompOut {
+    let sum = nl.xor2(a.node, b.node);
+    let carry = nl.and2(a.node, b.node);
+    let ts = a.t.max(b.t) + tm.h_as;
+    let tc = a.t.max(b.t) + tm.h_ac;
+    CompOut { sum: Sig::new(sum, ts), carry: Sig::new(carry, tc) }
+}
+
+/// Bitwise propagate/generate pair for CPA inputs (§2.2, Eq. 1):
+/// `p = a ⊕ b`, `g = a · b`.
+pub fn pg_pair(nl: &mut Netlist, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+    let p = nl.xor2(a, b);
+    let g = nl.and2(a, b);
+    (p, g)
+}
+
+/// Black prefix node (§2.2 Eq. 2-4): combines `(G_hi, P_hi)` (the trivial
+/// fan-in) with `(G_lo, P_lo)` (the non-trivial fan-in):
+/// `G = G_hi + P_hi·G_lo`, `P = P_hi·P_lo`.
+///
+/// CMOS mapping note: real libraries interleave AOI21+NAND2 / OAI21+NOR2 by
+/// level polarity; we instantiate the positive-logic composite (And2+Or2 for
+/// G, And2 for P) whose cell parameters already embed the two-stage CMOS
+/// cost, keeping every generator on an identical footing.
+pub fn black_node(
+    nl: &mut Netlist,
+    g_hi: NodeId,
+    p_hi: NodeId,
+    g_lo: NodeId,
+    p_lo: NodeId,
+) -> (NodeId, NodeId) {
+    let t = nl.and2(p_hi, g_lo);
+    let g = nl.or2(g_hi, t);
+    let p = nl.and2(p_hi, p_lo);
+    (g, p)
+}
+
+/// Blue prefix node (§4.2): final-level node that only needs the group
+/// generate (drives a single sum XOR). `G = G_hi + P_hi·G_lo`.
+pub fn blue_node(nl: &mut Netlist, g_hi: NodeId, p_hi: NodeId, g_lo: NodeId) -> NodeId {
+    let t = nl.and2(p_hi, g_lo);
+    nl.or2(g_hi, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::CellLib;
+    use crate::sim::{lane_value, pack_lanes, Simulator};
+
+    #[test]
+    fn full_adder_truth_table() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let mut nl = Netlist::new("fa");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let c = nl.input("c");
+        let out = full_adder(
+            &mut nl,
+            &tm,
+            Sig::new(a, 0.0),
+            Sig::new(b, 0.0),
+            Sig::new(c, 0.0),
+        );
+        nl.output("s", out.sum.node);
+        nl.output("co", out.carry.node);
+        let assigns: Vec<Vec<bool>> =
+            (0..8u32).map(|v| vec![v & 1 != 0, v >> 1 & 1 != 0, v >> 2 & 1 != 0]).collect();
+        let words = pack_lanes(&assigns);
+        let mut sim = Simulator::new();
+        let vals = sim.run(&nl, &words).to_vec();
+        for v in 0..8u32 {
+            let total = (v & 1) + (v >> 1 & 1) + (v >> 2 & 1);
+            let got = lane_value(&vals, &[out.sum.node, out.carry.node], v);
+            assert_eq!(got, u128::from(total), "v={v}");
+        }
+    }
+
+    #[test]
+    fn half_adder_truth_table() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let mut nl = Netlist::new("ha");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let out = half_adder(&mut nl, &tm, Sig::new(a, 0.0), Sig::new(b, 0.0));
+        let assigns: Vec<Vec<bool>> = (0..4u32).map(|v| vec![v & 1 != 0, v >> 1 & 1 != 0]).collect();
+        let words = pack_lanes(&assigns);
+        let mut sim = Simulator::new();
+        let vals = sim.run(&nl, &words).to_vec();
+        for v in 0..4u32 {
+            let total = (v & 1) + (v >> 1 & 1);
+            assert_eq!(lane_value(&vals, &[out.sum.node, out.carry.node], v), u128::from(total));
+        }
+    }
+
+    #[test]
+    fn timing_constants_match_paper_ratios() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        // The paper (§3.4): two-XOR sum path ≈ 1.5× the NAND/OAI carry path,
+        // and Cin ports are faster than A/B ports.
+        let r = tm.t_as / tm.t_cc;
+        assert!((1.2..=2.2).contains(&r), "sum/carry ratio {r}");
+        assert!(tm.fa_port_worst(2) < tm.fa_port_worst(0));
+        assert!(tm.ha_port_worst() < tm.fa_port_worst(0));
+    }
+
+    #[test]
+    fn black_blue_nodes_compute_prefix_functions() {
+        let mut nl = Netlist::new("pfx");
+        let ins: Vec<_> = (0..4).map(|i| nl.input(format!("i{i}"))).collect();
+        let (a, b) = (ins[0], ins[1]);
+        let (c, d) = (ins[2], ins[3]);
+        let (p0, g0) = pg_pair(&mut nl, a, b);
+        let (p1, g1) = pg_pair(&mut nl, c, d);
+        let (gb, pb) = black_node(&mut nl, g1, p1, g0, p0);
+        let gblue = blue_node(&mut nl, g1, p1, g0);
+        nl.output("gb", gb);
+        nl.output("pb", pb);
+        nl.output("gblue", gblue);
+        let assigns: Vec<Vec<bool>> = (0..16u32)
+            .map(|v| (0..4).map(|k| v >> k & 1 != 0).collect())
+            .collect();
+        let words = pack_lanes(&assigns);
+        let mut sim = Simulator::new();
+        let vals = sim.run(&nl, &words).to_vec();
+        for v in 0..16u32 {
+            let bit = |n: u32| v >> n & 1 != 0;
+            let (g0v, p0v) = (bit(0) & bit(1), bit(0) ^ bit(1));
+            let (g1v, p1v) = (bit(2) & bit(3), bit(2) ^ bit(3));
+            let expect_g = g1v || (p1v && g0v);
+            let expect_p = p1v && p0v;
+            assert_eq!(vals[gb.index()] >> v & 1 == 1, expect_g);
+            assert_eq!(vals[pb.index()] >> v & 1 == 1, expect_p);
+            assert_eq!(vals[gblue.index()] >> v & 1 == 1, expect_g);
+        }
+    }
+}

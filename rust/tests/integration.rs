@@ -1,0 +1,380 @@
+//! Cross-module integration & property tests over the public API.
+//!
+//! These complement the per-module unit tests with randomized invariant
+//! checks spanning the whole stack: every generator config must produce a
+//! functionally correct, structurally valid netlist whose reports obey the
+//! physics (more compressors ⇒ more area, tighter strategy ⇒ no slower,
+//! etc.). Deterministic seeds keep failures reproducible.
+
+use ufo_mac::baselines::{build_design, BaselineBudget, Method};
+use ufo_mac::cpa::{self, PrefixStructure};
+use ufo_mac::ct::{self, CtArchitecture, CtCounts, OrderStrategy};
+use ufo_mac::multiplier::{CpaChoice, MultiplierSpec, Strategy};
+use ufo_mac::ppg::PpgKind;
+use ufo_mac::sim::{CompiledNetlist, Simulator};
+use ufo_mac::sta::Sta;
+use ufo_mac::util::Rng;
+
+// ---------------------------------------------------------------------
+// Property: every spec in a randomized config space builds + verifies.
+// ---------------------------------------------------------------------
+#[test]
+fn property_random_specs_build_and_verify() {
+    let mut rng = Rng::seed_from_u64(0x1A7E57);
+    for trial in 0..24 {
+        let n = [3, 4, 5, 6][rng.index(4)];
+        let ppg = if rng.bool() { PpgKind::AndArray } else { PpgKind::Booth4 };
+        let ct = [
+            CtArchitecture::UfoMac,
+            CtArchitecture::Wallace,
+            CtArchitecture::Dadda,
+            CtArchitecture::Gomil,
+        ][rng.index(4)];
+        let cpa = if rng.bool() {
+            CpaChoice::ProfileOptimized
+        } else {
+            CpaChoice::Regular(
+                [
+                    PrefixStructure::Sklansky,
+                    PrefixStructure::KoggeStone,
+                    PrefixStructure::BrentKung,
+                    PrefixStructure::HanCarlson,
+                    PrefixStructure::Ripple,
+                    PrefixStructure::CarryIncrement(3),
+                ][rng.index(6)],
+            )
+        };
+        let strategy = [Strategy::AreaDriven, Strategy::TimingDriven, Strategy::TradeOff]
+            [rng.index(3)];
+        let mac = rng.index(3) == 0;
+        let spec = MultiplierSpec::new(n)
+            .ppg(ppg)
+            .ct(ct)
+            .cpa(cpa)
+            .strategy(strategy)
+            .fused_mac(mac);
+        let design = spec.build().unwrap_or_else(|e| panic!("trial {trial}: build: {e}"));
+        design.netlist.validate().unwrap();
+        let rep = ufo_mac::equiv::check_multiplier_with(&design, 1 << 10)
+            .unwrap_or_else(|e| panic!("trial {trial}: equiv: {e}"));
+        assert!(
+            rep.passed,
+            "trial {trial}: {ppg:?}/{ct:?}/{strategy:?} mac={mac} n={n} cex={:?}",
+            rep.counterexample
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: interconnect order never changes function, only timing.
+// ---------------------------------------------------------------------
+#[test]
+fn property_order_is_function_invariant() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let d = MultiplierSpec::new(5)
+            .order(OrderStrategy::Random(seed))
+            .build()
+            .unwrap();
+        let rep = ufo_mac::equiv::check_multiplier(&d).unwrap();
+        assert!(rep.passed && rep.exhaustive, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: Algorithm-1 counts are area-minimal vs random legal counts.
+// ---------------------------------------------------------------------
+#[test]
+fn property_alg1_counts_never_beaten_by_random_outputs() {
+    let mut rng = Rng::seed_from_u64(42);
+    for n in [4usize, 6, 8] {
+        let pp: Vec<usize> = (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect();
+        let alg1 = CtCounts::from_populations(&pp);
+        for _ in 0..10 {
+            // Random legal alternative via RL-MUL's output-choice space.
+            let o: Vec<usize> =
+                (0..pp.len() + 2).map(|_| 1 + rng.index(2)).collect();
+            let alt = ufo_mac::baselines::rlmul::counts_from_outputs(&pp, &o);
+            if alt.validate().is_ok() {
+                assert!(
+                    alg1.area_metric() <= alt.area_metric(),
+                    "n={n}: alg1 {} vs alt {}",
+                    alg1.area_metric(),
+                    alt.area_metric()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: CompiledNetlist ≡ Simulator on random designs/vectors.
+// ---------------------------------------------------------------------
+#[test]
+fn property_compiled_sim_matches_interpreter() {
+    let mut rng = Rng::seed_from_u64(0xC0DE);
+    for n in [4usize, 6, 8] {
+        let d = MultiplierSpec::new(n).build().unwrap();
+        let comp = CompiledNetlist::compile(&d.netlist);
+        let mut sim = Simulator::new();
+        let mut buf = Vec::new();
+        for _ in 0..8 {
+            let words: Vec<u64> =
+                (0..d.netlist.num_inputs()).map(|_| rng.next_u64()).collect();
+            let vals = sim.run(&d.netlist, &words).to_vec();
+            comp.run_into(&mut buf, &words);
+            assert_eq!(buf, vals, "n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: STA reports respect basic physics across the method grid.
+// ---------------------------------------------------------------------
+#[test]
+fn property_reports_are_physical() {
+    let sta = Sta { activity_rounds: 4, ..Sta::default() };
+    let budget = BaselineBudget { rlmul_iters: 4, seed: 9 };
+    for m in Method::ALL {
+        for n in [4usize, 8] {
+            let d = build_design(m, n, Strategy::TradeOff, false, &budget).unwrap();
+            let r = sta.analyze(&d.netlist);
+            assert!(r.critical_delay_ns > 0.0);
+            assert!(r.area_um2 > 0.0);
+            assert!(r.power_mw > 0.0);
+            assert!(r.depth as usize >= 2);
+            assert_eq!(r.output_arrivals_ns.len(), 2 * n);
+            // bigger width ⇒ strictly more area for the same method
+            if n == 8 {
+                let d4 = build_design(m, 4, Strategy::TradeOff, false, &budget).unwrap();
+                let r4 = sta.analyze(&d4.netlist);
+                assert!(r.area_um2 > r4.area_um2, "{m:?}");
+                assert!(r.critical_delay_ns > r4.critical_delay_ns, "{m:?}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: prefix-graph GRAPHOPT transformations preserve the function
+// under random application sequences (the Algorithm-2 safety net).
+// ---------------------------------------------------------------------
+#[test]
+fn property_graphopt_sequences_preserve_addition() {
+    let mut rng = Rng::seed_from_u64(77);
+    for trial in 0..12 {
+        let n = 4 + rng.index(9); // 4..12
+        let mut g = match rng.index(3) {
+            0 => cpa::build(PrefixStructure::Sklansky, n),
+            1 => cpa::build(PrefixStructure::BrentKung, n),
+            _ => cpa::build(PrefixStructure::Ripple, n),
+        };
+        for _ in 0..rng.index(12) {
+            let cands: Vec<usize> = (g.n..g.nodes.len())
+                .filter(|&i| {
+                    let nd = g.node(i);
+                    !nd.is_leaf() && !g.node(nd.ntf).is_leaf()
+                })
+                .collect();
+            if cands.is_empty() {
+                break;
+            }
+            let p = cands[rng.index(cands.len())];
+            cpa::optimize::graphopt(&mut g, p);
+        }
+        g.prune();
+        g.validate().unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        // exhaustive add check up to 2^(2n) ≤ 2^16… cap at n ≤ 8 exhaustive
+        let (nl, sum) = cpa::standalone_adder(&g, None);
+        let comp = CompiledNetlist::compile(&nl);
+        let mut buf = Vec::new();
+        let mask = (1u64 << n) - 1;
+        for _ in 0..4 {
+            let mut words = vec![0u64; 2 * n];
+            let mut lanes: Vec<(u64, u64)> = Vec::new();
+            for lane in 0..64 {
+                let a = rng.next_u64() & mask;
+                let b = rng.next_u64() & mask;
+                for k in 0..n {
+                    if a >> k & 1 == 1 {
+                        words[2 * k] |= 1 << lane;
+                    }
+                    if b >> k & 1 == 1 {
+                        words[2 * k + 1] |= 1 << lane;
+                    }
+                }
+                lanes.push((a, b));
+            }
+            comp.run_into(&mut buf, &words);
+            for (lane, (a, b)) in lanes.iter().enumerate() {
+                let got = ufo_mac::sim::lane_value(&buf, &sum, lane as u32);
+                assert_eq!(got, u128::from(a + b), "trial {trial} n={n}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Integration: full coordinator sweep end-to-end with reports.
+// ---------------------------------------------------------------------
+#[test]
+fn integration_sweep_pareto_and_reports() {
+    let cfg = ufo_mac::coordinator::SweepConfig {
+        widths: vec![4, 6],
+        methods: vec![Method::UfoMac, Method::Commercial],
+        strategies: vec![Strategy::TradeOff, Strategy::TimingDriven],
+        mac: false,
+        workers: 2,
+        budget: BaselineBudget { rlmul_iters: 2, seed: 5 },
+        verify_vectors: 256,
+        use_pjrt: false,
+    };
+    let points = ufo_mac::coordinator::run_sweep(&cfg);
+    assert_eq!(points.len(), 8);
+    assert!(points.iter().all(|p| p.verified));
+    for &n in &[4usize, 6] {
+        let subset: Vec<_> = points.iter().filter(|p| p.n == n).cloned().collect();
+        let front = ufo_mac::coordinator::pareto_front(&subset);
+        assert!(!front.is_empty());
+        // No point on the front is dominated by any other point.
+        for &i in &front {
+            for (j, q) in subset.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !ufo_mac::coordinator::dominates(q, &subset[i]),
+                        "front point dominated"
+                    );
+                }
+            }
+        }
+    }
+    let json = ufo_mac::coordinator::points_json(&points).render();
+    assert!(json.contains("delay_ns") && json.starts_with('['));
+}
+
+// ---------------------------------------------------------------------
+// Integration: verilog emission round-trip (structure spot checks on a
+// verified design, all methods).
+// ---------------------------------------------------------------------
+#[test]
+fn integration_verilog_for_all_methods() {
+    let budget = BaselineBudget { rlmul_iters: 2, seed: 8 };
+    for m in Method::ALL {
+        let d = build_design(m, 4, Strategy::TradeOff, false, &budget).unwrap();
+        let v = ufo_mac::synth::verilog::emit(&d.netlist);
+        assert!(v.contains("module "), "{m:?}");
+        assert!(v.contains("endmodule"), "{m:?}");
+        assert_eq!(v.matches("assign p").count(), 8, "{m:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Integration: FIR and systolic module reports across methods.
+// ---------------------------------------------------------------------
+#[test]
+fn integration_module_reports() {
+    for m in [Method::UfoMac, Method::Commercial] {
+        let fir = ufo_mac::modules::fir_report(m, 4, Strategy::TradeOff, 1e9).unwrap();
+        assert!(fir.area_um2 > 0.0 && fir.power_mw > 0.0);
+        let sys = ufo_mac::modules::systolic_report(m, 4, Strategy::TradeOff, 1e9).unwrap();
+        assert!(sys.area_um2 > fir.area_um2, "256 PEs outweigh a 5-tap FIR");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: ILP solver agrees with brute force on random small MILPs.
+// ---------------------------------------------------------------------
+#[test]
+fn property_milp_matches_bruteforce() {
+    use ufo_mac::ilp::{solve, LinExpr, Model, Sense, SolveOptions};
+    let mut rng = Rng::seed_from_u64(0x111);
+    for trial in 0..15 {
+        // max c·x  s.t.  one ≤ row, x binary, 4 vars.
+        let nv = 4;
+        let c: Vec<f64> = (0..nv).map(|_| (rng.index(19) as f64) - 9.0).collect();
+        let w: Vec<f64> = (0..nv).map(|_| 1.0 + rng.index(5) as f64).collect();
+        let cap = 2.0 + rng.index(8) as f64;
+        let mut m = Model::new();
+        let vars: Vec<_> = (0..nv).map(|i| m.bin(format!("x{i}"))).collect();
+        let row: Vec<_> = vars.iter().zip(&w).map(|(&v, &wi)| (v, wi)).collect();
+        m.constrain(LinExpr::of(&row), Sense::Le, cap);
+        let obj: Vec<_> = vars.iter().zip(&c).map(|(&v, &ci)| (v, -ci)).collect();
+        m.minimize(LinExpr::of(&obj));
+        let sol = solve(&m, &SolveOptions::default());
+        // brute force
+        let mut best = 0.0f64;
+        for mask in 0..1u32 << nv {
+            let weight: f64 =
+                (0..nv).filter(|&i| mask >> i & 1 == 1).map(|i| w[i]).sum();
+            if weight <= cap {
+                let val: f64 =
+                    (0..nv).filter(|&i| mask >> i & 1 == 1).map(|i| c[i]).sum();
+                best = best.max(val);
+            }
+        }
+        assert!(sol.ok(), "trial {trial}");
+        assert!((-sol.objective - best).abs() < 1e-6, "trial {trial}: {} vs {best}", -sol.objective);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: the equivalence checker catches seeded faults in
+// arbitrary gates (not just output remaps).
+// ---------------------------------------------------------------------
+#[test]
+fn failure_injection_detected() {
+    use ufo_mac::ir::{CellKind, Netlist, Node};
+    let mut rng = Rng::seed_from_u64(0xBAD);
+    let base = MultiplierSpec::new(4).build().unwrap();
+    let mut caught = 0;
+    let trials = 10;
+    for _ in 0..trials {
+        let mut d = base.clone();
+        // Flip one random gate kind to a different function.
+        let gates: Vec<usize> = d
+            .netlist
+            .nodes()
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n, Node::Gate { kind, .. } if kind.arity() == 2))
+            .map(|(i, _)| i)
+            .collect();
+        let pick = gates[rng.index(gates.len())];
+        let mut nl = Netlist::new(d.netlist.name.clone());
+        for (i, node) in d.netlist.nodes().iter().enumerate() {
+            match node {
+                Node::Input { name, arrival_ns } => {
+                    nl.input_at(name.clone(), *arrival_ns);
+                }
+                Node::Const(v) => {
+                    nl.constant(*v);
+                }
+                Node::Gate { kind, fanin } => {
+                    let k = if i == pick {
+                        match kind {
+                            CellKind::Xor2 => CellKind::Xnor2,
+                            CellKind::And2 => CellKind::Or2,
+                            CellKind::Nand2 => CellKind::Nor2,
+                            CellKind::Or2 => CellKind::And2,
+                            CellKind::Nor2 => CellKind::Nand2,
+                            other => *other,
+                        }
+                    } else {
+                        *kind
+                    };
+                    nl.gate(k, fanin);
+                }
+            }
+        }
+        for (name, id) in d.netlist.outputs() {
+            nl.output(name.clone(), *id);
+        }
+        d.netlist = nl;
+        let rep = ufo_mac::equiv::check_multiplier(&d).unwrap();
+        if !rep.passed {
+            caught += 1;
+        }
+    }
+    // A few flips may be functionally benign (e.g. redundant logic), but
+    // the vast majority must be caught.
+    assert!(caught >= trials - 2, "caught only {caught}/{trials}");
+}
