@@ -1,10 +1,14 @@
-//! Design-space exploration: reproduce the shape of Figures 10-12 in one
-//! run — sweep methods × strategies × widths for multipliers and MACs,
-//! print Pareto frontiers and the paper's headline deltas (UFO-MAC vs the
-//! commercial proxy), and persist a JSON report.
+//! Design-space exploration through the unified API: reproduce the shape
+//! of Figures 10-12 in one run — batch-compile the methods × strategies ×
+//! widths grid on the `SynthEngine` thread pool, print Pareto frontiers
+//! and the paper's headline deltas (UFO-MAC vs the commercial proxy),
+//! persist a JSON report, then re-run the sweep to show the
+//! content-addressed cache serving every design without re-synthesis.
 //!
 //! Run: `cargo run --release --example pareto_sweep -- --widths 8,16 [--mac]`
 
+use std::sync::Arc;
+use ufo_mac::api::{EngineConfig, SynthEngine};
 use ufo_mac::baselines::Method;
 use ufo_mac::coordinator::{self, SweepConfig};
 use ufo_mac::util::{Args, Table};
@@ -20,7 +24,12 @@ fn main() -> ufo_mac::Result<()> {
     let mac = args.has("mac");
 
     let cfg = SweepConfig { widths: widths.clone(), mac, ..Default::default() };
-    let points = coordinator::run_sweep(&cfg);
+    let engine = Arc::new(SynthEngine::new(EngineConfig {
+        verify_vectors: cfg.verify_vectors,
+        workers: cfg.workers,
+        ..EngineConfig::default()
+    }));
+    let points = coordinator::run_sweep_with(&engine, &cfg);
 
     for &n in &widths {
         let subset: Vec<_> = points.iter().filter(|p| p.n == n).cloned().collect();
@@ -77,5 +86,19 @@ fn main() -> ufo_mac::Result<()> {
 
     coordinator::save_report("target/reports", "pareto_sweep", &coordinator::points_json(&points))?;
     println!("\nreport: target/reports/pareto_sweep.json");
+
+    // Re-run the identical sweep on the same engine: every design is a
+    // cache hit, no re-synthesis.
+    let cold = engine.cache_stats();
+    let again = coordinator::run_sweep_with(&engine, &cfg);
+    let warm = engine.cache_stats();
+    assert_eq!(points.len(), again.len());
+    println!(
+        "repeat sweep: {} designs, {} new cache entries, {} hits (cache {} entries total)",
+        again.len(),
+        warm.entries - cold.entries,
+        warm.hits - cold.hits,
+        warm.entries
+    );
     Ok(())
 }

@@ -1,24 +1,32 @@
-//! Quickstart: generate an 8×8 UFO-MAC multiplier, verify it exhaustively,
-//! inspect the compressor-tree arrival profile (the Figure-1 trapezoid),
-//! and compare against the commercial-IP proxy.
+//! Quickstart for the unified API: compile an 8×8 UFO-MAC multiplier
+//! through the `SynthEngine`, verify it exhaustively, inspect the
+//! compressor-tree arrival profile (the Figure-1 trapezoid), compare
+//! against the commercial-IP proxy, and watch the content-addressed cache
+//! collapse a repeated request onto the same artifact.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use ufo_mac::baselines::{build_design, BaselineBudget, Method};
-use ufo_mac::multiplier::{MultiplierSpec, Strategy};
-use ufo_mac::sta::Sta;
+use std::sync::Arc;
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::baselines::Method;
+use ufo_mac::multiplier::Strategy;
 
 fn main() -> ufo_mac::Result<()> {
-    // 1. One-liner: UFO-MAC 8×8 multiplier with the trade-off strategy.
-    let design = MultiplierSpec::new(8).strategy(Strategy::TradeOff).build()?;
-    let sta = Sta::default();
-    let rep = sta.analyze(&design.netlist);
-    println!("UFO-MAC 8×8 multiplier");
-    println!("  {} gates, {:.1} µm², {:.4} ns, {:.4} mW @1GHz",
-        rep.num_gates, rep.area_um2, rep.critical_delay_ns, rep.power_mw);
+    // One engine owns the cell library, timing models, STA and the cache.
+    let engine = Arc::new(SynthEngine::new(EngineConfig::default()));
+
+    // 1. One request: UFO-MAC 8×8 multiplier with the trade-off strategy.
+    let req = DesignRequest::method(Method::UfoMac, 8, Strategy::TradeOff, false);
+    let art = engine.compile(&req)?;
+    let design = art.design().expect("multiplier design");
+    println!("UFO-MAC 8×8 multiplier   [fingerprint {}]", art.fingerprint);
+    println!(
+        "  {} gates, {:.1} µm², {:.4} ns, {:.4} mW @1GHz",
+        art.sta.num_gates, art.sta.area_um2, art.sta.critical_delay_ns, art.sta.power_mw
+    );
 
     // 2. Exhaustive equivalence (all 65 536 operand pairs).
-    let equiv = ufo_mac::equiv::check_multiplier(&design)?;
+    let equiv = ufo_mac::equiv::check_multiplier(design)?;
     assert!(equiv.passed && equiv.exhaustive);
     println!("  equivalence: PASS ({} vectors, exhaustive)", equiv.vectors);
 
@@ -33,12 +41,30 @@ fn main() -> ufo_mac::Result<()> {
         design.profile.len());
 
     // 4. Head-to-head with the commercial proxy at the same strategy.
-    let com = build_design(Method::Commercial, 8, Strategy::TradeOff, false,
-        &BaselineBudget::default())?;
-    let rep_c = sta.analyze(&com.netlist);
-    println!("\nCommercial-IP proxy 8×8: {:.1} µm², {:.4} ns", rep_c.area_um2, rep_c.critical_delay_ns);
-    println!("UFO-MAC delta: area {:+.1}%, delay {:+.1}%",
-        (rep.area_um2 / rep_c.area_um2 - 1.0) * 100.0,
-        (rep.critical_delay_ns / rep_c.critical_delay_ns - 1.0) * 100.0);
+    let com = engine.compile(&DesignRequest::method(Method::Commercial, 8, Strategy::TradeOff, false))?;
+    println!(
+        "\nCommercial-IP proxy 8×8: {:.1} µm², {:.4} ns",
+        com.sta.area_um2, com.sta.critical_delay_ns
+    );
+    println!(
+        "UFO-MAC delta: area {:+.1}%, delay {:+.1}%",
+        (art.sta.area_um2 / com.sta.area_um2 - 1.0) * 100.0,
+        (art.sta.critical_delay_ns / com.sta.critical_delay_ns - 1.0) * 100.0
+    );
+
+    // 5. Identical request ⇒ same artifact, served from cache.
+    let again = engine.compile(&req)?;
+    assert!(Arc::ptr_eq(&art, &again), "repeat compile must be the cached Arc");
+    let stats = engine.cache_stats();
+    println!(
+        "\ncache: {} entries, {} hits / {} misses ({:.0}% hit rate)",
+        stats.entries,
+        stats.hits,
+        stats.misses,
+        stats.hit_rate() * 100.0
+    );
+
+    // 6. Requests are plain JSON — the service-style entry point.
+    println!("\nrequest json: {}", req.to_json_string());
     Ok(())
 }

@@ -4,6 +4,7 @@
 //! bottleneck assignment dominates CT construction, and full design
 //! builds dominate the coordinator's jobs.
 
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
 use ufo_mac::bench::Bench;
 use ufo_mac::ilp::assignment::bottleneck_assignment;
 use ufo_mac::multiplier::MultiplierSpec;
@@ -72,4 +73,21 @@ fn main() {
     bench.bench("equiv_sampled_1k_8bit", || {
         ufo_mac::equiv::check_multiplier_with(&d8, 1024).unwrap()
     });
+
+    // Unified-engine compile path: cold (fresh engine per call — pays the
+    // full library/timing-model construction plus synthesis, the pre-API
+    // per-call behaviour) vs cached (content-addressed hit on a warm
+    // engine — the DSE-sweep steady state).
+    let req = DesignRequest::multiplier(16);
+    bench.bench("engine_compile_16bit_cold", || {
+        let eng = SynthEngine::new(EngineConfig::default());
+        eng.compile(&req).unwrap().sta.num_gates
+    });
+    let warm = SynthEngine::new(EngineConfig::default());
+    warm.compile(&req).unwrap();
+    bench.bench("engine_compile_16bit_cached", || {
+        warm.compile(&req).unwrap().sta.num_gates
+    });
+    let s = warm.cache_stats();
+    bench.metric("engine_cache_hit_rate_16bit", s.hit_rate(), "fraction");
 }

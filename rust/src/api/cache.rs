@@ -1,0 +1,140 @@
+//! Sharded, content-addressed, in-memory design cache.
+//!
+//! Keys are request [`Fingerprint`]s (content hashes of canonical request
+//! forms); values are immutable [`DesignArtifact`]s behind `Arc`, so a hit
+//! is one shard-lock acquisition plus a refcount bump — no netlist is ever
+//! copied. Sharding keeps the batch compiler's worker threads from
+//! serializing on one mutex; statistics are lock-free atomics.
+
+use super::engine::DesignArtifact;
+use super::request::Fingerprint;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Aggregate cache counters (monotone over the cache's lifetime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction in `[0, 1]` (0 when the cache was never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Fingerprint → `Arc<DesignArtifact>` map, split over `shards` mutexes.
+pub struct DesignCache {
+    shards: Vec<Mutex<HashMap<u128, Arc<DesignArtifact>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DesignCache {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        DesignCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fp: Fingerprint) -> &Mutex<HashMap<u128, Arc<DesignArtifact>>> {
+        &self.shards[fp.shard(self.shards.len())]
+    }
+
+    /// Look up a fingerprint, recording a hit or miss.
+    pub fn get(&self, fp: Fingerprint) -> Option<Arc<DesignArtifact>> {
+        let found = self.shard(fp).lock().unwrap().get(&fp.0).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert an artifact, returning the canonical `Arc` for the key.
+    ///
+    /// If two workers compiled the same request concurrently, the first
+    /// insert wins and both callers get the same pointer — the engine's
+    /// "identical request ⇒ identical artifact" guarantee.
+    pub fn insert(&self, fp: Fingerprint, artifact: DesignArtifact) -> Arc<DesignArtifact> {
+        let mut shard = self.shard(fp).lock().unwrap();
+        shard.entry(fp.0).or_insert_with(|| Arc::new(artifact)).clone()
+    }
+
+    /// Number of cached artifacts.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (counters are preserved).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(x: u128) -> Fingerprint {
+        Fingerprint(x)
+    }
+
+    fn dummy() -> DesignArtifact {
+        // A tiny real artifact via the engine keeps this test honest but
+        // slow; a unit-cache test only needs *an* artifact, so build the
+        // smallest design directly.
+        let eng = crate::api::SynthEngine::new(crate::api::EngineConfig::default());
+        let art = eng.compile(&crate::api::DesignRequest::multiplier(2)).unwrap();
+        (*art).clone()
+    }
+
+    #[test]
+    fn hit_miss_accounting_and_identity() {
+        let cache = DesignCache::new(4);
+        assert!(cache.get(fp(1)).is_none());
+        let a = cache.insert(fp(1), dummy());
+        let b = cache.get(fp(1)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn first_insert_wins() {
+        let cache = DesignCache::new(2);
+        let a = cache.insert(fp(7), dummy());
+        let b = cache.insert(fp(7), dummy());
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,368 @@
+//! The one compile path.
+//!
+//! [`SynthEngine`] owns everything the legacy entry points used to rebuild
+//! per call — the characterized [`CellLib`], the derived
+//! [`CompressorTiming`], the [`Sta`] engine, and (when configured) the
+//! PJRT [`Runtime`] — plus the content-addressed design cache. Every
+//! synthesis in the crate funnels through [`SynthEngine::compile`]:
+//! `MultiplierSpec::build`, `baselines::build_design`, the module report
+//! helpers and `coordinator::run_sweep` are all thin shims over it, so a
+//! repeated request is served from cache as the same `Arc`.
+
+use super::cache::{CacheStats, DesignCache};
+use super::request::{DesignRequest, Fingerprint, MethodRequest, ModuleKind};
+use crate::baselines::{self, BaselineBudget};
+use crate::coordinator::pool;
+use crate::ir::{CellLib, Netlist, NodeId};
+use crate::modules::{self, ModuleReport};
+use crate::multiplier::Design;
+use crate::runtime::{default_artifact_dir, verify_design_pjrt, Runtime};
+use crate::sta::{Sta, StaReport};
+use crate::synth::CompressorTiming;
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Engine construction knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Simulator-equivalence budget per compiled design; `0` skips
+    /// verification (the legacy `MultiplierSpec::build` behaviour).
+    pub verify_vectors: usize,
+    /// Cross-check compiled designs through the PJRT artifacts when the
+    /// runtime and artifact files are available.
+    pub use_pjrt: bool,
+    /// Worker threads for [`SynthEngine::compile_batch`].
+    pub workers: usize,
+    /// Mutex shards of the design cache.
+    pub cache_shards: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            verify_vectors: 0,
+            use_pjrt: false,
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            cache_shards: 16,
+        }
+    }
+}
+
+/// The compiled payload of an artifact.
+#[derive(Debug, Clone)]
+pub enum ArtifactBody {
+    /// A multiplier / MAC design (multiplier-family and method requests).
+    Design(Design),
+    /// A FIR pipeline stage: multiplier + stage adder, plus the clocked
+    /// Table-1 report.
+    FirStage { netlist: Netlist, y: Vec<NodeId>, report: ModuleReport },
+    /// A systolic processing element (fused MAC) plus the clocked Table-2
+    /// array report.
+    SystolicPe { pe: Design, report: ModuleReport },
+}
+
+/// An immutable compiled design, shared by `Arc` out of the cache.
+#[derive(Debug, Clone)]
+pub struct DesignArtifact {
+    /// The canonical form of the request that produced this artifact.
+    pub request: DesignRequest,
+    pub fingerprint: Fingerprint,
+    /// STA of [`Self::netlist`] (clocked at the request frequency for
+    /// module requests, at the engine default otherwise).
+    pub sta: StaReport,
+    pub body: ArtifactBody,
+    /// Simulator equivalence (None when the engine skips verification or
+    /// the body has no multiplier semantics).
+    pub verified: Option<bool>,
+    /// PJRT artifact cross-check (None without runtime/artifacts).
+    pub pjrt_verified: Option<bool>,
+}
+
+impl DesignArtifact {
+    /// The multiplier/MAC design, when the body has one.
+    pub fn design(&self) -> Option<&Design> {
+        match &self.body {
+            ArtifactBody::Design(d) => Some(d),
+            ArtifactBody::SystolicPe { pe, .. } => Some(pe),
+            ArtifactBody::FirStage { .. } => None,
+        }
+    }
+
+    /// The gate-level netlist of whatever was compiled.
+    pub fn netlist(&self) -> &Netlist {
+        match &self.body {
+            ArtifactBody::Design(d) => &d.netlist,
+            ArtifactBody::SystolicPe { pe, .. } => &pe.netlist,
+            ArtifactBody::FirStage { netlist, .. } => netlist,
+        }
+    }
+
+    /// The clocked module report (FIR / systolic requests only).
+    pub fn module_report(&self) -> Option<&ModuleReport> {
+        match &self.body {
+            ArtifactBody::FirStage { report, .. } | ArtifactBody::SystolicPe { report, .. } => {
+                Some(report)
+            }
+            ArtifactBody::Design(_) => None,
+        }
+    }
+}
+
+/// The unified synthesis engine (see module docs).
+pub struct SynthEngine {
+    cfg: EngineConfig,
+    lib: CellLib,
+    tm: CompressorTiming,
+    sta: Sta,
+    runtime: Option<Mutex<Runtime>>,
+    cache: DesignCache,
+}
+
+impl SynthEngine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let sta = Sta::with_lib(lib.clone());
+        let runtime = if cfg.use_pjrt {
+            Runtime::new(default_artifact_dir()).ok().map(Mutex::new)
+        } else {
+            None
+        };
+        let cache = DesignCache::new(cfg.cache_shards);
+        SynthEngine { cfg, lib, tm, sta, runtime, cache }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// The shared cell library (callers needing raw netlist construction).
+    pub fn lib(&self) -> &CellLib {
+        &self.lib
+    }
+
+    /// The shared compressor timing model.
+    pub fn timing(&self) -> &CompressorTiming {
+        &self.tm
+    }
+
+    /// The shared STA engine (default clock).
+    pub fn sta(&self) -> &Sta {
+        &self.sta
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Drop all cached artifacts (hit/miss counters survive).
+    pub fn clear_cache(&self) {
+        self.cache.clear();
+    }
+
+    /// Compile a request, serving identical requests from the cache.
+    ///
+    /// The request is canonicalized first, so every spelling of the same
+    /// design — explicit spec, method shorthand, differing dead fields —
+    /// resolves to one artifact.
+    pub fn compile(&self, req: &DesignRequest) -> Result<Arc<DesignArtifact>> {
+        let canon = req.canonical();
+        let fp = canon.fingerprint_of_canonical();
+        if let Some(hit) = self.cache.get(fp) {
+            return Ok(hit);
+        }
+        let artifact = self.build_artifact(&canon, fp)?;
+        Ok(self.cache.insert(fp, artifact))
+    }
+
+    /// Compile many requests on the coordinator thread pool
+    /// ([`pool::par_map_scoped`]), preserving input order — `result[i]`
+    /// always corresponds to `reqs[i]`. Duplicate requests collapse onto
+    /// one cache entry (identical `Arc`s in the output); there is no
+    /// in-flight dedup, so duplicates that start *concurrently* on
+    /// separate workers may each synthesize before the first insert wins.
+    /// A synthesis panic is contained to its own row as an `Err` rather
+    /// than tearing down the whole batch.
+    pub fn compile_batch(&self, reqs: &[DesignRequest]) -> Vec<Result<Arc<DesignArtifact>>> {
+        let one = |req: &DesignRequest| -> Result<Arc<DesignArtifact>> {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.compile(req)))
+                .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))
+        };
+        if reqs.len() <= 1 || self.cfg.workers <= 1 {
+            return reqs.iter().map(one).collect();
+        }
+        pool::par_map_scoped(self.cfg.workers, reqs.to_vec(), |req| one(&req))
+    }
+
+    // ---------------------------------------------------------------
+
+    fn build_artifact(&self, canon: &DesignRequest, fp: Fingerprint) -> Result<DesignArtifact> {
+        match canon {
+            DesignRequest::Multiplier(m) => {
+                let design = m.to_spec().build_with(&self.lib, &self.tm)?;
+                self.finish_design(canon.clone(), fp, design)
+            }
+            DesignRequest::Method(mr) => {
+                let design = self.build_method(mr)?;
+                self.finish_design(canon.clone(), fp, design)
+            }
+            DesignRequest::Module(m) => {
+                // The stage/PE wraps an inner method design that is itself
+                // cached — every clock target shares one inner compile.
+                let inner = DesignRequest::Method(MethodRequest {
+                    method: m.method,
+                    n: m.n,
+                    strategy: m.strategy,
+                    mac: m.module == ModuleKind::Systolic,
+                    budget: BaselineBudget::default(),
+                });
+                let inner_art = self.compile(&inner)?;
+                let design = inner_art
+                    .design()
+                    .ok_or_else(|| anyhow!("inner artifact carries no design"))?;
+                let sta = Sta { clock_ghz: m.freq_hz / 1e9, ..self.sta.clone() };
+                match m.module {
+                    ModuleKind::Fir => {
+                        let (netlist, y) = modules::fir::stage_from_design(design)?;
+                        let rep = sta.analyze(&netlist);
+                        let report = modules::fir::report_from_stage(&rep, m.n, m.freq_hz);
+                        Ok(DesignArtifact {
+                            request: canon.clone(),
+                            fingerprint: fp,
+                            sta: rep,
+                            body: ArtifactBody::FirStage { netlist, y, report },
+                            verified: None,
+                            pjrt_verified: None,
+                        })
+                    }
+                    ModuleKind::Systolic => {
+                        let rep = sta.analyze(&design.netlist);
+                        let report = modules::systolic::report_from_pe(&rep, m.n, m.freq_hz);
+                        Ok(DesignArtifact {
+                            request: canon.clone(),
+                            fingerprint: fp,
+                            sta: rep,
+                            body: ArtifactBody::SystolicPe { pe: design.clone(), report },
+                            verified: inner_art.verified,
+                            pjrt_verified: inner_art.pjrt_verified,
+                        })
+                    }
+                }
+            }
+        }
+    }
+
+    /// Build a method-form request (post-canonicalization this is only the
+    /// search-based RL-MUL, but any method compiles correctly).
+    fn build_method(&self, mr: &MethodRequest) -> Result<Design> {
+        let spec =
+            baselines::method_spec(mr.method, mr.n, mr.strategy, mr.mac, &mr.budget, &self.lib);
+        spec.build_with(&self.lib, &self.tm)
+    }
+
+    fn finish_design(
+        &self,
+        request: DesignRequest,
+        fingerprint: Fingerprint,
+        design: Design,
+    ) -> Result<DesignArtifact> {
+        let sta = self.sta.analyze(&design.netlist);
+        let verified = if self.cfg.verify_vectors > 0 {
+            Some(crate::equiv::check_multiplier_with(&design, self.cfg.verify_vectors)?.passed)
+        } else {
+            None
+        };
+        let pjrt_verified = self.pjrt_check(&design);
+        Ok(DesignArtifact {
+            request,
+            fingerprint,
+            sta,
+            body: ArtifactBody::Design(design),
+            verified,
+            pjrt_verified,
+        })
+    }
+
+    fn pjrt_check(&self, design: &Design) -> Option<bool> {
+        // One runtime, one lock: PJRT verification serializes across batch
+        // workers. Fine for the cross-check's sample sizes; per-worker
+        // runtimes would trade memory (a compiled executable cache each)
+        // for parallel verification if this ever dominates.
+        let rt = self.runtime.as_ref()?.lock().unwrap();
+        if rt.has_artifact("netlist_eval_small") {
+            verify_design_pjrt(&rt, design, 1).ok()
+        } else {
+            None
+        }
+    }
+}
+
+static GLOBAL_ENGINE: OnceLock<Arc<SynthEngine>> = OnceLock::new();
+
+/// The process-wide engine behind the legacy shims
+/// (`MultiplierSpec::build`, `baselines::build_design`, the module report
+/// helpers). Default config: no per-compile verification, no PJRT.
+///
+/// Its cache is unbounded and lives for the process: long-running services
+/// iterating over unbounded request spaces (e.g. RL-MUL seed sweeps, where
+/// every budget/seed pair is a distinct fingerprint) should either call
+/// [`SynthEngine::clear_cache`] between phases or use a scoped engine.
+pub fn global() -> Arc<SynthEngine> {
+    GLOBAL_ENGINE.get_or_init(|| Arc::new(SynthEngine::new(EngineConfig::default()))).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Method;
+    use crate::multiplier::{MultiplierSpec, Strategy};
+
+    #[test]
+    fn repeated_compile_is_cached_and_identical() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let req = DesignRequest::multiplier(6);
+        let a = eng.compile(&req).unwrap();
+        let b = eng.compile(&req).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second compile must be the cached Arc");
+        let s = eng.cache_stats();
+        assert!(s.hits >= 1, "stats {s:?}");
+        assert_eq!(a.fingerprint, req.fingerprint());
+    }
+
+    #[test]
+    fn method_and_spec_share_one_artifact() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let via_method =
+            eng.compile(&DesignRequest::method(Method::UfoMac, 6, Strategy::TradeOff, false)).unwrap();
+        let via_spec = eng
+            .compile(&DesignRequest::from_spec(
+                &MultiplierSpec::new(6).strategy(Strategy::TradeOff),
+            ))
+            .unwrap();
+        assert!(Arc::ptr_eq(&via_method, &via_spec));
+    }
+
+    #[test]
+    fn verification_is_engine_config() {
+        let eng = SynthEngine::new(EngineConfig { verify_vectors: 256, ..Default::default() });
+        let art = eng.compile(&DesignRequest::multiplier(4)).unwrap();
+        assert_eq!(art.verified, Some(true));
+        assert!(art.sta.critical_delay_ns > 0.0);
+    }
+
+    #[test]
+    fn module_requests_share_the_inner_design() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let a = eng.compile(&DesignRequest::fir(Method::UfoMac, 4, Strategy::TradeOff, 1e9)).unwrap();
+        assert!(a.module_report().is_some());
+        // A second clock target re-uses the cached inner multiplier: the
+        // only new compile is the stage itself.
+        let before = eng.cache_stats();
+        let b = eng.compile(&DesignRequest::fir(Method::UfoMac, 4, Strategy::TradeOff, 2e9)).unwrap();
+        let after = eng.cache_stats();
+        assert!(after.hits > before.hits, "inner design must be a cache hit");
+        let (ra, rb) = (a.module_report().unwrap(), b.module_report().unwrap());
+        assert!(rb.wns_ns < ra.wns_ns, "tighter clock must tighten WNS");
+    }
+}

@@ -1,0 +1,53 @@
+//! # Unified API: `DesignRequest` → [`SynthEngine`] → `Arc<DesignArtifact>`
+//!
+//! UFO-MAC is a *unified* framework, and this module is the unification
+//! point: one canonical request type, one engine that compiles it, and a
+//! content-addressed cache so identical requests — the common case in DSE
+//! sweeps and Pareto studies — are synthesized exactly once per process.
+//!
+//! ```no_run
+//! use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+//! use ufo_mac::baselines::Method;
+//! use ufo_mac::multiplier::Strategy;
+//!
+//! let engine = SynthEngine::new(EngineConfig::default());
+//! let art = engine.compile(&DesignRequest::multiplier(16))?;
+//! println!("{} gates, {:.3} ns", art.sta.num_gates, art.sta.critical_delay_ns);
+//!
+//! // A whole sweep in one call; duplicates collapse onto the cache.
+//! let reqs: Vec<_> = [8usize, 16, 32]
+//!     .iter()
+//!     .map(|&n| DesignRequest::method(Method::UfoMac, n, Strategy::TradeOff, false))
+//!     .collect();
+//! let arts = engine.compile_batch(&reqs);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! ## Migrating from the legacy entry points
+//!
+//! The old constructors still work as thin shims over the process-global
+//! engine ([`engine()`]), but new code should speak requests:
+//!
+//! | legacy call | request form |
+//! |---|---|
+//! | `MultiplierSpec::new(n).build()` | [`DesignRequest::multiplier`]`(n)` / [`DesignRequest::from_spec`] |
+//! | `baselines::build_design(m, n, s, mac, budget)` | [`DesignRequest::method`]`(m, n, s, mac)` |
+//! | `coordinator::evaluate_point(…)` | [`DesignRequest::method`] + [`SynthEngine::compile`] |
+//! | `modules::fir_report(m, n, s, f)` | [`DesignRequest::fir`]`(m, n, s, f)` |
+//! | `modules::systolic_report(m, n, s, f)` | [`DesignRequest::systolic`]`(m, n, s, f)` |
+//! | `modules::build_pe(m, n, s)` | [`DesignRequest::systolic`] → [`DesignArtifact::design`] |
+//!
+//! Requests serialize to JSON ([`DesignRequest::to_json_string`] /
+//! [`DesignRequest::parse`]) and hash to a stable [`Fingerprint`] over
+//! their canonical form — see [`DesignRequest::canonical`] for what the
+//! normal form collapses.
+
+mod cache;
+mod engine;
+mod request;
+
+pub use cache::{CacheStats, DesignCache};
+pub use engine::{global as engine, ArtifactBody, DesignArtifact, EngineConfig, SynthEngine};
+pub use request::{
+    DesignRequest, Fingerprint, MacMode, MethodRequest, ModuleKind, ModuleRequest, MulRequest,
+};

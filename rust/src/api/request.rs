@@ -1,0 +1,772 @@
+//! The one request type of the unified API.
+//!
+//! A [`DesignRequest`] is a serializable, *canonicalizable* description of
+//! anything the framework can synthesize: a raw multiplier/MAC spec, a
+//! baseline-method design, or a functional module (FIR stage, systolic
+//! PE). Canonicalization rewrites a request into the normal form the
+//! engine actually compiles — e.g. a non-search method request lowers to
+//! the exact [`MultiplierSpec`] it denotes, and fields that cannot affect
+//! the result (an FDC model attached to a regular CPA choice) are zeroed —
+//! so equivalent requests share one [`fingerprint`](DesignRequest::fingerprint)
+//! and therefore one cache entry.
+
+use crate::baselines::{spec_for, BaselineBudget, Method};
+use crate::cpa::{FdcModel, PrefixStructure};
+use crate::ct::{CtArchitecture, OrderStrategy, StagePlan};
+use crate::multiplier::{CpaChoice, MultiplierSpec, Strategy};
+use crate::ppg::PpgKind;
+use crate::util::Json;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::fmt;
+
+/// Accumulator handling for multiplier-family requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacMode {
+    /// Plain multiplier.
+    None,
+    /// §2.3 fused MAC: accumulator rows injected into the CT.
+    Fused,
+    /// Conventional MAC: multiply, then a separate CPA.
+    Separate,
+}
+
+/// A fully explicit multiplier/MAC specification (mirror of
+/// [`MultiplierSpec`], in serializable form).
+#[derive(Debug, Clone)]
+pub struct MulRequest {
+    pub n: usize,
+    pub ppg: PpgKind,
+    pub ct: CtArchitecture,
+    pub order: Option<OrderStrategy>,
+    pub ct_plan: Option<StagePlan>,
+    pub cpa: CpaChoice,
+    pub strategy: Strategy,
+    pub mac: MacMode,
+    pub fdc: FdcModel,
+}
+
+/// A baseline-method design request (the coordinator's sweep axis).
+#[derive(Debug, Clone)]
+pub struct MethodRequest {
+    pub method: Method,
+    pub n: usize,
+    pub strategy: Strategy,
+    /// Fused-MAC variant (baseline methods fuse; `separate` is reached via
+    /// an explicit [`MulRequest`]).
+    pub mac: bool,
+    pub budget: BaselineBudget,
+}
+
+/// Which functional module a [`ModuleRequest`] targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleKind {
+    /// 5-tap transposed-FIR pipeline stage (Table 1).
+    Fir,
+    /// 16×16 systolic-array processing element (Table 2).
+    Systolic,
+}
+
+/// A module-level request: the stage/PE netlist plus a clocked report.
+#[derive(Debug, Clone)]
+pub struct ModuleRequest {
+    pub module: ModuleKind,
+    pub method: Method,
+    pub n: usize,
+    pub strategy: Strategy,
+    /// Clock target for the WNS/power report.
+    pub freq_hz: f64,
+}
+
+/// The single request type compiled by [`crate::api::SynthEngine`].
+///
+/// | old entry point | request form |
+/// |---|---|
+/// | `MultiplierSpec::build` | [`DesignRequest::Multiplier`] |
+/// | `baselines::build_design` | [`DesignRequest::Method`] |
+/// | `modules::fir_report` / `build_fir_stage` | [`DesignRequest::Module`] (`Fir`) |
+/// | `modules::systolic_report` / `build_pe` | [`DesignRequest::Module`] (`Systolic`) |
+/// | `coordinator::evaluate_point` | [`DesignRequest::Method`] |
+#[derive(Debug, Clone)]
+pub enum DesignRequest {
+    Multiplier(MulRequest),
+    Method(MethodRequest),
+    Module(ModuleRequest),
+}
+
+/// 128-bit content hash of a request's canonical form (FNV-1a).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl Fingerprint {
+    const OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+    const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+
+    /// FNV-1a over raw bytes.
+    pub fn of_bytes(bytes: &[u8]) -> Fingerprint {
+        let mut h = Self::OFFSET;
+        for &b in bytes {
+            h ^= u128::from(b);
+            h = h.wrapping_mul(Self::PRIME);
+        }
+        Fingerprint(h)
+    }
+
+    /// Shard selector for the design cache.
+    pub fn shard(&self, shards: usize) -> usize {
+        // High bits mix better than low bits for FNV.
+        ((self.0 >> 64) as usize) % shards.max(1)
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+impl fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Fingerprint({:032x})", self.0)
+    }
+}
+
+impl DesignRequest {
+    // ---------------------------------------------------------------
+    // Constructors.
+    // ---------------------------------------------------------------
+
+    /// UFO-MAC multiplier with default knobs (the old
+    /// `MultiplierSpec::new(n)`).
+    pub fn multiplier(n: usize) -> DesignRequest {
+        DesignRequest::from_spec(&MultiplierSpec::new(n))
+    }
+
+    /// A baseline-method design (the old `baselines::build_design`).
+    pub fn method(method: Method, n: usize, strategy: Strategy, mac: bool) -> DesignRequest {
+        DesignRequest::Method(MethodRequest {
+            method,
+            n,
+            strategy,
+            mac,
+            budget: BaselineBudget::default(),
+        })
+    }
+
+    /// A FIR pipeline-stage request (the old `modules::fir_report`).
+    pub fn fir(method: Method, n: usize, strategy: Strategy, freq_hz: f64) -> DesignRequest {
+        DesignRequest::Module(ModuleRequest { module: ModuleKind::Fir, method, n, strategy, freq_hz })
+    }
+
+    /// A systolic-PE request (the old `modules::systolic_report`).
+    pub fn systolic(method: Method, n: usize, strategy: Strategy, freq_hz: f64) -> DesignRequest {
+        DesignRequest::Module(ModuleRequest {
+            module: ModuleKind::Systolic,
+            method,
+            n,
+            strategy,
+            freq_hz,
+        })
+    }
+
+    /// Capture an explicit [`MultiplierSpec`] (the old `spec.build()`).
+    ///
+    /// A request is valid by construction ([`MacMode`] holds exactly one
+    /// accumulator mode), so the one invalid spec state —
+    /// `fused_mac && separate_mac` — cannot be represented; this capture
+    /// resolves it to [`MacMode::Fused`]. `MultiplierSpec::build`
+    /// rejects that state before converting; callers constructing specs
+    /// by hand should do the same.
+    pub fn from_spec(spec: &MultiplierSpec) -> DesignRequest {
+        DesignRequest::Multiplier(MulRequest {
+            n: spec.n,
+            ppg: spec.ppg,
+            ct: spec.ct,
+            order: spec.order_override,
+            ct_plan: spec.ct_plan.clone(),
+            cpa: spec.cpa,
+            strategy: spec.strategy,
+            mac: if spec.fused_mac {
+                MacMode::Fused
+            } else if spec.separate_mac {
+                MacMode::Separate
+            } else {
+                MacMode::None
+            },
+            fdc: spec.fdc_model,
+        })
+    }
+
+    // ---------------------------------------------------------------
+    // Canonicalization + fingerprint.
+    // ---------------------------------------------------------------
+
+    /// Rewrite into the engine's normal form. Idempotent.
+    ///
+    /// - A [`MethodRequest`] for a deterministic method (everything except
+    ///   RL-MUL's annealing search) lowers to the exact [`MulRequest`] it
+    ///   denotes, so `Method(UfoMac, 8, …)` and the equivalent explicit
+    ///   spec share a cache entry. RL-MUL requests stay method-form (the
+    ///   search is part of the request) with their budget retained.
+    /// - Dead fields are normalized so they cannot split the cache: the
+    ///   FDC model and the strategy under a regular CPA choice (both are
+    ///   only read by the profile-optimized CPA synthesis), and the CT
+    ///   architecture when an explicit `ct_plan` overrides it.
+    pub fn canonical(&self) -> DesignRequest {
+        match self {
+            DesignRequest::Multiplier(m) => {
+                let mut m = m.clone();
+                if matches!(m.cpa, CpaChoice::Regular(_)) {
+                    m.fdc = FdcModel { k: [0.0; 4], b: 0.0 };
+                    m.strategy = Strategy::TradeOff;
+                }
+                if m.ct_plan.is_some() {
+                    m.ct = CtArchitecture::UfoMac;
+                }
+                DesignRequest::Multiplier(m)
+            }
+            DesignRequest::Method(mr) => {
+                if mr.method == Method::RlMul {
+                    DesignRequest::Method(mr.clone())
+                } else {
+                    let spec = spec_for(mr.method, mr.n, mr.strategy, mr.mac);
+                    DesignRequest::from_spec(&spec).canonical()
+                }
+            }
+            DesignRequest::Module(m) => DesignRequest::Module(m.clone()),
+        }
+    }
+
+    /// Stable content hash over the canonical JSON form.
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.canonical().fingerprint_of_canonical()
+    }
+
+    /// Fingerprint of `self` *as-is*, assuming it is already canonical —
+    /// the engine's fast path after it has canonicalized once. Calling
+    /// this on a non-canonical request gives a hash that will never match
+    /// the cache; use [`Self::fingerprint`] unless you hold the output of
+    /// [`Self::canonical`].
+    pub fn fingerprint_of_canonical(&self) -> Fingerprint {
+        Fingerprint::of_bytes(self.to_json().render().as_bytes())
+    }
+
+    /// Operand width of the requested design.
+    pub fn width(&self) -> usize {
+        match self {
+            DesignRequest::Multiplier(m) => m.n,
+            DesignRequest::Method(m) => m.n,
+            DesignRequest::Module(m) => m.n,
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // JSON round-trip.
+    // ---------------------------------------------------------------
+
+    /// Serialize (stable key order; `u64` fields travel as decimal strings
+    /// to stay lossless).
+    pub fn to_json(&self) -> Json {
+        match self {
+            DesignRequest::Multiplier(m) => {
+                let mut fields = vec![
+                    ("kind", Json::str("multiplier")),
+                    ("n", Json::num(m.n as f64)),
+                    ("ppg", Json::str(ppg_key(m.ppg))),
+                    ("ct", Json::str(ct_key(m.ct))),
+                    (
+                        "order",
+                        match m.order {
+                            None => Json::Null,
+                            Some(o) => Json::str(order_key(o)),
+                        },
+                    ),
+                    ("cpa", Json::str(cpa_key(&m.cpa))),
+                    ("strategy", Json::str(strategy_key(m.strategy))),
+                    ("mac", Json::str(mac_key(m.mac))),
+                    (
+                        "fdc",
+                        Json::obj(vec![
+                            ("k", Json::arr(m.fdc.k.iter().map(|&x| Json::num(x)).collect())),
+                            ("b", Json::num(m.fdc.b)),
+                        ]),
+                    ),
+                ];
+                fields.push((
+                    "ct_plan",
+                    match &m.ct_plan {
+                        None => Json::Null,
+                        Some(p) => plan_to_json(p),
+                    },
+                ));
+                Json::obj(fields)
+            }
+            DesignRequest::Method(m) => Json::obj(vec![
+                ("kind", Json::str("method")),
+                ("method", Json::str(m.method.key())),
+                ("n", Json::num(m.n as f64)),
+                ("strategy", Json::str(strategy_key(m.strategy))),
+                ("mac", Json::Bool(m.mac)),
+                ("rlmul_iters", Json::num(m.budget.rlmul_iters as f64)),
+                ("seed", Json::str(m.budget.seed.to_string())),
+            ]),
+            DesignRequest::Module(m) => Json::obj(vec![
+                (
+                    "kind",
+                    Json::str(match m.module {
+                        ModuleKind::Fir => "fir",
+                        ModuleKind::Systolic => "systolic",
+                    }),
+                ),
+                ("method", Json::str(m.method.key())),
+                ("n", Json::num(m.n as f64)),
+                ("strategy", Json::str(strategy_key(m.strategy))),
+                ("freq_hz", Json::num(m.freq_hz)),
+            ]),
+        }
+    }
+
+    /// Render to a JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a request back from [`Self::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<DesignRequest> {
+        let kind = str_field(j, "kind")?;
+        match kind {
+            "multiplier" => {
+                let order = match j.get("order") {
+                    None | Some(Json::Null) => None,
+                    Some(o) => Some(parse_order(
+                        o.as_str().ok_or_else(|| anyhow!("order must be a string"))?,
+                    )?),
+                };
+                let ct_plan = match j.get("ct_plan") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(plan_from_json(p)?),
+                };
+                let fdc = {
+                    let f = j.get("fdc").ok_or_else(|| anyhow!("missing field 'fdc'"))?;
+                    let ks = f
+                        .get("k")
+                        .and_then(|k| k.as_arr())
+                        .ok_or_else(|| anyhow!("fdc.k must be an array"))?;
+                    if ks.len() != 4 {
+                        bail!("fdc.k must have 4 entries");
+                    }
+                    let mut k = [0.0f64; 4];
+                    for (i, v) in ks.iter().enumerate() {
+                        k[i] = v.as_f64().ok_or_else(|| anyhow!("fdc.k[{i}] must be a number"))?;
+                    }
+                    let b = f
+                        .get("b")
+                        .and_then(|b| b.as_f64())
+                        .ok_or_else(|| anyhow!("fdc.b must be a number"))?;
+                    FdcModel { k, b }
+                };
+                Ok(DesignRequest::Multiplier(MulRequest {
+                    n: usize_field(j, "n")?,
+                    ppg: parse_ppg(str_field(j, "ppg")?)?,
+                    ct: parse_ct(str_field(j, "ct")?)?,
+                    order,
+                    ct_plan,
+                    cpa: parse_cpa(str_field(j, "cpa")?)?,
+                    strategy: str_field(j, "strategy")?.parse()?,
+                    mac: parse_mac(str_field(j, "mac")?)?,
+                    fdc,
+                }))
+            }
+            "method" => Ok(DesignRequest::Method(MethodRequest {
+                method: str_field(j, "method")?.parse()?,
+                n: usize_field(j, "n")?,
+                strategy: str_field(j, "strategy")?.parse()?,
+                mac: j
+                    .get("mac")
+                    .and_then(|b| b.as_bool())
+                    .ok_or_else(|| anyhow!("mac must be a bool"))?,
+                budget: BaselineBudget {
+                    rlmul_iters: usize_field(j, "rlmul_iters")?,
+                    seed: u64_str_field(j, "seed")?,
+                },
+            })),
+            "fir" | "systolic" => Ok(DesignRequest::Module(ModuleRequest {
+                module: if kind == "fir" { ModuleKind::Fir } else { ModuleKind::Systolic },
+                method: str_field(j, "method")?.parse()?,
+                n: usize_field(j, "n")?,
+                strategy: str_field(j, "strategy")?.parse()?,
+                freq_hz: j
+                    .get("freq_hz")
+                    .and_then(|f| f.as_f64())
+                    .ok_or_else(|| anyhow!("freq_hz must be a number"))?,
+            })),
+            other => bail!("unknown request kind '{other}'"),
+        }
+    }
+
+    /// Parse from a JSON string.
+    pub fn parse(text: &str) -> Result<DesignRequest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("request json: {e}"))?;
+        DesignRequest::from_json(&j)
+    }
+}
+
+impl MulRequest {
+    /// Lower back to the builder spec the synthesis pipeline consumes.
+    pub fn to_spec(&self) -> MultiplierSpec {
+        MultiplierSpec {
+            n: self.n,
+            ppg: self.ppg,
+            ct: self.ct,
+            order_override: self.order,
+            ct_plan: self.ct_plan.clone(),
+            cpa: self.cpa,
+            strategy: self.strategy,
+            fused_mac: self.mac == MacMode::Fused,
+            separate_mac: self.mac == MacMode::Separate,
+            fdc_model: self.fdc,
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Enum <-> string keys (stable across versions: they feed the hash).
+// -------------------------------------------------------------------
+
+fn ppg_key(p: PpgKind) -> &'static str {
+    match p {
+        PpgKind::AndArray => "and_array",
+        PpgKind::Booth4 => "booth4",
+    }
+}
+
+fn parse_ppg(s: &str) -> Result<PpgKind> {
+    match s {
+        "and_array" => Ok(PpgKind::AndArray),
+        "booth4" => Ok(PpgKind::Booth4),
+        _ => bail!("unknown ppg '{s}' (valid: and_array, booth4)"),
+    }
+}
+
+fn ct_key(c: CtArchitecture) -> &'static str {
+    match c {
+        CtArchitecture::UfoMac => "ufo",
+        CtArchitecture::UfoMacIlp => "ufo_ilp",
+        CtArchitecture::Wallace => "wallace",
+        CtArchitecture::Dadda => "dadda",
+        CtArchitecture::Gomil => "gomil",
+    }
+}
+
+fn parse_ct(s: &str) -> Result<CtArchitecture> {
+    match s {
+        "ufo" => Ok(CtArchitecture::UfoMac),
+        "ufo_ilp" => Ok(CtArchitecture::UfoMacIlp),
+        "wallace" => Ok(CtArchitecture::Wallace),
+        "dadda" => Ok(CtArchitecture::Dadda),
+        "gomil" => Ok(CtArchitecture::Gomil),
+        _ => bail!("unknown ct '{s}' (valid: ufo, ufo_ilp, wallace, dadda, gomil)"),
+    }
+}
+
+fn order_key(o: OrderStrategy) -> String {
+    match o {
+        OrderStrategy::Optimized => "optimized".to_string(),
+        OrderStrategy::Naive => "naive".to_string(),
+        OrderStrategy::Random(seed) => format!("random:{seed}"),
+    }
+}
+
+fn parse_order(s: &str) -> Result<OrderStrategy> {
+    if let Some(seed) = s.strip_prefix("random:") {
+        return Ok(OrderStrategy::Random(seed.parse().map_err(|_| anyhow!("bad seed '{seed}'"))?));
+    }
+    match s {
+        "optimized" => Ok(OrderStrategy::Optimized),
+        "naive" => Ok(OrderStrategy::Naive),
+        _ => bail!("unknown order '{s}' (valid: optimized, naive, random:<seed>)"),
+    }
+}
+
+fn prefix_key(p: PrefixStructure) -> String {
+    match p {
+        PrefixStructure::Ripple => "ripple".to_string(),
+        PrefixStructure::Sklansky => "sklansky".to_string(),
+        PrefixStructure::KoggeStone => "kogge_stone".to_string(),
+        PrefixStructure::BrentKung => "brent_kung".to_string(),
+        PrefixStructure::HanCarlson => "han_carlson".to_string(),
+        PrefixStructure::CarryIncrement(k) => format!("carry_increment:{k}"),
+    }
+}
+
+fn parse_prefix(s: &str) -> Result<PrefixStructure> {
+    if let Some(k) = s.strip_prefix("carry_increment:") {
+        return Ok(PrefixStructure::CarryIncrement(
+            k.parse().map_err(|_| anyhow!("bad block size '{k}'"))?,
+        ));
+    }
+    match s {
+        "ripple" => Ok(PrefixStructure::Ripple),
+        "sklansky" => Ok(PrefixStructure::Sklansky),
+        "kogge_stone" => Ok(PrefixStructure::KoggeStone),
+        "brent_kung" => Ok(PrefixStructure::BrentKung),
+        "han_carlson" => Ok(PrefixStructure::HanCarlson),
+        _ => bail!(
+            "unknown prefix structure '{s}' (valid: ripple, sklansky, kogge_stone, \
+             brent_kung, han_carlson, carry_increment:<k>)"
+        ),
+    }
+}
+
+fn cpa_key(c: &CpaChoice) -> String {
+    match c {
+        CpaChoice::ProfileOptimized => "profile".to_string(),
+        CpaChoice::Regular(p) => format!("regular:{}", prefix_key(*p)),
+    }
+}
+
+fn parse_cpa(s: &str) -> Result<CpaChoice> {
+    if s == "profile" {
+        return Ok(CpaChoice::ProfileOptimized);
+    }
+    if let Some(p) = s.strip_prefix("regular:") {
+        return Ok(CpaChoice::Regular(parse_prefix(p)?));
+    }
+    bail!("unknown cpa '{s}' (valid: profile, regular:<structure>)");
+}
+
+fn strategy_key(s: Strategy) -> &'static str {
+    s.key()
+}
+
+fn mac_key(m: MacMode) -> &'static str {
+    match m {
+        MacMode::None => "none",
+        MacMode::Fused => "fused",
+        MacMode::Separate => "separate",
+    }
+}
+
+fn parse_mac(s: &str) -> Result<MacMode> {
+    match s {
+        "none" => Ok(MacMode::None),
+        "fused" => Ok(MacMode::Fused),
+        "separate" => Ok(MacMode::Separate),
+        _ => bail!("unknown mac mode '{s}' (valid: none, fused, separate)"),
+    }
+}
+
+fn plan_to_json(p: &StagePlan) -> Json {
+    let grid = |g: &Vec<Vec<usize>>| {
+        Json::arr(
+            g.iter()
+                .map(|row| Json::arr(row.iter().map(|&x| Json::num(x as f64)).collect()))
+                .collect(),
+        )
+    };
+    Json::obj(vec![("f", grid(&p.f)), ("h", grid(&p.h))])
+}
+
+fn plan_from_json(j: &Json) -> Result<StagePlan> {
+    let grid = |key: &str| -> Result<Vec<Vec<usize>>> {
+        let rows = j
+            .get(key)
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow!("ct_plan.{key} must be an array"))?;
+        rows.iter()
+            .map(|row| {
+                let cells =
+                    row.as_arr().ok_or_else(|| anyhow!("ct_plan.{key} rows must be arrays"))?;
+                cells
+                    .iter()
+                    .map(|c| {
+                        c.as_f64()
+                            .map(|x| x as usize)
+                            .ok_or_else(|| anyhow!("ct_plan entries must be numbers"))
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    Ok(StagePlan { f: grid("f")?, h: grid("h")? })
+}
+
+// -------------------------------------------------------------------
+// JSON field helpers.
+// -------------------------------------------------------------------
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing or non-string field '{key}'"))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    let x = j
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{key}'"))?;
+    // Reject fractional, negative, and absurd values instead of silently
+    // truncating — this is the service entry point's first line of defense.
+    if x.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&x) {
+        bail!("field '{key}' must be a non-negative integer ≤ {}, got {x}", u32::MAX);
+    }
+    Ok(x as usize)
+}
+
+fn u64_str_field(j: &Json, key: &str) -> Result<u64> {
+    let s = str_field(j, key)?;
+    s.parse().map_err(|_| anyhow!("field '{key}' must be a decimal u64 string, got '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = DesignRequest::multiplier(8);
+        let b = DesignRequest::multiplier(8);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Every field change moves the hash.
+        let variants = [
+            DesignRequest::multiplier(9),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).strategy(Strategy::TimingDriven)),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).ppg(PpgKind::Booth4)),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).fused_mac(true)),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).ct(CtArchitecture::Wallace)),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).order(OrderStrategy::Naive)),
+        ];
+        for v in &variants {
+            assert_ne!(a.fingerprint(), v.fingerprint(), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn canonical_method_equals_explicit_spec() {
+        // A deterministic method request lowers to the spec it denotes.
+        let via_method = DesignRequest::method(Method::Gomil, 8, Strategy::TradeOff, false);
+        let via_spec =
+            DesignRequest::from_spec(&spec_for(Method::Gomil, 8, Strategy::TradeOff, false));
+        assert_eq!(via_method.fingerprint(), via_spec.fingerprint());
+        // ...and the budget cannot split the cache for non-search methods.
+        let other_budget = DesignRequest::Method(MethodRequest {
+            method: Method::Gomil,
+            n: 8,
+            strategy: Strategy::TradeOff,
+            mac: false,
+            budget: BaselineBudget { rlmul_iters: 999, seed: 1 },
+        });
+        assert_eq!(via_method.fingerprint(), other_budget.fingerprint());
+        // ...but it does matter for RL-MUL.
+        let rl_a = DesignRequest::method(Method::RlMul, 8, Strategy::TradeOff, false);
+        let rl_b = DesignRequest::Method(MethodRequest {
+            method: Method::RlMul,
+            n: 8,
+            strategy: Strategy::TradeOff,
+            mac: false,
+            budget: BaselineBudget { rlmul_iters: 999, seed: 1 },
+        });
+        assert_ne!(rl_a.fingerprint(), rl_b.fingerprint());
+    }
+
+    #[test]
+    fn canonical_zeroes_fdc_under_regular_cpa() {
+        let mut spec = MultiplierSpec::new(8).cpa(CpaChoice::Regular(PrefixStructure::Sklansky));
+        let a = DesignRequest::from_spec(&spec);
+        spec.fdc_model = FdcModel { k: [9.0; 4], b: 4.2 };
+        let b = DesignRequest::from_spec(&spec);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // With a profile-optimized CPA the model is live.
+        let mut spec2 = MultiplierSpec::new(8);
+        let c = DesignRequest::from_spec(&spec2);
+        spec2.fdc_model = FdcModel { k: [9.0; 4], b: 4.2 };
+        let d = DesignRequest::from_spec(&spec2);
+        assert_ne!(c.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn canonical_normalizes_dead_fields() {
+        // Strategy is only read by profile-optimized CPA synthesis: under a
+        // regular structure it must not split the cache.
+        let mk = |s: Strategy| {
+            DesignRequest::from_spec(
+                &MultiplierSpec::new(8)
+                    .cpa(CpaChoice::Regular(PrefixStructure::Sklansky))
+                    .strategy(s),
+            )
+        };
+        assert_eq!(mk(Strategy::AreaDriven).fingerprint(), mk(Strategy::TimingDriven).fingerprint());
+        // ...but it stays live under the profile-optimized CPA.
+        let live = |s: Strategy| DesignRequest::from_spec(&MultiplierSpec::new(8).strategy(s));
+        assert_ne!(
+            live(Strategy::AreaDriven).fingerprint(),
+            live(Strategy::TimingDriven).fingerprint()
+        );
+        // An explicit ct_plan overrides the architecture selector.
+        let plan = StagePlan { f: vec![vec![0, 1]], h: vec![vec![1, 0]] };
+        let with_ct = |ct: CtArchitecture| {
+            DesignRequest::from_spec(&MultiplierSpec::new(4).ct(ct).with_plan(plan.clone()))
+        };
+        assert_eq!(
+            with_ct(CtArchitecture::Wallace).fingerprint(),
+            with_ct(CtArchitecture::Gomil).fingerprint()
+        );
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_numbers() {
+        // Truncation at the service boundary is a silent wrong-design bug.
+        let base = DesignRequest::multiplier(8).to_json_string();
+        assert!(DesignRequest::parse(&base.replace("\"n\":8", "\"n\":8.9")).is_err());
+        assert!(DesignRequest::parse(&base.replace("\"n\":8", "\"n\":-3")).is_err());
+        assert!(DesignRequest::parse(&base.replace("\"n\":8", "\"n\":1e18")).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_all_forms() {
+        let reqs = vec![
+            DesignRequest::multiplier(16),
+            DesignRequest::from_spec(
+                &MultiplierSpec::new(6)
+                    .ppg(PpgKind::Booth4)
+                    .ct(CtArchitecture::Dadda)
+                    .cpa(CpaChoice::Regular(PrefixStructure::CarryIncrement(4)))
+                    .order(OrderStrategy::Random(0xDEAD_BEEF_DEAD_BEEF))
+                    .separate_mac(true),
+            ),
+            DesignRequest::method(Method::RlMul, 8, Strategy::TimingDriven, true),
+            DesignRequest::fir(Method::UfoMac, 8, Strategy::AreaDriven, 660e6),
+            DesignRequest::systolic(Method::Commercial, 8, Strategy::TradeOff, 1e9),
+        ];
+        for r in &reqs {
+            let s = r.to_json_string();
+            let back = DesignRequest::parse(&s).unwrap();
+            assert_eq!(s, back.to_json_string(), "unstable round-trip for {r:?}");
+            assert_eq!(r.fingerprint(), back.fingerprint());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_with_ct_plan() {
+        let plan = StagePlan { f: vec![vec![1, 2, 0], vec![0, 1, 1]], h: vec![vec![0, 0, 1], vec![1, 0, 0]] };
+        let r = DesignRequest::from_spec(&MultiplierSpec::new(4).with_plan(plan));
+        let back = DesignRequest::parse(&r.to_json_string()).unwrap();
+        assert_eq!(r.fingerprint(), back.fingerprint());
+        match back {
+            DesignRequest::Multiplier(m) => {
+                let p = m.ct_plan.unwrap();
+                assert_eq!(p.f, vec![vec![1, 2, 0], vec![0, 1, 1]]);
+                assert_eq!(p.h, vec![vec![0, 0, 1], vec![1, 0, 0]]);
+            }
+            other => panic!("wrong form {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(DesignRequest::parse("not json").is_err());
+        assert!(DesignRequest::parse("{\"kind\":\"warp_drive\"}").is_err());
+        assert!(DesignRequest::parse("{\"kind\":\"method\",\"method\":\"alien\"}").is_err());
+    }
+}

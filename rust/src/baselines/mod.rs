@@ -35,6 +35,34 @@ impl Method {
             Method::Commercial => "Commercial IP",
         }
     }
+
+    /// Stable machine-readable key (CLI flag value, request serialization).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::UfoMac => "ufo",
+            Method::Gomil => "gomil",
+            Method::RlMul => "rlmul",
+            Method::Commercial => "commercial",
+        }
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+
+    /// Strict parse: unknown names are an error listing the valid values
+    /// (no silent fallback).
+    fn from_str(s: &str) -> Result<Method> {
+        match s {
+            "ufo" | "ufo-mac" | "ufomac" => Ok(Method::UfoMac),
+            "gomil" => Ok(Method::Gomil),
+            "rlmul" | "rl-mul" => Ok(Method::RlMul),
+            "commercial" => Ok(Method::Commercial),
+            _ => Err(anyhow::anyhow!(
+                "unknown method '{s}' (valid: ufo, gomil, rlmul, commercial)"
+            )),
+        }
+    }
 }
 
 /// Budget knobs for the search-based baseline.
@@ -79,8 +107,48 @@ pub fn spec_for(method: Method, n: usize, strategy: Strategy, mac: bool) -> Mult
     }
 }
 
+/// Resolve `method` to the fully explicit [`MultiplierSpec`] it denotes,
+/// running the RL-MUL annealing search when the method requires it. This
+/// is the engine's uncached inner path; results are deterministic in
+/// `(method, n, strategy, mac, budget)`. `lib` is the caller's shared
+/// cell library (the engine passes its own — no per-call
+/// re-characterization).
+pub fn method_spec(
+    method: Method,
+    n: usize,
+    strategy: Strategy,
+    mac: bool,
+    budget: &BaselineBudget,
+    lib: &crate::ir::CellLib,
+) -> MultiplierSpec {
+    let spec = spec_for(method, n, strategy, mac);
+    if method != Method::RlMul {
+        return spec;
+    }
+    // Search the CT plan on the real PP shape (incl. MAC addend rows).
+    let mut scratch = crate::ir::Netlist::new("pp-probe");
+    let a: Vec<_> = (0..n).map(|i| scratch.input(format!("a{i}"))).collect();
+    let b: Vec<_> = (0..n).map(|i| scratch.input(format!("b{i}"))).collect();
+    let mut m = crate::ppg::and_array(&mut scratch, lib, &a, &b);
+    if mac {
+        let c: Vec<_> = (0..2 * n)
+            .map(|i| {
+                let id = scratch.input(format!("c{i}"));
+                crate::synth::Sig::new(id, 0.0)
+            })
+            .collect();
+        m.add_addend(&c);
+    }
+    let res = rlmul::search(&m.columns, budget.rlmul_iters, budget.seed);
+    spec.with_plan(res.plan)
+}
+
 /// Build a complete design for `method` (runs the RL-MUL search when
 /// needed).
+///
+/// Shim over the unified engine: the call is captured as a
+/// [`crate::api::DesignRequest::Method`] and served from the process-global
+/// engine's cache. New code should compile requests directly.
 pub fn build_design(
     method: Method,
     n: usize,
@@ -88,27 +156,15 @@ pub fn build_design(
     mac: bool,
     budget: &BaselineBudget,
 ) -> Result<Design> {
-    let mut spec = spec_for(method, n, strategy, mac);
-    if method == Method::RlMul {
-        // Search the CT plan on the real PP shape (incl. MAC addend rows).
-        let lib = crate::ir::CellLib::nangate45();
-        let mut scratch = crate::ir::Netlist::new("pp-probe");
-        let a: Vec<_> = (0..n).map(|i| scratch.input(format!("a{i}"))).collect();
-        let b: Vec<_> = (0..n).map(|i| scratch.input(format!("b{i}"))).collect();
-        let mut m = crate::ppg::and_array(&mut scratch, &lib, &a, &b);
-        if mac {
-            let c: Vec<_> = (0..2 * n)
-                .map(|i| {
-                    let id = scratch.input(format!("c{i}"));
-                    crate::synth::Sig::new(id, 0.0)
-                })
-                .collect();
-            m.add_addend(&c);
-        }
-        let res = rlmul::search(&m.columns, budget.rlmul_iters, budget.seed);
-        spec = spec.with_plan(res.plan);
-    }
-    spec.build()
+    let req = crate::api::DesignRequest::Method(crate::api::MethodRequest {
+        method,
+        n,
+        strategy,
+        mac,
+        budget: *budget,
+    });
+    let art = crate::api::engine().compile(&req)?;
+    Ok(art.design().expect("method artifact carries a design").clone())
 }
 
 #[cfg(test)]

@@ -8,10 +8,10 @@
 
 pub mod pool;
 
-use crate::baselines::{build_design, BaselineBudget, Method};
+use crate::api::{DesignArtifact, DesignRequest, EngineConfig, MethodRequest, SynthEngine};
+use crate::baselines::{BaselineBudget, Method};
 use crate::multiplier::Strategy;
 use crate::runtime::Runtime;
-use crate::sta::Sta;
 use crate::util::Json;
 use crate::Result;
 use std::path::Path;
@@ -68,7 +68,55 @@ impl Default for SweepConfig {
     }
 }
 
+/// The request grid a sweep compiles (method × width × strategy).
+pub fn sweep_requests(cfg: &SweepConfig) -> Vec<DesignRequest> {
+    let mut reqs = Vec::new();
+    for &n in &cfg.widths {
+        for &m in &cfg.methods {
+            for &s in &cfg.strategies {
+                reqs.push(DesignRequest::Method(MethodRequest {
+                    method: m,
+                    n,
+                    strategy: s,
+                    mac: cfg.mac,
+                    budget: cfg.budget,
+                }));
+            }
+        }
+    }
+    reqs
+}
+
+/// Project an engine artifact onto a sweep row.
+fn point_from_artifact(
+    method: Method,
+    n: usize,
+    strategy: Strategy,
+    mac: bool,
+    art: &DesignArtifact,
+) -> DesignPoint {
+    let ct_stages = art.design().map(|d| d.ct_stages).unwrap_or(0);
+    DesignPoint {
+        method,
+        n,
+        strategy,
+        mac,
+        delay_ns: art.sta.critical_delay_ns,
+        area_um2: art.sta.area_um2,
+        power_mw: art.sta.power_mw,
+        num_gates: art.sta.num_gates,
+        ct_stages,
+        verified: art.verified.unwrap_or(false),
+        pjrt_verified: art.pjrt_verified,
+    }
+}
+
 /// Evaluate one (method, width, strategy) point.
+///
+/// Shim over the unified engine (the design itself is served from the
+/// process-global cache); the per-call `verify_vectors` / `rt` knobs are
+/// honoured locally. New code should use [`run_sweep_with`] or compile a
+/// [`DesignRequest`] directly.
 pub fn evaluate_point(
     method: Method,
     n: usize,
@@ -78,56 +126,60 @@ pub fn evaluate_point(
     verify_vectors: usize,
     rt: Option<&Runtime>,
 ) -> Result<DesignPoint> {
-    let design = build_design(method, n, strategy, mac, budget)?;
-    let sta = Sta::default();
-    let rep = sta.analyze(&design.netlist);
-    let equiv = crate::equiv::check_multiplier_with(&design, verify_vectors)?;
+    let req = DesignRequest::Method(MethodRequest { method, n, strategy, mac, budget: *budget });
+    let art = crate::api::engine().compile(&req)?;
+    let design = art.design().expect("method artifact carries a design");
+    let equiv = crate::equiv::check_multiplier_with(design, verify_vectors)?;
     let pjrt_verified = match rt {
         Some(rt) if rt.has_artifact("netlist_eval_small") => {
-            crate::runtime::verify_design_pjrt(rt, &design, 1).ok()
+            crate::runtime::verify_design_pjrt(rt, design, 1).ok()
         }
-        _ => None,
+        _ => art.pjrt_verified,
     };
-    Ok(DesignPoint {
-        method,
-        n,
-        strategy,
-        mac,
-        delay_ns: rep.critical_delay_ns,
-        area_um2: rep.area_um2,
-        power_mw: rep.power_mw,
-        num_gates: rep.num_gates,
-        ct_stages: design.ct_stages,
-        verified: equiv.passed,
-        pjrt_verified,
-    })
+    let mut p = point_from_artifact(method, n, strategy, mac, &art);
+    p.verified = equiv.passed;
+    p.pjrt_verified = pjrt_verified;
+    Ok(p)
 }
 
-/// Run a full sweep in parallel.
-pub fn run_sweep(cfg: &SweepConfig) -> Vec<DesignPoint> {
-    let mut items = Vec::new();
-    for &n in &cfg.widths {
-        for &m in &cfg.methods {
-            for &s in &cfg.strategies {
-                items.push((m, n, s));
-            }
+/// Run a full sweep through a caller-provided engine: one
+/// [`SynthEngine::compile_batch`] fan-out over the request grid. Rows come
+/// back in grid order; failed compiles are dropped.
+///
+/// Re-running the same sweep on the same engine serves every design from
+/// the content-addressed cache (`engine.cache_stats()` shows the hits).
+///
+/// `DesignPoint::verified` reports the engine's per-compile equivalence
+/// check, so configure the engine with `verify_vectors > 0` (as
+/// [`run_sweep`] does from `cfg.verify_vectors`); on an engine that skips
+/// verification every row reports `verified: false` ("not known good"),
+/// not "checked and failed".
+pub fn run_sweep_with(engine: &SynthEngine, cfg: &SweepConfig) -> Vec<DesignPoint> {
+    let reqs = sweep_requests(cfg);
+    let arts = engine.compile_batch(&reqs);
+    let mut out = Vec::with_capacity(arts.len());
+    for (req, art) in reqs.iter().zip(arts) {
+        let (m, n, s, mac) = match req {
+            DesignRequest::Method(mr) => (mr.method, mr.n, mr.strategy, mr.mac),
+            _ => unreachable!("sweep grid is method requests"),
+        };
+        if let Ok(art) = art {
+            out.push(point_from_artifact(m, n, s, mac, &art));
         }
     }
-    let mac = cfg.mac;
-    let budget = cfg.budget;
-    let vectors = cfg.verify_vectors;
-    let use_pjrt = cfg.use_pjrt;
-    pool::par_map(cfg.workers, items, move |(m, n, s)| {
-        let rt = if use_pjrt {
-            Runtime::new(crate::runtime::default_artifact_dir()).ok()
-        } else {
-            None
-        };
-        evaluate_point(m, n, s, mac, &budget, vectors, rt.as_ref())
-    })
-    .into_iter()
-    .filter_map(|r| r.ok())
-    .collect()
+    out
+}
+
+/// Run a full sweep in parallel on a fresh engine configured from `cfg`
+/// (verification budget, PJRT cross-check, workers).
+pub fn run_sweep(cfg: &SweepConfig) -> Vec<DesignPoint> {
+    let engine = SynthEngine::new(EngineConfig {
+        verify_vectors: cfg.verify_vectors,
+        use_pjrt: cfg.use_pjrt,
+        workers: cfg.workers,
+        ..EngineConfig::default()
+    });
+    run_sweep_with(&engine, cfg)
 }
 
 /// Indices of the (delay, area) Pareto frontier, sorted by delay.

@@ -55,6 +55,47 @@ where
     run_jobs(workers, jobs)
 }
 
+/// Scoped parallel map: `f` and its captures are *borrowed* (no `'static`
+/// bound), and results come back in **input order**. This is the fan-out
+/// used by `api::SynthEngine::compile_batch`, which borrows the engine
+/// (cache, cell library) across the workers.
+///
+/// Unlike [`par_map`], a panic in `f` propagates out of the scope (the
+/// 1:1 input→output mapping leaves no slot to skip) — callers that need
+/// containment catch around `f` itself, as `compile_batch` does.
+pub fn par_map_scoped<I, T, F>(workers: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    // LIFO queue of (input index, item); indices restore order at the end.
+    let queue: Mutex<Vec<(usize, I)>> = Mutex::new(items.into_iter().enumerate().collect());
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let next = { queue.lock().unwrap().pop() };
+                match next {
+                    Some((i, item)) => {
+                        let v = f(item);
+                        results.lock().unwrap().push((i, v));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, v)| v).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +111,14 @@ mod tests {
     fn single_worker_works() {
         let out = par_map(1, vec![1, 2, 3], |x| x + 1);
         assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_borrows() {
+        let offset = 100; // borrowed by the closure — no 'static needed
+        let out = par_map_scoped(4, (0..64).collect::<Vec<i32>>(), |x| x + offset);
+        assert_eq!(out, (100..164).collect::<Vec<_>>());
+        assert!(par_map_scoped(3, Vec::<i32>::new(), |x| x).is_empty());
     }
 
     #[test]

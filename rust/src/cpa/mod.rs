@@ -32,6 +32,34 @@ pub enum CpaStrategy {
     TradeOff,
 }
 
+impl CpaStrategy {
+    /// Stable machine-readable key (CLI flag value, request serialization).
+    pub fn key(&self) -> &'static str {
+        match self {
+            CpaStrategy::AreaDriven => "area",
+            CpaStrategy::TimingDriven => "timing",
+            CpaStrategy::TradeOff => "tradeoff",
+        }
+    }
+}
+
+impl std::str::FromStr for CpaStrategy {
+    type Err = anyhow::Error;
+
+    /// Strict parse: unknown names are an error listing the valid values
+    /// (no silent fallback).
+    fn from_str(s: &str) -> Result<CpaStrategy, anyhow::Error> {
+        match s {
+            "area" => Ok(CpaStrategy::AreaDriven),
+            "timing" => Ok(CpaStrategy::TimingDriven),
+            "tradeoff" | "trade-off" => Ok(CpaStrategy::TradeOff),
+            _ => Err(anyhow::anyhow!(
+                "unknown strategy '{s}' (valid: area, timing, tradeoff)"
+            )),
+        }
+    }
+}
+
 /// §4.1 region boundaries detected from the CT arrival profile,
 /// *cost-aware*: region 1 (RCA) extends only while a ripple chain over the
 /// early-arriving LSBs still finishes before the flat region's data even

@@ -19,17 +19,51 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use ufo_mac::multiplier::{MultiplierSpec, Strategy};
-//! use ufo_mac::sta::Sta;
+//! Everything compiles through one path: describe *what* you want as a
+//! [`api::DesignRequest`], hand it to a [`api::SynthEngine`], get back an
+//! `Arc<`[`api::DesignArtifact`]`>` — netlist, STA report, verification
+//! status. The engine owns the shared cell library, timing models and STA,
+//! and keeps a content-addressed cache keyed by the request's canonical
+//! fingerprint, so identical requests (DSE sweeps, Pareto studies,
+//! repeated module instantiation) are synthesized exactly once.
 //!
-//! let spec = MultiplierSpec::new(8).strategy(Strategy::TradeOff);
-//! let design = spec.build().unwrap();
-//! let report = Sta::default().analyze(&design.netlist);
-//! assert!(report.critical_delay_ns > 0.0);
-//! assert!(ufo_mac::equiv::check_multiplier(&design).unwrap().passed);
+//! ```no_run
+//! use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+//! use ufo_mac::baselines::Method;
+//! use ufo_mac::multiplier::Strategy;
+//!
+//! // One engine per process (or use the global one behind the legacy API).
+//! let engine = SynthEngine::new(EngineConfig {
+//!     verify_vectors: 1 << 10, // simulator equivalence per design
+//!     ..EngineConfig::default()
+//! });
+//!
+//! // Single design.
+//! let art = engine.compile(&DesignRequest::multiplier(8))?;
+//! assert_eq!(art.verified, Some(true));
+//! println!("{:.4} ns / {:.1} µm²", art.sta.critical_delay_ns, art.sta.area_um2);
+//!
+//! // Batch fan-out over the thread pool; duplicates hit the cache.
+//! let grid: Vec<_> = [8usize, 16]
+//!     .into_iter()
+//!     .flat_map(|n| {
+//!         Method::ALL.into_iter().map(move |m| {
+//!             DesignRequest::method(m, n, Strategy::TradeOff, false)
+//!         })
+//!     })
+//!     .collect();
+//! let artifacts = engine.compile_batch(&grid);
+//! println!("cache: {:?}", engine.cache_stats());
+//! # Ok::<(), anyhow::Error>(())
 //! ```
+//!
+//! The pre-engine constructors (`MultiplierSpec::build`,
+//! `baselines::build_design`, `modules::{fir_report,systolic_report}`,
+//! `coordinator::evaluate_point`) remain as thin shims over the
+//! process-global engine — see the [`api`] module docs for the mapping
+//! from each legacy entry point to its request form.
 
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod cpa;

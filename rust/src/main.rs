@@ -1,5 +1,9 @@
 //! `ufo-mac` — CLI for the UFO-MAC arithmetic-synthesis framework.
 //!
+//! Every subcommand compiles its designs through the unified
+//! [`ufo_mac::api::SynthEngine`] (the process-global instance), so repeated
+//! designs inside one invocation are synthesized once.
+//!
 //! Subcommands:
 //!   generate  --width N [--method ufo|gomil|rlmul|commercial]
 //!             [--strategy area|timing|tradeoff] [--mac] [--booth]
@@ -11,56 +15,60 @@
 //!   systolic  --width N --freq 1e9     Table-2 style systolic report.
 //!   verify    --width N [--mac]        Simulator + PJRT equivalence.
 //!   ablation  --width N                Per-ingredient ablation table.
+//!   request   --json '<request>'       Compile a serialized DesignRequest.
+//!
+//! Unknown `--method` / `--strategy` values are hard errors listing the
+//! valid choices — no silent fallback.
 
-use ufo_mac::baselines::{build_design, BaselineBudget, Method};
+use ufo_mac::api::{engine, DesignRequest};
+use ufo_mac::baselines::Method;
 use ufo_mac::coordinator::{self, SweepConfig};
 use ufo_mac::ct::CtArchitecture;
 use ufo_mac::multiplier::{MultiplierSpec, Strategy};
 use ufo_mac::ppg::PpgKind;
-use ufo_mac::sta::Sta;
 use ufo_mac::util::{Args, Table};
 use ufo_mac::Result;
 
-fn parse_method(s: &str) -> Method {
-    match s {
-        "gomil" => Method::Gomil,
-        "rlmul" => Method::RlMul,
-        "commercial" => Method::Commercial,
-        _ => Method::UfoMac,
-    }
+fn parse_method(s: &str) -> Result<Method> {
+    s.parse()
 }
 
-fn parse_strategy(s: &str) -> Strategy {
-    match s {
-        "area" => Strategy::AreaDriven,
-        "timing" => Strategy::TimingDriven,
-        _ => Strategy::TradeOff,
-    }
+fn parse_strategy(s: &str) -> Result<Strategy> {
+    s.parse()
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let n = args.get_usize("width", 8);
-    let method = parse_method(args.get("method").unwrap_or("ufo"));
-    let strategy = parse_strategy(args.get("strategy").unwrap_or("tradeoff"));
+    let method = parse_method(args.get("method").unwrap_or("ufo"))?;
+    let strategy = parse_strategy(args.get("strategy").unwrap_or("tradeoff"))?;
     let mac = args.has("mac");
-    let design = if args.has("booth") {
-        MultiplierSpec::new(n).strategy(strategy).fused_mac(mac).ppg(PpgKind::Booth4).build()?
+    let booth = args.has("booth");
+    if booth && method != Method::UfoMac {
+        anyhow::bail!("--booth selects the UFO-MAC Booth-4 generator; drop --method {}", method.key());
+    }
+    let req = if booth {
+        DesignRequest::from_spec(
+            &MultiplierSpec::new(n).strategy(strategy).fused_mac(mac).ppg(PpgKind::Booth4),
+        )
     } else {
-        build_design(method, n, strategy, mac, &BaselineBudget::default())?
+        DesignRequest::method(method, n, strategy, mac)
     };
-    let rep = Sta::default().analyze(&design.netlist);
-    let equiv = ufo_mac::equiv::check_multiplier(&design)?;
+    let art = engine().compile(&req)?;
+    let design = art.design().expect("design request");
+    let equiv = ufo_mac::equiv::check_multiplier(design)?;
     println!(
-        "{} {}×{}{} [{strategy:?}]",
+        "{}{} {}×{}{} [{strategy:?}]",
         method.name(),
+        if booth { " (Booth-4)" } else { "" },
         n,
         n,
         if mac { " fused-MAC" } else { "" }
     );
-    println!("  gates:       {}", rep.num_gates);
-    println!("  area:        {:.1} µm²", rep.area_um2);
-    println!("  delay:       {:.4} ns", rep.critical_delay_ns);
-    println!("  power@1GHz:  {:.4} mW", rep.power_mw);
+    println!("  fingerprint: {}", art.fingerprint);
+    println!("  gates:       {}", art.sta.num_gates);
+    println!("  area:        {:.1} µm²", art.sta.area_um2);
+    println!("  delay:       {:.4} ns", art.sta.critical_delay_ns);
+    println!("  power@1GHz:  {:.4} mW", art.sta.power_mw);
     println!("  CT stages:   {}", design.ct_stages);
     println!(
         "  equivalence: {} ({} vectors{})",
@@ -77,7 +85,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_profile(args: &Args) -> Result<()> {
     let n = args.get_usize("width", 16);
-    let design = MultiplierSpec::new(n).build()?;
+    let art = engine().compile(&DesignRequest::multiplier(n))?;
+    let design = art.design().expect("design request");
     println!("CT output arrival profile ({n}×{n}, model estimate, ns):");
     let max = design.profile.iter().copied().fold(0.0f64, f64::max);
     for (j, t) in design.profile.iter().enumerate() {
@@ -147,7 +156,8 @@ fn cmd_fir(args: &Args) -> Result<()> {
     let freq = args.get_f64("freq", 1e9);
     let mut table = Table::new(&["method", "freq(MHz)", "WNS(ns)", "area(µm²)", "power(mW)"]);
     for m in Method::ALL {
-        let r = ufo_mac::modules::fir_report(m, n, Strategy::TradeOff, freq)?;
+        let art = engine().compile(&DesignRequest::fir(m, n, Strategy::TradeOff, freq))?;
+        let r = art.module_report().expect("fir report");
         table.row(vec![
             m.name().into(),
             format!("{:.0}", freq / 1e6),
@@ -165,7 +175,8 @@ fn cmd_systolic(args: &Args) -> Result<()> {
     let freq = args.get_f64("freq", 1e9);
     let mut table = Table::new(&["method", "freq(MHz)", "WNS(ns)", "area(µm²)", "power(mW)"]);
     for m in Method::ALL {
-        let r = ufo_mac::modules::systolic_report(m, n, Strategy::TradeOff, freq)?;
+        let art = engine().compile(&DesignRequest::systolic(m, n, Strategy::TradeOff, freq))?;
+        let r = art.module_report().expect("systolic report");
         table.row(vec![
             m.name().into(),
             format!("{:.0}", freq / 1e6),
@@ -181,8 +192,10 @@ fn cmd_systolic(args: &Args) -> Result<()> {
 fn cmd_verify(args: &Args) -> Result<()> {
     let n = args.get_usize("width", 8);
     let mac = args.has("mac");
-    let design = MultiplierSpec::new(n).fused_mac(mac).build()?;
-    let equiv = ufo_mac::equiv::check_multiplier(&design)?;
+    let art =
+        engine().compile(&DesignRequest::from_spec(&MultiplierSpec::new(n).fused_mac(mac)))?;
+    let design = art.design().expect("design request");
+    let equiv = ufo_mac::equiv::check_multiplier(design)?;
     println!(
         "simulator equivalence: {} ({} vectors)",
         if equiv.passed { "PASS" } else { "FAIL" },
@@ -191,7 +204,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let dir = ufo_mac::runtime::default_artifact_dir();
     let rt = ufo_mac::runtime::Runtime::new(&dir)?;
     if rt.has_artifact("netlist_eval_small") {
-        let ok = ufo_mac::runtime::verify_design_pjrt(&rt, &design, 4)?;
+        let ok = ufo_mac::runtime::verify_design_pjrt(&rt, design, 4)?;
         println!(
             "PJRT artifact equivalence ({}): {}",
             rt.platform(),
@@ -206,7 +219,6 @@ fn cmd_verify(args: &Args) -> Result<()> {
 fn cmd_ablation(args: &Args) -> Result<()> {
     // Ablation: isolate each UFO-MAC ingredient (DESIGN.md §4).
     let n = args.get_usize("width", 16);
-    let sta = Sta::default();
     let mut table = Table::new(&["variant", "delay(ns)", "area(µm²)", "stages"]);
     let variants: Vec<(&str, MultiplierSpec)> = vec![
         ("full UFO-MAC", MultiplierSpec::new(n)),
@@ -228,16 +240,41 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         ("dadda CT", MultiplierSpec::new(n).ct(CtArchitecture::Dadda)),
     ];
     for (name, spec) in variants {
-        let d = spec.build()?;
-        let r = sta.analyze(&d.netlist);
+        let art = engine().compile(&DesignRequest::from_spec(&spec))?;
+        let design = art.design().expect("design request");
         table.row(vec![
             name.into(),
-            format!("{:.4}", r.critical_delay_ns),
-            format!("{:.1}", r.area_um2),
-            d.ct_stages.to_string(),
+            format!("{:.4}", art.sta.critical_delay_ns),
+            format!("{:.1}", art.sta.area_um2),
+            design.ct_stages.to_string(),
         ]);
     }
     println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_request(args: &Args) -> Result<()> {
+    // Compile a serialized request — the service-style entry point.
+    let json = args
+        .get("json")
+        .ok_or_else(|| anyhow::anyhow!("usage: ufo-mac request --json '<DesignRequest json>'"))?;
+    let req = DesignRequest::parse(json)?;
+    let art = engine().compile(&req)?;
+    println!("fingerprint: {}", art.fingerprint);
+    println!("canonical:   {}", art.request.to_json_string());
+    println!(
+        "sta: {} gates, {:.1} µm², {:.4} ns, {:.4} mW",
+        art.sta.num_gates, art.sta.area_um2, art.sta.critical_delay_ns, art.sta.power_mw
+    );
+    if let Some(r) = art.module_report() {
+        println!(
+            "module: WNS {:.4} ns @ {:.0} MHz, {:.0} µm², {:.3} mW",
+            r.wns_ns,
+            r.freq_hz / 1e6,
+            r.area_um2,
+            r.power_mw
+        );
+    }
     Ok(())
 }
 
@@ -252,10 +289,12 @@ fn main() {
         "systolic" => cmd_systolic(&args),
         "verify" => cmd_verify(&args),
         "ablation" => cmd_ablation(&args),
+        "request" => cmd_request(&args),
         _ => {
             println!(
                 "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
-                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation> [flags]\n\
+                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|request> [flags]\n\
+                 methods: ufo, gomil, rlmul, commercial; strategies: area, timing, tradeoff\n\
                  see rust/src/main.rs header for flags"
             );
             Ok(())

@@ -9,11 +9,12 @@
 //! 4 stage adders, pipeline registers).
 
 use super::{ModuleReport, DFF_AREA_UM2, DFF_ENERGY_FJ};
-use crate::baselines::{build_design, BaselineBudget, Method};
+use crate::api::{engine, DesignRequest};
+use crate::baselines::Method;
 use crate::cpa::{self, CpaColumn, PrefixStructure};
 use crate::ir::{Netlist, NodeId};
-use crate::multiplier::Strategy;
-use crate::sta::Sta;
+use crate::multiplier::{Design, Strategy};
+use crate::sta::StaReport;
 use crate::synth::Sig;
 use crate::Result;
 
@@ -22,12 +23,12 @@ pub const TAPS: usize = 5;
 /// Report for one FIR configuration.
 pub type FirReport = ModuleReport;
 
-/// Build one transposed-FIR pipeline stage: `x × h + z` where `z` is the
-/// previous stage's registered output (arrives at t = 0, like `x`/`h`).
-/// Returns the netlist and the stage's output bits.
-pub fn build_fir_stage(method: Method, n: usize, strategy: Strategy) -> Result<(Netlist, Vec<NodeId>)> {
-    let budget = BaselineBudget::default();
-    let mult = build_design(method, n, strategy, false, &budget)?;
+/// Wrap a generated multiplier design into one transposed-FIR pipeline
+/// stage: `x × h + z` where `z` is the previous stage's registered output
+/// (arrives at t = 0, like `x`/`h`). Returns the netlist and the stage's
+/// output bits. This is the engine's inner path for FIR requests.
+pub fn stage_from_design(mult: &Design) -> Result<(Netlist, Vec<NodeId>)> {
+    let n = mult.n;
     let mut nl = mult.netlist.clone();
     // Stage adder: product (2n bits) + registered z (2n bits).
     let z: Vec<NodeId> = (0..2 * n).map(|i| nl.input(format!("z{i}"))).collect();
@@ -50,18 +51,24 @@ pub fn build_fir_stage(method: Method, n: usize, strategy: Strategy) -> Result<(
     Ok((nl, y))
 }
 
-/// Full 5-tap FIR report under a clock target.
+/// Build one transposed-FIR pipeline stage for a method's multiplier.
+///
+/// Shim over the unified engine: the inner multiplier comes from the
+/// process-global design cache. New code should compile
+/// [`DesignRequest::fir`] instead.
+pub fn build_fir_stage(method: Method, n: usize, strategy: Strategy) -> Result<(Netlist, Vec<NodeId>)> {
+    let art = engine().compile(&DesignRequest::method(method, n, strategy, false))?;
+    stage_from_design(art.design().expect("method artifact carries a design"))
+}
+
+/// Project a measured stage STA report onto the full 5-tap filter.
 ///
 /// Area/power: 5 multipliers + 4 stage adders (one stage netlist measured,
 /// scaled) + pipeline registers (4 stages × 2n bits + 5×n coefficient
 /// registers + n-bit input register).
-pub fn fir_report(method: Method, n: usize, strategy: Strategy, freq_hz: f64) -> Result<FirReport> {
-    let (stage, _) = build_fir_stage(method, n, strategy)?;
-    let sta = Sta { clock_ghz: freq_hz / 1e9, ..Sta::default() };
-    let rep = sta.analyze(&stage);
+pub fn report_from_stage(rep: &StaReport, n: usize, freq_hz: f64) -> FirReport {
     let period_ns = 1e9 / freq_hz;
     let wns_ns = period_ns - rep.critical_delay_ns;
-
     let regs = (TAPS - 1) * 2 * n + TAPS * n + n;
     // 5 multiplier+adder stages ≈ 5 × (stage area) minus the 5th stage's
     // adder (tap 4 has no incoming z) — keep the symmetric over-count of
@@ -69,7 +76,16 @@ pub fn fir_report(method: Method, n: usize, strategy: Strategy, freq_hz: f64) ->
     let area_um2 = TAPS as f64 * rep.area_um2 + regs as f64 * DFF_AREA_UM2;
     let power_mw = TAPS as f64 * rep.power_mw
         + regs as f64 * DFF_ENERGY_FJ * (freq_hz / 1e9) / 1000.0;
-    Ok(FirReport { freq_hz, wns_ns, area_um2, power_mw })
+    FirReport { freq_hz, wns_ns, area_um2, power_mw }
+}
+
+/// Full 5-tap FIR report under a clock target.
+///
+/// Shim over the unified engine ([`DesignRequest::fir`]); repeated calls
+/// are served from the content-addressed cache.
+pub fn fir_report(method: Method, n: usize, strategy: Strategy, freq_hz: f64) -> Result<FirReport> {
+    let art = engine().compile(&DesignRequest::fir(method, n, strategy, freq_hz))?;
+    Ok(art.module_report().expect("fir artifact carries a report").clone())
 }
 
 #[cfg(test)]

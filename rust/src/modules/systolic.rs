@@ -8,9 +8,10 @@
 //! `systolic` kernel the runtime executes for the end-to-end workload.
 
 use super::{ModuleReport, DFF_AREA_UM2, DFF_ENERGY_FJ};
-use crate::baselines::{build_design, BaselineBudget, Method};
+use crate::api::{engine, DesignRequest};
+use crate::baselines::Method;
 use crate::multiplier::{Design, Strategy};
-use crate::sta::Sta;
+use crate::sta::StaReport;
 use crate::Result;
 
 /// Array geometry (the paper's configuration).
@@ -20,23 +21,19 @@ pub const COLS: usize = 16;
 pub type SystolicReport = ModuleReport;
 
 /// Build one PE: an `n×n` fused MAC with a `2n`-bit accumulator operand.
+///
+/// Shim over the unified engine; the PE is the cached fused-MAC design for
+/// the method. New code should compile [`DesignRequest::systolic`].
 pub fn build_pe(method: Method, n: usize, strategy: Strategy) -> Result<Design> {
-    build_design(method, n, strategy, true, &BaselineBudget::default())
+    let art = engine().compile(&DesignRequest::method(method, n, strategy, true))?;
+    Ok(art.design().expect("method artifact carries a design").clone())
 }
 
-/// Table-2 style report for the full array at a clock target.
-pub fn systolic_report(
-    method: Method,
-    n: usize,
-    strategy: Strategy,
-    freq_hz: f64,
-) -> Result<SystolicReport> {
-    let pe = build_pe(method, n, strategy)?;
-    let sta = Sta { clock_ghz: freq_hz / 1e9, ..Sta::default() };
-    let rep = sta.analyze(&pe.netlist);
+/// Project a measured PE STA report onto the full array at a clock target
+/// (the engine's inner path for systolic requests).
+pub fn report_from_pe(rep: &StaReport, n: usize, freq_hz: f64) -> SystolicReport {
     let period_ns = 1e9 / freq_hz;
     let wns_ns = period_ns - rep.critical_delay_ns;
-
     let pes = (ROWS * COLS) as f64;
     // Per PE: two n-bit operand registers (a, b forwarding) + a 2n+1-bit
     // accumulator register.
@@ -44,7 +41,21 @@ pub fn systolic_report(
     let area_um2 = pes * (rep.area_um2 + regs_per_pe * DFF_AREA_UM2);
     let power_mw =
         pes * (rep.power_mw + regs_per_pe * DFF_ENERGY_FJ * (freq_hz / 1e9) / 1000.0);
-    Ok(SystolicReport { freq_hz, wns_ns, area_um2, power_mw })
+    SystolicReport { freq_hz, wns_ns, area_um2, power_mw }
+}
+
+/// Table-2 style report for the full array at a clock target.
+///
+/// Shim over the unified engine ([`DesignRequest::systolic`]); repeated
+/// calls are served from the content-addressed cache.
+pub fn systolic_report(
+    method: Method,
+    n: usize,
+    strategy: Strategy,
+    freq_hz: f64,
+) -> Result<SystolicReport> {
+    let art = engine().compile(&DesignRequest::systolic(method, n, strategy, freq_hz))?;
+    Ok(art.module_report().expect("systolic artifact carries a report").clone())
 }
 
 #[cfg(test)]

@@ -102,15 +102,31 @@ impl MultiplierSpec {
     }
 
     /// Build the gate-level design.
+    ///
+    /// Shim over the unified engine: the spec is captured as a
+    /// [`crate::api::DesignRequest`] and compiled by the process-global
+    /// [`crate::api::SynthEngine`], so repeated identical builds are
+    /// served from the content-addressed design cache. New code should
+    /// compile requests directly.
     pub fn build(&self) -> Result<Design> {
+        // Validate the one state a DesignRequest cannot represent.
+        if self.fused_mac && self.separate_mac {
+            bail!("fused_mac and separate_mac are mutually exclusive");
+        }
+        let art = crate::api::engine().compile(&crate::api::DesignRequest::from_spec(self))?;
+        Ok(art.design().expect("multiplier artifact carries a design").clone())
+    }
+
+    /// Build against a caller-provided cell library and timing model —
+    /// the engine's uncached inner path. Prefer [`MultiplierSpec::build`]
+    /// (cached) unless you are the engine.
+    pub fn build_with(&self, lib: &CellLib, tm: &CompressorTiming) -> Result<Design> {
         if self.n < 2 {
             bail!("multiplier width must be ≥ 2");
         }
         if self.fused_mac && self.separate_mac {
             bail!("fused_mac and separate_mac are mutually exclusive");
         }
-        let lib = CellLib::nangate45();
-        let tm = CompressorTiming::from_lib(&lib);
         let n = self.n;
         let mut nl = Netlist::new(format!(
             "{}{}x{}",
@@ -129,9 +145,9 @@ impl MultiplierSpec {
         // PPG. Fused MACs produce a 2n+1-bit result, so a Booth matrix
         // must stay exact one column further (its compaction is modular).
         let mut matrix = if self.ppg == PpgKind::Booth4 && self.fused_mac {
-            ppg::booth4_wide(&mut nl, &lib, &a, &b, 2 * n + 1)
+            ppg::booth4_wide(&mut nl, lib, &a, &b, 2 * n + 1)
         } else {
-            ppg::generate(&mut nl, &lib, self.ppg, &a, &b)
+            ppg::generate(&mut nl, lib, self.ppg, &a, &b)
         };
         if self.fused_mac {
             let addend: Vec<Sig> = c.iter().map(|&id| Sig::new(id, 0.0)).collect();
@@ -145,13 +161,13 @@ impl MultiplierSpec {
                 cols.resize(plan.width().max(cols.len()), Vec::new());
                 ct::build_ct(
                     &mut nl,
-                    &tm,
+                    tm,
                     cols,
                     plan,
                     self.order_override.unwrap_or(OrderStrategy::Naive),
                 )
             }
-            None => ct::synthesize(&mut nl, &tm, matrix.columns, self.ct, self.order_override),
+            None => ct::synthesize(&mut nl, tm, matrix.columns, self.ct, self.order_override),
         };
 
         // CPA over the two compressed rows.

@@ -1,9 +1,11 @@
-//! Offline-build utilities: deterministic RNG, a minimal JSON writer, and a
-//! tiny CLI argument helper.
+//! Offline-build utilities: deterministic RNG, a minimal JSON value with
+//! writer *and* parser, and a tiny CLI argument helper.
 //!
 //! The build environment vendors only the `xla` dependency closure, so the
 //! usual ecosystem crates (`rand`, `serde_json`, `clap`) are implemented
-//! here at the scale this project needs.
+//! here at the scale this project needs. The parser exists for the `api`
+//! layer's [`crate::api::DesignRequest`] round-trip; reports are still
+//! write-only.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -165,6 +167,255 @@ impl Json {
     }
 }
 
+impl Json {
+    /// Parse a JSON document (strict enough for round-tripping [`Json`]
+    /// output; accepts standard JSON with arbitrary whitespace).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { text, bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            return Err(format!("trailing data at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs.as_slice()),
+            _ => None,
+        }
+    }
+    /// Object field access (`None` for missing key or non-object).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(map) => map.get(key),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    /// The input as a str (UTF-8 validity is established once, here).
+    text: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> Result<(), String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(format!("expected '{lit}' at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => {
+                self.eat_lit("null")?;
+                Ok(Json::Null)
+            }
+            Some(b't') => {
+                self.eat_lit("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.eat_lit("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut xs = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                loop {
+                    xs.push(self.value()?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                        }
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(xs));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = BTreeMap::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    self.eat(b':')?;
+                    let val = self.value()?;
+                    map.insert(key, val);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                        }
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(map));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected byte at {}", self.pos)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b) if b.is_ascii_digit() || b == b'.' || b == b'e' || b == b'E' || b == b'+' || b == b'-')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number '{s}': {e}"))
+    }
+
+    /// Four hex digits starting at `start`, as a code unit.
+    fn hex4(&self, start: usize) -> Result<u32, String> {
+        if start + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let hex = std::str::from_utf8(&self.bytes[start..start + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        u32::from_str_radix(hex, 16).map_err(|_| format!("bad \\u escape '{hex}'"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000c}'),
+                        Some(b'u') => {
+                            let hi = self.hex4(self.pos + 1)?;
+                            self.pos += 4;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: RFC 8259 pairs it with a
+                                // following \uDC00-\uDFFF escape.
+                                if self.bytes.get(self.pos + 1) != Some(&b'\\')
+                                    || self.bytes.get(self.pos + 2) != Some(&b'u')
+                                {
+                                    return Err("unpaired high surrogate".to_string());
+                                }
+                                let lo = self.hex4(self.pos + 3)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(format!("bad low surrogate {lo:#06x}"));
+                                }
+                                self.pos += 6;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| format!("bad codepoint {code:#x}"))?,
+                            );
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.pos)),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 character. `text` was validated on
+                    // entry and `pos` only ever lands on char boundaries
+                    // (escapes are ASCII), so this is O(1) per char.
+                    let c = self
+                        .text
+                        .get(self.pos..)
+                        .and_then(|s| s.chars().next())
+                        .ok_or_else(|| "invalid utf-8 boundary".to_string())?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+}
+
 /// Very small flag parser: `--key value` and `--switch` styles.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -292,6 +543,57 @@ mod tests {
         ]);
         let s = j.render();
         assert_eq!(s, r#"{"name":"a\"b\\c\n","xs":[1.5,null,true]}"#);
+    }
+
+    #[test]
+    fn json_parses_own_output() {
+        let j = Json::obj(vec![
+            ("name", Json::str("a\"b\\c\nμ")),
+            ("xs", Json::arr(vec![Json::num(1.5), Json::Null, Json::Bool(true)])),
+            ("neg", Json::num(-3.25e-2)),
+            ("empty_arr", Json::arr(vec![])),
+            ("empty_obj", Json::Obj(Default::default())),
+        ]);
+        let s = j.render();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.render(), s);
+        assert_eq!(back.get("name").unwrap().as_str().unwrap(), "a\"b\\c\nμ");
+        assert_eq!(back.get("neg").unwrap().as_f64().unwrap(), -3.25e-2);
+        assert_eq!(back.get("xs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn json_parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,2").is_err());
+        assert!(Json::parse("true false").is_err());
+    }
+
+    #[test]
+    fn json_parse_surrogate_pairs() {
+        // RFC 8259 escaping of non-BMP characters (e.g. serde_json with
+        // escape_non_ascii): "\ud83d\ude00" is U+1F600 (😀).
+        let pair = "\"\\ud83d\\ude00\"";
+        assert_eq!(Json::parse(pair).unwrap().as_str().unwrap(), "\u{1F600}");
+        // BMP escapes and raw pass-through UTF-8 still work.
+        assert_eq!(Json::parse("\"\\u00b5m\"").unwrap().as_str().unwrap(), "µm");
+        assert_eq!(Json::parse("\"µm😀\"").unwrap().as_str().unwrap(), "µm😀");
+        // Unpaired or malformed surrogates are rejected, not mangled.
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        assert!(Json::parse("\"\\ud83dA\"").is_err());
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err());
+    }
+
+    #[test]
+    fn json_f64_roundtrip_is_exact() {
+        // Rust's f64 Display prints the shortest round-tripping form, so
+        // render → parse must be bit-exact for request fingerprints.
+        for x in [0.1, 1.0 / 3.0, 6.02e23, -0.0, 5e-324, f64::MAX] {
+            let s = Json::num(x).render();
+            let y = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
     }
 
     #[test]

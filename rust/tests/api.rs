@@ -1,0 +1,216 @@
+//! Integration tests for the unified API layer: fingerprint stability,
+//! JSON round-trips, cache behaviour under repeated sweeps, and
+//! batch-vs-serial compile equivalence.
+
+use std::sync::Arc;
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::baselines::Method;
+use ufo_mac::coordinator::{self, SweepConfig};
+use ufo_mac::multiplier::{MultiplierSpec, Strategy};
+
+// ---------------------------------------------------------------------
+// Fingerprints: same request ⇒ same hash; any field change ⇒ different.
+// ---------------------------------------------------------------------
+#[test]
+fn fingerprint_stability_across_constructions() {
+    let a = DesignRequest::method(Method::UfoMac, 8, Strategy::TradeOff, false);
+    let b = DesignRequest::method(Method::UfoMac, 8, Strategy::TradeOff, false);
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.fingerprint().to_string(), b.fingerprint().to_string());
+
+    // Field-by-field sensitivity over the method axis.
+    let mutations = [
+        DesignRequest::method(Method::Gomil, 8, Strategy::TradeOff, false),
+        DesignRequest::method(Method::UfoMac, 16, Strategy::TradeOff, false),
+        DesignRequest::method(Method::UfoMac, 8, Strategy::AreaDriven, false),
+        DesignRequest::method(Method::UfoMac, 8, Strategy::TradeOff, true),
+    ];
+    for m in &mutations {
+        assert_ne!(a.fingerprint(), m.fingerprint(), "{m:?}");
+    }
+
+    // Module requests: frequency is part of the identity.
+    let f1 = DesignRequest::fir(Method::UfoMac, 8, Strategy::TradeOff, 1e9);
+    let f2 = DesignRequest::fir(Method::UfoMac, 8, Strategy::TradeOff, 2e9);
+    assert_ne!(f1.fingerprint(), f2.fingerprint());
+}
+
+// ---------------------------------------------------------------------
+// JSON round-trip preserves identity for every request form.
+// ---------------------------------------------------------------------
+#[test]
+fn json_roundtrip_preserves_fingerprint() {
+    let reqs = vec![
+        DesignRequest::multiplier(12),
+        DesignRequest::from_spec(&MultiplierSpec::new(5).fused_mac(true)),
+        DesignRequest::method(Method::RlMul, 8, Strategy::TimingDriven, false),
+        DesignRequest::fir(Method::Commercial, 8, Strategy::AreaDriven, 660e6),
+        DesignRequest::systolic(Method::UfoMac, 8, Strategy::TradeOff, 1e9),
+    ];
+    for r in reqs {
+        let text = r.to_json_string();
+        let back = DesignRequest::parse(&text).expect("parse back");
+        assert_eq!(r.fingerprint(), back.fingerprint(), "{text}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: a repeated identical request is served from cache, with
+// identical Arc and fingerprint, and hits > 0.
+// ---------------------------------------------------------------------
+#[test]
+fn repeated_request_hits_cache_with_identical_arc() {
+    let engine = SynthEngine::new(EngineConfig::default());
+    let req = DesignRequest::method(Method::UfoMac, 8, Strategy::TradeOff, false);
+    let first = engine.compile(&req).unwrap();
+    let second = engine.compile(&req).unwrap();
+    assert!(Arc::ptr_eq(&first, &second));
+    assert_eq!(first.fingerprint, second.fingerprint);
+    let stats = engine.cache_stats();
+    assert!(stats.hits > 0, "stats {stats:?}");
+    assert_eq!(stats.entries, 1);
+}
+
+// ---------------------------------------------------------------------
+// Repeated sweep: second pass is all cache hits, zero new entries.
+// ---------------------------------------------------------------------
+#[test]
+fn repeated_sweep_is_served_from_cache() {
+    let cfg = SweepConfig {
+        widths: vec![4],
+        methods: vec![Method::UfoMac, Method::Commercial],
+        strategies: vec![Strategy::TradeOff, Strategy::AreaDriven],
+        mac: false,
+        workers: 2,
+        budget: ufo_mac::baselines::BaselineBudget { rlmul_iters: 2, seed: 1 },
+        verify_vectors: 128,
+        use_pjrt: false,
+    };
+    let engine = Arc::new(SynthEngine::new(EngineConfig {
+        verify_vectors: cfg.verify_vectors,
+        workers: cfg.workers,
+        ..EngineConfig::default()
+    }));
+    let first = coordinator::run_sweep_with(&engine, &cfg);
+    assert_eq!(first.len(), 4);
+    assert!(first.iter().all(|p| p.verified));
+    let cold = engine.cache_stats();
+    assert_eq!(cold.entries, 4);
+
+    let second = coordinator::run_sweep_with(&engine, &cfg);
+    let warm = engine.cache_stats();
+    assert_eq!(second.len(), 4);
+    assert_eq!(warm.entries, cold.entries, "no new synthesis on the repeat sweep");
+    assert!(warm.hits >= cold.hits + 4, "all four points must be cache hits");
+
+    // The rows themselves are identical.
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.delay_ns, b.delay_ns);
+        assert_eq!(a.area_um2, b.area_um2);
+        assert_eq!(a.num_gates, b.num_gates);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batch compile ≡ serial compile (same artifacts, same order).
+// ---------------------------------------------------------------------
+#[test]
+fn batch_compile_matches_serial() {
+    let reqs: Vec<DesignRequest> = [3usize, 4, 5]
+        .into_iter()
+        .flat_map(|n| {
+            [Strategy::TradeOff, Strategy::AreaDriven]
+                .into_iter()
+                .map(move |s| DesignRequest::method(Method::UfoMac, n, s, false))
+        })
+        .collect();
+
+    let serial_engine = Arc::new(SynthEngine::new(EngineConfig::default()));
+    let serial: Vec<_> =
+        reqs.iter().map(|r| serial_engine.compile(r).unwrap()).collect();
+
+    let batch_engine = Arc::new(SynthEngine::new(EngineConfig {
+        workers: 3,
+        ..EngineConfig::default()
+    }));
+    let batch: Vec<_> = batch_engine
+        .compile_batch(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+
+    assert_eq!(serial.len(), batch.len());
+    for (i, (s, b)) in serial.iter().zip(&batch).enumerate() {
+        assert_eq!(s.fingerprint, b.fingerprint, "row {i} out of order");
+        assert_eq!(s.sta.num_gates, b.sta.num_gates, "row {i}");
+        assert_eq!(s.sta.critical_delay_ns, b.sta.critical_delay_ns, "row {i}");
+        assert_eq!(s.sta.area_um2, b.sta.area_um2, "row {i}");
+    }
+
+    // Duplicates inside one batch collapse to the same Arc.
+    let dup = vec![reqs[0].clone(), reqs[0].clone(), reqs[0].clone()];
+    let arts: Vec<_> =
+        batch_engine.compile_batch(&dup).into_iter().map(|r| r.unwrap()).collect();
+    assert!(Arc::ptr_eq(&arts[0], &arts[1]) && Arc::ptr_eq(&arts[1], &arts[2]));
+}
+
+// ---------------------------------------------------------------------
+// The legacy shims and the engine agree (they are the same path).
+// ---------------------------------------------------------------------
+#[test]
+fn legacy_shims_share_the_global_engine_cache() {
+    let spec = MultiplierSpec::new(7).strategy(Strategy::TimingDriven);
+    let via_build = spec.build().unwrap();
+    let via_engine = ufo_mac::api::engine()
+        .compile(&DesignRequest::from_spec(&spec))
+        .unwrap();
+    let d = via_engine.design().unwrap();
+    assert_eq!(via_build.netlist.len(), d.netlist.len());
+    assert_eq!(via_build.ct_stages, d.ct_stages);
+    assert_eq!(via_build.profile, d.profile);
+}
+
+// ---------------------------------------------------------------------
+// Strict CLI-facing parsing (satellite): unknown names are errors that
+// list the valid values.
+// ---------------------------------------------------------------------
+#[test]
+fn method_and_strategy_parse_strictly() {
+    assert_eq!("ufo".parse::<Method>().unwrap(), Method::UfoMac);
+    assert_eq!("gomil".parse::<Method>().unwrap(), Method::Gomil);
+    assert_eq!("rlmul".parse::<Method>().unwrap(), Method::RlMul);
+    assert_eq!("commercial".parse::<Method>().unwrap(), Method::Commercial);
+    let err = "warp".parse::<Method>().unwrap_err().to_string();
+    assert!(err.contains("ufo") && err.contains("gomil") && err.contains("rlmul"), "{err}");
+
+    assert_eq!("area".parse::<Strategy>().unwrap(), Strategy::AreaDriven);
+    assert_eq!("timing".parse::<Strategy>().unwrap(), Strategy::TimingDriven);
+    assert_eq!("tradeoff".parse::<Strategy>().unwrap(), Strategy::TradeOff);
+    let err = "fast".parse::<Strategy>().unwrap_err().to_string();
+    assert!(err.contains("area") && err.contains("timing") && err.contains("tradeoff"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Module requests through the engine produce the same reports as the
+// legacy helpers and share the inner design cache entry.
+// ---------------------------------------------------------------------
+#[test]
+fn module_requests_match_legacy_reports() {
+    let engine = SynthEngine::new(EngineConfig::default());
+    let art = engine
+        .compile(&DesignRequest::fir(Method::UfoMac, 4, Strategy::TradeOff, 1e9))
+        .unwrap();
+    let via_engine = art.module_report().unwrap();
+    let via_legacy =
+        ufo_mac::modules::fir_report(Method::UfoMac, 4, Strategy::TradeOff, 1e9).unwrap();
+    assert_eq!(via_engine.wns_ns, via_legacy.wns_ns);
+    assert_eq!(via_engine.area_um2, via_legacy.area_um2);
+
+    let sys = engine
+        .compile(&DesignRequest::systolic(Method::UfoMac, 4, Strategy::TradeOff, 1e9))
+        .unwrap();
+    assert!(sys.design().unwrap().is_mac, "PE must be a fused MAC");
+    let legacy =
+        ufo_mac::modules::systolic_report(Method::UfoMac, 4, Strategy::TradeOff, 1e9).unwrap();
+    assert_eq!(sys.module_report().unwrap().area_um2, legacy.area_um2);
+}

@@ -1,0 +1,179 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The build image vendors no registry crates, so this package implements
+//! the subset of anyhow's API that the `ufo_mac` crate uses: the erased
+//! [`Error`] type with context chaining, the [`Result`] alias, the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`. Semantics match the real
+//! crate for these uses; downcasting and backtraces are not provided.
+
+use std::fmt;
+
+/// Dynamically typed error with an optional chain of context messages.
+pub struct Error {
+    msg: String,
+    /// Outermost context first, like anyhow's `{:#}` rendering.
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with an additional layer of context.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Self {
+        self.context.push(ctx.to_string());
+        self
+    }
+
+    fn render(&self, f: &mut fmt::Formatter<'_>, chain: bool) -> fmt::Result {
+        match self.context.last() {
+            None => write!(f, "{}", self.msg)?,
+            Some(outer) => {
+                write!(f, "{outer}")?;
+                if chain {
+                    for c in self.context.iter().rev().skip(1) {
+                        write!(f, ": {c}")?;
+                    }
+                    write!(f, ": {}", self.msg)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` shows the outermost message; `{:#}` shows the full chain.
+        self.render(f, f.alternate())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.render(f, true)
+    }
+}
+
+// Like the real crate: any std error converts via `?`. `Error` itself does
+// not implement `std::error::Error`, which keeps this impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert!(check(3).is_ok());
+        assert!(check(30).is_err());
+    }
+}
