@@ -3,13 +3,24 @@
 //! bit-parallel simulator dominates equivalence checks + power estimation,
 //! bottleneck assignment dominates CT construction, and full design
 //! builds dominate the coordinator's jobs.
+//!
+//! Two comparative groups anchor the perf trajectory:
+//!
+//! - **full vs incremental STA** on the repeated-optimization-move path
+//!   (one input arrival shifts per move, as CT/CPA optimization does);
+//! - **serial vs parallel branch & bound** on the §3.3 stage-assignment
+//!   ILP.
+//!
+//! Results land in `BENCH_hotpath.json` via `Bench::finish`.
 
 use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
 use ufo_mac::bench::Bench;
+use ufo_mac::cpa::{self, PrefixStructure};
 use ufo_mac::ilp::assignment::bottleneck_assignment;
+use ufo_mac::ilp::SolveOptions;
 use ufo_mac::multiplier::MultiplierSpec;
 use ufo_mac::sim::Simulator;
-use ufo_mac::sta::Sta;
+use ufo_mac::sta::{IncrementalSta, Sta};
 use ufo_mac::util::Rng;
 
 fn main() {
@@ -90,4 +101,67 @@ fn main() {
     });
     let s = warm.cache_stats();
     bench.metric("engine_cache_hit_rate_16bit", s.hit_rate(), "fraction");
+    let art = warm.compile(&req).unwrap();
+    bench.metric("engine_timing_retime_fraction_16bit", art.timing.retime_fraction(), "fraction");
+
+    // Full vs incremental STA on the repeated-optimization-move path: each
+    // "move" shifts one middle-column input arrival of a 32-bit adder
+    // carrying a trapezoidal CT profile (what a CT interconnect swap or a
+    // revised column profile does to the CPA), then re-times. The full
+    // path re-runs whole-netlist STA; the incremental path re-times only
+    // the touched fan-out cone.
+    let n_bits = 32usize;
+    let profile: Vec<f64> = (0..n_bits)
+        .map(|i| 0.2 + 0.15 * (16.0 - (i as f64 - 16.0).abs()) / 16.0)
+        .collect();
+    let g = cpa::build(PrefixStructure::Sklansky, n_bits);
+    let (mut nl_full, _) = cpa::standalone_adder(&g, Some(&profile));
+    let (mut nl_inc, _) = cpa::standalone_adder(&g, Some(&profile));
+    let sta_fast = Sta { activity_rounds: 0, ..Sta::default() };
+    let inputs_full = nl_full.inputs();
+    let inputs_inc = nl_inc.inputs();
+    let mut k = 0usize;
+    let full_stats = bench.bench("sta_move_full_retime_32bit_adder", || {
+        let id = inputs_full[16 + (k % 24)];
+        nl_full.set_input_arrival(id, 0.2 + 0.01 * ((k % 7) as f64));
+        k += 1;
+        sta_fast.arrivals_ns(&nl_full).iter().copied().fold(0.0f64, f64::max)
+    });
+    let mut inc = IncrementalSta::new(&sta_fast, &nl_inc);
+    let mut k2 = 0usize;
+    let inc_stats = bench.bench("sta_move_incremental_retime_32bit_adder", || {
+        let id = inputs_inc[16 + (k2 % 24)];
+        nl_inc.set_input_arrival(id, 0.2 + 0.01 * ((k2 % 7) as f64));
+        k2 += 1;
+        inc.touch(id);
+        inc.propagate(&nl_inc);
+        inc.arrivals().iter().copied().fold(0.0f64, f64::max)
+    });
+    bench.metric(
+        "sta_incremental_speedup_move_path",
+        full_stats.mean_ns / inc_stats.mean_ns.max(1.0),
+        "x",
+    );
+    bench.metric("sta_incremental_retime_fraction", inc.stats().retime_fraction(), "fraction");
+
+    // Serial vs parallel branch & bound on the §3.3 stage-assignment ILP.
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+    let n_ilp = 6usize;
+    let pp: Vec<usize> =
+        (0..2 * n_ilp - 1).map(|j| n_ilp.min(j + 1).min(2 * n_ilp - 1 - j)).collect();
+    let counts = ufo_mac::ct::CtCounts::from_populations(&pp);
+    let ilp_opts = |threads: usize| SolveOptions {
+        time_limit: std::time::Duration::from_secs(15),
+        threads,
+        ..Default::default()
+    };
+    let ser = bench.bench(&format!("stage_ilp_{n_ilp}bit_serial"), || {
+        ufo_mac::ct::assign_ilp(&counts, &ilp_opts(1)).0.stages()
+    });
+    let par = bench.bench(&format!("stage_ilp_{n_ilp}bit_parallel_{threads}t"), || {
+        ufo_mac::ct::assign_ilp(&counts, &ilp_opts(threads)).0.stages()
+    });
+    bench.metric("ilp_parallel_speedup", ser.mean_ns / par.mean_ns.max(1.0), "x");
+
+    bench.finish().expect("write BENCH_hotpath.json");
 }

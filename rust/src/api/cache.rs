@@ -15,8 +15,11 @@ use std::sync::{Arc, Mutex};
 /// Aggregate cache counters (monotone over the cache's lifetime).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that required a fresh synthesis.
     pub misses: u64,
+    /// Artifacts currently cached.
     pub entries: usize,
 }
 
@@ -40,6 +43,7 @@ pub struct DesignCache {
 }
 
 impl DesignCache {
+    /// Empty cache split over `shards` mutexes (min 1).
     pub fn new(shards: usize) -> Self {
         let shards = shards.max(1);
         DesignCache {
@@ -78,6 +82,7 @@ impl DesignCache {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// Whether the cache currently holds no artifacts.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -89,6 +94,7 @@ impl DesignCache {
         }
     }
 
+    /// Aggregate hit/miss/entry counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),

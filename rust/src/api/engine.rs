@@ -17,7 +17,7 @@ use crate::ir::{CellLib, Netlist, NodeId};
 use crate::modules::{self, ModuleReport};
 use crate::multiplier::Design;
 use crate::runtime::{default_artifact_dir, verify_design_pjrt, Runtime};
-use crate::sta::{Sta, StaReport};
+use crate::sta::{Sta, StaReport, TimingStats};
 use crate::synth::CompressorTiming;
 use crate::Result;
 use anyhow::anyhow;
@@ -67,10 +67,19 @@ pub enum ArtifactBody {
 pub struct DesignArtifact {
     /// The canonical form of the request that produced this artifact.
     pub request: DesignRequest,
+    /// Content hash of the canonical request (the cache key).
     pub fingerprint: Fingerprint,
     /// STA of [`Self::netlist`] (clocked at the request frequency for
     /// module requests, at the engine default otherwise).
     pub sta: StaReport,
+    /// Cumulative timing-evaluation work behind this artifact: the CPA
+    /// optimization's incremental delay-cache passes, the candidate-scoring
+    /// STA sweeps, the engine's own analysis pass, and (for module
+    /// requests) the inner design's work. `timing.retime_fraction()` < 1
+    /// means the incremental engines skipped re-evaluation work that
+    /// from-scratch re-timing would have paid.
+    pub timing: TimingStats,
+    /// The compiled payload.
     pub body: ArtifactBody,
     /// Simulator equivalence (None when the engine skips verification or
     /// the body has no multiplier semantics).
@@ -120,6 +129,9 @@ pub struct SynthEngine {
 }
 
 impl SynthEngine {
+    /// Build an engine: characterize the cell library once, derive the
+    /// compressor timing model, construct the STA engine and an empty
+    /// design cache (and a PJRT runtime when configured).
     pub fn new(cfg: EngineConfig) -> Self {
         let lib = CellLib::nangate45();
         let tm = CompressorTiming::from_lib(&lib);
@@ -133,6 +145,7 @@ impl SynthEngine {
         SynthEngine { cfg, lib, tm, sta, runtime, cache }
     }
 
+    /// The configuration this engine was built with.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
     }
@@ -152,6 +165,7 @@ impl SynthEngine {
         &self.sta
     }
 
+    /// Hit/miss/entry counters of the design cache.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
@@ -226,11 +240,14 @@ impl SynthEngine {
                     ModuleKind::Fir => {
                         let (netlist, y) = modules::fir::stage_from_design(design)?;
                         let rep = sta.analyze(&netlist);
+                        let mut timing = inner_art.timing;
+                        timing.merge(&TimingStats::full_pass(netlist.len()));
                         let report = modules::fir::report_from_stage(&rep, m.n, m.freq_hz);
                         Ok(DesignArtifact {
                             request: canon.clone(),
                             fingerprint: fp,
                             sta: rep,
+                            timing,
                             body: ArtifactBody::FirStage { netlist, y, report },
                             verified: None,
                             pjrt_verified: None,
@@ -238,11 +255,14 @@ impl SynthEngine {
                     }
                     ModuleKind::Systolic => {
                         let rep = sta.analyze(&design.netlist);
+                        let mut timing = inner_art.timing;
+                        timing.merge(&TimingStats::full_pass(design.netlist.len()));
                         let report = modules::systolic::report_from_pe(&rep, m.n, m.freq_hz);
                         Ok(DesignArtifact {
                             request: canon.clone(),
                             fingerprint: fp,
                             sta: rep,
+                            timing,
                             body: ArtifactBody::SystolicPe { pe: design.clone(), report },
                             verified: inner_art.verified,
                             pjrt_verified: inner_art.pjrt_verified,
@@ -268,6 +288,10 @@ impl SynthEngine {
         design: Design,
     ) -> Result<DesignArtifact> {
         let sta = self.sta.analyze(&design.netlist);
+        // Build-time work (the CPA's incremental optimize loop) plus the
+        // engine's own full analysis pass.
+        let mut timing = design.timing;
+        timing.merge(&TimingStats::full_pass(design.netlist.len()));
         let verified = if self.cfg.verify_vectors > 0 {
             Some(crate::equiv::check_multiplier_with(&design, self.cfg.verify_vectors)?.passed)
         } else {
@@ -278,6 +302,7 @@ impl SynthEngine {
             request,
             fingerprint,
             sta,
+            timing,
             body: ArtifactBody::Design(design),
             verified,
             pjrt_verified,
@@ -349,6 +374,18 @@ mod tests {
         let art = eng.compile(&DesignRequest::multiplier(4)).unwrap();
         assert_eq!(art.verified, Some(true));
         assert!(art.sta.critical_delay_ns > 0.0);
+    }
+
+    #[test]
+    fn compile_results_expose_timing_stats() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let art = eng.compile(&DesignRequest::multiplier(8)).unwrap();
+        let t = art.timing;
+        // The engine's own analysis pass plus the CPA candidate scoring
+        // all surface here.
+        assert!(t.full_passes >= 2, "{t:?}");
+        assert!(t.nodes_total >= art.netlist().len() as u64, "{t:?}");
+        assert!(t.retime_fraction() <= 1.0);
     }
 
     #[test]

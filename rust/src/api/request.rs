@@ -35,26 +35,39 @@ pub enum MacMode {
 /// [`MultiplierSpec`], in serializable form).
 #[derive(Debug, Clone)]
 pub struct MulRequest {
+    /// Operand bit width.
     pub n: usize,
+    /// Partial-product generator (AND array / radix-4 Booth).
     pub ppg: PpgKind,
+    /// Compressor-tree architecture.
     pub ct: CtArchitecture,
+    /// Interconnect-order override (`None` = the architecture's default).
     pub order: Option<OrderStrategy>,
+    /// Custom stage plan (RL-MUL searched trees); `None` = derived.
     pub ct_plan: Option<StagePlan>,
+    /// Carry-propagate adder choice.
     pub cpa: CpaChoice,
+    /// Synthesis strategy preset (area / timing / trade-off).
     pub strategy: Strategy,
+    /// Accumulator handling.
     pub mac: MacMode,
+    /// FDC timing model driving CPA optimization.
     pub fdc: FdcModel,
 }
 
 /// A baseline-method design request (the coordinator's sweep axis).
 #[derive(Debug, Clone)]
 pub struct MethodRequest {
+    /// Which method family (UFO-MAC or a baseline) to synthesize.
     pub method: Method,
+    /// Operand bit width.
     pub n: usize,
+    /// Synthesis strategy preset.
     pub strategy: Strategy,
     /// Fused-MAC variant (baseline methods fuse; `separate` is reached via
     /// an explicit [`MulRequest`]).
     pub mac: bool,
+    /// Search budget for the search-based baselines (RL-MUL).
     pub budget: BaselineBudget,
 }
 
@@ -70,9 +83,13 @@ pub enum ModuleKind {
 /// A module-level request: the stage/PE netlist plus a clocked report.
 #[derive(Debug, Clone)]
 pub struct ModuleRequest {
+    /// Which module wraps the inner multiplier/MAC.
     pub module: ModuleKind,
+    /// Method family of the inner design.
     pub method: Method,
+    /// Operand bit width of the inner design.
     pub n: usize,
+    /// Synthesis strategy preset of the inner design.
     pub strategy: Strategy,
     /// Clock target for the WNS/power report.
     pub freq_hz: f64,
@@ -89,8 +106,11 @@ pub struct ModuleRequest {
 /// | `coordinator::evaluate_point` | [`DesignRequest::Method`] |
 #[derive(Debug, Clone)]
 pub enum DesignRequest {
+    /// Fully explicit multiplier/MAC specification.
     Multiplier(MulRequest),
+    /// Baseline-method shorthand (the coordinator's sweep axis).
     Method(MethodRequest),
+    /// Functional-module request (FIR stage / systolic PE).
     Module(ModuleRequest),
 }
 

@@ -17,16 +17,22 @@ use crate::Result;
 /// The four methods of the paper's evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
+    /// The paper's unified framework.
     UfoMac,
+    /// GOMIL proxy baseline.
     Gomil,
+    /// RL-MUL search-based baseline.
     RlMul,
+    /// Commercial-IP proxy (Booth + Dadda + regular CPA).
     Commercial,
 }
 
 impl Method {
+    /// Every method, in the order the paper's tables list them.
     pub const ALL: [Method; 4] =
         [Method::UfoMac, Method::Gomil, Method::RlMul, Method::Commercial];
 
+    /// Human-readable name used in reports.
     pub fn name(&self) -> &'static str {
         match self {
             Method::UfoMac => "UFO-MAC",
@@ -71,6 +77,7 @@ pub struct BaselineBudget {
     /// SA iterations for RL-MUL (the paper runs 3000 RL steps; scale to
     /// the testbed).
     pub rlmul_iters: usize,
+    /// RNG seed for the search.
     pub seed: u64,
 }
 

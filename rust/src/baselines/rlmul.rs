@@ -9,8 +9,8 @@
 //! The CPA is a synthesis-tool default (Brent-Kung), matching the paper's
 //! note that RL-MUL leaves the adder to the tool.
 
-use crate::ct::{assign_greedy, build_ct, CtCounts, OrderStrategy, StagePlan};
-use crate::ir::{CellLib, Netlist};
+use crate::ct::{assign_greedy, CtCounts, StagePlan};
+use crate::ir::CellLib;
 use crate::synth::{CompressorTiming, Sig};
 use crate::util::Rng;
 
@@ -44,36 +44,33 @@ pub fn counts_from_outputs(pp: &[usize], o: &[usize]) -> CtCounts {
 }
 
 /// Cost of a candidate: model-estimated CT delay (ns) + λ·area-metric.
-fn evaluate(pp_columns: &[Vec<Sig>], counts: &CtCounts, lambda: f64) -> f64 {
+///
+/// Scored through [`StagePlan::timing_with_arrivals`] — the stage plan's
+/// precomputed arrival snapshot — instead of dry-running the candidate
+/// tree into a scratch netlist, so the annealer's inner loop instantiates
+/// no gates at all.
+fn evaluate(pp_columns: &[Vec<Sig>], counts: &CtCounts, lambda: f64, tm: &CompressorTiming) -> f64 {
     let plan = assign_greedy(counts);
-    // Dry-run the CT into a scratch netlist to get the arrival estimate.
-    let lib = CellLib::nangate45();
-    let tm = CompressorTiming::from_lib(&lib);
-    let mut nl = Netlist::new("scratch");
-    // Re-create fresh inputs mirroring the PP arrival estimates.
-    let cols: Vec<Vec<Sig>> = pp_columns
+    let pops: Vec<usize> = pp_columns.iter().map(|c| c.len()).collect();
+    let arrivals: Vec<f64> = pp_columns
         .iter()
-        .map(|col| {
-            col.iter()
-                .map(|s| {
-                    let id = nl.input_at("pp", s.t);
-                    Sig::new(id, s.t)
-                })
-                .collect()
-        })
+        .map(|c| c.iter().map(|s| s.t).fold(0.0f64, f64::max))
         .collect();
-    let mut cols = cols;
-    cols.resize(plan.width().max(cols.len()), Vec::new());
-    let out = build_ct(&mut nl, &tm, cols, &plan, OrderStrategy::Naive);
-    out.max_arrival() + lambda * counts.area_metric() as f64
+    let st = plan.timing_with_arrivals(&pops, &arrivals, tm);
+    let worst = st.final_profile().iter().copied().fold(0.0f64, f64::max);
+    worst + lambda * counts.area_metric() as f64
 }
 
 /// Result of the annealing search.
 #[derive(Debug, Clone)]
 pub struct RlMulResult {
+    /// Best stage plan found.
     pub plan: StagePlan,
+    /// Compressor counts of the searched tree.
     pub counts: CtCounts,
+    /// Cost of the best plan under the search objective.
     pub cost: f64,
+    /// Candidate evaluations performed.
     pub evals: usize,
 }
 
@@ -84,10 +81,11 @@ pub fn search(pp_columns: &[Vec<Sig>], budget: usize, seed: u64) -> RlMulResult 
     let mut rng = Rng::seed_from_u64(seed);
     let w = pp.len() + 2;
     let lambda = 1e-4; // delay-dominant cost, area as a tie-breaker
+    let tm = CompressorTiming::from_lib(&CellLib::nangate45());
 
     let mut cur: Vec<usize> = vec![2; w];
     let mut cur_counts = counts_from_outputs(&pp, &cur);
-    let mut cur_cost = evaluate(pp_columns, &cur_counts, lambda);
+    let mut cur_cost = evaluate(pp_columns, &cur_counts, lambda, &tm);
     let mut best = cur.clone();
     let mut best_counts = cur_counts.clone();
     let mut best_cost = cur_cost;
@@ -103,7 +101,7 @@ pub fn search(pp_columns: &[Vec<Sig>], budget: usize, seed: u64) -> RlMulResult 
         if cand_counts.validate().is_err() {
             continue;
         }
-        let cand_cost = evaluate(pp_columns, &cand_counts, lambda);
+        let cand_cost = evaluate(pp_columns, &cand_counts, lambda, &tm);
         evals += 1;
         let accept = cand_cost < cur_cost
             || rng.f64() < (-(cand_cost - cur_cost) / temp.max(1e-9)).exp();
@@ -125,7 +123,7 @@ pub fn search(pp_columns: &[Vec<Sig>], budget: usize, seed: u64) -> RlMulResult 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::CellLib;
+    use crate::ir::{CellLib, Netlist};
 
     fn pp_sigs(n: usize) -> Vec<Vec<Sig>> {
         let lib = CellLib::nangate45();
@@ -167,7 +165,8 @@ mod tests {
         // cost of the all-2 start
         let pp: Vec<usize> = cols.iter().map(|c| c.len()).collect();
         let start = counts_from_outputs(&pp, &vec![2; pp.len() + 2]);
-        let start_cost = evaluate(&cols, &start, 1e-4);
+        let tm = CompressorTiming::from_lib(&CellLib::nangate45());
+        let start_cost = evaluate(&cols, &start, 1e-4, &tm);
         assert!(res.cost <= start_cost + 1e-9);
     }
 }

@@ -3,18 +3,27 @@
 //! Provides warmup + repeated timed runs with mean/median/min and a
 //! machine-readable JSON line per benchmark, so `cargo bench` output can be
 //! captured into `bench_output.txt` and EXPERIMENTS.md the same way a
-//! criterion run would be.
+//! criterion run would be. Every result is also collected in memory;
+//! [`Bench::finish`] writes the whole suite to `BENCH_<suite>.json` so the
+//! perf trajectory is machine-readable without scraping stdout.
 
 use crate::util::Json;
+use std::path::PathBuf;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// One measured statistic set, in nanoseconds.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Mean sample time (ns).
     pub mean_ns: f64,
+    /// Median sample time (ns).
     pub median_ns: f64,
+    /// Fastest sample (ns).
     pub min_ns: f64,
+    /// Slowest sample (ns).
     pub max_ns: f64,
+    /// Number of samples taken.
     pub samples: usize,
 }
 
@@ -51,16 +60,20 @@ pub struct Bench {
     pub budget: Duration,
     /// Max sample count per benchmark.
     pub max_samples: usize,
+    /// Collected result records, flushed by [`Bench::finish`].
+    results: Mutex<Vec<Json>>,
 }
 
 impl Bench {
+    /// Runner for one bench suite (honours `UFO_BENCH_QUICK` for CI-style
+    /// smoke runs).
     pub fn new(suite: impl Into<String>) -> Self {
-        // Honour a quick mode for CI-style smoke runs.
         let quick = std::env::var("UFO_BENCH_QUICK").is_ok();
         Bench {
             suite: suite.into(),
             budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
             max_samples: if quick { 5 } else { 30 },
+            results: Mutex::new(Vec::new()),
         }
     }
 
@@ -92,18 +105,16 @@ impl Bench {
             fmt_time(stats.min_ns),
             stats.samples
         );
-        println!(
-            "BENCH_JSON {}",
-            Json::obj(vec![
-                ("suite", Json::str(self.suite.clone())),
-                ("name", Json::str(name)),
-                ("mean_ns", Json::num(stats.mean_ns)),
-                ("median_ns", Json::num(stats.median_ns)),
-                ("min_ns", Json::num(stats.min_ns)),
-                ("samples", Json::num(stats.samples as f64)),
-            ])
-            .render()
-        );
+        let record = Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("name", Json::str(name)),
+            ("mean_ns", Json::num(stats.mean_ns)),
+            ("median_ns", Json::num(stats.median_ns)),
+            ("min_ns", Json::num(stats.min_ns)),
+            ("samples", Json::num(stats.samples as f64)),
+        ]);
+        println!("BENCH_JSON {}", record.render());
+        self.results.lock().unwrap().push(record);
         stats
     }
 
@@ -111,16 +122,30 @@ impl Bench {
     /// figure/table benches are metric reproductions, not microbenchmarks.
     pub fn metric(&self, name: &str, value: f64, unit: &str) {
         println!("metric {}/{name}: {value:.6} {unit}", self.suite);
-        println!(
-            "BENCH_JSON {}",
-            Json::obj(vec![
-                ("suite", Json::str(self.suite.clone())),
-                ("name", Json::str(name)),
-                ("value", Json::num(value)),
-                ("unit", Json::str(unit)),
-            ])
-            .render()
-        );
+        let record = Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("name", Json::str(name)),
+            ("value", Json::num(value)),
+            ("unit", Json::str(unit)),
+        ]);
+        println!("BENCH_JSON {}", record.render());
+        self.results.lock().unwrap().push(record);
+    }
+
+    /// Flush every collected record to `BENCH_<suite>.json` in the current
+    /// directory (one JSON document: `{"suite": …, "results": […]}`), so
+    /// the perf trajectory is machine-readable without scraping stdout.
+    /// Returns the written path.
+    pub fn finish(&self) -> std::io::Result<PathBuf> {
+        let records: Vec<Json> = self.results.lock().unwrap().drain(..).collect();
+        let doc = Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("results", Json::arr(records)),
+        ]);
+        let path = PathBuf::from(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, doc.render())?;
+        println!("bench {}: wrote {}", self.suite, path.display());
+        Ok(path)
     }
 }
 
@@ -152,5 +177,23 @@ mod tests {
         let s = b.bench("noop", || 1 + 1);
         assert!(s.samples >= 3);
         assert!(s.min_ns >= 0.0);
+    }
+
+    #[test]
+    fn finish_writes_machine_readable_suite_file() {
+        std::env::set_var("UFO_BENCH_QUICK", "1");
+        let b = Bench::new("unittest_suite");
+        b.bench("noop", || 2 + 2);
+        b.metric("answer", 42.0, "units");
+        let written = b.finish().unwrap();
+        assert_eq!(written, std::path::PathBuf::from("BENCH_unittest_suite.json"));
+        let text = std::fs::read_to_string(&written).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("suite").and_then(|s| s.as_str()), Some("unittest_suite"));
+        let results = doc.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].get("mean_ns").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert_eq!(results[1].get("value").and_then(|v| v.as_f64()), Some(42.0));
+        std::fs::remove_file(&written).ok();
     }
 }

@@ -19,14 +19,23 @@ use std::path::Path;
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
+    /// Method family of the point.
     pub method: Method,
+    /// Operand bit width.
     pub n: usize,
+    /// Synthesis strategy preset.
     pub strategy: Strategy,
+    /// Fused-MAC variant.
     pub mac: bool,
+    /// STA critical delay (ns).
     pub delay_ns: f64,
+    /// Cell area (µm²).
     pub area_um2: f64,
+    /// Dynamic power (mW).
     pub power_mw: f64,
+    /// Gate count.
     pub num_gates: usize,
+    /// Realized compressor-tree stages.
     pub ct_stages: usize,
     /// Simulator-based equivalence result.
     pub verified: bool,
@@ -37,11 +46,17 @@ pub struct DesignPoint {
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
+    /// Bit widths to sweep.
     pub widths: Vec<usize>,
+    /// Method families to sweep.
     pub methods: Vec<Method>,
+    /// Strategy presets to sweep.
     pub strategies: Vec<Strategy>,
+    /// Sweep the fused-MAC variant instead of plain multipliers.
     pub mac: bool,
+    /// Thread-pool width for the batch compile.
     pub workers: usize,
+    /// Search budget for the search-based baselines.
     pub budget: BaselineBudget,
     /// Sampled-equivalence vector budget for non-exhaustive widths.
     pub verify_vectors: usize,

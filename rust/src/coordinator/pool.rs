@@ -1,6 +1,16 @@
-//! Minimal work-stealing-free thread pool (std-only; the image vendors no
-//! async runtime). Jobs are closures producing `T`; results arrive in
-//! completion order through an mpsc channel.
+//! Minimal std-only thread pool (the image vendors no async runtime).
+//!
+//! Three fan-out shapes:
+//!
+//! - [`run_jobs`] / [`par_map`] — `'static` jobs, results in completion
+//!   order;
+//! - [`par_map_scoped`] — borrowed closures, results in input order (the
+//!   `SynthEngine::compile_batch` fan-out);
+//! - [`scoped_workers`] — a *worker team*: `n` scoped threads all running
+//!   one borrowed closure against shared state until it returns. This is
+//!   the substrate for the parallel branch-and-bound search in
+//!   [`crate::ilp::branch_bound`], where workers pull subproblems from a
+//!   shared best-bound queue rather than from a pre-split job list.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -96,6 +106,30 @@ where
     out.into_iter().map(|(_, v)| v).collect()
 }
 
+/// Run `workers` scoped threads, each executing `f(worker_index)` once
+/// over borrowed shared state, and join them all before returning.
+///
+/// Unlike [`par_map_scoped`] there is no job list: the closure is expected
+/// to loop over some shared work source (a queue, a deque, an atomic
+/// cursor) until it is drained. A panicking worker propagates after the
+/// scope joins, as with any scoped thread.
+pub fn scoped_workers<F>(workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = workers.max(1);
+    if workers == 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let f = &f;
+            s.spawn(move || f(w));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +153,23 @@ mod tests {
         let out = par_map_scoped(4, (0..64).collect::<Vec<i32>>(), |x| x + offset);
         assert_eq!(out, (100..164).collect::<Vec<_>>());
         assert!(par_map_scoped(3, Vec::<i32>::new(), |x| x).is_empty());
+    }
+
+    #[test]
+    fn scoped_workers_drain_a_shared_queue() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let queue: Mutex<Vec<usize>> = Mutex::new((0..100).collect());
+        let sum = AtomicUsize::new(0);
+        scoped_workers(4, |_w| loop {
+            let item = { queue.lock().unwrap().pop() };
+            match item {
+                Some(x) => {
+                    sum.fetch_add(x, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
     }
 
     #[test]

@@ -19,7 +19,9 @@ pub type PIdx = usize;
 /// A prefix node covering the span `[msb:lsb]`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PNode {
+    /// Upper bit of the covered span.
     pub msb: usize,
+    /// Lower bit of the covered span.
     pub lsb: usize,
     /// Trivial fan-in: covers `[msb:k]`. `NONE` for leaves.
     pub tf: PIdx,
@@ -27,12 +29,15 @@ pub struct PNode {
     pub ntf: PIdx,
 }
 
+/// Sentinel index: "no node" (leaf fan-ins, unassigned roots).
 pub const NONE: PIdx = usize::MAX;
 
 impl PNode {
+    /// Whether this is a leaf `(i, i)` node.
     pub fn is_leaf(&self) -> bool {
         self.tf == NONE
     }
+    /// Bits covered: `msb - lsb + 1`.
     pub fn span(&self) -> usize {
         self.msb - self.lsb + 1
     }
@@ -41,6 +46,7 @@ impl PNode {
 /// A prefix carry graph over `n` bits.
 #[derive(Debug, Clone)]
 pub struct PrefixGraph {
+    /// Bit width.
     pub n: usize,
     /// `nodes[0..n]` are the leaves `(i,i)`; internal nodes follow in
     /// topological order (fan-ins precede consumers).
@@ -68,6 +74,7 @@ impl PrefixGraph {
         self.nodes.len() - 1
     }
 
+    /// Node by index (copied; nodes are small).
     pub fn node(&self, i: PIdx) -> PNode {
         self.nodes[i]
     }
@@ -199,10 +206,15 @@ impl PrefixGraph {
 /// Named regular prefix structures.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PrefixStructure {
+    /// Serial carry chain.
     Ripple,
+    /// Minimum-depth, high-fanout divide-and-conquer.
     Sklansky,
+    /// Minimum-depth, bounded-fanout, wire-heavy.
     KoggeStone,
+    /// Area-lean tree/un-tree structure.
     BrentKung,
+    /// Sparse Kogge-Stone hybrid.
     HanCarlson,
     /// Carry-increment with the given block size.
     CarryIncrement(usize),

@@ -151,14 +151,19 @@ pub fn synthesize_for_profile(
 
     // Score each refined candidate with the STA engine on a standalone
     // adder carrying the CT's arrival profile — the same metric the final
-    // design is judged by.
+    // design is judged by. Timing work (the candidates' incremental
+    // optimize loops plus one STA pass each) is accumulated so the caller
+    // can surface it in compile results.
     let sta = crate::sta::Sta { activity_rounds: 0, ..Default::default() };
+    let mut timing = crate::sta::TimingStats::default();
     let mut scored: Vec<(f64, usize, PrefixGraph, OptReport)> = candidates
         .into_iter()
         .map(|mut g| {
             let rep = optimize(&mut g, profile, target, model, 40 * n);
             let (nl, _) = standalone_adder(&g, Some(profile));
             let delay = sta.analyze(&nl).critical_delay_ns;
+            timing.merge(&rep.timing);
+            timing.merge(&crate::sta::TimingStats::full_pass(nl.len()));
             (delay, g.size(), g, rep)
         })
         .collect();
@@ -180,14 +185,17 @@ pub fn synthesize_for_profile(
                 a.0.partial_cmp(&b.0).unwrap() // else faster wins
             })
     });
-    let (est, _, mut g, rep) = scored.into_iter().next().unwrap();
+    let (est, _, mut g, mut rep) = scored.into_iter().next().unwrap();
     if matches!(strategy, CpaStrategy::TimingDriven) {
         // Squeeze pass: push below the best structure's estimate while
         // improvements exist (the paper's "iterative timing-driven
         // optimization until no further optimization is possible").
-        let rep2 = optimize(&mut g, profile, est * 0.93, model, 20 * n);
+        let mut rep2 = optimize(&mut g, profile, est * 0.93, model, 20 * n);
+        timing.merge(&rep2.timing);
+        rep2.timing = timing;
         return (g, rep2);
     }
+    rep.timing = timing;
     (g, rep)
 }
 

@@ -14,7 +14,9 @@ use crate::synth::{black_node, blue_node, Sig};
 /// One CPA input column: the first bit and (optionally) the second.
 #[derive(Debug, Clone, Copy)]
 pub struct CpaColumn {
+    /// First operand bit.
     pub a: Sig,
+    /// Second operand bit (absent columns use `p = a, g = 0`).
     pub b: Option<Sig>,
 }
 

@@ -12,9 +12,43 @@
 //! `GRAPHOPT(p)`: with `x = ntf(p)` internal, create `s = tf(p) ∘ tf(x)`
 //! and rewire `p = s ∘ ntf(x)`. The graph is re-topologized after each
 //! application (our IR keeps fan-ins before consumers).
+//!
+//! The inner loop is *incremental*: [`DelayCache`] keeps the per-node
+//! delay estimates (plus the fanout and blue-mask inputs they depend on)
+//! alive across transforms and, after each `GRAPHOPT`, re-evaluates only
+//! the nodes whose estimate can have moved — the rewired nodes, nodes
+//! whose fanout or colour changed, and their fan-out cones — instead of
+//! re-running the whole-graph DP per move. Estimates are bit-identical to
+//! [`estimate_bit_delays`] (asserted in debug builds after every move).
 
 use super::graph::{PIdx, PNode, PrefixGraph, NONE};
-use super::timing::{fdc_features, FdcModel};
+use super::timing::{blue_mask, fdc_features, FdcModel};
+use crate::sta::TimingStats;
+
+/// The Eq.-27 cost model evaluated at one node, given the estimates of its
+/// fan-ins — the shared formula of [`estimate_bit_delays`] (full DP) and
+/// [`DelayCache`] (incremental re-evaluation).
+#[inline]
+fn node_est(
+    g: &PrefixGraph,
+    i: PIdx,
+    est: &[f64],
+    arrivals: &[f64],
+    model: &FdcModel,
+    blue: &[bool],
+    fo: &[usize],
+) -> f64 {
+    let nd = g.node(i);
+    if nd.is_leaf() {
+        // pg stage (half of the intercept) happens at the leaf.
+        arrivals.get(nd.msb).copied().unwrap_or(0.0) + model.b * 0.5
+    } else {
+        let (k_node, k_fan) =
+            if blue[i] { (model.k[3], model.k[1]) } else { (model.k[2], model.k[0]) };
+        let cost = k_node + k_fan * (fo[i].saturating_sub(1)) as f64;
+        est[nd.tf].max(est[nd.ntf]) + cost
+    }
+}
 
 /// Per-bit delay estimate: an *arrival-aware* DP over the graph applying
 /// the FDC cost model node by node — `est(node) = max(est(children)) +
@@ -25,19 +59,10 @@ use super::timing::{fdc_features, FdcModel};
 /// nodes are visible as improvements).
 pub fn estimate_bit_delays(g: &PrefixGraph, arrivals: &[f64], model: &FdcModel) -> Vec<f64> {
     let fo = g.fanouts();
-    let blue = super::timing::blue_mask(g);
+    let blue = blue_mask(g);
     let mut est = vec![0.0f64; g.nodes.len()];
     for i in 0..g.nodes.len() {
-        let nd = g.node(i);
-        if nd.is_leaf() {
-            // pg stage (half of the intercept) happens at the leaf.
-            est[i] = arrivals.get(nd.msb).copied().unwrap_or(0.0) + model.b * 0.5;
-        } else {
-            let (k_node, k_fan) =
-                if blue[i] { (model.k[3], model.k[1]) } else { (model.k[2], model.k[0]) };
-            let cost = k_node + k_fan * (fo[i].saturating_sub(1)) as f64;
-            est[i] = est[nd.tf].max(est[nd.ntf]) + cost;
-        }
+        est[i] = node_est(g, i, &est, arrivals, model, &blue, &fo);
     }
     (0..g.n)
         .map(|bit| {
@@ -52,6 +77,133 @@ pub fn estimate_bit_delays(g: &PrefixGraph, arrivals: &[f64], model: &FdcModel) 
         .collect()
 }
 
+/// Incremental evaluator of the Eq.-27 arrival-aware delay model.
+///
+/// Caches per-node estimates together with the two global quantities they
+/// depend on (fanout counts and the blue mask). After a
+/// [`graphopt_tracked`] transform, [`DelayCache::update`] carries every
+/// surviving node's cached values across the re-topologization remap and
+/// re-evaluates only:
+///
+/// - brand-new nodes (the duplicated span `s`),
+/// - nodes whose fanout count or black/blue colour changed (their own cost
+///   term moved),
+/// - nodes downstream of any re-evaluated node whose estimate actually
+///   changed (the fan-out cone).
+///
+/// Skipped nodes keep values that a full DP would reproduce exactly, so
+/// the cache is always bit-identical to [`estimate_bit_delays`].
+///
+/// Scope note: each update still recomputes the fanout counts and blue
+/// mask wholesale (cheap integer sweeps — the blue mask is a global
+/// reverse propagation with no cheap incremental form) and diffs them;
+/// what the dirty-cone machinery saves, and what
+/// [`DelayCache::stats`] counts, is the *delay-model evaluations*
+/// (`node_est` calls), the float-heavy part of the DP.
+#[derive(Debug, Clone)]
+pub struct DelayCache {
+    est: Vec<f64>,
+    fo: Vec<usize>,
+    blue: Vec<bool>,
+    stats: TimingStats,
+}
+
+impl DelayCache {
+    /// Build the cache with one full DP over `g`.
+    pub fn new(g: &PrefixGraph, arrivals: &[f64], model: &FdcModel) -> Self {
+        let fo = g.fanouts();
+        let blue = blue_mask(g);
+        let mut est = vec![0.0f64; g.nodes.len()];
+        for i in 0..g.nodes.len() {
+            est[i] = node_est(g, i, &est, arrivals, model, &blue, &fo);
+        }
+        DelayCache { est, fo, blue, stats: TimingStats::full_pass(g.nodes.len()) }
+    }
+
+    /// Per-bit delays projected from the cached node estimates (matches
+    /// [`estimate_bit_delays`] exactly).
+    pub fn bit_delays(&self, g: &PrefixGraph, model: &FdcModel) -> Vec<f64> {
+        (0..g.n).map(|bit| self.bit_delay(g, model, bit)).collect()
+    }
+
+    /// One bit's cached delay — an O(1) read (the inner loop checks single
+    /// bits without materializing the whole projection).
+    pub fn bit_delay(&self, g: &PrefixGraph, model: &FdcModel, bit: usize) -> f64 {
+        let r = g.roots[bit];
+        if r == NONE {
+            0.0
+        } else {
+            self.est[r] + model.b * 0.5
+        }
+    }
+
+    /// Worst cached per-bit delay (allocation-free).
+    pub fn worst(&self, g: &PrefixGraph, model: &FdcModel) -> f64 {
+        (0..g.n).map(|bit| self.bit_delay(g, model, bit)).fold(0.0f64, f64::max)
+    }
+
+    /// Re-time the cache after a transform, given the old→new index remap
+    /// returned by [`graphopt_tracked`] / [`retopologize`]. Only the dirty
+    /// cone is re-evaluated.
+    pub fn update(&mut self, g: &PrefixGraph, arrivals: &[f64], model: &FdcModel, remap: &[PIdx]) {
+        let len = g.nodes.len();
+        let fo = g.fanouts();
+        let blue = blue_mask(g);
+        let mut est = vec![0.0f64; len];
+        let mut known = vec![false; len];
+        let mut known_fo = vec![usize::MAX; len];
+        let mut known_blue = vec![false; len];
+        for (old, &new) in remap.iter().enumerate() {
+            if new == NONE || old >= self.est.len() {
+                continue; // dead node, or created after the cache's snapshot
+            }
+            est[new] = self.est[old];
+            known_fo[new] = self.fo[old];
+            known_blue[new] = self.blue[old];
+            known[new] = true;
+        }
+        let mut changed = vec![false; len];
+        let mut retimed = 0u64;
+        for i in 0..len {
+            let nd = g.node(i);
+            let stale = !known[i]
+                || (!nd.is_leaf()
+                    && (fo[i] != known_fo[i]
+                        || blue[i] != known_blue[i]
+                        || changed[nd.tf]
+                        || changed[nd.ntf]));
+            if stale {
+                let v = node_est(g, i, &est, arrivals, model, &blue, &fo);
+                retimed += 1;
+                if !known[i] || v != est[i] {
+                    changed[i] = true;
+                }
+                est[i] = v;
+            }
+        }
+        self.est = est;
+        self.fo = fo;
+        self.blue = blue;
+        self.stats.incremental_passes += 1;
+        self.stats.nodes_retimed += retimed;
+        self.stats.nodes_total += len as u64;
+    }
+
+    /// Roll the cached estimates back to `snapshot` (a clone taken before
+    /// a rejected transform) while *keeping* the work counters — the
+    /// evaluation work of a rejected move was still performed.
+    pub fn restore_from(&mut self, snapshot: &DelayCache) {
+        self.est.clone_from(&snapshot.est);
+        self.fo.clone_from(&snapshot.fo);
+        self.blue.clone_from(&snapshot.blue);
+    }
+
+    /// Cumulative evaluation counters (full vs incremental work).
+    pub fn stats(&self) -> TimingStats {
+        self.stats
+    }
+}
+
 /// FDC-feature-based prediction per bit (Eq. 27 evaluated on the critical
 /// path features) — kept for the Figure-8 fidelity study.
 pub fn predict_bit_delays(g: &PrefixGraph, model: &FdcModel) -> Vec<f64> {
@@ -61,14 +213,23 @@ pub fn predict_bit_delays(g: &PrefixGraph, model: &FdcModel) -> Vec<f64> {
 /// Apply `GRAPHOPT` at node `p`. Returns false if `ntf(p)` is a leaf (no
 /// transformation possible). The graph is re-topologized on success.
 pub fn graphopt(g: &mut PrefixGraph, p: PIdx) -> bool {
+    graphopt_tracked(g, p).is_some()
+}
+
+/// [`graphopt`] that also returns the old→new node-index remap of the
+/// re-topologization (dead nodes map to [`NONE`]; the freshly created span
+/// node is the remap's last entry). [`DelayCache::update`] consumes the
+/// remap to re-time only the transform's dirty cone. `None` means the
+/// transform did not apply and `g` is untouched.
+pub fn graphopt_tracked(g: &mut PrefixGraph, p: PIdx) -> Option<Vec<PIdx>> {
     let pn = g.node(p);
     if pn.is_leaf() {
-        return false;
+        return None;
     }
     let x = pn.ntf;
     let xn = g.node(x);
     if xn.is_leaf() {
-        return false;
+        return None;
     }
     // s = tf(p) ∘ tf(x): spans [msb_p : lsb(tf(x))].
     let tf_p = g.node(pn.tf);
@@ -79,13 +240,13 @@ pub fn graphopt(g: &mut PrefixGraph, p: PIdx) -> bool {
     let s_idx = g.nodes.len() - 1;
     g.nodes[p].tf = s_idx;
     g.nodes[p].ntf = xn.ntf;
-    retopologize(g);
-    true
+    Some(retopologize(g))
 }
 
 /// Restore the fan-ins-before-consumers node order after in-place rewiring
-/// (DFS from the roots; dead nodes dropped).
-pub fn retopologize(g: &mut PrefixGraph) {
+/// (DFS from the roots; dead nodes dropped). Returns the old→new index
+/// remap (dead nodes map to [`NONE`]).
+pub fn retopologize(g: &mut PrefixGraph) -> Vec<PIdx> {
     let mut remap = vec![NONE; g.nodes.len()];
     let mut out: Vec<PNode> = Vec::with_capacity(g.nodes.len());
     for i in 0..g.n {
@@ -122,6 +283,7 @@ pub fn retopologize(g: &mut PrefixGraph) {
         }
     }
     g.nodes = out;
+    remap
 }
 
 /// Critical (deepest, fanout tie-break) path from `root` down to a leaf.
@@ -165,13 +327,25 @@ fn subtree(g: &PrefixGraph, root: PIdx) -> Vec<PIdx> {
 /// Outcome of one optimization run.
 #[derive(Debug, Clone)]
 pub struct OptReport {
+    /// Accepted `GRAPHOPT` applications.
     pub transforms: usize,
+    /// Whether every bit's estimate met the target.
     pub met_all: bool,
+    /// Worst per-bit delay estimate of the returned graph (ns).
     pub worst_delay_est: f64,
+    /// Model-evaluation work: how many prefix nodes the incremental
+    /// [`DelayCache`] re-timed vs what per-move full DPs would have cost.
+    pub timing: TimingStats,
 }
 
 /// Algorithm 2: optimize `g` so each bit's estimated delay meets
 /// `target_ns`, given the CT output `arrivals` profile.
+///
+/// Move evaluation is incremental: one [`DelayCache`] survives the whole
+/// run, and each candidate transform re-times only its dirty cone
+/// ([`DelayCache::update`]); rejected moves restore the cached estimates
+/// alongside the graph snapshot. `OptReport::timing` reports the work
+/// saved.
 pub fn optimize(
     g: &mut PrefixGraph,
     arrivals: &[f64],
@@ -180,15 +354,13 @@ pub fn optimize(
     max_transforms: usize,
 ) -> OptReport {
     let mut transforms = 0usize;
+    let mut cache = DelayCache::new(g, arrivals, model);
     // Track the best graph seen globally (a transform can improve its
     // target bit while regressing another; never return worse than start).
-    let worst_of = |g: &PrefixGraph| {
-        estimate_bit_delays(g, arrivals, model).iter().copied().fold(0.0f64, f64::max)
-    };
     let mut best_graph = g.clone();
-    let mut best_worst = worst_of(g);
+    let mut best_worst = cache.worst(g, model);
     'outer: loop {
-        let est = estimate_bit_delays(g, arrivals, model);
+        let est = cache.bit_delays(g, model);
         let violated: Vec<usize> = (0..g.n).rev().filter(|&j| est[j] > target_ns + 1e-12).collect();
         if violated.is_empty() {
             break;
@@ -205,45 +377,54 @@ pub fn optimize(
             let depths = g.depths();
             let span = g.node(root).span();
             let min_depth = (span as f64).log2().ceil() as usize;
-            let before = estimate_bit_delays(g, arrivals, model)[j];
-            let snapshot = g.clone();
             // Line 7: depth-opt when depth exceeds the log2 bound (+1 for
             // LSB-side pg grouping); fanout-opt otherwise.
-            let applied = if depths[root] > min_depth + 1 {
+            let target = if depths[root] > min_depth + 1 {
                 // depth-opt: deepest critical-path node with internal ntf.
-                let path = critical_path(g, root);
-                let target = path
+                critical_path(g, root)
                     .iter()
                     .copied()
                     .filter(|&p| !g.node(p).is_leaf() && !g.node(g.node(p).ntf).is_leaf())
-                    .max_by_key(|&p| depths[p]);
-                target.map(|p| graphopt(g, p)).unwrap_or(false)
+                    .max_by_key(|&p| depths[p])
             } else {
                 // fanout-opt: node whose ntf has the highest fanout (> 1).
                 let fo = g.fanouts();
-                let target = subtree(g, root)
+                subtree(g, root)
                     .into_iter()
                     .filter(|&p| {
                         let nd = g.node(p);
                         !nd.is_leaf() && !g.node(nd.ntf).is_leaf() && fo[nd.ntf] > 1
                     })
-                    .max_by_key(|&p| fo[g.node(p).ntf]);
-                target.map(|p| graphopt(g, p)).unwrap_or(false)
+                    .max_by_key(|&p| fo[g.node(p).ntf])
             };
-            if applied {
-                let after = estimate_bit_delays(g, arrivals, model);
-                if after[j] < before - 1e-12 {
+            let Some(target) = target else { continue };
+            // Snapshots are taken only once a transform is actually
+            // attempted (graph + cached estimates, for the revert path).
+            let before = cache.bit_delay(g, model, j);
+            let snapshot = g.clone();
+            let snap_cache = cache.clone();
+            if let Some(remap) = graphopt_tracked(g, target) {
+                cache.update(g, arrivals, model, &remap);
+                debug_assert_eq!(
+                    cache.bit_delays(g, model),
+                    estimate_bit_delays(g, arrivals, model),
+                    "incremental cache diverged from the full DP"
+                );
+                if cache.bit_delay(g, model, j) < before - 1e-12 {
                     transforms += 1;
                     improved_any = true;
-                    let w = after.iter().copied().fold(0.0f64, f64::max);
+                    let w = cache.worst(g, model);
                     if w < best_worst - 1e-12 {
                         best_worst = w;
                         best_graph = g.clone();
                     }
                 } else {
-                    // Non-improving transform: revert (keeps area in check
-                    // and guarantees monotone progress / termination).
+                    // Non-improving transform: revert graph *and* cache
+                    // (keeps area in check and guarantees monotone
+                    // progress / termination). Work counters survive the
+                    // revert — the evaluation was still paid for.
                     *g = snapshot;
+                    cache.restore_from(&snap_cache);
                 }
             }
         }
@@ -251,16 +432,19 @@ pub fn optimize(
             break;
         }
     }
-    if worst_of(g) > best_worst + 1e-12 {
+    if cache.worst(g, model) > best_worst + 1e-12 {
         *g = best_graph;
     }
     g.prune();
+    let mut timing = cache.stats();
     let est = estimate_bit_delays(g, arrivals, model);
+    timing.merge(&TimingStats::full_pass(g.nodes.len()));
     let worst = est.iter().copied().fold(0.0f64, f64::max);
     OptReport {
         transforms,
         met_all: est.iter().all(|&e| e <= target_ns + 1e-9),
         worst_delay_est: worst,
+        timing,
     }
 }
 
@@ -375,5 +559,48 @@ mod tests {
         assert!(!rep.met_all);
         g.validate().unwrap();
         check_adds(&g);
+        // The incremental cache must have avoided per-move full DPs.
+        assert!(rep.timing.incremental_passes > 0);
+        assert!(rep.timing.nodes_retimed < rep.timing.nodes_total);
+    }
+
+    #[test]
+    fn delay_cache_matches_full_dp_across_random_transforms() {
+        // Identity invariant: after every tracked GRAPHOPT, the cache's
+        // projected bit delays equal a from-scratch estimate_bit_delays.
+        let mut g = sklansky(24);
+        let model = FdcModel::default_prior();
+        let arrivals: Vec<f64> = (0..24).map(|i| 0.05 * ((i % 7) as f64)).collect();
+        let mut cache = DelayCache::new(&g, &arrivals, &model);
+        assert_eq!(cache.bit_delays(&g, &model), estimate_bit_delays(&g, &arrivals, &model));
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        let mut applied = 0;
+        for _ in 0..200 {
+            if applied >= 12 {
+                break;
+            }
+            let candidates: Vec<usize> = (g.n..g.nodes.len())
+                .filter(|&i| {
+                    let nd = g.node(i);
+                    !nd.is_leaf() && !g.node(nd.ntf).is_leaf()
+                })
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            let p = candidates[rng.index(candidates.len())];
+            if let Some(remap) = graphopt_tracked(&mut g, p) {
+                cache.update(&g, &arrivals, &model, &remap);
+                assert_eq!(
+                    cache.bit_delays(&g, &model),
+                    estimate_bit_delays(&g, &arrivals, &model),
+                    "cache diverged after transform {applied}"
+                );
+                applied += 1;
+            }
+        }
+        assert!(applied > 0, "no transform applied");
+        let s = cache.stats();
+        assert!(s.nodes_retimed < s.nodes_total, "incremental updates must skip work: {s:?}");
     }
 }

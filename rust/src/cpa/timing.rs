@@ -14,13 +14,18 @@ use super::graph::{PrefixGraph, NONE};
 /// Per-bit feature vector of the FDC model.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct FdcFeatures {
+    /// Summed fanout of black nodes along the critical path.
     pub f_black: f64,
+    /// Summed fanout of blue nodes along the critical path.
     pub f_blue: f64,
+    /// Black-node count along the critical path.
     pub n_black: f64,
+    /// Blue-node count along the critical path.
     pub n_blue: f64,
 }
 
 impl FdcFeatures {
+    /// Features as the `[F_black, F_blue, N_black, N_blue]` vector.
     pub fn as_array(&self) -> [f64; 4] {
         [self.f_black, self.f_blue, self.n_black, self.n_blue]
     }
@@ -29,7 +34,9 @@ impl FdcFeatures {
 /// Fitted FDC coefficients (`k0..k3`, intercept `b`), in ns.
 #[derive(Debug, Clone, Copy)]
 pub struct FdcModel {
+    /// Coefficients `k0..k3` of Eq. 27 (ns per feature unit).
     pub k: [f64; 4],
+    /// Intercept (pg stage + final sum XOR), ns.
     pub b: f64,
 }
 
@@ -60,6 +67,7 @@ impl FdcModel {
         }
     }
 
+    /// Eq. 27: `Σ k_i·x_i + b` (ns).
     pub fn predict(&self, f: &FdcFeatures) -> f64 {
         let x = f.as_array();
         self.k.iter().zip(x.iter()).map(|(k, v)| k * v).sum::<f64>() + self.b
@@ -191,10 +199,13 @@ pub fn least_squares(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
 /// Fidelity metrics of a prediction vector.
 #[derive(Debug, Clone, Copy)]
 pub struct Fidelity {
+    /// Coefficient of determination.
     pub r2: f64,
+    /// Mean absolute percentage error.
     pub mape: f64,
 }
 
+/// R² and MAPE of `pred` against `truth`.
 pub fn fidelity(pred: &[f64], truth: &[f64]) -> Fidelity {
     let n = truth.len() as f64;
     let mean = truth.iter().sum::<f64>() / n;

@@ -29,8 +29,11 @@ use crate::util::Rng;
 /// Interconnect-order strategy for CT construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OrderStrategy {
+    /// Exact per-slice bottleneck assignment (the paper's ILP objective).
     Optimized,
+    /// Sources connect to ports in arrival order.
     Naive,
+    /// Seeded random bijection (the Figure-4 experiment).
     Random(u64),
 }
 
@@ -44,6 +47,13 @@ pub struct CtOutput {
     pub profile: Vec<f64>,
     /// Stages actually realized.
     pub stages: usize,
+    /// Exact per-stage arrival snapshots recorded during construction:
+    /// `stage_profiles[i][j]` = worst arrival of column `j` *after* stage
+    /// `i` fired. Recorded for free while building; the final snapshot *is*
+    /// [`CtOutput::profile`] (reused, not recomputed), and the
+    /// intermediate ones validate the model-level
+    /// [`super::StageTiming`] snapshots in tests.
+    pub stage_profiles: Vec<Vec<f64>>,
 }
 
 impl CtOutput {
@@ -81,6 +91,11 @@ pub fn build_ct(
         OrderStrategy::Random(seed) => Some(Rng::seed_from_u64(seed)),
         _ => None,
     };
+
+    let column_worst = |state: &[Vec<Sig>]| -> Vec<f64> {
+        state.iter().map(|c| c.iter().map(|s| s.t).fold(0.0, f64::max)).collect()
+    };
+    let mut stage_profiles: Vec<Vec<f64>> = Vec::with_capacity(plan.stages());
 
     for i in 0..plan.stages() {
         let mut next: Vec<Vec<Sig>> = vec![Vec::new(); w];
@@ -174,14 +189,16 @@ pub fn build_ct(
             }
         }
         state = next;
+        stage_profiles.push(column_worst(&state));
     }
 
     for (j, col) in state.iter().enumerate() {
         assert!(col.len() <= 2, "column {j} ended with {} bits", col.len());
     }
+    // The CPA profile is the final stage's snapshot, recorded above.
     let profile: Vec<f64> =
-        state.iter().map(|c| c.iter().map(|s| s.t).fold(0.0, f64::max)).collect();
-    CtOutput { rows: state, profile, stages: plan.stages() }
+        stage_profiles.last().cloned().unwrap_or_else(|| column_worst(&state));
+    CtOutput { rows: state, profile, stages: plan.stages(), stage_profiles }
 }
 
 #[cfg(test)]
@@ -265,6 +282,36 @@ mod tests {
         let opt = build(OrderStrategy::Optimized);
         let naive = build(OrderStrategy::Naive);
         assert!(opt <= naive + 1e-9, "optimized {opt} vs naive {naive}");
+    }
+
+    #[test]
+    fn stage_profiles_recorded_and_consistent_with_model_snapshot() {
+        let n = 8;
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let mut nl = Netlist::new("ct");
+        let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
+        let m = crate::ppg::and_array(&mut nl, &lib, &a, &b);
+        let counts = CtCounts::from_populations(&m.counts());
+        let plan = assign_greedy(&counts);
+        let model = plan.timing(&counts.initial, &tm);
+        let mut cols = m.columns;
+        cols.resize(counts.width(), vec![]);
+        let out = build_ct(&mut nl, &tm, cols, &plan, OrderStrategy::Optimized);
+        // One exact snapshot per stage; the last one is the CPA profile.
+        assert_eq!(out.stage_profiles.len(), plan.stages());
+        assert_eq!(out.stage_profiles.last().unwrap(), &out.profile);
+        // The once-computed model snapshot tracks the exact profile: same
+        // width, and its worst column is an upper-envelope-style estimate
+        // of the exact worst (worst-per-column aggregation is pessimistic,
+        // allow slack both ways).
+        let exact_max = out.max_arrival();
+        let model_max =
+            model.final_profile().iter().copied().fold(0.0f64, f64::max);
+        assert_eq!(model.final_profile().len(), out.profile.len());
+        assert!(model_max > 0.5 * exact_max && model_max < 3.0 * exact_max,
+            "model {model_max} vs exact {exact_max}");
     }
 
     #[test]

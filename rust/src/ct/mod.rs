@@ -16,7 +16,9 @@ pub mod stage;
 pub use baseline::{dadda_plan, plan_totals, wallace_plan};
 pub use counts::CtCounts;
 pub use interconnect::{build_ct, CtOutput, OrderStrategy};
-pub use stage::{assign_column_serial, assign_greedy, assign_ilp, StagePlan};
+pub use stage::{
+    assign_column_serial, assign_greedy, assign_ilp, assign_ilp_with, StagePlan, StageTiming,
+};
 
 use crate::ilp::SolveOptions;
 use crate::ir::Netlist;
@@ -58,12 +60,15 @@ pub fn synthesize(
             (assign_greedy(&c), OrderStrategy::Optimized)
         }
         CtArchitecture::UfoMacIlp => {
+            // The greedy plan is computed once and handed to the exact ILP
+            // as its stage horizon and fallback incumbent.
             let c = CtCounts::from_populations(&populations);
             let opts = SolveOptions {
                 time_limit: std::time::Duration::from_secs(30),
                 ..Default::default()
             };
-            (assign_ilp(&c, &opts).0, OrderStrategy::Optimized)
+            let greedy = assign_greedy(&c);
+            (assign_ilp_with(&c, greedy, &opts).0, OrderStrategy::Optimized)
         }
         CtArchitecture::Wallace => (wallace_plan(&populations), OrderStrategy::Naive),
         CtArchitecture::Dadda => (dadda_plan(&populations), OrderStrategy::Naive),

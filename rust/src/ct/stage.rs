@@ -14,24 +14,136 @@
 //! GOMIL's behaviour (no stage objective) is modelled by
 //! [`assign_column_serial`], which compresses each column depth-first and
 //! produces the taller trees the paper criticizes.
+//!
+//! A plan also carries a *timing view*: [`StagePlan::timing`] computes the
+//! per-stage arrival snapshot ([`StageTiming`]) once from the plan and the
+//! compressor port delays, with **no gate instantiation** — this is how the
+//! RL-MUL annealer ([`crate::baselines::rlmul`]) scores candidate trees
+//! without dry-running each one into a scratch netlist, and what the
+//! exact per-stage profiles recorded by `build_ct` are validated against.
 
 use super::counts::CtCounts;
 use crate::ilp::{self, LinExpr, Model, Sense, SolveOptions};
+use crate::synth::CompressorTiming;
+
+/// Per-stage arrival-time snapshots of a [`StagePlan`], computed once by
+/// [`StagePlan::timing`] from the compressor port delays.
+///
+/// `snapshots[i][j]` is the model-estimated worst arrival (ns) of column
+/// `j`'s population *entering* stage `i`; `snapshots.last()` is the
+/// estimated output profile (the Figure-1 trapezoid) before a single gate
+/// is instantiated. The model aggregates each column to its worst bit, so
+/// it brackets the exact per-bit arrivals that
+/// [`super::interconnect::build_ct`] records into
+/// [`super::CtOutput::stage_profiles`] during construction.
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    /// Worst arrival per column entering each stage; `stages + 1` rows.
+    pub snapshots: Vec<Vec<f64>>,
+}
+
+impl StageTiming {
+    /// The estimated CT output arrival profile (last snapshot).
+    pub fn final_profile(&self) -> &[f64] {
+        self.snapshots.last().map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Number of stages the snapshots span.
+    pub fn stages(&self) -> usize {
+        self.snapshots.len().saturating_sub(1)
+    }
+}
 
 /// A stage-by-column placement: `f[i][j]` 3:2s and `h[i][j]` 2:2s fire at
 /// stage `i` in column `j`.
 #[derive(Debug, Clone)]
 pub struct StagePlan {
+    /// 3:2 compressors firing at `[stage][column]`.
     pub f: Vec<Vec<usize>>,
+    /// 2:2 compressors firing at `[stage][column]`.
     pub h: Vec<Vec<usize>>,
 }
 
 impl StagePlan {
+    /// Number of stages in the plan.
     pub fn stages(&self) -> usize {
         self.f.len()
     }
+
+    /// Column count of the plan.
     pub fn width(&self) -> usize {
         self.f.first().map_or(0, |r| r.len())
+    }
+
+    /// Compute the per-stage arrival snapshot of this plan over the given
+    /// initial column populations (all entering at t = 0 relative to the
+    /// PPG outputs). See [`StagePlan::timing_with_arrivals`].
+    pub fn timing(&self, initial: &[usize], tm: &CompressorTiming) -> StageTiming {
+        self.timing_with_arrivals(initial, &[], tm)
+    }
+
+    /// [`StagePlan::timing`] with per-column initial arrival offsets (ns)
+    /// — non-uniform PPG outputs, e.g. a Booth matrix. Missing entries
+    /// default to 0.
+    ///
+    /// One pass over `stages × columns` and **no gate instantiation** —
+    /// this is how the RL-MUL annealer scores thousands of candidate trees
+    /// ([`crate::baselines::rlmul`]) without dry-running each one into a
+    /// scratch netlist. The model is the worst-per-column aggregate of the
+    /// Eq. 13-16 port delays that `build_ct` applies per bit.
+    pub fn timing_with_arrivals(
+        &self,
+        initial: &[usize],
+        arrivals: &[f64],
+        tm: &CompressorTiming,
+    ) -> StageTiming {
+        let w = self.width().max(initial.len());
+        let fa_sum = tm.t_as.max(tm.t_bs).max(tm.t_cs);
+        let fa_carry = tm.t_ac.max(tm.t_bc).max(tm.t_cc);
+        let mut pop: Vec<usize> = initial.to_vec();
+        pop.resize(w, 0);
+        let mut t_now: Vec<f64> = arrivals.to_vec();
+        t_now.resize(w, 0.0);
+        let mut snapshots = Vec::with_capacity(self.stages() + 1);
+        snapshots.push(t_now.clone());
+        for i in 0..self.stages() {
+            let mut pop_next = pop.clone();
+            let mut t_next = vec![0.0f64; w];
+            let mut carry_in = vec![0.0f64; w];
+            for j in 0..w {
+                let (fij, hij) = if j < self.width() { (self.f[i][j], self.h[i][j]) } else { (0, 0) };
+                let consumed = 3 * fij + 2 * hij;
+                let t_src = t_now[j];
+                let mut t_col: f64 = 0.0;
+                if pop[j] > consumed {
+                    t_col = t_col.max(t_src); // pass-throughs keep their arrival
+                }
+                if fij > 0 {
+                    t_col = t_col.max(t_src + fa_sum);
+                    if j + 1 < w {
+                        carry_in[j + 1] = carry_in[j + 1].max(t_src + fa_carry);
+                    }
+                }
+                if hij > 0 {
+                    t_col = t_col.max(t_src + tm.h_as);
+                    if j + 1 < w {
+                        carry_in[j + 1] = carry_in[j + 1].max(t_src + tm.h_ac);
+                    }
+                }
+                t_next[j] = t_col;
+                pop_next[j] = pop_next[j].saturating_sub(2 * fij + hij);
+                if j + 1 < w {
+                    pop_next[j + 1] += fij + hij;
+                }
+            }
+            for j in 0..w {
+                t_next[j] = t_next[j].max(carry_in[j]);
+            }
+            pop = pop_next;
+            t_now = t_next;
+            snapshots.push(t_now.clone());
+        }
+        StageTiming { snapshots }
     }
 
     /// Verify the plan against the counts: totals match (Eq. 6/7), stagewise
@@ -163,8 +275,15 @@ pub fn assign_column_serial(counts: &CtCounts) -> StagePlan {
 /// (reported by the Fig-13 bench). Falls back to the greedy plan if the
 /// solver hits its limits without an incumbent.
 pub fn assign_ilp(counts: &CtCounts, opts: &SolveOptions) -> (StagePlan, u64) {
+    assign_ilp_with(counts, assign_greedy(counts), opts)
+}
+
+/// [`assign_ilp`] over a caller-provided greedy plan, so callers that
+/// already computed one (and its [`StageTiming`] snapshot) don't pay for
+/// it twice: the greedy plan seeds the ILP's stage horizon and serves as
+/// the fallback incumbent.
+pub fn assign_ilp_with(counts: &CtCounts, greedy: StagePlan, opts: &SolveOptions) -> (StagePlan, u64) {
     let w = counts.width();
-    let greedy = assign_greedy(counts);
     let stage_max = greedy.stages().max(1); // optimum is ≤ greedy
     let mut m = Model::new();
 
@@ -305,6 +424,25 @@ mod tests {
             plan.validate(&c).unwrap();
             assert_eq!(plan.stages(), assign_greedy(&c).stages(), "n={n}");
         }
+    }
+
+    #[test]
+    fn stage_timing_snapshot_computed_once_matches_plan_shape() {
+        let c = mult_counts(8);
+        let plan = assign_greedy(&c);
+        let tm = crate::synth::CompressorTiming::from_lib(&crate::ir::CellLib::nangate45());
+        let st = plan.timing(&c.initial, &tm);
+        assert_eq!(st.stages(), plan.stages());
+        assert_eq!(st.snapshots.len(), plan.stages() + 1);
+        assert!(st.snapshots[0].iter().all(|&t| t == 0.0), "inputs enter at t = 0");
+        let prof = st.final_profile();
+        assert_eq!(prof.len(), c.width());
+        let max = prof.iter().copied().fold(0.0f64, f64::max);
+        assert!(max > 0.0);
+        // The model profile is the Figure-1 trapezoid: the peak sits in
+        // the middle of the word, not at either end.
+        let peak = prof.iter().position(|&t| t == max).unwrap();
+        assert!(peak > 0 && peak < prof.len() - 1, "peak {peak} of {}", prof.len());
     }
 
     #[test]

@@ -15,8 +15,11 @@ use crate::Result;
 /// Outcome of an equivalence run.
 #[derive(Debug, Clone)]
 pub struct EquivReport {
+    /// Whether every checked vector matched the golden model.
     pub passed: bool,
+    /// Vectors simulated.
     pub vectors: usize,
+    /// Whether the whole input space was covered.
     pub exhaustive: bool,
     /// First failing `(a, b, c, got, want)` if any.
     pub counterexample: Option<(u128, u128, u128, u128, u128)>,

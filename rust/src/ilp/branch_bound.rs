@@ -5,11 +5,24 @@
 //! root relaxation, and honours the time limit / node limit / MIP gap in
 //! [`super::SolveOptions`] — the same stopping semantics the paper gives
 //! Gurobi (3600 s cap with the incumbent returned).
+//!
+//! With `SolveOptions::threads > 1` the search runs on the coordinator's
+//! scoped worker team ([`crate::coordinator::pool::scoped_workers`]):
+//! workers share an **atomic incumbent bound** (lock-free pruning reads; a
+//! mutex only on improvement) and a **best-bound subproblem queue** with
+//! idle-count termination. Each worker dives depth-first on one child of
+//! every branching (its private stack) and publishes the sibling for other
+//! workers to steal, which keeps the queue hot without serializing on it.
+//! Both modes prove the same optimum when run to completion; only the
+//! exploration order differs.
 
 use super::simplex::solve_lp;
 use super::{Model, Solution, SolveOptions, Status};
+use crate::coordinator::pool;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 const INT_TOL: f64 = 1e-6;
@@ -39,8 +52,28 @@ impl Ord for BbNode {
     }
 }
 
-/// Solve a mixed-integer model.
+/// Most-fractional branching variable of a relaxation point, if any.
+fn pick_branch(int_vars: &[usize], values: &[f64]) -> Option<(usize, f64)> {
+    let mut branch: Option<(usize, f64)> = None;
+    let mut best_frac = INT_TOL;
+    for &vi in int_vars {
+        let x = values[vi];
+        let frac = (x - x.round()).abs();
+        let dist = (x - x.floor()).min(x.ceil() - x);
+        if frac > INT_TOL && dist > best_frac {
+            best_frac = dist;
+            branch = Some((vi, x));
+        }
+    }
+    branch
+}
+
+/// Solve a mixed-integer model (serial when `opts.threads <= 1`, else the
+/// parallel worker-team search — see the module docs).
 pub fn solve_milp(model: &Model, opts: &SolveOptions) -> Solution {
+    if opts.threads > 1 {
+        return solve_milp_parallel(model, opts);
+    }
     let start = Instant::now();
     let int_vars: Vec<usize> =
         model.vars.iter().enumerate().filter(|(_, v)| v.integer).map(|(i, _)| i).collect();
@@ -103,20 +136,7 @@ pub fn solve_milp(model: &Model, opts: &SolveOptions) -> Solution {
             }
         }
 
-        // Most-fractional branching variable.
-        let mut branch: Option<(usize, f64)> = None;
-        let mut best_frac = INT_TOL;
-        for &vi in &int_vars {
-            let x = relax.values[vi];
-            let frac = (x - x.round()).abs();
-            let dist = (x - x.floor()).min(x.ceil() - x);
-            if frac > INT_TOL && dist > best_frac {
-                best_frac = dist;
-                branch = Some((vi, x));
-            }
-        }
-
-        match branch {
+        match pick_branch(&int_vars, &relax.values) {
             None => {
                 // Integral ⇒ candidate incumbent.
                 let better = incumbent
@@ -160,6 +180,216 @@ pub fn solve_milp(model: &Model, opts: &SolveOptions) -> Solution {
             } else {
                 Status::Infeasible
             },
+            objective: f64::INFINITY,
+            values: vec![0.0; model.vars.len()],
+            nodes,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel search
+// ---------------------------------------------------------------------------
+
+/// Shared best-bound subproblem queue with idle-count termination.
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    workers: usize,
+}
+
+struct QueueState {
+    heap: BinaryHeap<BbNode>,
+    idle: usize,
+    done: bool,
+}
+
+impl SharedQueue {
+    fn new(workers: usize) -> Self {
+        SharedQueue {
+            state: Mutex::new(QueueState { heap: BinaryHeap::new(), idle: 0, done: false }),
+            cv: Condvar::new(),
+            workers,
+        }
+    }
+
+    fn push(&self, node: BbNode) {
+        self.state.lock().unwrap().heap.push(node);
+        self.cv.notify_one();
+    }
+
+    /// Pop the best-bound subproblem, blocking while other workers may
+    /// still produce work. Returns `None` once every worker is idle with
+    /// an empty queue (search exhausted) or after [`SharedQueue::close`].
+    fn pop(&self) -> Option<BbNode> {
+        let mut q = self.state.lock().unwrap();
+        loop {
+            if q.done {
+                return None;
+            }
+            if let Some(n) = q.heap.pop() {
+                return Some(n);
+            }
+            q.idle += 1;
+            if q.idle == self.workers {
+                q.done = true;
+                self.cv.notify_all();
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+            q.idle -= 1;
+        }
+    }
+
+    /// Terminate the search (limits hit): wake and drain every worker.
+    fn close(&self) {
+        self.state.lock().unwrap().done = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Shared incumbent: the objective doubles as an atomic for lock-free
+/// pruning reads; the full solution sits behind a mutex taken only on
+/// improvement.
+struct SharedIncumbent {
+    best: Mutex<Option<Solution>>,
+    objective_bits: AtomicU64,
+}
+
+impl SharedIncumbent {
+    fn new(seed: Option<Solution>) -> Self {
+        let bits = seed.as_ref().map_or(f64::INFINITY, |s| s.objective).to_bits();
+        SharedIncumbent { best: Mutex::new(seed), objective_bits: AtomicU64::new(bits) }
+    }
+
+    fn objective(&self) -> f64 {
+        f64::from_bits(self.objective_bits.load(AtomicOrdering::Acquire))
+    }
+
+    fn offer(&self, sol: Solution) {
+        let mut best = self.best.lock().unwrap();
+        if best.as_ref().map_or(true, |b| sol.objective < b.objective - INT_TOL) {
+            self.objective_bits.store(sol.objective.to_bits(), AtomicOrdering::Release);
+            *best = Some(sol);
+        }
+    }
+}
+
+/// The parallel worker-team search behind [`solve_milp`].
+fn solve_milp_parallel(model: &Model, opts: &SolveOptions) -> Solution {
+    let start = Instant::now();
+    let int_vars: Vec<usize> =
+        model.vars.iter().enumerate().filter(|(_, v)| v.integer).map(|(i, _)| i).collect();
+
+    let root = solve_lp(model);
+    match root.status {
+        Status::Infeasible | Status::Unbounded => return root,
+        _ => {}
+    }
+    let incumbent = SharedIncumbent::new(round_heuristic(model, &root.values));
+
+    let workers = opts.threads.max(2);
+    let queue = SharedQueue::new(workers);
+    queue.push(BbNode { bound: root.objective, fixes: vec![] });
+    let node_count = AtomicU64::new(0);
+    let limit_hit = AtomicBool::new(false);
+    // Set when a node is discarded *only* because it fell inside the MIP
+    // gap (its bound was still strictly better than the incumbent): the
+    // search then ends within tolerance but without an optimality proof,
+    // mirroring the serial solver's `proven` check.
+    let gap_pruned = AtomicBool::new(false);
+
+    pool::scoped_workers(workers, |_w| {
+        // Thread-local scratch model: fixes are layered onto its bounds
+        // and restored after each LP, exactly as in the serial search.
+        let mut work = model.clone();
+        // Private dive stack: one child of every branching stays local
+        // (depth-first descent toward integral leaves), the sibling goes
+        // to the shared queue for stealing.
+        let mut local: Vec<BbNode> = Vec::new();
+        loop {
+            if limit_hit.load(AtomicOrdering::Relaxed) {
+                break;
+            }
+            let node = match local.pop() {
+                Some(n) => n,
+                None => match queue.pop() {
+                    Some(n) => n,
+                    None => break,
+                },
+            };
+            let seen = node_count.fetch_add(1, AtomicOrdering::Relaxed) + 1;
+            if seen > opts.max_nodes || start.elapsed() > opts.time_limit {
+                limit_hit.store(true, AtomicOrdering::Relaxed);
+                queue.close();
+                break;
+            }
+            // Prune against the shared incumbent before paying for an LP.
+            let inc_obj = incumbent.objective();
+            if inc_obj.is_finite() {
+                if node.bound >= inc_obj - INT_TOL {
+                    continue;
+                }
+                let gap = (inc_obj - node.bound).abs() / inc_obj.abs().max(1.0);
+                if gap <= opts.mip_gap {
+                    gap_pruned.store(true, AtomicOrdering::Relaxed);
+                    continue;
+                }
+            }
+
+            for (vi, is_upper, val) in &node.fixes {
+                if *is_upper {
+                    work.vars[*vi].ub = work.vars[*vi].ub.min(*val);
+                } else {
+                    work.vars[*vi].lb = work.vars[*vi].lb.max(*val);
+                }
+            }
+            let relax = solve_lp(&work);
+            for (vi, _, _) in &node.fixes {
+                work.vars[*vi].lb = model.vars[*vi].lb;
+                work.vars[*vi].ub = model.vars[*vi].ub;
+            }
+
+            if relax.status != Status::Optimal {
+                continue;
+            }
+            if relax.objective >= incumbent.objective() - INT_TOL {
+                continue;
+            }
+
+            match pick_branch(&int_vars, &relax.values) {
+                None => incumbent.offer(Solution { status: Status::Feasible, ..relax }),
+                Some((vi, x)) => {
+                    let mut down = node.fixes.clone();
+                    down.push((vi, true, x.floor()));
+                    let mut up = node.fixes.clone();
+                    up.push((vi, false, x.ceil()));
+                    local.push(BbNode { bound: relax.objective, fixes: down });
+                    queue.push(BbNode { bound: relax.objective, fixes: up });
+                }
+            }
+        }
+    });
+
+    let nodes = node_count.load(AtomicOrdering::Relaxed);
+    let limited = limit_hit.load(AtomicOrdering::Relaxed);
+    match incumbent.best.into_inner().unwrap() {
+        Some(mut inc) => {
+            for &vi in &int_vars {
+                inc.values[vi] = inc.values[vi].round();
+            }
+            inc.objective = model.objective.eval(&inc.values);
+            // Optimality is proven only when the queue drained with every
+            // open node pruned against the incumbent *bound* — a limit hit
+            // or a gap-window prune leaves the incumbent merely Feasible,
+            // exactly as the serial solver's `proven` check does.
+            let proven = !limited && !gap_pruned.load(AtomicOrdering::Relaxed);
+            inc.status = if proven { Status::Optimal } else { Status::Feasible };
+            inc.nodes = nodes;
+            inc
+        }
+        None => Solution {
+            status: if limited { Status::TimeLimit } else { Status::Infeasible },
             objective: f64::INFINITY,
             values: vec![0.0; model.vars.len()],
             nodes,
@@ -250,6 +480,55 @@ mod tests {
         let sol = solve(&m, &SolveOptions::default());
         assert!(sol.ok());
         assert!((sol.value(s) - 2.0).abs() < 1e-5, "S={}", sol.value(s));
+    }
+
+    #[test]
+    fn parallel_matches_serial_objective() {
+        // A knapsack with enough branching to keep several workers busy.
+        let build = || {
+            let mut m = Model::new();
+            let mut cap = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for i in 0..14 {
+                let v = m.bin(format!("b{i}"));
+                cap.add(v, 1.0 + (i as f64 * 0.37) % 3.0);
+                obj.add(v, -(1.0 + (i as f64 * 0.91) % 5.0));
+            }
+            m.constrain(cap, Sense::Le, 9.0);
+            m.minimize(obj);
+            m
+        };
+        let serial = solve(&build(), &SolveOptions::default());
+        let parallel = solve(&build(), &SolveOptions::default().with_threads(4));
+        assert!(serial.ok() && parallel.ok());
+        assert_eq!(serial.status, Status::Optimal);
+        assert_eq!(parallel.status, Status::Optimal);
+        assert!(
+            (serial.objective - parallel.objective).abs() < 1e-6,
+            "serial {} vs parallel {}",
+            serial.objective,
+            parallel.objective
+        );
+    }
+
+    #[test]
+    fn parallel_detects_infeasible_and_integral_root() {
+        // IP-infeasible (LP relaxation feasible): 2x + 2y = 3 over ints.
+        let mut m = Model::new();
+        let x = m.int("x", 0.0, 3.0);
+        let y = m.int("y", 0.0, 3.0);
+        m.constrain(LinExpr::of(&[(x, 2.0), (y, 2.0)]), Sense::Eq, 3.0);
+        m.minimize(LinExpr::of(&[(x, 1.0), (y, 1.0)]));
+        assert_eq!(solve(&m, &SolveOptions::default().with_threads(3)).status, Status::Infeasible);
+
+        // Integral root relaxation: solved without any branching.
+        let mut m2 = Model::new();
+        let z = m2.int("z", 0.0, 5.0);
+        m2.constrain(LinExpr::of(&[(z, 1.0)]), Sense::Le, 3.0);
+        m2.minimize(LinExpr::of(&[(z, -1.0)]));
+        let s = solve(&m2, &SolveOptions::default().with_threads(3));
+        assert!(s.ok());
+        assert_eq!(s.int_value(z), 3);
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! (which is an assignment polytope and deserves a combinatorial algorithm
 //! rather than a tableau).
 //!
-//! The public surface is the [`Model`] builder + [`solve`].
+//! The public surface is the [`Model`] builder + [`solve`]. Branch & bound
+//! runs serially by default and in parallel over the coordinator's scoped
+//! worker team when [`SolveOptions::threads`] `> 1` (shared atomic
+//! incumbent, best-bound subproblem queue with work stealing — see
+//! [`branch_bound`]).
 
 pub mod assignment;
 pub mod branch_bound;
@@ -24,29 +28,37 @@ pub struct Var(pub usize);
 /// Constraint sense.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sense {
+    /// `expr <= rhs`.
     Le,
+    /// `expr >= rhs`.
     Ge,
+    /// `expr == rhs`.
     Eq,
 }
 
 /// A linear expression `Σ coef·var`.
 #[derive(Debug, Clone, Default)]
 pub struct LinExpr {
+    /// `(variable, coefficient)` terms; repeated variables accumulate.
     pub terms: Vec<(Var, f64)>,
 }
 
 impl LinExpr {
+    /// Empty expression.
     pub fn new() -> Self {
         Self::default()
     }
+    /// Append a term (builder style).
     pub fn term(mut self, v: Var, c: f64) -> Self {
         self.terms.push((v, c));
         self
     }
+    /// Append a term in place.
     pub fn add(&mut self, v: Var, c: f64) -> &mut Self {
         self.terms.push((v, c));
         self
     }
+    /// Expression from a term slice.
     pub fn of(terms: &[(Var, f64)]) -> Self {
         LinExpr { terms: terms.to_vec() }
     }
@@ -56,30 +68,43 @@ impl LinExpr {
     }
 }
 
+/// A model variable: bounds plus integrality.
 #[derive(Debug, Clone)]
 pub struct VarDef {
+    /// Diagnostic name.
     pub name: String,
+    /// Lower bound.
     pub lb: f64,
+    /// Upper bound (may be `f64::INFINITY`).
     pub ub: f64,
+    /// Whether the variable must take integer values.
     pub integer: bool,
 }
 
+/// One linear constraint `expr (<=|>=|==) rhs`.
 #[derive(Debug, Clone)]
 pub struct Constraint {
+    /// Left-hand side.
     pub expr: LinExpr,
+    /// Relation.
     pub sense: Sense,
+    /// Right-hand side.
     pub rhs: f64,
 }
 
 /// MILP model builder (minimization).
 #[derive(Debug, Clone, Default)]
 pub struct Model {
+    /// Variables in creation order (a [`Var`] indexes this).
     pub vars: Vec<VarDef>,
+    /// Constraints in creation order.
     pub cons: Vec<Constraint>,
+    /// Minimization objective.
     pub objective: LinExpr,
 }
 
 impl Model {
+    /// Empty model.
     pub fn new() -> Self {
         Self::default()
     }
@@ -101,6 +126,7 @@ impl Model {
         self.int(name, 0.0, 1.0)
     }
 
+    /// Add the constraint `expr (sense) rhs`.
     pub fn constrain(&mut self, expr: LinExpr, sense: Sense, rhs: f64) {
         self.cons.push(Constraint { expr, sense, rhs });
     }
@@ -110,9 +136,11 @@ impl Model {
         self.objective = expr;
     }
 
+    /// Number of variables.
     pub fn num_vars(&self) -> usize {
         self.vars.len()
     }
+    /// Number of constraints.
     pub fn num_cons(&self) -> usize {
         self.cons.len()
     }
@@ -141,10 +169,13 @@ impl Model {
 /// Solve status.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Status {
+    /// Proven optimal.
     Optimal,
     /// Feasible incumbent returned but optimality not proven (time limit).
     Feasible,
+    /// No feasible point exists.
     Infeasible,
+    /// Objective unbounded below.
     Unbounded,
     /// No incumbent found within the time limit.
     TimeLimit,
@@ -153,20 +184,26 @@ pub enum Status {
 /// Solution returned by the solvers.
 #[derive(Debug, Clone)]
 pub struct Solution {
+    /// Outcome of the solve.
     pub status: Status,
+    /// Objective value of `values`.
     pub objective: f64,
+    /// Variable assignment (indexed by [`Var`]).
     pub values: Vec<f64>,
     /// Branch-and-bound nodes explored (0 for pure LPs).
     pub nodes: u64,
 }
 
 impl Solution {
+    /// Value of one variable.
     pub fn value(&self, v: Var) -> f64 {
         self.values[v.0]
     }
+    /// Value of one integer variable, rounded exactly.
     pub fn int_value(&self, v: Var) -> i64 {
         self.values[v.0].round() as i64
     }
+    /// Whether a usable assignment came back (optimal or feasible).
     pub fn ok(&self) -> bool {
         matches!(self.status, Status::Optimal | Status::Feasible)
     }
@@ -175,10 +212,20 @@ impl Solution {
 /// Solver knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct SolveOptions {
+    /// Wall-clock budget; the incumbent (if any) is returned at expiry.
     pub time_limit: std::time::Duration,
     /// Relative MIP gap at which B&B stops.
     pub mip_gap: f64,
+    /// Branch-and-bound node budget.
     pub max_nodes: u64,
+    /// Worker threads for branch & bound. `1` (the default) runs the
+    /// serial best-first search; `> 1` runs the parallel search over the
+    /// coordinator worker team — workers share an atomic incumbent bound
+    /// and a best-bound subproblem queue, each diving on one child locally
+    /// and publishing the other for stealing. Run to completion, both
+    /// modes return the same objective (the search order differs, the
+    /// optimum does not).
+    pub threads: usize,
 }
 
 impl Default for SolveOptions {
@@ -187,7 +234,25 @@ impl Default for SolveOptions {
             time_limit: std::time::Duration::from_secs(60),
             mip_gap: 1e-6,
             max_nodes: 2_000_000,
+            threads: 1,
         }
+    }
+}
+
+impl SolveOptions {
+    /// Default options with branch & bound parallelized over all available
+    /// cores.
+    pub fn parallel() -> Self {
+        SolveOptions {
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            ..Default::default()
+        }
+    }
+
+    /// Set the worker-thread count (builder style).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 }
 

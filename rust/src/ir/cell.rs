@@ -24,13 +24,21 @@
 /// functions are synthesized as trees of these.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CellKind {
+    /// Non-inverting buffer.
     Buf,
+    /// Inverter.
     Inv,
+    /// 2-input AND.
     And2,
+    /// 2-input OR.
     Or2,
+    /// 2-input NAND.
     Nand2,
+    /// 2-input NOR.
     Nor2,
+    /// 2-input XOR.
     Xor2,
+    /// 2-input XNOR.
     Xnor2,
     /// AOI21: `!(a·b + c)` — the black-node generate cell.
     Aoi21,

@@ -16,6 +16,7 @@ pub struct NodeId(pub u32);
 
 impl NodeId {
     #[inline]
+    /// The node's position in the netlist.
     pub fn index(self) -> usize {
         self.0 as usize
     }
@@ -35,6 +36,7 @@ pub enum Node {
 /// Gate-level netlist with named primary outputs.
 #[derive(Debug, Clone, Default)]
 pub struct Netlist {
+    /// Diagnostic name (used in error messages and reports).
     pub name: String,
     nodes: Vec<Node>,
     outputs: Vec<(String, NodeId)>,
@@ -42,6 +44,7 @@ pub struct Netlist {
 }
 
 impl Netlist {
+    /// Empty netlist with a diagnostic name.
     pub fn new(name: impl Into<String>) -> Self {
         Netlist { name: name.into(), ..Default::default() }
     }
@@ -58,6 +61,19 @@ impl Netlist {
         self.nodes.push(Node::Input { name: name.into(), arrival_ns });
         self.n_inputs += 1;
         id
+    }
+
+    /// Change the arrival time (ns) of an existing primary input — the
+    /// mutation an optimization move makes when an upstream change (a CT
+    /// interconnect swap, a revised column profile) shifts when this
+    /// input's data shows up. [`crate::sta::IncrementalSta`] re-times only
+    /// the input's fan-out cone after such an edit. Panics if `id` is not
+    /// an input.
+    pub fn set_input_arrival(&mut self, id: NodeId, arrival_ns: f64) {
+        match &mut self.nodes[id.index()] {
+            Node::Input { arrival_ns: t, .. } => *t = arrival_ns,
+            other => panic!("set_input_arrival on non-input node {other:?}"),
+        }
     }
 
     /// Add a constant node.
@@ -80,36 +96,47 @@ impl Netlist {
     }
 
     // -- convenience constructors used throughout the synthesizer --------
+    /// `a · b`.
     pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.gate(CellKind::And2, &[a, b])
     }
+    /// `a + b`.
     pub fn or2(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.gate(CellKind::Or2, &[a, b])
     }
+    /// `!(a · b)`.
     pub fn nand2(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.gate(CellKind::Nand2, &[a, b])
     }
+    /// `!(a + b)`.
     pub fn nor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.gate(CellKind::Nor2, &[a, b])
     }
+    /// `a ⊕ b`.
     pub fn xor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.gate(CellKind::Xor2, &[a, b])
     }
+    /// `!(a ⊕ b)`.
     pub fn xnor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.gate(CellKind::Xnor2, &[a, b])
     }
+    /// `!a`.
     pub fn inv(&mut self, a: NodeId) -> NodeId {
         self.gate(CellKind::Inv, &[a])
     }
+    /// Buffer (`a`).
     pub fn buf(&mut self, a: NodeId) -> NodeId {
         self.gate(CellKind::Buf, &[a])
     }
+    /// `!((a · b) + c)`.
     pub fn aoi21(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
         self.gate(CellKind::Aoi21, &[a, b, c])
     }
+    /// `!((a + b) · c)`.
     pub fn oai21(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
         self.gate(CellKind::Oai21, &[a, b, c])
     }
+    /// Majority of three (the full-adder carry).
     pub fn maj3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
         self.gate(CellKind::Maj3, &[a, b, c])
     }
@@ -120,25 +147,31 @@ impl Netlist {
     }
 
     // -- accessors --------------------------------------------------------
+    /// All nodes in topological order.
     #[inline]
     pub fn nodes(&self) -> &[Node] {
         &self.nodes
     }
+    /// One node by id.
     #[inline]
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.index()]
     }
+    /// Node count (inputs + constants + gates).
     #[inline]
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
+    /// Whether the netlist has no nodes.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
+    /// Named primary outputs in registration order.
     pub fn outputs(&self) -> &[(String, NodeId)] {
         &self.outputs
     }
+    /// Primary-input count.
     pub fn num_inputs(&self) -> usize {
         self.n_inputs
     }

@@ -62,6 +62,13 @@
 //! `coordinator::evaluate_point`) remain as thin shims over the
 //! process-global engine — see the [`api`] module docs for the mapping
 //! from each legacy entry point to its request form.
+//!
+//! See `ARCHITECTURE.md` at the repository root for the module-by-module
+//! map of the pipeline, including the incremental timing engine
+//! ([`sta::IncrementalSta`]) and the parallel ILP search
+//! ([`ilp::SolveOptions::threads`]).
+
+#![warn(missing_docs)]
 
 pub mod api;
 pub mod baselines;

@@ -18,6 +18,7 @@ use crate::sta::StaReport;
 use crate::synth::Sig;
 use crate::Result;
 
+/// Tap count of the Table-1 filter.
 pub const TAPS: usize = 5;
 
 /// Report for one FIR configuration.

@@ -16,18 +16,24 @@ pub use systolic::{build_pe, systolic_report, SystolicReport};
 
 /// NanGate45 DFF_X1-like flip-flop model.
 pub const DFF_AREA_UM2: f64 = 4.522;
+/// Switching energy of one pipeline register bit (fJ/cycle).
 pub const DFF_ENERGY_FJ: f64 = 2.5;
 
 /// A module-level synthesis report row (one cell of Table 1/2).
 #[derive(Debug, Clone)]
 pub struct ModuleReport {
+    /// Clock target (Hz).
     pub freq_hz: f64,
+    /// Worst negative slack at the clock target (ns).
     pub wns_ns: f64,
+    /// Total area including registers (µm²).
     pub area_um2: f64,
+    /// Dynamic power at the clock target (mW).
     pub power_mw: f64,
 }
 
 impl ModuleReport {
+    /// Clock period implied by the report's frequency target (ns).
     pub fn period_ns(&self) -> f64 {
         1e9 / self.freq_hz
     }

@@ -16,8 +16,10 @@ use crate::Result;
 
 /// Array geometry (the paper's configuration).
 pub const ROWS: usize = 16;
+/// Array columns of the Table-2 configuration.
 pub const COLS: usize = 16;
 
+/// Report for one systolic-array configuration.
 pub type SystolicReport = ModuleReport;
 
 /// Build one PE: an `n×n` fused MAC with a `2n`-bit accumulator operand.

@@ -12,6 +12,7 @@ use crate::cpa::{self, CpaColumn, CpaStrategy, FdcModel, PrefixStructure};
 use crate::ct::{self, CtArchitecture, OrderStrategy, StagePlan};
 use crate::ir::{CellLib, Netlist, NodeId};
 use crate::ppg::{self, PpgKind};
+use crate::sta::TimingStats;
 use crate::synth::{CompressorTiming, Sig};
 use crate::Result;
 use anyhow::bail;
@@ -32,18 +33,25 @@ pub type Strategy = CpaStrategy;
 /// Specification for a multiplier / MAC design.
 #[derive(Debug, Clone)]
 pub struct MultiplierSpec {
+    /// Operand bit width.
     pub n: usize,
+    /// Partial-product generator.
     pub ppg: PpgKind,
+    /// Compressor-tree architecture.
     pub ct: CtArchitecture,
+    /// Interconnect-order override.
     pub order_override: Option<OrderStrategy>,
     /// Custom stage plan (used by the RL-MUL baseline's searched trees).
     pub ct_plan: Option<StagePlan>,
+    /// Carry-propagate adder choice.
     pub cpa: CpaChoice,
+    /// Synthesis strategy preset.
     pub strategy: Strategy,
     /// Fuse a `2n`-bit accumulator into the CT (§2.3).
     pub fused_mac: bool,
     /// Conventional MAC: multiply then add with a separate CPA.
     pub separate_mac: bool,
+    /// FDC timing model driving CPA optimization.
     pub fdc_model: FdcModel,
 }
 
@@ -64,38 +72,47 @@ impl MultiplierSpec {
         }
     }
 
+    /// Set the synthesis strategy preset.
     pub fn strategy(mut self, s: Strategy) -> Self {
         self.strategy = s;
         self
     }
+    /// Set the compressor-tree architecture.
     pub fn ct(mut self, ct: CtArchitecture) -> Self {
         self.ct = ct;
         self
     }
+    /// Set the CPA choice.
     pub fn cpa(mut self, cpa: CpaChoice) -> Self {
         self.cpa = cpa;
         self
     }
+    /// Set the partial-product generator.
     pub fn ppg(mut self, ppg: PpgKind) -> Self {
         self.ppg = ppg;
         self
     }
+    /// Toggle the §2.3 fused accumulator.
     pub fn fused_mac(mut self, yes: bool) -> Self {
         self.fused_mac = yes;
         self
     }
+    /// Toggle the conventional multiply-then-add MAC.
     pub fn separate_mac(mut self, yes: bool) -> Self {
         self.separate_mac = yes;
         self
     }
+    /// Force an interconnect-order strategy.
     pub fn order(mut self, o: OrderStrategy) -> Self {
         self.order_override = Some(o);
         self
     }
+    /// Use a custom CT stage plan (RL-MUL searched trees).
     pub fn with_plan(mut self, plan: StagePlan) -> Self {
         self.ct_plan = Some(plan);
         self
     }
+    /// Use a fitted FDC timing model.
     pub fn fdc(mut self, m: FdcModel) -> Self {
         self.fdc_model = m;
         self
@@ -185,13 +202,13 @@ impl MultiplierSpec {
                 }
             })
             .collect();
-        let graph = match self.cpa {
+        let (graph, cpa_timing) = match self.cpa {
             CpaChoice::ProfileOptimized => {
-                let (g, _rep) =
+                let (g, rep) =
                     cpa::synthesize_for_profile(&ct_out.profile, self.strategy, &self.fdc_model);
-                g
+                (g, rep.timing)
             }
-            CpaChoice::Regular(s) => cpa::build(s, width),
+            CpaChoice::Regular(s) => (cpa::build(s, width), TimingStats::default()),
         };
         let cpa_out = cpa::expand(&mut nl, &graph, &cpa_cols);
 
@@ -241,6 +258,7 @@ impl MultiplierSpec {
             ct_stages: ct_out.stages,
             profile: ct_out.profile,
             cpa_nodes: graph.size(),
+            timing: cpa_timing,
         })
     }
 }
@@ -248,17 +266,29 @@ impl MultiplierSpec {
 /// A built design: netlist + interface + structural metadata.
 #[derive(Debug, Clone)]
 pub struct Design {
+    /// Operand bit width.
     pub n: usize,
+    /// Whether the design accumulates (`a·b + c`).
     pub is_mac: bool,
+    /// The gate-level netlist.
     pub netlist: Netlist,
+    /// Operand `a` input bits, LSB first.
     pub a: Vec<NodeId>,
+    /// Operand `b` input bits, LSB first.
     pub b: Vec<NodeId>,
+    /// Accumulator input bits (empty for plain multipliers).
     pub c: Vec<NodeId>,
+    /// Product output bits, LSB first.
     pub product: Vec<NodeId>,
+    /// Compressor-tree stage count realized.
     pub ct_stages: usize,
     /// CT output arrival-estimate profile (ns) per column.
     pub profile: Vec<f64>,
+    /// CPA prefix-node count (area proxy).
     pub cpa_nodes: usize,
+    /// Timing-evaluation work the CPA optimization performed while
+    /// building this design (incremental vs full, see [`TimingStats`]).
+    pub timing: TimingStats,
 }
 
 impl Design {

@@ -19,7 +19,9 @@ use crate::synth::Sig;
 /// Partial-product generator selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PpgKind {
+    /// Unsigned AND-gate array.
     AndArray,
+    /// Radix-4 modified Booth recoding.
     Booth4,
 }
 
@@ -27,6 +29,7 @@ pub enum PpgKind {
 /// weight `2^j`, each with the timing-model arrival estimate.
 #[derive(Debug, Clone)]
 pub struct PpMatrix {
+    /// `columns[j]` = partial-product bits of weight `2^j`.
     pub columns: Vec<Vec<Sig>>,
     /// Operand widths that produced the matrix (for reports).
     pub n_bits: usize,

@@ -23,11 +23,13 @@ use std::path::PathBuf;
 
 /// Size buckets — keep in sync with `python/compile/kernels/netlist_eval.py`.
 pub const SMALL: (usize, usize) = (2048, 72);
+/// Large size bucket `(max nodes, max inputs)`.
 pub const LARGE: (usize, usize) = (8192, 144);
 /// uint32 words per input (256 vectors per execution).
 pub const BATCH: usize = 8;
 /// Systolic geometry — keep in sync with `python/compile/kernels/systolic.py`.
 pub const PES: usize = 16;
+/// Reduction steps per systolic execution.
 pub const K_STEPS: usize = 64;
 
 /// Opcodes of the artifact encoding (extends `CellKind::opcode`).
@@ -38,11 +40,17 @@ const OP_INPUT: i32 = 13;
 /// A netlist encoded for the PJRT evaluator.
 #[derive(Debug, Clone)]
 pub struct EncodedNetlist {
+    /// Per-node opcode.
     pub ops: Vec<i32>,
+    /// First fan-in index per node.
     pub f0: Vec<i32>,
+    /// Second fan-in index per node.
     pub f1: Vec<i32>,
+    /// Third fan-in index per node.
     pub f2: Vec<i32>,
+    /// Node count.
     pub n_nodes: usize,
+    /// Primary-input count.
     pub n_inputs: usize,
     /// Bucket name: "small" or "large".
     pub bucket: &'static str,
@@ -122,6 +130,7 @@ mod pjrt_runtime {
             self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
         }
 
+        /// PJRT platform name (e.g. `cpu`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -235,6 +244,7 @@ mod stub_runtime {
     }
 
     impl Runtime {
+        /// Stub constructor (always succeeds; nothing is loaded).
         pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
             Ok(Runtime { artifact_dir: artifact_dir.as_ref().to_path_buf() })
         }
@@ -245,10 +255,12 @@ mod stub_runtime {
             false
         }
 
+        /// Stub platform description.
         pub fn platform(&self) -> String {
             "stub (built without the `pjrt` feature)".to_string()
         }
 
+        /// Always errors: rebuild with `--features pjrt` to execute.
         pub fn eval_netlist(
             &self,
             _enc: &EncodedNetlist,
@@ -257,6 +269,7 @@ mod stub_runtime {
             bail!("PJRT runtime unavailable: rebuild with `--features pjrt`");
         }
 
+        /// Always errors: rebuild with `--features pjrt` to execute.
         pub fn systolic(
             &self,
             _a: &[i32],

@@ -27,6 +27,7 @@ const OP_CONST1: u8 = 12;
 const OP_INPUT: u8 = 13;
 
 impl CompiledNetlist {
+    /// Compile a netlist into the simulator's flat op list.
     pub fn compile(nl: &Netlist) -> Self {
         let mut ops = Vec::with_capacity(nl.len());
         let mut fanin = Vec::with_capacity(nl.len());
@@ -55,12 +56,15 @@ impl CompiledNetlist {
         CompiledNetlist { ops, fanin, n_inputs: next_input as usize }
     }
 
+    /// Number of compiled ops (== netlist nodes).
     pub fn len(&self) -> usize {
         self.ops.len()
     }
+    /// Whether the program is empty.
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }
+    /// Number of primary inputs the program samples.
     pub fn num_inputs(&self) -> usize {
         self.n_inputs
     }
@@ -114,6 +118,7 @@ pub struct Simulator {
 }
 
 impl Simulator {
+    /// Fresh simulator (programs are cached per netlist identity).
     pub fn new() -> Self {
         Self::default()
     }

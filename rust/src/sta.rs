@@ -6,8 +6,23 @@
 //! the *relative* comparisons that the paper's tables and Pareto plots
 //! report. Arrival times honour per-input arrival offsets, which is how the
 //! CPA sees the compressor tree's non-uniform ("trapezoidal") profile.
+//!
+//! Two engines share one arrival formula:
+//!
+//! - [`Sta`] — the whole-netlist engine (one levelized sweep, plus area and
+//!   toggle-based power).
+//! - [`IncrementalSta`] — the engine for workloads that edit one netlist
+//!   repeatedly (arrival-profile perturbation loops, appended logic): it
+//!   caches arrival times, loads and the fan-out adjacency and, after an
+//!   edit (input-arrival change, appended gates), re-times **only the
+//!   fan-out cones of the changed cells** through a dirty-set worklist.
+//!   Arrival times are bit-identical to a full [`Sta::arrivals_ns`] sweep
+//!   — both paths evaluate the same [`node_arrival_ns`] formula — and
+//!   [`TimingStats`] records how much work the incremental path avoided.
 
 use crate::ir::{CellLib, Netlist, Node, NodeId};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 
 /// Timing/area/power report for one netlist.
@@ -38,6 +53,7 @@ impl StaReport {
 /// The STA engine. Holds the cell library and power-model knobs.
 #[derive(Debug, Clone)]
 pub struct Sta {
+    /// Characterized standard-cell library.
     pub lib: CellLib,
     /// Clock used to convert switching energy to power, GHz.
     pub clock_ghz: f64,
@@ -54,7 +70,24 @@ impl Default for Sta {
     }
 }
 
+/// Arrival time of node `i` given the arrivals of its fan-ins and its
+/// capacitive load — the one formula both [`Sta`] (full sweep) and
+/// [`IncrementalSta`] (dirty-cone re-timing) evaluate, so the two engines
+/// agree bit-for-bit.
+#[inline]
+pub fn node_arrival_ns(lib: &CellLib, node: &Node, at: &[f64], load: f64) -> f64 {
+    match node {
+        Node::Input { arrival_ns, .. } => *arrival_ns,
+        Node::Const(_) => 0.0,
+        Node::Gate { kind, fanin } => {
+            let worst = fanin.iter().map(|f| at[f.index()]).fold(f64::MIN, f64::max);
+            worst + lib.delay_ns(*kind, load)
+        }
+    }
+}
+
 impl Sta {
+    /// Engine over a caller-provided cell library (other knobs default).
     pub fn with_lib(lib: CellLib) -> Self {
         Sta { lib, ..Default::default() }
     }
@@ -64,14 +97,7 @@ impl Sta {
         let loads = nl.loads(&self.lib);
         let mut at = vec![0.0f64; nl.len()];
         for (i, node) in nl.nodes().iter().enumerate() {
-            at[i] = match node {
-                Node::Input { arrival_ns, .. } => *arrival_ns,
-                Node::Const(_) => 0.0,
-                Node::Gate { kind, fanin } => {
-                    let worst = fanin.iter().map(|f| at[f.index()]).fold(f64::MIN, f64::max);
-                    worst + self.lib.delay_ns(*kind, loads[i])
-                }
-            };
+            at[i] = node_arrival_ns(&self.lib, node, &at, loads[i]);
         }
         at
     }
@@ -121,6 +147,239 @@ impl Sta {
             .iter()
             .map(|g| g.iter().map(|id| at[id.index()]).fold(0.0f64, f64::max))
             .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental timing
+// ---------------------------------------------------------------------------
+
+/// Counters describing how much timing evaluation a pass (or a whole
+/// compile) performed, and how much of it the incremental engines avoided.
+///
+/// `nodes_total` is the work a from-scratch evaluation would have done
+/// (netlist length per pass); `nodes_retimed` is the work actually done
+/// (full length for a full pass, dirty-cone size for an incremental one).
+/// The same counters are used by the model-level delay cache in
+/// [`crate::cpa::optimize`], where a "node" is a prefix-graph node rather
+/// than a gate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimingStats {
+    /// Whole-netlist (or whole-graph) evaluation sweeps.
+    pub full_passes: u64,
+    /// Dirty-set worklist propagations.
+    pub incremental_passes: u64,
+    /// Nodes actually re-evaluated across all passes.
+    pub nodes_retimed: u64,
+    /// Nodes a from-scratch evaluation of every pass would have visited.
+    pub nodes_total: u64,
+}
+
+impl TimingStats {
+    /// Stats of one from-scratch pass over `nodes` nodes.
+    pub fn full_pass(nodes: usize) -> TimingStats {
+        TimingStats {
+            full_passes: 1,
+            incremental_passes: 0,
+            nodes_retimed: nodes as u64,
+            nodes_total: nodes as u64,
+        }
+    }
+
+    /// Accumulate another stats record (compiles merge the timing work of
+    /// their inner artifacts this way).
+    pub fn merge(&mut self, other: &TimingStats) {
+        self.full_passes += other.full_passes;
+        self.incremental_passes += other.incremental_passes;
+        self.nodes_retimed += other.nodes_retimed;
+        self.nodes_total += other.nodes_total;
+    }
+
+    /// Fraction of nodes actually re-evaluated, in `[0, 1]` (1.0 when no
+    /// pass ran). Lower is better; `1 / retime_fraction` is the effective
+    /// speedup over always re-timing from scratch.
+    pub fn retime_fraction(&self) -> f64 {
+        if self.nodes_total == 0 {
+            1.0
+        } else {
+            self.nodes_retimed as f64 / self.nodes_total as f64
+        }
+    }
+}
+
+/// Incremental arrival-time engine over one netlist.
+///
+/// Holds the arrival vector, per-node loads and the fan-out adjacency of a
+/// netlist, and re-times **only the fan-out cones of changed cells**:
+///
+/// - [`IncrementalSta::touch`] marks a cell whose inputs changed (e.g. an
+///   input whose arrival was edited via
+///   [`Netlist::set_input_arrival`]);
+/// - [`IncrementalSta::sync`] absorbs gates appended to the netlist since
+///   the last sync (netlists are append-only), dirtying the appended cone
+///   *and* the existing drivers whose loads the new gates increased;
+/// - [`IncrementalSta::propagate`] drains the dirty set in topological
+///   order, stopping each ray as soon as a recomputed arrival is unchanged.
+///
+/// Arrival times after `propagate` are bit-identical to a fresh
+/// [`Sta::arrivals_ns`] sweep over the same netlist: both paths evaluate
+/// [`node_arrival_ns`] with bit-identical load vectors, and a node is
+/// skipped only when every quantity its arrival depends on is unchanged.
+#[derive(Debug, Clone)]
+pub struct IncrementalSta {
+    lib: CellLib,
+    at: Vec<f64>,
+    loads: Vec<f64>,
+    /// `consumers[i]` = gate nodes that read node `i` (duplicates allowed
+    /// for gates sampling one driver twice).
+    consumers: Vec<Vec<u32>>,
+    /// Netlist nodes already absorbed.
+    synced_nodes: usize,
+    /// Primary outputs already absorbed into the load vector.
+    synced_outputs: usize,
+    dirty: BinaryHeap<Reverse<u32>>,
+    in_dirty: Vec<bool>,
+    stats: TimingStats,
+}
+
+impl IncrementalSta {
+    /// Build the engine with one full timing pass over `nl`.
+    pub fn new(sta: &Sta, nl: &Netlist) -> Self {
+        let loads = nl.loads(&sta.lib);
+        let mut at = vec![0.0f64; nl.len()];
+        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); nl.len()];
+        for (i, node) in nl.nodes().iter().enumerate() {
+            at[i] = node_arrival_ns(&sta.lib, node, &at, loads[i]);
+            if let Node::Gate { fanin, .. } = node {
+                for f in fanin {
+                    consumers[f.index()].push(i as u32);
+                }
+            }
+        }
+        IncrementalSta {
+            lib: sta.lib.clone(),
+            at,
+            loads,
+            consumers,
+            synced_nodes: nl.len(),
+            synced_outputs: nl.outputs().len(),
+            dirty: BinaryHeap::new(),
+            in_dirty: vec![false; nl.len()],
+            stats: TimingStats::full_pass(nl.len()),
+        }
+    }
+
+    fn mark_dirty(&mut self, i: usize) {
+        if !self.in_dirty[i] {
+            self.in_dirty[i] = true;
+            self.dirty.push(Reverse(i as u32));
+        }
+    }
+
+    /// Mark a cell whose own definition changed (an input whose
+    /// `arrival_ns` was edited, a constant repurposed). Its fan-out cone is
+    /// re-timed by the next [`IncrementalSta::propagate`].
+    pub fn touch(&mut self, id: NodeId) {
+        self.mark_dirty(id.index());
+    }
+
+    /// Absorb nodes and outputs appended to `nl` since the last sync.
+    ///
+    /// Loads are recomputed wholesale (bit-identical to [`Netlist::loads`];
+    /// cheap integer/float accumulation), then diffed: an existing driver
+    /// whose load grew is dirtied — its own delay changed — alongside every
+    /// appended cell, so `propagate` re-times exactly the affected cones.
+    pub fn sync(&mut self, nl: &Netlist) {
+        if nl.len() == self.synced_nodes && nl.outputs().len() == self.synced_outputs {
+            return;
+        }
+        assert!(
+            nl.len() >= self.synced_nodes,
+            "netlist shrank under an IncrementalSta (len {} < synced {})",
+            nl.len(),
+            self.synced_nodes
+        );
+        self.at.resize(nl.len(), 0.0);
+        self.in_dirty.resize(nl.len(), false);
+        self.consumers.resize(nl.len(), Vec::new());
+        for i in self.synced_nodes..nl.len() {
+            if let Node::Gate { fanin, .. } = &nl.nodes()[i] {
+                for f in fanin {
+                    self.consumers[f.index()].push(i as u32);
+                }
+            }
+        }
+        // Recompute loads exactly as a fresh pass would (same accumulation
+        // order ⇒ same floats), then dirty every node whose load changed.
+        let loads = nl.loads(&self.lib);
+        for i in 0..self.synced_nodes {
+            if loads[i] != self.loads[i] {
+                self.mark_dirty(i);
+            }
+        }
+        for i in self.synced_nodes..nl.len() {
+            self.mark_dirty(i);
+        }
+        self.loads = loads;
+        self.synced_nodes = nl.len();
+        self.synced_outputs = nl.outputs().len();
+    }
+
+    /// Drain the dirty set in topological order, re-timing each dirty cell
+    /// and dirtying its consumers when its arrival actually moved. Returns
+    /// the number of cells re-timed.
+    pub fn propagate(&mut self, nl: &Netlist) -> usize {
+        debug_assert_eq!(nl.len(), self.synced_nodes, "sync() before propagate()");
+        let mut retimed = 0usize;
+        while let Some(Reverse(i)) = self.dirty.pop() {
+            let i = i as usize;
+            if !self.in_dirty[i] {
+                continue; // stale duplicate heap entry
+            }
+            self.in_dirty[i] = false;
+            let new = node_arrival_ns(&self.lib, &nl.nodes()[i], &self.at, self.loads[i]);
+            retimed += 1;
+            if new != self.at[i] {
+                self.at[i] = new;
+                for c in 0..self.consumers[i].len() {
+                    let consumer = self.consumers[i][c] as usize;
+                    if !self.in_dirty[consumer] {
+                        self.in_dirty[consumer] = true;
+                        self.dirty.push(Reverse(consumer as u32));
+                    }
+                }
+            }
+        }
+        self.stats.incremental_passes += 1;
+        self.stats.nodes_retimed += retimed as u64;
+        self.stats.nodes_total += nl.len() as u64;
+        retimed
+    }
+
+    /// Arrival time (ns) of every node. Call after
+    /// [`IncrementalSta::propagate`]; pending dirty cells are stale.
+    pub fn arrivals(&self) -> &[f64] {
+        &self.at
+    }
+
+    /// Arrival time (ns) of one node.
+    pub fn arrival(&self, id: NodeId) -> f64 {
+        self.at[id.index()]
+    }
+
+    /// Worst arrival over primary outputs (ns).
+    pub fn critical_delay_ns(&self, nl: &Netlist) -> f64 {
+        nl.outputs().iter().map(|(_, id)| self.at[id.index()]).fold(0.0f64, f64::max)
+    }
+
+    /// Arrival time per primary output, in output order (ns).
+    pub fn output_arrivals(&self, nl: &Netlist) -> Vec<f64> {
+        nl.outputs().iter().map(|(_, id)| self.at[id.index()]).collect()
+    }
+
+    /// Cumulative work counters for this engine.
+    pub fn stats(&self) -> TimingStats {
+        self.stats
     }
 }
 
@@ -207,5 +466,77 @@ mod tests {
         assert!(p > 0.0);
         let fast = Sta { activity_rounds: 0, ..Sta::default() };
         assert!(fast.dynamic_power_mw(&nl) > 0.0);
+    }
+
+    #[test]
+    fn incremental_matches_full_at_build() {
+        let nl = xor_chain(12);
+        let sta = Sta::default();
+        let inc = IncrementalSta::new(&sta, &nl);
+        assert_eq!(inc.arrivals(), &sta.arrivals_ns(&nl)[..]);
+        assert_eq!(inc.stats().full_passes, 1);
+    }
+
+    #[test]
+    fn incremental_retimes_only_the_cone() {
+        // Perturb one mid-chain input of a 32-stage XOR chain: only the
+        // downstream suffix may be re-timed, and arrivals must stay
+        // bit-identical to a full sweep.
+        let mut nl = xor_chain(32);
+        let sta = Sta::default();
+        let mut inc = IncrementalSta::new(&sta, &nl);
+        let inputs = nl.inputs();
+        let mid = inputs[20];
+        nl.set_input_arrival(mid, 0.7);
+        inc.touch(mid);
+        let retimed = inc.propagate(&nl);
+        assert!(retimed > 0 && retimed < nl.len() / 2, "retimed {retimed} of {}", nl.len());
+        assert_eq!(inc.arrivals(), &sta.arrivals_ns(&nl)[..]);
+        // Reverting the edit restores the original arrivals exactly.
+        nl.set_input_arrival(mid, 0.0);
+        inc.touch(mid);
+        inc.propagate(&nl);
+        assert_eq!(inc.arrivals(), &sta.arrivals_ns(&nl)[..]);
+        assert!(inc.stats().retime_fraction() < 1.0);
+    }
+
+    #[test]
+    fn incremental_absorbs_appended_gates_and_load_changes() {
+        // Appending a gate increases its drivers' loads, which slows the
+        // drivers themselves — sync() must dirty them, not just the new
+        // cone.
+        let mut nl = xor_chain(6);
+        let sta = Sta::default();
+        let mut inc = IncrementalSta::new(&sta, &nl);
+        let inputs = nl.inputs();
+        // Tap a mid-chain *gate*: its load grows, so the gate itself and the
+        // whole chain suffix behind it must re-time.
+        let mid_gate = (0..nl.len())
+            .filter(|&i| matches!(nl.nodes()[i], Node::Gate { .. }))
+            .map(|i| NodeId(i as u32))
+            .nth(2)
+            .unwrap();
+        let tap = nl.xor2(mid_gate, inputs[3]);
+        let top = nl.and2(tap, inputs[5]);
+        nl.output("o2", top);
+        inc.sync(&nl);
+        inc.propagate(&nl);
+        assert_eq!(inc.arrivals(), &sta.arrivals_ns(&nl)[..]);
+        assert_eq!(inc.critical_delay_ns(&nl), sta.analyze(&nl).critical_delay_ns);
+    }
+
+    #[test]
+    fn timing_stats_merge_and_fraction() {
+        let mut a = TimingStats::full_pass(100);
+        a.merge(&TimingStats {
+            full_passes: 0,
+            incremental_passes: 1,
+            nodes_retimed: 10,
+            nodes_total: 100,
+        });
+        assert_eq!(a.full_passes, 1);
+        assert_eq!(a.incremental_passes, 1);
+        assert!((a.retime_fraction() - 110.0 / 200.0).abs() < 1e-12);
+        assert_eq!(TimingStats::default().retime_fraction(), 1.0);
     }
 }

@@ -13,11 +13,14 @@ use crate::ir::{CellLib, Netlist, NodeId};
 /// estimate the ILP timing model tracks (Eq. 13-16).
 #[derive(Debug, Clone, Copy)]
 pub struct Sig {
+    /// Netlist node carrying the signal.
     pub node: NodeId,
+    /// Model arrival estimate (ns).
     pub t: f64,
 }
 
 impl Sig {
+    /// Signal with an arrival estimate (ns).
     pub fn new(node: NodeId, t: f64) -> Self {
         Sig { node, t }
     }
@@ -29,14 +32,22 @@ impl Sig {
 pub struct CompressorTiming {
     // 3:2 compressor (full adder): sum = XOR(XOR(a,b),cin),
     // cout = NAND(NAND(a,b), NAND(XOR(a,b),cin)).
+    /// A → sum delay.
     pub t_as: f64,
+    /// B → sum delay.
     pub t_bs: f64,
+    /// Cin → sum delay.
     pub t_cs: f64,
+    /// A → carry delay.
     pub t_ac: f64,
+    /// B → carry delay.
     pub t_bc: f64,
+    /// Cin → carry delay.
     pub t_cc: f64,
     // 2:2 compressor (half adder): sum = XOR(a,b), carry = AND(a,b).
+    /// Input → sum delay of the 2:2.
     pub h_as: f64,
+    /// Input → carry delay of the 2:2.
     pub h_ac: f64,
 }
 
@@ -80,7 +91,9 @@ impl CompressorTiming {
 /// Result of instantiating a compressor.
 #[derive(Debug, Clone, Copy)]
 pub struct CompOut {
+    /// Sum bit (same column).
     pub sum: Sig,
+    /// Carry bit (next column).
     pub carry: Sig,
 }
 

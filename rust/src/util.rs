@@ -17,6 +17,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Deterministic generator from a 64-bit seed.
     pub fn seed_from_u64(seed: u64) -> Self {
         // SplitMix64 expansion, as recommended by the xoshiro authors.
         let mut sm = seed;
@@ -31,6 +32,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -68,6 +70,7 @@ impl Rng {
         lo + self.f64() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }
@@ -84,28 +87,39 @@ impl Rng {
 /// Minimal JSON value for report emission (no parsing needed in-tree).
 #[derive(Debug, Clone)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Number.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (ordered keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+    /// Array value.
     pub fn arr(xs: Vec<Json>) -> Json {
         Json::Arr(xs)
     }
 
+    /// Serialize to compact JSON text.
     pub fn render(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -181,24 +195,28 @@ impl Json {
         Ok(v)
     }
 
+    /// Number payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s.as_str()),
             _ => None,
         }
     }
+    /// Bool payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array payload, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(xs) => Some(xs.as_slice()),
@@ -419,11 +437,14 @@ impl<'a> Parser<'a> {
 /// Very small flag parser: `--key value` and `--switch` styles.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-flag arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--flag` pairs.
     pub flags: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Parse `--key value` / `--flag` style arguments.
     pub fn parse(argv: impl Iterator<Item = String>) -> Self {
         let mut out = Args::default();
         let mut argv = argv.peekable();
@@ -441,22 +462,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` parsed as usize, or `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or `default`.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether `--key` was passed (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -470,12 +496,15 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
+    /// Append one row.
     pub fn row(&mut self, cells: Vec<String>) {
         self.rows.push(cells);
     }
+    /// Render as aligned plain text.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

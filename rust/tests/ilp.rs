@@ -1,0 +1,185 @@
+//! ILP edge-case coverage: infeasible systems, degenerate simplex pivots,
+//! and branch-and-bound determinism (parallel result == serial result).
+
+use std::time::Duration;
+use ufo_mac::ct::{assign_greedy, assign_ilp, CtCounts};
+use ufo_mac::ilp::{solve, LinExpr, Model, Sense, SolveOptions, Status};
+use ufo_mac::util::Rng;
+
+fn mult_counts(n: usize) -> CtCounts {
+    let pp: Vec<usize> = (0..2 * n - 1).map(|j| n.min(j + 1).min(2 * n - 1 - j)).collect();
+    CtCounts::from_populations(&pp)
+}
+
+// ---------------------------------------------------------------------------
+// Infeasible systems
+// ---------------------------------------------------------------------------
+
+#[test]
+fn infeasible_lp_conflicting_bounds_row() {
+    // x ≤ 1 (bound) vs x ≥ 5 (row).
+    let mut m = Model::new();
+    let x = m.cont("x", 0.0, 1.0);
+    m.constrain(LinExpr::of(&[(x, 1.0)]), Sense::Ge, 5.0);
+    m.minimize(LinExpr::of(&[(x, 1.0)]));
+    assert_eq!(solve(&m, &SolveOptions::default()).status, Status::Infeasible);
+}
+
+#[test]
+fn infeasible_equality_system() {
+    // x + y = 2 and x + y = 3 cannot both hold.
+    let mut m = Model::new();
+    let x = m.cont("x", 0.0, 10.0);
+    let y = m.cont("y", 0.0, 10.0);
+    m.constrain(LinExpr::of(&[(x, 1.0), (y, 1.0)]), Sense::Eq, 2.0);
+    m.constrain(LinExpr::of(&[(x, 1.0), (y, 1.0)]), Sense::Eq, 3.0);
+    m.minimize(LinExpr::of(&[(x, 1.0)]));
+    assert_eq!(solve(&m, &SolveOptions::default()).status, Status::Infeasible);
+}
+
+#[test]
+fn integrality_induced_infeasibility_serial_and_parallel() {
+    // LP-relaxation feasible (x = y = 0.75), IP infeasible: 2x + 2y = 3.
+    let build = || {
+        let mut m = Model::new();
+        let x = m.int("x", 0.0, 4.0);
+        let y = m.int("y", 0.0, 4.0);
+        m.constrain(LinExpr::of(&[(x, 2.0), (y, 2.0)]), Sense::Eq, 3.0);
+        m.minimize(LinExpr::of(&[(x, 1.0), (y, 1.0)]));
+        m
+    };
+    assert_eq!(solve(&build(), &SolveOptions::default()).status, Status::Infeasible);
+    assert_eq!(
+        solve(&build(), &SolveOptions::default().with_threads(4)).status,
+        Status::Infeasible
+    );
+}
+
+#[test]
+fn empty_variable_range_is_infeasible() {
+    let mut m = Model::new();
+    let x = m.cont("x", 3.0, 1.0); // ub < lb
+    m.minimize(LinExpr::of(&[(x, 1.0)]));
+    assert_eq!(solve(&m, &SolveOptions::default()).status, Status::Infeasible);
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate simplex pivots
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_vertex_with_redundant_constraints() {
+    // Three constraints meet at the optimum (2, 2): a degenerate vertex
+    // forcing zero-progress pivots. The Bland fallback must terminate at
+    // the right objective.
+    let mut m = Model::new();
+    let x = m.cont("x", 0.0, f64::INFINITY);
+    let y = m.cont("y", 0.0, f64::INFINITY);
+    m.constrain(LinExpr::of(&[(x, 1.0), (y, 1.0)]), Sense::Le, 4.0);
+    m.constrain(LinExpr::of(&[(x, 1.0)]), Sense::Le, 2.0);
+    m.constrain(LinExpr::of(&[(x, 2.0), (y, 2.0)]), Sense::Le, 8.0); // redundant copy
+    m.constrain(LinExpr::of(&[(x, 3.0), (y, 1.0)]), Sense::Le, 8.0); // also through (2,2)
+    m.minimize(LinExpr::of(&[(x, -1.0), (y, -1.0)]));
+    let s = solve(&m, &SolveOptions::default());
+    assert_eq!(s.status, Status::Optimal);
+    assert!((s.objective + 4.0).abs() < 1e-6, "obj {}", s.objective);
+}
+
+#[test]
+fn degenerate_zero_rhs_rows_terminate() {
+    // Rows with rhs 0 make the origin a massively degenerate vertex.
+    let mut m = Model::new();
+    let v: Vec<_> = (0..5).map(|i| m.cont(format!("x{i}"), 0.0, 10.0)).collect();
+    for i in 0..4 {
+        m.constrain(LinExpr::of(&[(v[i], 1.0), (v[i + 1], -1.0)]), Sense::Le, 0.0);
+    }
+    m.constrain(LinExpr::of(&[(v[4], 1.0)]), Sense::Le, 3.0);
+    // minimize -(x0 + … + x4): optimum pushes every var to 3.
+    let mut obj = LinExpr::new();
+    for &vi in &v {
+        obj.add(vi, -1.0);
+    }
+    m.minimize(obj);
+    let s = solve(&m, &SolveOptions::default());
+    assert_eq!(s.status, Status::Optimal);
+    assert!((s.objective + 15.0).abs() < 1e-6, "obj {}", s.objective);
+}
+
+// ---------------------------------------------------------------------------
+// Branch-and-bound determinism: parallel == serial
+// ---------------------------------------------------------------------------
+
+/// A seeded knapsack family with enough branching to exercise the tree.
+fn random_knapsack(seed: u64, items: usize) -> Model {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut m = Model::new();
+    let mut cap = LinExpr::new();
+    let mut obj = LinExpr::new();
+    for i in 0..items {
+        let v = m.bin(format!("b{i}"));
+        cap.add(v, 1.0 + rng.f64() * 4.0);
+        obj.add(v, -(1.0 + rng.f64() * 6.0));
+    }
+    m.constrain(cap, Sense::Le, items as f64 * 1.2);
+    m.minimize(obj);
+    m
+}
+
+#[test]
+fn serial_solve_is_deterministic() {
+    let a = solve(&random_knapsack(42, 12), &SolveOptions::default());
+    let b = solve(&random_knapsack(42, 12), &SolveOptions::default());
+    assert_eq!(a.status, b.status);
+    assert_eq!(a.objective, b.objective, "same instance must give bitwise-equal objective");
+    assert_eq!(a.values, b.values);
+}
+
+#[test]
+fn parallel_objective_matches_serial_on_random_knapsacks() {
+    for seed in [1u64, 7, 23, 77] {
+        let serial = solve(&random_knapsack(seed, 13), &SolveOptions::default());
+        let parallel =
+            solve(&random_knapsack(seed, 13), &SolveOptions::default().with_threads(4));
+        assert!(serial.ok() && parallel.ok(), "seed {seed}");
+        assert!(
+            (serial.objective - parallel.objective).abs() < 1e-6,
+            "seed {seed}: serial {} vs parallel {}",
+            serial.objective,
+            parallel.objective
+        );
+    }
+}
+
+#[test]
+fn parallel_stage_assignment_matches_serial_optimum() {
+    // The §3.3 stage-assignment ILP: the parallel solver must reach the
+    // same optimal stage count as the serial solver (and the greedy lower
+    // bound) on small multipliers.
+    for n in [3usize, 4] {
+        let counts = mult_counts(n);
+        let serial_opts =
+            SolveOptions { time_limit: Duration::from_secs(30), ..Default::default() };
+        let parallel_opts = serial_opts.with_threads(4);
+        let (plan_s, _) = assign_ilp(&counts, &serial_opts);
+        let (plan_p, _) = assign_ilp(&counts, &parallel_opts);
+        plan_s.validate(&counts).unwrap();
+        plan_p.validate(&counts).unwrap();
+        assert_eq!(plan_s.stages(), plan_p.stages(), "n={n}");
+        assert_eq!(plan_p.stages(), assign_greedy(&counts).stages(), "n={n}");
+    }
+}
+
+#[test]
+fn parallel_node_limit_never_claims_optimality() {
+    // A 3-node budget cannot explore a 14-item knapsack tree: the solver
+    // must come back as Feasible (incumbent found) or TimeLimit — never a
+    // bogus Optimal claim.
+    let m = random_knapsack(5, 14);
+    let opts = SolveOptions { max_nodes: 3, ..SolveOptions::default().with_threads(3) };
+    let s = solve(&m, &opts);
+    assert!(
+        matches!(s.status, Status::Feasible | Status::TimeLimit),
+        "status {:?}",
+        s.status
+    );
+}

@@ -1,0 +1,107 @@
+//! Incremental-timing acceptance tests: on every tier-1 design family the
+//! incremental engine's arrival times must be *identical* (bit-for-bit) to
+//! full re-timing, across arbitrary sequences of optimization-move-style
+//! edits.
+
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::baselines::Method;
+use ufo_mac::cpa::{self, PrefixStructure};
+use ufo_mac::ir::Netlist;
+use ufo_mac::multiplier::{MultiplierSpec, Strategy};
+use ufo_mac::ppg::PpgKind;
+use ufo_mac::sta::{IncrementalSta, Sta};
+use ufo_mac::util::Rng;
+
+fn assert_identical(inc: &IncrementalSta, sta: &Sta, nl: &Netlist, ctx: &str) {
+    let full = sta.arrivals_ns(nl);
+    assert_eq!(inc.arrivals(), &full[..], "{ctx}: incremental != full re-timing");
+}
+
+/// Perturb random input arrivals (what CT/CPA optimization moves do to the
+/// CPA's arrival profile) and check identity after every single move.
+fn fuzz_moves(nl: &mut Netlist, moves: usize, seed: u64, ctx: &str) {
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+    let mut inc = IncrementalSta::new(&sta, nl);
+    assert_identical(&inc, &sta, nl, ctx);
+    let inputs = nl.inputs();
+    let mut rng = Rng::seed_from_u64(seed);
+    for mv in 0..moves {
+        let id = inputs[rng.index(inputs.len())];
+        let t = rng.f64() * 0.5;
+        nl.set_input_arrival(id, t);
+        inc.touch(id);
+        inc.propagate(nl);
+        assert_identical(&inc, &sta, nl, &format!("{ctx} move {mv}"));
+    }
+    let stats = inc.stats();
+    assert!(
+        stats.nodes_retimed < stats.nodes_total,
+        "{ctx}: incremental engine did no better than full re-timing: {stats:?}"
+    );
+}
+
+#[test]
+fn incremental_identical_on_ufo_multipliers() {
+    for n in [4usize, 8] {
+        let mut d = MultiplierSpec::new(n).build().unwrap();
+        fuzz_moves(&mut d.netlist, 24, n as u64, &format!("ufo {n}x{n}"));
+    }
+}
+
+#[test]
+fn incremental_identical_on_booth_and_mac() {
+    let mut booth = MultiplierSpec::new(4).ppg(PpgKind::Booth4).build().unwrap();
+    fuzz_moves(&mut booth.netlist, 16, 11, "booth 4x4");
+    let mut mac = MultiplierSpec::new(4).fused_mac(true).build().unwrap();
+    fuzz_moves(&mut mac.netlist, 16, 12, "fused mac 4x4");
+}
+
+#[test]
+fn incremental_identical_on_baseline_methods() {
+    for method in [Method::Gomil, Method::Commercial] {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let art = eng.compile(&DesignRequest::method(method, 6, Strategy::TradeOff, false)).unwrap();
+        let mut nl = art.netlist().clone();
+        fuzz_moves(&mut nl, 16, 13, &format!("{method:?} 6x6"));
+    }
+}
+
+#[test]
+fn incremental_identical_on_profiled_adder() {
+    // The CPA-under-trapezoid case the optimization loop actually re-times.
+    let profile: Vec<f64> =
+        (0..24).map(|i| 0.2 + 0.15 * (12.0 - (i as f64 - 12.0).abs()) / 12.0).collect();
+    let g = cpa::build(PrefixStructure::KoggeStone, 24);
+    let (mut nl, _) = cpa::standalone_adder(&g, Some(&profile));
+    fuzz_moves(&mut nl, 32, 14, "kogge-stone 24b profiled adder");
+}
+
+#[test]
+fn incremental_absorbs_netlist_growth_mid_run() {
+    // Moves interleaved with netlist growth (appended gates change loads
+    // of existing drivers): sync() + propagate() must stay identical to a
+    // full sweep.
+    let g = cpa::build(PrefixStructure::Sklansky, 12);
+    let (mut nl, sum) = cpa::standalone_adder(&g, None);
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+    let mut inc = IncrementalSta::new(&sta, &nl);
+    let mut rng = Rng::seed_from_u64(15);
+    for round in 0..6 {
+        // Append a consumer of an existing sum bit.
+        let a = sum[rng.index(sum.len())];
+        let b = sum[rng.index(sum.len())];
+        let extra = if a != b { nl.xor2(a, b) } else { nl.inv(a) };
+        nl.output(format!("x{round}"), extra);
+        inc.sync(&nl);
+        inc.propagate(&nl);
+        assert_identical(&inc, &sta, &nl, &format!("growth round {round}"));
+        // And a move on top of the grown netlist.
+        let inputs = nl.inputs();
+        let id = inputs[rng.index(inputs.len())];
+        nl.set_input_arrival(id, rng.f64() * 0.4);
+        inc.touch(id);
+        inc.propagate(&nl);
+        assert_identical(&inc, &sta, &nl, &format!("growth+move round {round}"));
+    }
+    assert_eq!(inc.critical_delay_ns(&nl), sta.analyze(&nl).critical_delay_ns);
+}
