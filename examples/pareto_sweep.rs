@@ -5,7 +5,10 @@
 //! persist a JSON report, then re-run the sweep to show the
 //! content-addressed cache serving every design without re-synthesis.
 //!
-//! Run: `cargo run --release --example pareto_sweep -- --widths 8,16 [--mac]`
+//! Run: `cargo run --release --example pareto_sweep -- --widths 8,16 [--mac] [--signed]`
+//!
+//! `--signed` sweeps the two's-complement operand format through every
+//! method (the format axis the paper's DSP-style workloads need).
 
 use std::sync::Arc;
 use ufo_mac::api::{EngineConfig, SynthEngine};
@@ -22,8 +25,13 @@ fn main() -> ufo_mac::Result<()> {
         .filter_map(|s| s.trim().parse().ok())
         .collect();
     let mac = args.has("mac");
+    let signedness = if args.has("signed") {
+        vec![ufo_mac::ppg::Signedness::Signed]
+    } else {
+        vec![ufo_mac::ppg::Signedness::Unsigned]
+    };
 
-    let cfg = SweepConfig { widths: widths.clone(), mac, ..Default::default() };
+    let cfg = SweepConfig { widths: widths.clone(), mac, signedness, ..Default::default() };
     let engine = Arc::new(SynthEngine::new(EngineConfig {
         verify_vectors: cfg.verify_vectors,
         workers: cfg.workers,

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
 use ufo_mac::baselines::Method;
-use ufo_mac::multiplier::Strategy;
+use ufo_mac::multiplier::{MultiplierSpec, OperandFormat, Strategy};
 
 fn main() -> ufo_mac::Result<()> {
     // One engine owns the cell library, timing models, STA and the cache.
@@ -64,7 +64,29 @@ fn main() -> ufo_mac::Result<()> {
         stats.hit_rate() * 100.0
     );
 
-    // 6. Requests are plain JSON — the service-style entry point.
+    // 6. Operand formats: the same pipeline synthesizes signed and
+    // rectangular designs. A signed 4×6 fused MAC (a DSP-style datapath):
+    // Baugh–Wooley PPG rows, an 11-bit two's-complement result, verified
+    // exhaustively against the signed reference model.
+    let smac_req = DesignRequest::from_spec(
+        &MultiplierSpec::new_fmt(OperandFormat::signed_rect(4, 6)).fused_mac(true),
+    );
+    let smac = engine.compile(&smac_req)?;
+    let sdesign = smac.design().expect("signed MAC design");
+    let sequiv = ufo_mac::equiv::check_multiplier(sdesign)?;
+    assert!(sequiv.passed && sequiv.exhaustive);
+    println!(
+        "\nsigned 4×6 fused MAC: {} gates, {:.4} ns, {}-bit product, equivalence PASS ({} vectors)",
+        smac.sta.num_gates,
+        smac.sta.critical_delay_ns,
+        sdesign.product.len(),
+        sequiv.vectors
+    );
+
+    // 7. Requests are plain JSON — the service-style entry point. Note the
+    // `format` key appears only for non-default formats, so pre-format
+    // request fingerprints (and their cache entries) are unchanged.
     println!("\nrequest json: {}", req.to_json_string());
+    println!("signed request json: {}", smac_req.to_json_string());
     Ok(())
 }

@@ -64,6 +64,18 @@ fn main() {
     bench.bench("build_ufo_multiplier_8bit", || MultiplierSpec::new(8).build().unwrap());
     bench.bench("build_ufo_multiplier_16bit", || MultiplierSpec::new(16).build().unwrap());
 
+    // Signed 16×16 fused MAC through the uncached inner path: the
+    // operand-format subsystem's hot build (Baugh–Wooley rows + fused
+    // accumulator + profile-driven CPA), measured without the design
+    // cache so every sample pays the real synthesis cost.
+    let lib = ufo_mac::ir::CellLib::nangate45();
+    let tm = ufo_mac::synth::CompressorTiming::from_lib(&lib);
+    let smac_spec =
+        MultiplierSpec::new_fmt(ufo_mac::multiplier::OperandFormat::signed(16)).fused_mac(true);
+    bench.bench("build_signed_fused_mac_16x16_uncached", || {
+        smac_spec.build_with(&lib, &tm).unwrap().netlist.len()
+    });
+
     // Stage assignment at 32/64 bits (greedy hot path).
     for n in [32usize, 64] {
         let pp: Vec<usize> =

@@ -227,6 +227,7 @@ impl SynthEngine {
                 let inner = DesignRequest::Method(MethodRequest {
                     method: m.method,
                     n: m.n,
+                    signedness: crate::ppg::Signedness::Unsigned,
                     strategy: m.strategy,
                     mac: m.module == ModuleKind::Systolic,
                     budget: BaselineBudget::default(),
@@ -276,8 +277,19 @@ impl SynthEngine {
     /// Build a method-form request (post-canonicalization this is only the
     /// search-based RL-MUL, but any method compiles correctly).
     fn build_method(&self, mr: &MethodRequest) -> Result<Design> {
-        let spec =
-            baselines::method_spec(mr.method, mr.n, mr.strategy, mr.mac, &mr.budget, &self.lib);
+        let fmt = crate::ppg::OperandFormat {
+            signedness: mr.signedness,
+            a_bits: mr.n,
+            b_bits: mr.n,
+        };
+        let spec = baselines::method_spec_fmt(
+            mr.method,
+            fmt,
+            mr.strategy,
+            mr.mac,
+            &mr.budget,
+            &self.lib,
+        );
         spec.build_with(&self.lib, &self.tm)
     }
 

@@ -51,3 +51,5 @@ pub use engine::{global as engine, ArtifactBody, DesignArtifact, EngineConfig, S
 pub use request::{
     DesignRequest, Fingerprint, MacMode, MethodRequest, ModuleKind, ModuleRequest, MulRequest,
 };
+
+pub use crate::ppg::{OperandFormat, Signedness};

@@ -10,11 +10,11 @@
 //! so equivalent requests share one [`fingerprint`](DesignRequest::fingerprint)
 //! and therefore one cache entry.
 
-use crate::baselines::{spec_for, BaselineBudget, Method};
+use crate::baselines::{spec_for_fmt, BaselineBudget, Method};
 use crate::cpa::{FdcModel, PrefixStructure};
 use crate::ct::{CtArchitecture, OrderStrategy, StagePlan};
 use crate::multiplier::{CpaChoice, MultiplierSpec, Strategy};
-use crate::ppg::PpgKind;
+use crate::ppg::{OperandFormat, PpgKind, Signedness};
 use crate::util::Json;
 use crate::Result;
 use anyhow::{anyhow, bail};
@@ -35,8 +35,12 @@ pub enum MacMode {
 /// [`MultiplierSpec`], in serializable form).
 #[derive(Debug, Clone)]
 pub struct MulRequest {
-    /// Operand bit width.
+    /// Operand bit width (the wider operand for rectangular formats).
     pub n: usize,
+    /// Operand format (signedness + per-operand widths). Serialization
+    /// omits the field when it equals the unsigned square `n×n` default,
+    /// keeping pre-format request fingerprints byte-stable.
+    pub format: OperandFormat,
     /// Partial-product generator (AND array / radix-4 Booth).
     pub ppg: PpgKind,
     /// Compressor-tree architecture.
@@ -60,8 +64,12 @@ pub struct MulRequest {
 pub struct MethodRequest {
     /// Which method family (UFO-MAC or a baseline) to synthesize.
     pub method: Method,
-    /// Operand bit width.
+    /// Operand bit width (method designs are square `n×n`).
     pub n: usize,
+    /// Operand signedness (the coordinator's format sweep axis).
+    /// Serialization omits the field when `Unsigned`, keeping pre-format
+    /// request fingerprints byte-stable.
+    pub signedness: Signedness,
     /// Synthesis strategy preset.
     pub strategy: Strategy,
     /// Fused-MAC variant (baseline methods fuse; `separate` is reached via
@@ -164,9 +172,21 @@ impl DesignRequest {
 
     /// A baseline-method design (the old `baselines::build_design`).
     pub fn method(method: Method, n: usize, strategy: Strategy, mac: bool) -> DesignRequest {
+        DesignRequest::method_with(method, n, strategy, mac, Signedness::Unsigned)
+    }
+
+    /// [`DesignRequest::method`] with an explicit operand signedness.
+    pub fn method_with(
+        method: Method,
+        n: usize,
+        strategy: Strategy,
+        mac: bool,
+        signedness: Signedness,
+    ) -> DesignRequest {
         DesignRequest::Method(MethodRequest {
             method,
             n,
+            signedness,
             strategy,
             mac,
             budget: BaselineBudget::default(),
@@ -200,6 +220,7 @@ impl DesignRequest {
     pub fn from_spec(spec: &MultiplierSpec) -> DesignRequest {
         DesignRequest::Multiplier(MulRequest {
             n: spec.n,
+            format: spec.format,
             ppg: spec.ppg,
             ct: spec.ct,
             order: spec.order_override,
@@ -236,6 +257,8 @@ impl DesignRequest {
         match self {
             DesignRequest::Multiplier(m) => {
                 let mut m = m.clone();
+                // The reporting width is derived state.
+                m.n = m.format.max_bits();
                 if matches!(m.cpa, CpaChoice::Regular(_)) {
                     m.fdc = FdcModel { k: [0.0; 4], b: 0.0 };
                     m.strategy = Strategy::TradeOff;
@@ -249,7 +272,12 @@ impl DesignRequest {
                 if mr.method == Method::RlMul {
                     DesignRequest::Method(mr.clone())
                 } else {
-                    let spec = spec_for(mr.method, mr.n, mr.strategy, mr.mac);
+                    let fmt = OperandFormat {
+                        signedness: mr.signedness,
+                        a_bits: mr.n,
+                        b_bits: mr.n,
+                    };
+                    let spec = spec_for_fmt(mr.method, fmt, mr.strategy, mr.mac);
                     DesignRequest::from_spec(&spec).canonical()
                 }
             }
@@ -319,17 +347,35 @@ impl DesignRequest {
                         Some(p) => plan_to_json(p),
                     },
                 ));
+                // Pre-format requests rendered no `format` key; omitting
+                // the default keeps their fingerprints byte-stable.
+                if m.format != OperandFormat::unsigned(m.n) {
+                    fields.push((
+                        "format",
+                        Json::obj(vec![
+                            ("a_bits", Json::num(m.format.a_bits as f64)),
+                            ("b_bits", Json::num(m.format.b_bits as f64)),
+                            ("signed", Json::Bool(m.format.is_signed())),
+                        ]),
+                    ));
+                }
                 Json::obj(fields)
             }
-            DesignRequest::Method(m) => Json::obj(vec![
-                ("kind", Json::str("method")),
-                ("method", Json::str(m.method.key())),
-                ("n", Json::num(m.n as f64)),
-                ("strategy", Json::str(strategy_key(m.strategy))),
-                ("mac", Json::Bool(m.mac)),
-                ("rlmul_iters", Json::num(m.budget.rlmul_iters as f64)),
-                ("seed", Json::str(m.budget.seed.to_string())),
-            ]),
+            DesignRequest::Method(m) => {
+                let mut fields = vec![
+                    ("kind", Json::str("method")),
+                    ("method", Json::str(m.method.key())),
+                    ("n", Json::num(m.n as f64)),
+                    ("strategy", Json::str(strategy_key(m.strategy))),
+                    ("mac", Json::Bool(m.mac)),
+                    ("rlmul_iters", Json::num(m.budget.rlmul_iters as f64)),
+                    ("seed", Json::str(m.budget.seed.to_string())),
+                ];
+                if m.signedness == Signedness::Signed {
+                    fields.push(("signedness", Json::str("signed")));
+                }
+                Json::obj(fields)
+            }
             DesignRequest::Module(m) => Json::obj(vec![
                 (
                     "kind",
@@ -385,8 +431,28 @@ impl DesignRequest {
                         .ok_or_else(|| anyhow!("fdc.b must be a number"))?;
                     FdcModel { k, b }
                 };
+                let n = usize_field(j, "n")?;
+                // Missing `format` means a pre-format (unsigned square)
+                // request — the backward-compatible default.
+                let format = match j.get("format") {
+                    None | Some(Json::Null) => OperandFormat::unsigned(n),
+                    Some(f) => OperandFormat {
+                        signedness: if f
+                            .get("signed")
+                            .and_then(|b| b.as_bool())
+                            .ok_or_else(|| anyhow!("format.signed must be a bool"))?
+                        {
+                            Signedness::Signed
+                        } else {
+                            Signedness::Unsigned
+                        },
+                        a_bits: usize_field(f, "a_bits")?,
+                        b_bits: usize_field(f, "b_bits")?,
+                    },
+                };
                 Ok(DesignRequest::Multiplier(MulRequest {
-                    n: usize_field(j, "n")?,
+                    n,
+                    format,
                     ppg: parse_ppg(str_field(j, "ppg")?)?,
                     ct: parse_ct(str_field(j, "ct")?)?,
                     order,
@@ -400,6 +466,14 @@ impl DesignRequest {
             "method" => Ok(DesignRequest::Method(MethodRequest {
                 method: str_field(j, "method")?.parse()?,
                 n: usize_field(j, "n")?,
+                signedness: match j.get("signedness") {
+                    None | Some(Json::Null) => Signedness::Unsigned,
+                    Some(s) => match s.as_str() {
+                        Some("signed") => Signedness::Signed,
+                        Some("unsigned") => Signedness::Unsigned,
+                        _ => bail!("unknown signedness (valid: signed, unsigned)"),
+                    },
+                },
                 strategy: str_field(j, "strategy")?.parse()?,
                 mac: j
                     .get("mac")
@@ -436,6 +510,7 @@ impl MulRequest {
     pub fn to_spec(&self) -> MultiplierSpec {
         MultiplierSpec {
             n: self.n,
+            format: self.format,
             ppg: self.ppg,
             ct: self.ct,
             order_override: self.order,
@@ -642,6 +717,7 @@ fn u64_str_field(j: &Json, key: &str) -> Result<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::spec_for;
 
     #[test]
     fn fingerprint_is_stable_and_sensitive() {
@@ -656,10 +732,101 @@ mod tests {
             DesignRequest::from_spec(&MultiplierSpec::new(8).fused_mac(true)),
             DesignRequest::from_spec(&MultiplierSpec::new(8).ct(CtArchitecture::Wallace)),
             DesignRequest::from_spec(&MultiplierSpec::new(8).order(OrderStrategy::Naive)),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).signed(true)),
+            DesignRequest::from_spec(&MultiplierSpec::new_fmt(OperandFormat::rect(8, 7))),
         ];
         for v in &variants {
             assert_ne!(a.fingerprint(), v.fingerprint(), "{v:?}");
         }
+    }
+
+    #[test]
+    fn legacy_unsigned_square_requests_are_byte_stable() {
+        // The operand-format subsystem must not move pre-format cache keys:
+        // a default-format request serializes with NO format/signedness key
+        // (so the rendered JSON — and therefore the FNV fingerprint — is
+        // exactly what pre-format builds produced).
+        for req in [
+            DesignRequest::multiplier(8),
+            DesignRequest::from_spec(&MultiplierSpec::new(16).fused_mac(true)),
+            DesignRequest::method(Method::Gomil, 8, Strategy::TradeOff, false),
+            DesignRequest::method(Method::RlMul, 8, Strategy::TradeOff, true),
+        ] {
+            let text = req.canonical().to_json_string();
+            assert!(!text.contains("format"), "{text}");
+            assert!(!text.contains("signedness"), "{text}");
+        }
+        // An explicit unsigned square format is the same request.
+        let explicit =
+            DesignRequest::from_spec(&MultiplierSpec::new(8).format(OperandFormat::unsigned(8)));
+        assert_eq!(explicit.fingerprint(), DesignRequest::multiplier(8).fingerprint());
+        // Parsing legacy JSON (no format key) yields the default format.
+        let back = DesignRequest::parse(&DesignRequest::multiplier(8).to_json_string()).unwrap();
+        match back {
+            DesignRequest::Multiplier(m) => assert_eq!(m.format, OperandFormat::unsigned(8)),
+            other => panic!("wrong form {other:?}"),
+        }
+    }
+
+    #[test]
+    fn format_roundtrips_and_splits_the_cache_key() {
+        let signed = DesignRequest::from_spec(
+            &MultiplierSpec::new_fmt(OperandFormat::signed_rect(4, 6)).fused_mac(true),
+        );
+        let text = signed.to_json_string();
+        assert!(text.contains("\"format\""), "{text}");
+        let back = DesignRequest::parse(&text).unwrap();
+        assert_eq!(signed.fingerprint(), back.fingerprint());
+        match back {
+            DesignRequest::Multiplier(m) => {
+                assert_eq!(m.format, OperandFormat::signed_rect(4, 6));
+            }
+            other => panic!("wrong form {other:?}"),
+        }
+        // Signed method requests round-trip and differ from unsigned.
+        let sm = DesignRequest::method_with(
+            Method::RlMul,
+            8,
+            Strategy::TradeOff,
+            false,
+            Signedness::Signed,
+        );
+        let sm_back = DesignRequest::parse(&sm.to_json_string()).unwrap();
+        assert_eq!(sm.fingerprint(), sm_back.fingerprint());
+        assert_ne!(
+            sm.fingerprint(),
+            DesignRequest::method(Method::RlMul, 8, Strategy::TradeOff, false).fingerprint()
+        );
+        // Deterministic signed method requests lower onto the explicit
+        // signed spec (one cache entry for both spellings).
+        let gm = DesignRequest::method_with(
+            Method::Gomil,
+            8,
+            Strategy::TradeOff,
+            false,
+            Signedness::Signed,
+        );
+        let gspec = DesignRequest::from_spec(&spec_for_fmt(
+            Method::Gomil,
+            OperandFormat::signed(8),
+            Strategy::TradeOff,
+            false,
+        ));
+        assert_eq!(gm.fingerprint(), gspec.fingerprint());
+    }
+
+    #[test]
+    fn canonical_derives_reporting_width_from_format() {
+        let mut m = match DesignRequest::from_spec(&MultiplierSpec::new_fmt(
+            OperandFormat::rect(4, 6),
+        )) {
+            DesignRequest::Multiplier(m) => m,
+            other => panic!("wrong form {other:?}"),
+        };
+        m.n = 99; // inconsistent by hand
+        let hand = DesignRequest::Multiplier(m);
+        let auto = DesignRequest::from_spec(&MultiplierSpec::new_fmt(OperandFormat::rect(4, 6)));
+        assert_eq!(hand.fingerprint(), auto.fingerprint());
     }
 
     #[test]
@@ -673,6 +840,7 @@ mod tests {
         let other_budget = DesignRequest::Method(MethodRequest {
             method: Method::Gomil,
             n: 8,
+            signedness: Signedness::Unsigned,
             strategy: Strategy::TradeOff,
             mac: false,
             budget: BaselineBudget { rlmul_iters: 999, seed: 1 },
@@ -683,6 +851,7 @@ mod tests {
         let rl_b = DesignRequest::Method(MethodRequest {
             method: Method::RlMul,
             n: 8,
+            signedness: Signedness::Unsigned,
             strategy: Strategy::TradeOff,
             mac: false,
             budget: BaselineBudget { rlmul_iters: 999, seed: 1 },

@@ -11,7 +11,7 @@ pub mod rlmul;
 use crate::cpa::PrefixStructure;
 use crate::ct::CtArchitecture;
 use crate::multiplier::{CpaChoice, Design, MultiplierSpec, Strategy};
-use crate::ppg::PpgKind;
+use crate::ppg::{OperandFormat, PpgKind, Signedness};
 use crate::Result;
 
 /// The four methods of the paper's evaluation.
@@ -87,9 +87,21 @@ impl Default for BaselineBudget {
     }
 }
 
-/// Build the spec for `method` at width `n` under a synthesis `strategy`.
+/// Build the spec for `method` at width `n` under a synthesis `strategy`
+/// (unsigned square operands — the legacy default).
 pub fn spec_for(method: Method, n: usize, strategy: Strategy, mac: bool) -> MultiplierSpec {
-    let base = MultiplierSpec::new(n).strategy(strategy).fused_mac(mac);
+    spec_for_fmt(method, OperandFormat::unsigned(n), strategy, mac)
+}
+
+/// [`spec_for`] over an explicit [`OperandFormat`] — the coordinator's
+/// format sweep axis (signed DSP-style MACs run through every baseline).
+pub fn spec_for_fmt(
+    method: Method,
+    format: OperandFormat,
+    strategy: Strategy,
+    mac: bool,
+) -> MultiplierSpec {
+    let base = MultiplierSpec::new_fmt(format).strategy(strategy).fused_mac(mac);
     match method {
         // UFO-MAC: optimal CT + optimized order + profile-driven CPA.
         Method::UfoMac => base,
@@ -128,23 +140,50 @@ pub fn method_spec(
     budget: &BaselineBudget,
     lib: &crate::ir::CellLib,
 ) -> MultiplierSpec {
-    let spec = spec_for(method, n, strategy, mac);
+    method_spec_fmt(method, OperandFormat::unsigned(n), strategy, mac, budget, lib)
+}
+
+/// [`method_spec`] over an explicit [`OperandFormat`]: the RL-MUL probe
+/// matrix is generated with the format's own PPG shape (Baugh–Wooley rows
+/// and the accumulator sign-extension column for signed formats), so the
+/// searched stage plan matches what the builder will actually compress.
+pub fn method_spec_fmt(
+    method: Method,
+    format: OperandFormat,
+    strategy: Strategy,
+    mac: bool,
+    budget: &BaselineBudget,
+    lib: &crate::ir::CellLib,
+) -> MultiplierSpec {
+    let spec = spec_for_fmt(method, format, strategy, mac);
     if method != Method::RlMul {
         return spec;
     }
     // Search the CT plan on the real PP shape (incl. MAC addend rows).
+    let (na, nb) = (format.a_bits, format.b_bits);
+    let out_w = na + nb;
     let mut scratch = crate::ir::Netlist::new("pp-probe");
-    let a: Vec<_> = (0..n).map(|i| scratch.input(format!("a{i}"))).collect();
-    let b: Vec<_> = (0..n).map(|i| scratch.input(format!("b{i}"))).collect();
-    let mut m = crate::ppg::and_array(&mut scratch, lib, &a, &b);
+    let a: Vec<_> = (0..na).map(|i| scratch.input(format!("a{i}"))).collect();
+    let b: Vec<_> = (0..nb).map(|i| scratch.input(format!("b{i}"))).collect();
+    let mut m = match format.signedness {
+        Signedness::Unsigned => crate::ppg::and_array(&mut scratch, lib, &a, &b),
+        Signedness::Signed => {
+            let cols = if mac { out_w + 1 } else { out_w };
+            crate::ppg::and_array_signed(&mut scratch, lib, &a, &b, cols)
+        }
+    };
     if mac {
-        let c: Vec<_> = (0..2 * n)
+        let c: Vec<_> = (0..out_w)
             .map(|i| {
                 let id = scratch.input(format!("c{i}"));
                 crate::synth::Sig::new(id, 0.0)
             })
             .collect();
-        m.add_addend(&c);
+        if format.is_signed() {
+            m.add_addend_signed(&c);
+        } else {
+            m.add_addend(&c);
+        }
     }
     let res = rlmul::search(&m.columns, budget.rlmul_iters, budget.seed);
     spec.with_plan(res.plan)
@@ -166,6 +205,7 @@ pub fn build_design(
     let req = crate::api::DesignRequest::Method(crate::api::MethodRequest {
         method,
         n,
+        signedness: Signedness::Unsigned,
         strategy,
         mac,
         budget: *budget,

@@ -11,6 +11,7 @@ pub mod pool;
 use crate::api::{DesignArtifact, DesignRequest, EngineConfig, MethodRequest, SynthEngine};
 use crate::baselines::{BaselineBudget, Method};
 use crate::multiplier::Strategy;
+use crate::ppg::Signedness;
 use crate::runtime::Runtime;
 use crate::util::Json;
 use crate::Result;
@@ -27,6 +28,8 @@ pub struct DesignPoint {
     pub strategy: Strategy,
     /// Fused-MAC variant.
     pub mac: bool,
+    /// Two's-complement operand interpretation.
+    pub signed: bool,
     /// STA critical delay (ns).
     pub delay_ns: f64,
     /// Cell area (µm²).
@@ -54,6 +57,8 @@ pub struct SweepConfig {
     pub strategies: Vec<Strategy>,
     /// Sweep the fused-MAC variant instead of plain multipliers.
     pub mac: bool,
+    /// Operand signednesses to sweep (the format axis).
+    pub signedness: Vec<Signedness>,
     /// Thread-pool width for the batch compile.
     pub workers: usize,
     /// Search budget for the search-based baselines.
@@ -75,6 +80,7 @@ impl Default for SweepConfig {
                 Strategy::TradeOff,
             ],
             mac: false,
+            signedness: vec![Signedness::Unsigned],
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
             budget: BaselineBudget::default(),
             verify_vectors: 1 << 12,
@@ -83,19 +89,23 @@ impl Default for SweepConfig {
     }
 }
 
-/// The request grid a sweep compiles (method × width × strategy).
+/// The request grid a sweep compiles (method × width × strategy ×
+/// signedness).
 pub fn sweep_requests(cfg: &SweepConfig) -> Vec<DesignRequest> {
     let mut reqs = Vec::new();
     for &n in &cfg.widths {
         for &m in &cfg.methods {
             for &s in &cfg.strategies {
-                reqs.push(DesignRequest::Method(MethodRequest {
-                    method: m,
-                    n,
-                    strategy: s,
-                    mac: cfg.mac,
-                    budget: cfg.budget,
-                }));
+                for &sg in &cfg.signedness {
+                    reqs.push(DesignRequest::Method(MethodRequest {
+                        method: m,
+                        n,
+                        signedness: sg,
+                        strategy: s,
+                        mac: cfg.mac,
+                        budget: cfg.budget,
+                    }));
+                }
             }
         }
     }
@@ -108,6 +118,7 @@ fn point_from_artifact(
     n: usize,
     strategy: Strategy,
     mac: bool,
+    signed: bool,
     art: &DesignArtifact,
 ) -> DesignPoint {
     let ct_stages = art.design().map(|d| d.ct_stages).unwrap_or(0);
@@ -116,6 +127,7 @@ fn point_from_artifact(
         n,
         strategy,
         mac,
+        signed,
         delay_ns: art.sta.critical_delay_ns,
         area_um2: art.sta.area_um2,
         power_mw: art.sta.power_mw,
@@ -141,7 +153,30 @@ pub fn evaluate_point(
     verify_vectors: usize,
     rt: Option<&Runtime>,
 ) -> Result<DesignPoint> {
-    let req = DesignRequest::Method(MethodRequest { method, n, strategy, mac, budget: *budget });
+    evaluate_point_fmt(method, n, Signedness::Unsigned, strategy, mac, budget, verify_vectors, rt)
+}
+
+/// [`evaluate_point`] with an explicit operand signedness — the
+/// single-point counterpart of the sweep grid's format axis.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_point_fmt(
+    method: Method,
+    n: usize,
+    signedness: Signedness,
+    strategy: Strategy,
+    mac: bool,
+    budget: &BaselineBudget,
+    verify_vectors: usize,
+    rt: Option<&Runtime>,
+) -> Result<DesignPoint> {
+    let req = DesignRequest::Method(MethodRequest {
+        method,
+        n,
+        signedness,
+        strategy,
+        mac,
+        budget: *budget,
+    });
     let art = crate::api::engine().compile(&req)?;
     let design = art.design().expect("method artifact carries a design");
     let equiv = crate::equiv::check_multiplier_with(design, verify_vectors)?;
@@ -151,7 +186,8 @@ pub fn evaluate_point(
         }
         _ => art.pjrt_verified,
     };
-    let mut p = point_from_artifact(method, n, strategy, mac, &art);
+    let mut p =
+        point_from_artifact(method, n, strategy, mac, signedness == Signedness::Signed, &art);
     p.verified = equiv.passed;
     p.pjrt_verified = pjrt_verified;
     Ok(p)
@@ -174,12 +210,14 @@ pub fn run_sweep_with(engine: &SynthEngine, cfg: &SweepConfig) -> Vec<DesignPoin
     let arts = engine.compile_batch(&reqs);
     let mut out = Vec::with_capacity(arts.len());
     for (req, art) in reqs.iter().zip(arts) {
-        let (m, n, s, mac) = match req {
-            DesignRequest::Method(mr) => (mr.method, mr.n, mr.strategy, mr.mac),
+        let (m, n, s, mac, sg) = match req {
+            DesignRequest::Method(mr) => {
+                (mr.method, mr.n, mr.strategy, mr.mac, mr.signedness)
+            }
             _ => unreachable!("sweep grid is method requests"),
         };
         if let Ok(art) = art {
-            out.push(point_from_artifact(m, n, s, mac, &art));
+            out.push(point_from_artifact(m, n, s, mac, sg == Signedness::Signed, &art));
         }
     }
     out
@@ -236,6 +274,7 @@ pub fn points_json(points: &[DesignPoint]) -> Json {
                     ("n", Json::num(p.n as f64)),
                     ("strategy", Json::str(format!("{:?}", p.strategy))),
                     ("mac", Json::Bool(p.mac)),
+                    ("signed", Json::Bool(p.signed)),
                     ("delay_ns", Json::num(p.delay_ns)),
                     ("area_um2", Json::num(p.area_um2)),
                     ("power_mw", Json::num(p.power_mw)),
@@ -294,10 +333,31 @@ mod tests {
             budget: BaselineBudget { rlmul_iters: 2, seed: 1 },
             verify_vectors: 256,
             use_pjrt: false,
+            ..Default::default()
         };
         let points = run_sweep(&cfg);
         assert_eq!(points.len(), 2);
         assert!(points.iter().all(|p| p.verified));
+    }
+
+    #[test]
+    fn sweep_format_axis_doubles_the_grid() {
+        let cfg = SweepConfig {
+            widths: vec![4],
+            methods: vec![Method::UfoMac],
+            strategies: vec![Strategy::TradeOff],
+            signedness: vec![Signedness::Unsigned, Signedness::Signed],
+            mac: true,
+            workers: 2,
+            budget: BaselineBudget { rlmul_iters: 2, seed: 1 },
+            verify_vectors: 256,
+            use_pjrt: false,
+        };
+        assert_eq!(sweep_requests(&cfg).len(), 2);
+        let points = run_sweep(&cfg);
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.verified), "{points:?}");
+        assert!(points.iter().any(|p| p.signed) && points.iter().any(|p| !p.signed));
     }
 
     #[test]
@@ -307,6 +367,7 @@ mod tests {
             n: 8,
             strategy: Strategy::TradeOff,
             mac: false,
+            signed: false,
             delay_ns: d,
             area_um2: a,
             power_mw: 0.0,
@@ -334,6 +395,7 @@ mod tests {
             n: 8,
             strategy: Strategy::TradeOff,
             mac: false,
+            signed: false,
             delay_ns: d,
             area_um2: a,
             power_mw: 0.0,

@@ -139,6 +139,62 @@ mod tests {
     }
 
     #[test]
+    fn rectangular_and_signed_matrices_compress_correctly() {
+        // The CT layer is population-driven: nothing in counts/stage/order
+        // may assume the 2n-1 square-multiplier shape. Feed it a 3×5
+        // rectangular AND array and a signed 4×4 Baugh–Wooley matrix and
+        // check the two-row output still sums to the matrix value.
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        for (na, nb, signed) in [(3usize, 5usize, false), (5, 3, false), (4, 4, true)] {
+            let mut nl = Netlist::new("ct-rect");
+            let a: Vec<_> = (0..na).map(|i| nl.input(format!("a{i}"))).collect();
+            let b: Vec<_> = (0..nb).map(|i| nl.input(format!("b{i}"))).collect();
+            let m = if signed {
+                crate::ppg::and_array_signed(&mut nl, &lib, &a, &b, na + nb)
+            } else {
+                crate::ppg::and_array(&mut nl, &lib, &a, &b)
+            };
+            let out = synthesize(&mut nl, &tm, m.columns, CtArchitecture::UfoMac, None);
+            nl.validate().unwrap();
+            let modulus = 1u128 << (na + nb);
+            let mut sim = Simulator::new();
+            let all: Vec<(u32, u32)> = (0..1u32 << na)
+                .flat_map(|x| (0..1u32 << nb).map(move |y| (x, y)))
+                .collect();
+            for chunk in all.chunks(64) {
+                let assigns: Vec<Vec<bool>> = chunk
+                    .iter()
+                    .map(|(x, y)| {
+                        (0..na)
+                            .map(|k| x >> k & 1 != 0)
+                            .chain((0..nb).map(|k| y >> k & 1 != 0))
+                            .collect()
+                    })
+                    .collect();
+                let words = pack_lanes(&assigns);
+                let vals = sim.run(&nl, &words).to_vec();
+                for (lane, (x, y)) in chunk.iter().enumerate() {
+                    let mut total = 0u128;
+                    for (j, col) in out.rows.iter().enumerate() {
+                        for s in col {
+                            total += u128::from(vals[s.node.index()] >> lane as u32 & 1) << j;
+                        }
+                    }
+                    let want = if signed {
+                        let sx = crate::util::sign_extend(u128::from(*x), na);
+                        let sy = crate::util::sign_extend(u128::from(*y), nb);
+                        (sx * sy).rem_euclid(modulus as i128) as u128
+                    } else {
+                        u128::from(*x) * u128::from(*y)
+                    };
+                    assert_eq!(total % modulus, want % modulus, "{na}x{nb} signed={signed} {x}*{y}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn gomil_tree_is_taller_than_ufo() {
         let lib = CellLib::nangate45();
         let tm = CompressorTiming::from_lib(&lib);

@@ -32,10 +32,12 @@ pub fn check_multiplier(design: &Design) -> Result<EquivReport> {
 }
 
 /// As [`check_multiplier`] with an explicit sampled-vector budget.
+///
+/// Operand widths come from the design itself (`a`/`b`/`c` pin vectors),
+/// so rectangular formats are swept over their own per-operand ranges, and
+/// the golden model ([`Design::expected`]) applies the design's signedness.
 pub fn check_multiplier_with(design: &Design, budget: usize) -> Result<EquivReport> {
-    let n = design.n;
-    let c_bits = design.c.len();
-    let total_bits = 2 * n + c_bits;
+    let total_bits = design.a.len() + design.b.len() + design.c.len();
     if total_bits <= 20 {
         exhaustive(design)
     } else {
@@ -53,29 +55,32 @@ fn run_batch(
     // a-then-b-then-c order by the generators) — no per-vector Vec<bool>
     // round-trip, no buffer copy. This is the §Perf-optimized form; see
     // EXPERIMENTS.md.
-    let n = design.n;
+    let a_bits = design.a.len();
+    let b_bits = design.b.len();
     let c_bits = design.c.len();
-    let mut words = vec![0u64; 2 * n + c_bits];
+    let mut words = vec![0u64; a_bits + b_bits + c_bits];
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let bit = 1u64 << lane;
-        for k in 0..n {
+        for k in 0..a_bits {
             if a >> k & 1 == 1 {
                 words[k] |= bit;
             }
+        }
+        for k in 0..b_bits {
             if b >> k & 1 == 1 {
-                words[n + k] |= bit;
+                words[a_bits + k] |= bit;
             }
         }
         for k in 0..c_bits {
             if c >> k & 1 == 1 {
-                words[2 * n + k] |= bit;
+                words[a_bits + b_bits + k] |= bit;
             }
         }
     }
     comp.run_into(buf, &words);
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let got = lane_value(buf, &design.product, lane as u32);
-        let want = design.golden(*a, *b, *c);
+        let want = design.expected(*a, *b, *c);
         if got != want {
             return Some((*a, *b, *c, got, want));
         }
@@ -84,18 +89,18 @@ fn run_batch(
 }
 
 fn exhaustive(design: &Design) -> Result<EquivReport> {
-    let n = design.n as u32;
     let c_bits = design.c.len() as u32;
     let comp = CompiledNetlist::compile(&design.netlist);
     let mut buf: Vec<u64> = Vec::new();
     let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
     let mut vectors = 0usize;
-    let na = 1u128 << n;
+    let na = 1u128 << design.a.len() as u32;
+    let nb = 1u128 << design.b.len() as u32;
     let nc = 1u128 << c_bits;
     let mut a = 0u128;
     while a < na {
         let mut b = 0u128;
-        while b < na {
+        while b < nb {
             let mut c = 0u128;
             while c < nc {
                 batch.push((a, b, c));
@@ -130,24 +135,35 @@ fn exhaustive(design: &Design) -> Result<EquivReport> {
     Ok(EquivReport { passed: true, vectors, exhaustive: true, counterexample: None })
 }
 
+/// Boundary operands and walking ones for one operand width.
+fn corner_list(bits: usize) -> Vec<u128> {
+    let mask = (1u128 << bits) - 1;
+    let mut corners: Vec<u128> = vec![0, 1, mask, mask.saturating_sub(1), mask >> 1, (mask >> 1) + 1];
+    for k in 0..bits {
+        corners.push(1u128 << k);
+        corners.push(mask ^ (1u128 << k));
+    }
+    corners.sort();
+    corners.dedup();
+    corners.retain(|&c| c <= mask);
+    corners
+}
+
 fn sampled(design: &Design, budget: usize) -> Result<EquivReport> {
-    let n = design.n;
+    let a_bits = design.a.len();
+    let b_bits = design.b.len();
     let c_bits = design.c.len();
-    let amask = (1u128 << n) - 1;
+    let amask = (1u128 << a_bits) - 1;
+    let bmask = (1u128 << b_bits) - 1;
     let cmask = if c_bits == 0 { 0 } else { (1u128 << c_bits) - 1 };
     let mut rng = crate::util::Rng::seed_from_u64(0xE9E9);
     let comp = CompiledNetlist::compile(&design.netlist);
     let mut buf: Vec<u64> = Vec::new();
     let mut vectors = 0usize;
 
-    // Corner vectors: boundary operands and walking ones.
-    let mut corners: Vec<u128> = vec![0, 1, amask, amask - 1, amask >> 1, (amask >> 1) + 1];
-    for k in 0..n {
-        corners.push(1u128 << k);
-        corners.push(amask ^ (1u128 << k));
-    }
-    corners.sort();
-    corners.dedup();
+    // Corner vectors: boundary operands and walking ones, per operand.
+    let corners_a = corner_list(a_bits);
+    let corners_b = corner_list(b_bits);
     let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
     let flush = |batch: &mut Vec<(u128, u128, u128)>,
                  buf: &mut Vec<u64>,
@@ -158,8 +174,8 @@ fn sampled(design: &Design, budget: usize) -> Result<EquivReport> {
         batch.clear();
         r
     };
-    for &a in &corners {
-        for &b in &corners {
+    for &a in &corners_a {
+        for &b in &corners_b {
             let c = (a.wrapping_mul(31) ^ b) & cmask;
             batch.push((a, b, c));
             if batch.len() == 64 {
@@ -178,7 +194,7 @@ fn sampled(design: &Design, budget: usize) -> Result<EquivReport> {
     while vectors < budget {
         while batch.len() < 64 {
             let a = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & amask;
-            let b = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & amask;
+            let b = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & bmask;
             let c = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & cmask;
             batch.push((a, b, c));
         }
@@ -197,7 +213,27 @@ fn sampled(design: &Design, budget: usize) -> Result<EquivReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::multiplier::MultiplierSpec;
+    use crate::multiplier::{MultiplierSpec, OperandFormat};
+
+    #[test]
+    fn passes_signed_rectangular_mac_exhaustive() {
+        let d = MultiplierSpec::new_fmt(OperandFormat::signed_rect(3, 4))
+            .fused_mac(true)
+            .build()
+            .unwrap();
+        let r = check_multiplier(&d).unwrap();
+        assert!(r.passed && r.exhaustive);
+        assert_eq!(r.vectors, 1 << 14); // 3 + 4 + 7 bits
+    }
+
+    #[test]
+    fn sampled_mode_per_operand_masks() {
+        // 16×8 unsigned: 24 operand bits force the sampled path; per-operand
+        // masks must keep b inside its own 8-bit range.
+        let d = MultiplierSpec::new_fmt(OperandFormat::rect(16, 8)).build().unwrap();
+        let r = check_multiplier_with(&d, 1024).unwrap();
+        assert!(r.passed && !r.exhaustive);
+    }
 
     #[test]
     fn passes_correct_small_multiplier() {

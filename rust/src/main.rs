@@ -5,10 +5,14 @@
 //! designs inside one invocation are synthesized once.
 //!
 //! Subcommands:
-//!   generate  --width N [--method ufo|gomil|rlmul|commercial]
+//!   generate  --width N [--bwidth M] [--signed]
+//!             [--method ufo|gomil|rlmul|commercial]
 //!             [--strategy area|timing|tradeoff] [--mac] [--booth]
 //!             Generate one design, verify it, print the STA report.
-//!   sweep     --widths 8,16,32 [--mac] [--pjrt] [--out reports/]
+//!             `--signed` selects two's-complement operands (any method);
+//!             `--bwidth` selects a rectangular a×b format (UFO-MAC spec
+//!             path only).
+//!   sweep     --widths 8,16,32 [--mac] [--signed] [--pjrt] [--out reports/]
 //!             Full method×strategy DSE sweep; prints Pareto frontiers.
 //!   profile   --width N   Print the CT output arrival profile (Figure 1).
 //!   fir       --width N --freq 1e9     Table-1 style FIR report.
@@ -24,8 +28,8 @@ use ufo_mac::api::{engine, DesignRequest};
 use ufo_mac::baselines::Method;
 use ufo_mac::coordinator::{self, SweepConfig};
 use ufo_mac::ct::CtArchitecture;
-use ufo_mac::multiplier::{MultiplierSpec, Strategy};
-use ufo_mac::ppg::PpgKind;
+use ufo_mac::multiplier::{MultiplierSpec, OperandFormat, Strategy};
+use ufo_mac::ppg::{PpgKind, Signedness};
 use ufo_mac::util::{Args, Table};
 use ufo_mac::Result;
 
@@ -43,13 +47,30 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let strategy = parse_strategy(args.get("strategy").unwrap_or("tradeoff"))?;
     let mac = args.has("mac");
     let booth = args.has("booth");
-    if booth && method != Method::UfoMac {
-        anyhow::bail!("--booth selects the UFO-MAC Booth-4 generator; drop --method {}", method.key());
+    let signed = args.has("signed");
+    let b_width = args.get_usize("bwidth", n);
+    let rect = b_width != n;
+    if (booth || rect) && method != Method::UfoMac {
+        anyhow::bail!(
+            "--booth/--bwidth select the UFO-MAC spec path; drop --method {}",
+            method.key()
+        );
     }
-    let req = if booth {
+    let fmt = if signed {
+        OperandFormat::signed_rect(n, b_width)
+    } else {
+        OperandFormat::rect(n, b_width)
+    };
+    let req = if booth || rect {
         DesignRequest::from_spec(
-            &MultiplierSpec::new(n).strategy(strategy).fused_mac(mac).ppg(PpgKind::Booth4),
+            &MultiplierSpec::new_fmt(fmt)
+                .strategy(strategy)
+                .fused_mac(mac)
+                .ppg(if booth { PpgKind::Booth4 } else { PpgKind::AndArray }),
         )
+    } else if signed {
+        // Square signed designs are reachable for every method family.
+        DesignRequest::method_with(method, n, strategy, mac, Signedness::Signed)
     } else {
         DesignRequest::method(method, n, strategy, mac)
     };
@@ -57,11 +78,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let design = art.design().expect("design request");
     let equiv = ufo_mac::equiv::check_multiplier(design)?;
     println!(
-        "{}{} {}×{}{} [{strategy:?}]",
+        "{}{} {}{}×{}{} [{strategy:?}]",
         method.name(),
         if booth { " (Booth-4)" } else { "" },
+        if signed { "signed " } else { "" },
         n,
-        n,
+        b_width,
         if mac { " fused-MAC" } else { "" }
     );
     println!("  fingerprint: {}", art.fingerprint);
@@ -77,7 +99,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         if equiv.exhaustive { ", exhaustive" } else { "" }
     );
     if let Some(path) = args.get("verilog") {
-        std::fs::write(path, ufo_mac::synth::verilog::emit(&design.netlist))?;
+        std::fs::write(path, ufo_mac::synth::verilog::emit_design(design))?;
         println!("  verilog:     {path}");
     }
     Ok(())
@@ -108,6 +130,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let cfg = SweepConfig {
         widths,
         mac: args.has("mac"),
+        signedness: if args.has("signed") {
+            vec![ufo_mac::ppg::Signedness::Signed]
+        } else {
+            vec![ufo_mac::ppg::Signedness::Unsigned]
+        },
         use_pjrt: args.has("pjrt"),
         ..Default::default()
     };

@@ -29,11 +29,12 @@ pub type FirReport = ModuleReport;
 /// (arrives at t = 0, like `x`/`h`). Returns the netlist and the stage's
 /// output bits. This is the engine's inner path for FIR requests.
 pub fn stage_from_design(mult: &Design) -> Result<(Netlist, Vec<NodeId>)> {
-    let n = mult.n;
+    // Stage adder width follows the multiplier's actual product width
+    // (a_bits + b_bits), so rectangular formats wrap correctly.
+    let w = mult.product.len();
     let mut nl = mult.netlist.clone();
-    // Stage adder: product (2n bits) + registered z (2n bits).
-    let z: Vec<NodeId> = (0..2 * n).map(|i| nl.input(format!("z{i}"))).collect();
-    let cols: Vec<CpaColumn> = (0..2 * n)
+    let z: Vec<NodeId> = (0..w).map(|i| nl.input(format!("z{i}"))).collect();
+    let cols: Vec<CpaColumn> = (0..w)
         .map(|j| CpaColumn {
             a: Sig::new(mult.product[j], 0.0),
             b: Some(Sig::new(z[j], 0.0)),
@@ -41,10 +42,10 @@ pub fn stage_from_design(mult: &Design) -> Result<(Netlist, Vec<NodeId>)> {
         .collect();
     // The stage adder is a regular structure (the FIR wrapper does not see
     // the CT profile; UFO's advantage lives inside the multiplier).
-    let g = cpa::build(PrefixStructure::Sklansky, 2 * n);
+    let g = cpa::build(PrefixStructure::Sklansky, w);
     let out = cpa::expand(&mut nl, &g, &cols);
     let mut y = out.sum;
-    y.truncate(2 * n); // registered width (transposed FIR keeps 2n + guard in practice)
+    y.truncate(w); // registered width (transposed FIR keeps w + guard in practice)
     for (i, &bit) in y.iter().enumerate() {
         nl.output(format!("y{i}"), bit);
     }

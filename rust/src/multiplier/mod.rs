@@ -1,21 +1,28 @@
 //! End-to-end multiplier and fused-MAC assembly (PPG → CT → CPA).
 //!
-//! [`MultiplierSpec`] is the public entry point: pick a bit width, a CT
-//! architecture, a CPA choice and a strategy, call [`MultiplierSpec::build`]
-//! and get a [`Design`] — a self-contained gate netlist with named operand
-//! inputs and product outputs, plus the structural metadata the benchmarks
-//! report. The fused-MAC path (§2.3) injects the accumulator rows into the
-//! CT; the non-fused variant (conventional MAC: multiply, then add) exists
-//! as the ablation the paper's Figure-12 discussion implies.
+//! [`MultiplierSpec`] is the public entry point: pick an operand format
+//! (signedness + per-operand widths), a CT architecture, a CPA choice and a
+//! strategy, call [`MultiplierSpec::build`] and get a [`Design`] — a
+//! self-contained gate netlist with named operand inputs and product
+//! outputs, plus the structural metadata the benchmarks report. The
+//! fused-MAC path (§2.3) injects the accumulator rows into the CT; the
+//! non-fused variant (conventional MAC: multiply, then add) exists as the
+//! ablation the paper's Figure-12 discussion implies — and its second CPA
+//! is optimized against the *measured* arrival profile of the first CPA's
+//! sum, the same §2.2 information flow the paper prescribes for the CT→CPA
+//! boundary.
 
 use crate::cpa::{self, CpaColumn, CpaStrategy, FdcModel, PrefixStructure};
 use crate::ct::{self, CtArchitecture, OrderStrategy, StagePlan};
 use crate::ir::{CellLib, Netlist, NodeId};
-use crate::ppg::{self, PpgKind};
+use crate::ppg::{self, PpgKind, Signedness};
 use crate::sta::TimingStats;
 use crate::synth::{CompressorTiming, Sig};
+use crate::util::sign_extend;
 use crate::Result;
 use anyhow::bail;
+
+pub use crate::ppg::OperandFormat;
 
 /// Which CPA the design uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,8 +40,11 @@ pub type Strategy = CpaStrategy;
 /// Specification for a multiplier / MAC design.
 #[derive(Debug, Clone)]
 pub struct MultiplierSpec {
-    /// Operand bit width.
+    /// Wider operand width (reporting; equals both widths for square
+    /// formats). [`MultiplierSpec::format`] is the source of truth.
     pub n: usize,
+    /// Operand format: signedness + per-operand widths.
+    pub format: OperandFormat,
     /// Partial-product generator.
     pub ppg: PpgKind,
     /// Compressor-tree architecture.
@@ -47,7 +57,7 @@ pub struct MultiplierSpec {
     pub cpa: CpaChoice,
     /// Synthesis strategy preset.
     pub strategy: Strategy,
-    /// Fuse a `2n`-bit accumulator into the CT (§2.3).
+    /// Fuse an `(a_bits+b_bits)`-bit accumulator into the CT (§2.3).
     pub fused_mac: bool,
     /// Conventional MAC: multiply then add with a separate CPA.
     pub separate_mac: bool,
@@ -56,10 +66,11 @@ pub struct MultiplierSpec {
 }
 
 impl MultiplierSpec {
-    /// UFO-MAC defaults for an `n×n` multiplier.
+    /// UFO-MAC defaults for an unsigned `n×n` multiplier.
     pub fn new(n: usize) -> Self {
         MultiplierSpec {
             n,
+            format: OperandFormat::unsigned(n),
             ppg: PpgKind::AndArray,
             ct: CtArchitecture::UfoMac,
             order_override: None,
@@ -72,6 +83,23 @@ impl MultiplierSpec {
         }
     }
 
+    /// UFO-MAC defaults for an explicit operand format (signed and/or
+    /// rectangular designs).
+    pub fn new_fmt(format: OperandFormat) -> Self {
+        MultiplierSpec { format, ..MultiplierSpec::new(format.max_bits()) }
+    }
+
+    /// Set the operand format (also refreshes the reporting width).
+    pub fn format(mut self, f: OperandFormat) -> Self {
+        self.format = f;
+        self.n = f.max_bits();
+        self
+    }
+    /// Toggle two's-complement operand interpretation.
+    pub fn signed(mut self, yes: bool) -> Self {
+        self.format.signedness = if yes { Signedness::Signed } else { Signedness::Unsigned };
+        self
+    }
     /// Set the synthesis strategy preset.
     pub fn strategy(mut self, s: Strategy) -> Self {
         self.strategy = s;
@@ -138,37 +166,52 @@ impl MultiplierSpec {
     /// the engine's uncached inner path. Prefer [`MultiplierSpec::build`]
     /// (cached) unless you are the engine.
     pub fn build_with(&self, lib: &CellLib, tm: &CompressorTiming) -> Result<Design> {
-        if self.n < 2 {
-            bail!("multiplier width must be ≥ 2");
+        let fmt = self.format;
+        if let Err(e) = fmt.validate() {
+            bail!("invalid operand format: {e}");
         }
         if self.fused_mac && self.separate_mac {
             bail!("fused_mac and separate_mac are mutually exclusive");
         }
-        let n = self.n;
+        let (na, nb) = (fmt.a_bits, fmt.b_bits);
+        let out_w = na + nb;
+        let is_mac = self.fused_mac || self.separate_mac;
+        let signed = fmt.is_signed();
         let mut nl = Netlist::new(format!(
-            "{}{}x{}",
-            if self.fused_mac || self.separate_mac { "mac" } else { "mul" },
-            n,
-            n
+            "{}{}{}x{}",
+            if signed { "s" } else { "" },
+            if is_mac { "mac" } else { "mul" },
+            na,
+            nb
         ));
-        let a: Vec<NodeId> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
-        let b: Vec<NodeId> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
-        let c: Vec<NodeId> = if self.fused_mac || self.separate_mac {
-            (0..2 * n).map(|i| nl.input(format!("c{i}"))).collect()
+        let a: Vec<NodeId> = (0..na).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<NodeId> = (0..nb).map(|i| nl.input(format!("b{i}"))).collect();
+        let c: Vec<NodeId> = if is_mac {
+            (0..out_w).map(|i| nl.input(format!("c{i}"))).collect()
         } else {
             vec![]
         };
 
-        // PPG. Fused MACs produce a 2n+1-bit result, so a Booth matrix
-        // must stay exact one column further (its compaction is modular).
-        let mut matrix = if self.ppg == PpgKind::Booth4 && self.fused_mac {
-            ppg::booth4_wide(&mut nl, lib, &a, &b, 2 * n + 1)
-        } else {
-            ppg::generate(&mut nl, lib, self.ppg, &a, &b)
+        // PPG. A fused MAC produces an (a+b+1)-bit result, so the modular
+        // generators (Booth compaction, Baugh–Wooley sign correction) must
+        // stay exact one column further.
+        let gen_cols = if self.fused_mac { out_w + 1 } else { out_w };
+        let mut matrix = match (self.ppg, fmt.signedness) {
+            (PpgKind::AndArray, Signedness::Unsigned) => ppg::and_array(&mut nl, lib, &a, &b),
+            (PpgKind::AndArray, Signedness::Signed) => {
+                ppg::and_array_signed(&mut nl, lib, &a, &b, gen_cols)
+            }
+            (PpgKind::Booth4, s) => ppg::booth4_fmt(&mut nl, lib, &a, &b, s, gen_cols),
         };
         if self.fused_mac {
             let addend: Vec<Sig> = c.iter().map(|&id| Sig::new(id, 0.0)).collect();
-            matrix.add_addend(&addend);
+            if signed {
+                // c is an (a+b)-bit two's-complement addend; mod 2^{a+b+1}
+                // its sign bit also carries weight 2^{a+b}.
+                matrix.add_addend_signed(&addend);
+            } else {
+                matrix.add_addend(&addend);
+            }
         }
 
         // CT.
@@ -202,7 +245,7 @@ impl MultiplierSpec {
                 }
             })
             .collect();
-        let (graph, cpa_timing) = match self.cpa {
+        let (graph, mut cpa_timing) = match self.cpa {
             CpaChoice::ProfileOptimized => {
                 let (g, rep) =
                     cpa::synthesize_for_profile(&ct_out.profile, self.strategy, &self.fdc_model);
@@ -211,36 +254,68 @@ impl MultiplierSpec {
             CpaChoice::Regular(s) => (cpa::build(s, width), TimingStats::default()),
         };
         let cpa_out = cpa::expand(&mut nl, &graph, &cpa_cols);
+        let mut cpa_nodes = graph.size();
 
-        // Product bits: 2n for a multiplier, 2n+1 for a fused MAC.
-        let want = if self.fused_mac || self.separate_mac { 2 * n + 1 } else { 2 * n };
+        // Product bits: a+b for a multiplier, a+b+1 for a fused MAC (the
+        // separate MAC's extra bit comes from its own second CPA below).
+        let want_mul = if self.fused_mac { out_w + 1 } else { out_w };
         let mut product: Vec<NodeId> = cpa_out.sum;
-        // The CPA yields width+1 bits; pad (never expected) or trim to want.
-        while product.len() < want {
+        // The CPA yields width+1 bits; pad (degenerate narrow trees) or
+        // trim to the product width.
+        while product.len() < want_mul {
             let z = nl.constant(false);
             product.push(z);
         }
-        product.truncate(want);
+        product.truncate(want_mul);
 
         // Conventional MAC: a second, separate CPA adds the accumulator.
+        let mut cpa2_profile: Option<Vec<f64>> = None;
         if self.separate_mac {
-            let add_w = 2 * n;
+            let add_w = out_w;
+            // §2.2 arrival-profile propagation (the headline fix): the
+            // second CPA's inputs do NOT arrive uniformly — each product
+            // bit lands at the arrival time STA measures for the first
+            // CPA's sum, while the accumulator pins arrive at t = 0.
+            let sta = crate::sta::Sta {
+                activity_rounds: 0,
+                ..crate::sta::Sta::with_lib(lib.clone())
+            };
+            let at = sta.arrivals_ns(&nl);
+            cpa_timing.merge(&TimingStats::full_pass(nl.len()));
             let cols2: Vec<CpaColumn> = (0..add_w)
                 .map(|j| CpaColumn {
-                    a: Sig::new(product[j], 0.0),
+                    a: Sig::new(product[j], at[product[j].index()]),
                     b: Some(Sig::new(c[j], 0.0)),
                 })
+                .collect();
+            let profile2: Vec<f64> = cols2
+                .iter()
+                .map(|col| col.a.t.max(col.b.map_or(0.0, |s| s.t)))
                 .collect();
             let g2 = match self.cpa {
                 CpaChoice::Regular(s) => cpa::build(s, add_w),
                 CpaChoice::ProfileOptimized => {
-                    // No CT profile here: uniform arrival, Sklansky-style.
-                    cpa::build(PrefixStructure::Sklansky, add_w)
+                    // Honor the request: synthesize the second CPA for the
+                    // measured profile instead of a uniform Sklansky.
+                    let (g, rep) =
+                        cpa::synthesize_for_profile(&profile2, self.strategy, &self.fdc_model);
+                    cpa_timing.merge(&rep.timing);
+                    g
                 }
             };
             let out2 = cpa::expand(&mut nl, &g2, &cols2);
-            product = out2.sum;
-            product.truncate(2 * n + 1);
+            cpa_nodes += g2.size();
+            let mut sum2 = out2.sum;
+            if signed {
+                // (a·b + c) mod 2^{w+1} for w-bit two's-complement addends:
+                // the MSB is carry ⊕ p_{w-1} ⊕ c_{w-1} (both addends
+                // sign-extend by one bit above the adder).
+                let x = nl.xor2(sum2[add_w], product[add_w - 1]);
+                sum2[add_w] = nl.xor2(x, c[add_w - 1]);
+            }
+            product = sum2;
+            product.truncate(out_w + 1);
+            cpa2_profile = Some(profile2);
         }
 
         for (i, &p) in product.iter().enumerate() {
@@ -248,8 +323,9 @@ impl MultiplierSpec {
         }
         nl.validate().map_err(|e| anyhow::anyhow!("netlist invalid: {e}"))?;
         Ok(Design {
-            n,
-            is_mac: self.fused_mac || self.separate_mac,
+            n: fmt.max_bits(),
+            format: fmt,
+            is_mac,
             netlist: nl,
             a,
             b,
@@ -257,8 +333,9 @@ impl MultiplierSpec {
             product,
             ct_stages: ct_out.stages,
             profile: ct_out.profile,
-            cpa_nodes: graph.size(),
+            cpa_nodes,
             timing: cpa_timing,
+            cpa2_profile,
         })
     }
 }
@@ -266,8 +343,10 @@ impl MultiplierSpec {
 /// A built design: netlist + interface + structural metadata.
 #[derive(Debug, Clone)]
 pub struct Design {
-    /// Operand bit width.
+    /// Wider operand width (square designs: the operand width).
     pub n: usize,
+    /// Operand format the design implements.
+    pub format: OperandFormat,
     /// Whether the design accumulates (`a·b + c`).
     pub is_mac: bool,
     /// The gate-level netlist.
@@ -284,54 +363,57 @@ pub struct Design {
     pub ct_stages: usize,
     /// CT output arrival-estimate profile (ns) per column.
     pub profile: Vec<f64>,
-    /// CPA prefix-node count (area proxy).
+    /// CPA prefix-node count over *all* CPAs of the design (area proxy).
     pub cpa_nodes: usize,
     /// Timing-evaluation work the CPA optimization performed while
     /// building this design (incremental vs full, see [`TimingStats`]).
     pub timing: TimingStats,
+    /// Separate-MAC only: the measured per-bit arrival profile the second
+    /// CPA was synthesized against (`max` of the first CPA's sum arrival
+    /// and the accumulator pin arrival per column).
+    pub cpa2_profile: Option<Vec<f64>>,
 }
 
 impl Design {
-    /// Golden reference: what the hardware must compute.
+    /// Reference model: what the hardware must compute, interpreted per the
+    /// design's [`OperandFormat`] — operands are masked to their own widths
+    /// and, for signed formats, read as two's complement; the result is the
+    /// low `product.len()` bits of `a·b (+ c)`.
+    pub fn expected(&self, a: u128, b: u128, c: u128) -> u128 {
+        let w = self.product.len();
+        let mask = (1u128 << w) - 1;
+        let am = a & ((1u128 << self.a.len()) - 1);
+        let bm = b & ((1u128 << self.b.len()) - 1);
+        match self.format.signedness {
+            Signedness::Unsigned => {
+                let cm = if self.is_mac { c & ((1u128 << self.c.len()) - 1) } else { 0 };
+                (am * bm + cm) & mask
+            }
+            Signedness::Signed => {
+                let sa = sign_extend(am, self.a.len());
+                let sb = sign_extend(bm, self.b.len());
+                let sc = if self.is_mac { sign_extend(c, self.c.len()) } else { 0 };
+                sa.wrapping_mul(sb).wrapping_add(sc) as u128 & mask
+            }
+        }
+    }
+
+    /// Legacy name of [`Design::expected`].
     pub fn golden(&self, a: u128, b: u128, c: u128) -> u128 {
-        let mask = (1u128 << self.product.len()) - 1;
-        (a * b + if self.is_mac { c } else { 0 }) & mask
+        self.expected(a, b, c)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{lane_value, pack_lanes, Simulator};
 
+    /// Exhaustive simulator equivalence against [`Design::expected`].
     fn exhaustive(spec: &MultiplierSpec) {
         let d = spec.build().unwrap();
-        let n = d.n;
-        let mut sim = Simulator::new();
-        let na = 1u32 << n;
-        let all: Vec<(u32, u32, u32)> = (0..na)
-            .flat_map(|x| (0..na).map(move |y| (x, y, (x.wrapping_mul(13) ^ y) & (1 << (2 * n)) - 1)))
-            .collect();
-        for chunk in all.chunks(64) {
-            let assigns: Vec<Vec<bool>> = chunk
-                .iter()
-                .map(|(x, y, z)| {
-                    let mut v: Vec<bool> = (0..n).map(|k| x >> k & 1 != 0).collect();
-                    v.extend((0..n).map(|k| y >> k & 1 != 0));
-                    if d.is_mac {
-                        v.extend((0..2 * n).map(|k| z >> k & 1 != 0));
-                    }
-                    v
-                })
-                .collect();
-            let words = pack_lanes(&assigns);
-            let vals = sim.run(&d.netlist, &words).to_vec();
-            for (lane, (x, y, z)) in chunk.iter().enumerate() {
-                let got = lane_value(&vals, &d.product, lane as u32);
-                let want = d.golden(u128::from(*x), u128::from(*y), u128::from(*z));
-                assert_eq!(got, want, "a={x} b={y} c={z}");
-            }
-        }
+        let rep = crate::equiv::check_multiplier(&d).unwrap();
+        assert!(rep.exhaustive, "{spec:?} too wide for exhaustive check");
+        assert!(rep.passed, "{spec:?}: cex {:?}", rep.counterexample);
     }
 
     #[test]
@@ -363,8 +445,29 @@ mod tests {
     }
 
     #[test]
+    fn signed_multipliers_4x4() {
+        for ppg in [PpgKind::AndArray, PpgKind::Booth4] {
+            exhaustive(&MultiplierSpec::new_fmt(OperandFormat::signed(4)).ppg(ppg));
+        }
+    }
+
+    #[test]
+    fn rectangular_multiplier_3x5() {
+        for fmt in [OperandFormat::rect(3, 5), OperandFormat::signed_rect(3, 5)] {
+            exhaustive(&MultiplierSpec::new_fmt(fmt));
+        }
+    }
+
+    #[test]
     fn fused_mac_3x3_exhaustive() {
         exhaustive(&MultiplierSpec::new(3).fused_mac(true));
+    }
+
+    #[test]
+    fn signed_fused_mac_3x3_exhaustive() {
+        for ppg in [PpgKind::AndArray, PpgKind::Booth4] {
+            exhaustive(&MultiplierSpec::new_fmt(OperandFormat::signed(3)).ppg(ppg).fused_mac(true));
+        }
     }
 
     #[test]
@@ -374,6 +477,20 @@ mod tests {
                 .separate_mac(true)
                 .cpa(CpaChoice::Regular(PrefixStructure::Sklansky)),
         );
+    }
+
+    #[test]
+    fn signed_separate_mac_3x3_exhaustive() {
+        exhaustive(&MultiplierSpec::new_fmt(OperandFormat::signed(3)).separate_mac(true));
+    }
+
+    #[test]
+    fn degenerate_width_1_builds_and_verifies() {
+        for ppg in [PpgKind::AndArray, PpgKind::Booth4] {
+            exhaustive(&MultiplierSpec::new(1).ppg(ppg));
+            exhaustive(&MultiplierSpec::new(1).ppg(ppg).fused_mac(true));
+            exhaustive(&MultiplierSpec::new(1).ppg(ppg).separate_mac(true));
+        }
     }
 
     #[test]
@@ -405,6 +522,52 @@ mod tests {
     }
 
     #[test]
+    fn separate_mac_second_cpa_sees_the_arrival_profile() {
+        // Headline regression (§2.2): the separate MAC's second CPA must be
+        // synthesized against the measured arrival profile of the first
+        // CPA's sum — not a uniform-arrival Sklansky fallback.
+        let d = MultiplierSpec::new(16)
+            .separate_mac(true)
+            .strategy(CpaStrategy::TimingDriven)
+            .build()
+            .unwrap();
+        let profile = d.cpa2_profile.clone().expect("separate MAC records its second-CPA profile");
+        assert_eq!(profile.len(), 32);
+        // The first CPA's sum arrives non-uniformly — LSBs early, MSBs
+        // late. A flat profile would mean the fix regressed to the old
+        // uniform-arrival assumption.
+        let max = profile.iter().copied().fold(0.0f64, f64::max);
+        let min = profile.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(max > min + 1e-9, "second-CPA profile is uniform: {profile:?}");
+        // Honoring ProfileOptimized beats the old uniform-Sklansky fallback
+        // on that very profile, by the same STA metric the design is
+        // judged with.
+        let sta = crate::sta::Sta { activity_rounds: 0, ..Default::default() };
+        let model = FdcModel::default_prior();
+        let (g, _) = cpa::synthesize_for_profile(&profile, CpaStrategy::TimingDriven, &model);
+        let (nl_opt, _) = cpa::standalone_adder(&g, Some(&profile));
+        let skl = cpa::build(PrefixStructure::Sklansky, profile.len());
+        let (nl_skl, _) = cpa::standalone_adder(&skl, Some(&profile));
+        let t_opt = sta.analyze(&nl_opt).critical_delay_ns;
+        let t_skl = sta.analyze(&nl_skl).critical_delay_ns;
+        assert!(t_opt < t_skl, "profile-optimized {t_opt} vs sklansky fallback {t_skl}");
+    }
+
+    #[test]
+    fn regular_separate_mac_has_no_second_profile_surprises() {
+        // Regular CPA choices keep their fixed second CPA, but the profile
+        // is still recorded for reports.
+        let d = MultiplierSpec::new(4)
+            .separate_mac(true)
+            .cpa(CpaChoice::Regular(PrefixStructure::Sklansky))
+            .build()
+            .unwrap();
+        assert!(d.cpa2_profile.is_some());
+        let d2 = MultiplierSpec::new(4).build().unwrap();
+        assert!(d2.cpa2_profile.is_none());
+    }
+
+    #[test]
     fn profile_is_trapezoidal_for_16bit() {
         // Figure 1: middle columns arrive last.
         let d = MultiplierSpec::new(16).build().unwrap();
@@ -416,8 +579,22 @@ mod tests {
     }
 
     #[test]
+    fn expected_models_twos_complement() {
+        let d = MultiplierSpec::new_fmt(OperandFormat::signed(4)).build().unwrap();
+        // (-8) × (-8) = 64; (-1) × 3 = -3 ≡ 0xFD mod 2^8.
+        assert_eq!(d.expected(8, 8, 0), 64);
+        assert_eq!(d.expected(0xF, 3, 0), 0xFD);
+        let u = MultiplierSpec::new(4).build().unwrap();
+        assert_eq!(u.expected(8, 8, 0), 64);
+        assert_eq!(u.expected(0xF, 3, 0), 45);
+    }
+
+    #[test]
     fn rejects_bad_specs() {
-        assert!(MultiplierSpec::new(1).build().is_err());
+        assert!(MultiplierSpec::new(0).build().is_err());
+        assert!(MultiplierSpec::new_fmt(OperandFormat::rect(4, 0)).build().is_err());
         assert!(MultiplierSpec::new(4).fused_mac(true).separate_mac(true).build().is_err());
+        // Degenerate-but-legal widths build (the old code rejected n = 1).
+        assert!(MultiplierSpec::new(1).build().is_ok());
     }
 }

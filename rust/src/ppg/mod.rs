@@ -1,12 +1,19 @@
-//! Partial product generation (§2.1).
+//! Partial product generation (§2.1), operand-format aware.
 //!
 //! Produces the column-wise partial-product bit matrix that the compressor
-//! tree consumes. Two generators are provided:
+//! tree consumes, for any [`OperandFormat`] — unsigned or two's-complement
+//! signed, square or rectangular `n×m`. Two generator families:
 //!
-//! - [`PpgKind::AndArray`] — the paper's baseline `N²`-AND-gate PPG;
-//! - [`PpgKind::Booth4`] — radix-4 (modified) Booth recoding for unsigned
-//!   operands, halving the number of partial-product rows (the structure
-//!   commercial multiplier IP uses at larger widths).
+//! - [`PpgKind::AndArray`] — the paper's baseline `n·m`-AND-gate PPG;
+//!   the signed variant applies Baugh–Wooley sign-correction rows
+//!   (inverted boundary terms plus a folded constant).
+//! - [`PpgKind::Booth4`] — radix-4 (modified) Booth recoding of the `b`
+//!   operand, halving the number of partial-product rows (the structure
+//!   commercial multiplier IP uses at larger widths). Unsigned operands
+//!   are zero-extended by two bits so the top digit is non-negative;
+//!   signed operands use true sign extension of both the recoded digits
+//!   and the multiplicand rows. Both share the `~s, s, s` sign-extension
+//!   compaction.
 //!
 //! For the fused MAC architecture (§2.3) the accumulator operand is injected
 //! directly as extra rows of the matrix (see [`PpMatrix::add_addend`]), so
@@ -19,10 +26,88 @@ use crate::synth::Sig;
 /// Partial-product generator selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PpgKind {
-    /// Unsigned AND-gate array.
+    /// AND-gate array (Baugh–Wooley for signed operands).
     AndArray,
     /// Radix-4 modified Booth recoding.
     Booth4,
+}
+
+/// Two's-complement interpretation of the operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Signedness {
+    /// Operands are plain binary magnitudes.
+    Unsigned,
+    /// Operands (and the accumulator, for MACs) are two's complement.
+    Signed,
+}
+
+/// Operand format of a multiplier / MAC: per-operand widths plus the
+/// signedness both operands share. The default format for a width-`n`
+/// request is `Unsigned, n×n`; rectangular and signed formats open the
+/// DSP-style workload families (asymmetric datapaths, signed activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OperandFormat {
+    /// Shared signedness of both operands.
+    pub signedness: Signedness,
+    /// Width of operand `a` (the multiplicand), bits.
+    pub a_bits: usize,
+    /// Width of operand `b` (the Booth-recoded operand), bits.
+    pub b_bits: usize,
+}
+
+impl OperandFormat {
+    /// Unsigned square `n×n` — the legacy default.
+    pub fn unsigned(n: usize) -> OperandFormat {
+        OperandFormat { signedness: Signedness::Unsigned, a_bits: n, b_bits: n }
+    }
+
+    /// Signed (two's complement) square `n×n`.
+    pub fn signed(n: usize) -> OperandFormat {
+        OperandFormat { signedness: Signedness::Signed, a_bits: n, b_bits: n }
+    }
+
+    /// Unsigned rectangular `a_bits × b_bits`.
+    pub fn rect(a_bits: usize, b_bits: usize) -> OperandFormat {
+        OperandFormat { signedness: Signedness::Unsigned, a_bits, b_bits }
+    }
+
+    /// Signed rectangular `a_bits × b_bits`.
+    pub fn signed_rect(a_bits: usize, b_bits: usize) -> OperandFormat {
+        OperandFormat { signedness: Signedness::Signed, a_bits, b_bits }
+    }
+
+    /// Whether operands are two's complement.
+    pub fn is_signed(&self) -> bool {
+        self.signedness == Signedness::Signed
+    }
+
+    /// Product width: `a_bits + b_bits` covers the full range in both the
+    /// unsigned and the two's-complement interpretation.
+    pub fn out_bits(&self) -> usize {
+        self.a_bits + self.b_bits
+    }
+
+    /// Wider of the two operands (the reporting width).
+    pub fn max_bits(&self) -> usize {
+        self.a_bits.max(self.b_bits)
+    }
+
+    /// Structural validity: both operands non-empty and the product narrow
+    /// enough for the `u128` reference model and modular constant folding
+    /// (a fused MAC needs `a+b+1` exact columns and the reference model a
+    /// `2^{a+b+1}` mask, so `a+b` is capped at 126).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.a_bits == 0 || self.b_bits == 0 {
+            return Err("operand widths must be >= 1".into());
+        }
+        if self.a_bits + self.b_bits > 126 {
+            return Err(format!(
+                "product width {} exceeds the 126-bit reference-model limit",
+                self.a_bits + self.b_bits
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Column-indexed partial-product matrix: `columns[j]` holds the bits of
@@ -31,8 +116,10 @@ pub enum PpgKind {
 pub struct PpMatrix {
     /// `columns[j]` = partial-product bits of weight `2^j`.
     pub columns: Vec<Vec<Sig>>,
-    /// Operand widths that produced the matrix (for reports).
-    pub n_bits: usize,
+    /// Width of operand `a` that produced the matrix.
+    pub a_bits: usize,
+    /// Width of operand `b` that produced the matrix.
+    pub b_bits: usize,
 }
 
 impl PpMatrix {
@@ -57,28 +144,97 @@ impl PpMatrix {
         }
     }
 
+    /// Inject a two's-complement addend (signed fused MACs): like
+    /// [`PpMatrix::add_addend`], plus the sign bit replicated once at
+    /// column `bits.len()` — a w-bit signed value mod `2^{w+1}` carries
+    /// its MSB at weight `2^w` as well. One definition shared by the
+    /// builder and the RL-MUL probe, so searched stage plans always match
+    /// the matrix shape the builder compresses.
+    pub fn add_addend_signed(&mut self, bits: &[Sig]) {
+        self.add_addend(bits);
+        if let Some(&msb) = bits.last() {
+            self.ensure_columns(bits.len() + 1);
+            self.columns[bits.len()].push(msb);
+        }
+    }
+
     /// Max column height (reported as the CT's input rank).
     pub fn max_height(&self) -> usize {
         self.columns.iter().map(|c| c.len()).max().unwrap_or(0)
     }
 }
 
-/// Build the AND-array PPG for `a[0..n] × b[0..n]` into `nl`.
+/// Build the unsigned AND-array PPG for `a[0..n] × b[0..m]` into `nl`.
 ///
-/// Returns the matrix over `2n-1` columns; arrival estimates equal one AND
-/// stage at nominal load.
+/// Operands may be rectangular; the matrix spans `n+m-1` columns and
+/// arrival estimates equal one AND stage at nominal load.
 pub fn and_array(nl: &mut Netlist, lib: &CellLib, a: &[NodeId], b: &[NodeId]) -> PpMatrix {
     let n = a.len();
-    assert_eq!(n, b.len(), "and_array expects equal operand widths");
+    let m = b.len();
+    assert!(n >= 1 && m >= 1, "and_array needs non-empty operands");
     let d_and = lib.delay_ns(crate::ir::CellKind::And2, 2.0);
-    let mut columns = vec![Vec::new(); 2 * n - 1];
+    let mut columns = vec![Vec::new(); n + m - 1];
     for (i, &ai) in a.iter().enumerate() {
         for (j, &bj) in b.iter().enumerate() {
             let g = nl.and2(ai, bj);
             columns[i + j].push(Sig::new(g, d_and));
         }
     }
-    PpMatrix { columns, n_bits: n }
+    PpMatrix { columns, a_bits: n, b_bits: m }
+}
+
+/// Build the Baugh–Wooley signed AND-array PPG for two's-complement
+/// `a[0..n] × b[0..m]`, exact mod `2^out_cols`.
+///
+/// Writing `a = -a_{n-1}·2^{n-1} + Σ a_i 2^i` (and likewise `b`), every
+/// product term with exactly one sign bit is negative. Each `-x·2^w` is
+/// replaced by `x̄·2^w - 2^w` (one NAND-style inverted bit), and the `-2^w`
+/// corrections fold into a single constant injected as constant-one bits —
+/// the standard Baugh–Wooley sign-correction rows, made exact mod
+/// `2^out_cols` so the same generator serves plain products (`n+m`
+/// columns) and fused MACs (`n+m+1`).
+pub fn and_array_signed(
+    nl: &mut Netlist,
+    lib: &CellLib,
+    a: &[NodeId],
+    b: &[NodeId],
+    out_cols: usize,
+) -> PpMatrix {
+    let n = a.len();
+    let m = b.len();
+    assert!(n >= 1 && m >= 1, "and_array_signed needs non-empty operands");
+    assert!(out_cols >= n + m - 1, "out_cols too narrow for the product");
+    assert!(out_cols < 128, "out_cols exceeds the u128 folding range");
+    let d_and = lib.delay_ns(crate::ir::CellKind::And2, 2.0);
+    let d_nand = lib.delay_ns(crate::ir::CellKind::Nand2, 2.0);
+    let modulus = 1u128 << out_cols;
+    let mut c_const = 0u128;
+    let mut columns = vec![Vec::new(); out_cols];
+    for (i, &ai) in a.iter().enumerate() {
+        for (j, &bj) in b.iter().enumerate() {
+            let w = i + j;
+            // Exactly one sign operand ⇒ the term is negative: one NAND
+            // cell realizes the inverted Baugh–Wooley boundary bit.
+            let negative = (i == n - 1) ^ (j == m - 1);
+            if negative {
+                let gn = nl.nand2(ai, bj);
+                columns[w].push(Sig::new(gn, d_nand));
+                c_const = (c_const + modulus - (1u128 << w)) % modulus;
+            } else {
+                let g = nl.and2(ai, bj);
+                columns[w].push(Sig::new(g, d_and));
+            }
+        }
+    }
+    if c_const != 0 {
+        let one_const = nl.constant(true);
+        for (j, col) in columns.iter_mut().enumerate() {
+            if c_const >> j & 1 == 1 {
+                col.push(Sig::new(one_const, 0.0));
+            }
+        }
+    }
+    PpMatrix { columns, a_bits: n, b_bits: m }
 }
 
 /// Radix-4 Booth digit selector output for one row bit.
@@ -91,19 +247,20 @@ struct BoothRow {
     neg: Sig,
 }
 
-/// Build a radix-4 Booth PPG for unsigned `a × b`.
+/// Build a radix-4 Booth PPG for unsigned `a × b` over `a.len() + b.len()`
+/// columns.
 ///
 /// Unsigned operands are zero-extended by two bits so that the top digit is
 /// non-negative; rows are sign-extended with the standard `~s, s, s`
 /// compaction trick and negative rows add their `+1` correction bit into the
 /// row's LSB column.
 pub fn booth4(nl: &mut Netlist, lib: &CellLib, a: &[NodeId], b: &[NodeId]) -> PpMatrix {
-    let n = a.len();
-    booth4_wide(nl, lib, a, b, 2 * n)
+    booth4_wide(nl, lib, a, b, a.len() + b.len())
 }
 
-/// Radix-4 Booth PPG exact mod `2^out_cols` — fused MACs need one extra
-/// column (`2n+1`) so the accumulator sum's MSB stays exact.
+/// Radix-4 Booth PPG for unsigned operands, exact mod `2^out_cols` — fused
+/// MACs need one extra column (`n+m+1`) so the accumulator sum's MSB stays
+/// exact.
 pub fn booth4_wide(
     nl: &mut Netlist,
     lib: &CellLib,
@@ -111,32 +268,59 @@ pub fn booth4_wide(
     b: &[NodeId],
     out_cols: usize,
 ) -> PpMatrix {
+    booth4_fmt(nl, lib, a, b, Signedness::Unsigned, out_cols)
+}
+
+/// Radix-4 Booth PPG for either signedness, exact mod `2^out_cols`.
+///
+/// `b` is the recoded operand. Unsigned operands zero-extend (`m/2 + 1`
+/// rows, non-negative top digit); signed operands use true sign extension
+/// of both the digit window (`b` extends with `b_{m-1}`) and the
+/// multiplicand rows (`a` extends with `a_{n-1}`), which needs only
+/// `⌈m/2⌉` rows. Both variants share the `~s, s, s` sign-extension
+/// compaction: the row's sign bit is the Booth `neg` signal for unsigned
+/// magnitudes and the row's computed MSB for signed rows.
+pub fn booth4_fmt(
+    nl: &mut Netlist,
+    lib: &CellLib,
+    a: &[NodeId],
+    b: &[NodeId],
+    signedness: Signedness,
+    out_cols: usize,
+) -> PpMatrix {
     use crate::ir::CellKind::*;
     let n = a.len();
-    assert_eq!(n, b.len());
-    assert!(out_cols >= 2 * n);
+    let m = b.len();
+    assert!(n >= 1 && m >= 1, "booth4 needs non-empty operands");
+    assert!(out_cols >= n + m, "out_cols too narrow for the product");
+    assert!(out_cols < 128, "out_cols exceeds the u128 folding range");
+    let signed = signedness == Signedness::Signed;
     let zero = nl.constant(false);
     let d_sel = lib.delay_ns(Xor2, 2.0) + lib.delay_ns(Aoi21, 2.0) + lib.delay_ns(Inv, 2.0);
 
-    // Booth digits over b (zero-extended): digit i looks at b[2i+1], b[2i], b[2i-1].
-    let n_rows = n / 2 + 1;
-    let bit = |idx: isize, nl: &Netlist| -> NodeId {
-        let _ = nl;
-        if idx < 0 || idx as usize >= n {
+    // Booth digits over b: digit i looks at b[2i+1], b[2i], b[2i-1], with
+    // zero extension (unsigned) or sign extension (signed) past the MSB.
+    let n_rows = if signed { m.div_ceil(2) } else { m / 2 + 1 };
+    let bit = |idx: isize| -> NodeId {
+        if idx < 0 {
             zero
-        } else {
+        } else if (idx as usize) < m {
             b[idx as usize]
+        } else if signed {
+            b[m - 1]
+        } else {
+            zero
         }
     };
 
     let mut rows: Vec<BoothRow> = Vec::with_capacity(n_rows);
     for r in 0..n_rows {
-        let hi = bit(2 * r as isize + 1, nl);
-        let mid = bit(2 * r as isize, nl);
-        let lo = bit(2 * r as isize - 1, nl);
+        let hi = bit(2 * r as isize + 1);
+        let mid = bit(2 * r as isize);
+        let lo = bit(2 * r as isize - 1);
         // one  = mid ⊕ lo  (|d| == 1)
-        // two  = hi ⊕ mid ? …precisely: two = (hi·!mid·!lo) + (!hi·mid·lo)
-        // neg  = hi·!(mid·lo)  → for zero-extended unsigned top digit hi=0.
+        // two  = (hi ⊕ mid) · (mid ≡ lo)
+        // neg  = hi·!(mid·lo)
         let one = nl.xor2(mid, lo);
         let eq_ml = nl.xnor2(mid, lo);
         let two = {
@@ -148,10 +332,17 @@ pub fn booth4_wide(
             let nml = nl.inv(ml);
             nl.and2(hi, nml)
         };
-        // Row bits k = 0..n: pp_k = neg ⊕ (one·a_k | two·a_{k-1})
+        // Row bits k = 0..n: pp_k = neg ⊕ (one·a_k | two·a_{k-1}), where
+        // a_n is zero (unsigned) or the sign bit a_{n-1} (signed).
         let mut bits = Vec::with_capacity(n + 1);
         for k in 0..=n {
-            let ak = if k < n { a[k] } else { zero };
+            let ak = if k < n {
+                a[k]
+            } else if signed {
+                a[n - 1]
+            } else {
+                zero
+            };
             let ak1 = if k >= 1 { a[k - 1] } else { zero };
             let t1 = nl.and2(one, ak);
             let t2 = nl.and2(two, ak1);
@@ -163,15 +354,17 @@ pub fn booth4_wide(
     }
 
     // Assemble columns with exact sign-extension compaction. Row r (base
-    // column 2r, bits over base..base+n) contributes, mod 2^{2n}:
+    // column 2r, bits over base..base+n) contributes, mod 2^out_cols:
     //
     //   bits  +  neg·2^base            (the +1 of the two's complement)
-    //         +  neg·(ones ≥ base+n+1) (sign extension)
+    //         +  s·(ones ≥ base+n+1)   (sign extension)
     //
-    // and  neg·(ones ≥ base+n+1) ≡ (~neg)·2^{base+n+1} − 2^{base+n+1}.
-    // The per-row `−2^{base+n+1}` terms fold into one global constant C
-    // injected as constant bits — the standard "(~s) + constant" trick,
-    // made exact mod 2^{2n}.
+    // where the row sign s is `neg` for unsigned magnitudes and the row's
+    // computed MSB pp_n for signed rows, and
+    // s·(ones ≥ base+n+1) ≡ (~s)·2^{base+n+1} − 2^{base+n+1}. The per-row
+    // `−2^{base+n+1}` terms fold into one global constant C injected as
+    // constant bits — the standard "(~s) + constant" trick, made exact mod
+    // 2^out_cols.
     let mut columns = vec![Vec::new(); out_cols];
     for (r, row) in rows.iter().enumerate() {
         let base = 2 * r;
@@ -182,13 +375,14 @@ pub fn booth4_wide(
         }
         // +1 correction for negative rows lands at the row LSB column.
         columns[base].push(row.neg);
-        // (~neg) at base+n+1.
+        // (~s) at base+n+1.
+        let sign = if signed { row.bits[n] } else { row.neg };
         if base + n + 1 < columns.len() {
-            let ns = nl.inv(row.neg.node);
+            let ns = nl.inv(sign.node);
             columns[base + n + 1].push(Sig::new(ns, d_sel));
         }
     }
-    // Global constant C = (− Σ_r 2^{2r+n+1}) mod 2^{2n}.
+    // Global constant C = (− Σ_r 2^{2r+n+1}) mod 2^out_cols.
     let modulus = 1u128 << out_cols;
     let mut c_const = 0u128;
     for r in 0..rows.len() {
@@ -199,16 +393,17 @@ pub fn booth4_wide(
     }
     if c_const != 0 {
         let one_const = nl.constant(true);
-        for j in 0..out_cols {
+        for (j, col) in columns.iter_mut().enumerate() {
             if c_const >> j & 1 == 1 {
-                columns[j].push(Sig::new(one_const, 0.0));
+                col.push(Sig::new(one_const, 0.0));
             }
         }
     }
-    PpMatrix { columns, n_bits: n }
+    PpMatrix { columns, a_bits: n, b_bits: m }
 }
 
-/// Build a PPG of the requested kind.
+/// Build an unsigned PPG of the requested kind (legacy entry point; the
+/// format-aware generators are called directly by the multiplier builder).
 pub fn generate(
     nl: &mut Netlist,
     lib: &CellLib,
@@ -239,51 +434,93 @@ mod tests {
         total
     }
 
-    fn check_ppg(kind: PpgKind, n: usize, mask: u128) {
+    use crate::util::sign_extend as sext;
+
+    /// Build a PPG over an `na × nb` operand pair and check its column sum
+    /// against the format's golden product, mod `2^mod_bits`.
+    fn check_ppg_fmt(kind: PpgKind, fmt: OperandFormat, mod_bits: usize) {
         let lib = CellLib::nangate45();
         let mut nl = Netlist::new("ppg");
-        let a: Vec<_> = (0..n).map(|i| nl.input(format!("a{i}"))).collect();
-        let b: Vec<_> = (0..n).map(|i| nl.input(format!("b{i}"))).collect();
-        let m = generate(&mut nl, &lib, kind, &a, &b);
+        let (na, nb) = (fmt.a_bits, fmt.b_bits);
+        let a: Vec<_> = (0..na).map(|i| nl.input(format!("a{i}"))).collect();
+        let b: Vec<_> = (0..nb).map(|i| nl.input(format!("b{i}"))).collect();
+        let m = match (kind, fmt.signedness) {
+            (PpgKind::AndArray, Signedness::Unsigned) => and_array(&mut nl, &lib, &a, &b),
+            (PpgKind::AndArray, Signedness::Signed) => {
+                and_array_signed(&mut nl, &lib, &a, &b, na + nb)
+            }
+            (PpgKind::Booth4, s) => booth4_fmt(&mut nl, &lib, &a, &b, s, na + nb),
+        };
         nl.validate().unwrap();
+        let mask = (1u128 << mod_bits) - 1;
+        let modulus = 1i128 << mod_bits;
         let mut sim = Simulator::new();
-        // Exhaust 4-bit × 4-bit in 64-lane batches.
-        let all: Vec<(u32, u32)> =
-            (0..1u32 << n).flat_map(|x| (0..1u32 << n).map(move |y| (x, y))).collect();
+        let all: Vec<(u32, u32)> = (0..1u32 << na)
+            .flat_map(|x| (0..1u32 << nb).map(move |y| (x, y)))
+            .collect();
         for chunk in all.chunks(64) {
             let assigns: Vec<Vec<bool>> = chunk
                 .iter()
                 .map(|(x, y)| {
-                    (0..n).map(|k| x >> k & 1 != 0).chain((0..n).map(|k| y >> k & 1 != 0)).collect()
+                    (0..na)
+                        .map(|k| x >> k & 1 != 0)
+                        .chain((0..nb).map(|k| y >> k & 1 != 0))
+                        .collect()
                 })
                 .collect();
             let words = pack_lanes(&assigns);
             let vals = sim.run(&nl, &words).to_vec();
             for (lane, (x, y)) in chunk.iter().enumerate() {
                 let got = matrix_value(&vals, &m, lane as u32) & mask;
-                assert_eq!(
-                    got,
-                    u128::from(*x) * u128::from(*y) & mask,
-                    "{kind:?} {x}*{y}"
-                );
+                let want = match fmt.signedness {
+                    Signedness::Unsigned => u128::from(*x) * u128::from(*y) & mask,
+                    Signedness::Signed => {
+                        let p = sext(u128::from(*x), na) * sext(u128::from(*y), nb);
+                        p.rem_euclid(modulus) as u128
+                    }
+                };
+                assert_eq!(got, want, "{kind:?} {fmt:?} {x}*{y}");
             }
         }
     }
 
+    fn check_ppg(kind: PpgKind, n: usize, mod_bits: usize) {
+        check_ppg_fmt(kind, OperandFormat::unsigned(n), mod_bits);
+    }
+
     #[test]
     fn and_array_4x4_exhaustive() {
-        check_ppg(PpgKind::AndArray, 4, !0);
+        check_ppg(PpgKind::AndArray, 4, 8);
     }
 
     #[test]
     fn booth4_4x4_exhaustive_mod_2n() {
         // Booth rows are exact mod 2^(2n) after compaction-trim.
-        check_ppg(PpgKind::Booth4, 4, (1u128 << 8) - 1);
+        check_ppg(PpgKind::Booth4, 4, 8);
     }
 
     #[test]
     fn booth4_3x3_exhaustive_mod_2n() {
-        check_ppg(PpgKind::Booth4, 3, (1u128 << 6) - 1);
+        check_ppg(PpgKind::Booth4, 3, 6);
+    }
+
+    #[test]
+    fn signed_generators_exhaustive() {
+        for kind in [PpgKind::AndArray, PpgKind::Booth4] {
+            for n in 1..=4 {
+                check_ppg_fmt(kind, OperandFormat::signed(n), 2 * n);
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_generators_exhaustive() {
+        for kind in [PpgKind::AndArray, PpgKind::Booth4] {
+            check_ppg_fmt(kind, OperandFormat::rect(2, 5), 7);
+            check_ppg_fmt(kind, OperandFormat::rect(5, 2), 7);
+            check_ppg_fmt(kind, OperandFormat::signed_rect(3, 5), 8);
+            check_ppg_fmt(kind, OperandFormat::signed_rect(5, 3), 8);
+        }
     }
 
     #[test]
@@ -295,6 +532,7 @@ mod tests {
         let m = and_array(&mut nl, &lib, &a, &b);
         assert_eq!(m.counts(), vec![1, 2, 3, 4, 5, 6, 7, 8, 7, 6, 5, 4, 3, 2, 1]);
         assert_eq!(m.max_height(), 8);
+        assert_eq!((m.a_bits, m.b_bits), (8, 8));
     }
 
     #[test]
@@ -309,6 +547,19 @@ mod tests {
     }
 
     #[test]
+    fn signed_booth_has_fewer_rows_than_unsigned() {
+        let lib = CellLib::nangate45();
+        let count = |s: Signedness| {
+            let mut nl = Netlist::new("ppg");
+            let a: Vec<_> = (0..16).map(|i| nl.input(format!("a{i}"))).collect();
+            let b: Vec<_> = (0..16).map(|i| nl.input(format!("b{i}"))).collect();
+            booth4_fmt(&mut nl, &lib, &a, &b, s, 32).max_height()
+        };
+        // True sign extension drops the zero-extension top row.
+        assert!(count(Signedness::Signed) <= count(Signedness::Unsigned));
+    }
+
+    #[test]
     fn addend_injection_for_mac() {
         let lib = CellLib::nangate45();
         let mut nl = Netlist::new("mac-ppg");
@@ -319,5 +570,17 @@ mod tests {
         m.add_addend(&c.iter().map(|&n| Sig::new(n, 0.0)).collect::<Vec<_>>());
         // columns 0..6 are the 4×4 triangle +1; column 7 holds only c7
         assert_eq!(m.counts(), vec![2, 3, 4, 5, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn operand_format_helpers() {
+        let f = OperandFormat::signed_rect(4, 6);
+        assert!(f.is_signed());
+        assert_eq!(f.out_bits(), 10);
+        assert_eq!(f.max_bits(), 6);
+        f.validate().unwrap();
+        assert!(OperandFormat::rect(0, 4).validate().is_err());
+        assert!(OperandFormat::rect(100, 100).validate().is_err());
+        assert_eq!(OperandFormat::unsigned(8), OperandFormat::rect(8, 8));
     }
 }

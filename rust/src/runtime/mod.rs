@@ -291,20 +291,22 @@ pub use stub_runtime::Runtime;
 pub fn verify_design_pjrt(rt: &Runtime, design: &Design, rounds: usize) -> Result<bool> {
     let enc = encode_netlist(&design.netlist)?;
     let mut rng = crate::util::Rng::seed_from_u64(0x7e57);
-    let n = design.n;
+    let a_bits = design.a.len();
+    let b_bits = design.b.len();
     let c_bits = design.c.len();
-    let amask = (1u128 << n) - 1;
+    let amask = (1u128 << a_bits) - 1;
+    let bmask = (1u128 << b_bits) - 1;
     let cmask = if c_bits == 0 { 0u128 } else { (1u128 << c_bits) - 1 };
     for round in 0..rounds {
         // 256 vectors: lane l of word w encodes test (w*32 + l).
         let mut tests: Vec<(u128, u128, u128)> = Vec::with_capacity(BATCH * 32);
         for t in 0..BATCH * 32 {
             let tv = if round == 0 && t < 4 {
-                [(0, 0, 0), (amask, amask, 0), (amask, 1, 1 & cmask), (1, amask, cmask)][t]
+                [(0, 0, 0), (amask, bmask, 0), (amask, 1, 1 & cmask), (1, bmask, cmask)][t]
             } else {
                 (
                     u128::from(rng.next_u64()) & amask,
-                    u128::from(rng.next_u64()) & amask,
+                    u128::from(rng.next_u64()) & bmask,
                     u128::from(rng.next_u64()) & cmask,
                 )
             };
@@ -315,13 +317,13 @@ pub fn verify_design_pjrt(rt: &Runtime, design: &Design, rounds: usize) -> Resul
         for (t, (a, b, c)) in tests.iter().enumerate() {
             let (w, lane) = (t / 32, t % 32);
             let mut idx = 0;
-            for k in 0..n {
+            for k in 0..a_bits {
                 if a >> k & 1 == 1 {
                     words[w][idx] |= 1 << lane;
                 }
                 idx += 1;
             }
-            for k in 0..n {
+            for k in 0..b_bits {
                 if b >> k & 1 == 1 {
                     words[w][idx] |= 1 << lane;
                 }

@@ -182,6 +182,13 @@ pub fn lane_value(words: &[u64], bits: &[NodeId], lane: u32) -> u128 {
     v
 }
 
+/// Interpret a slice of output nodes as a little-endian **two's-complement**
+/// integer for one specific lane (the MSB is the sign bit) — the signed
+/// counterpart of [`lane_value`] used to verify signed operand formats.
+pub fn lane_value_signed(words: &[u64], bits: &[NodeId], lane: u32) -> i128 {
+    crate::util::sign_extend(lane_value(words, bits, lane), bits.len())
+}
+
 /// Pack per-lane bit values into input words: `assignments[lane][input]`.
 pub fn pack_lanes(assignments: &[Vec<bool>]) -> Vec<u64> {
     assert!(!assignments.is_empty() && assignments.len() <= 64);
@@ -278,6 +285,19 @@ mod tests {
             let got = lane_value(&vals, &bits, v);
             assert_eq!(got, u128::from(a + b), "a={a} b={b}");
         }
+    }
+
+    #[test]
+    fn lane_value_signed_reads_twos_complement() {
+        let (nl, bits) = adder2();
+        // a = 3, b = 2 → s = 5 = 0b101 → signed over 3 bits = -3.
+        let words = pack_lanes(&[vec![true, true, false, true]]);
+        let mut sim = Simulator::new();
+        let vals = sim.run(&nl, &words).to_vec();
+        assert_eq!(lane_value(&vals, &bits, 0), 5);
+        assert_eq!(lane_value_signed(&vals, &bits, 0), -3);
+        assert_eq!(lane_value_signed(&vals, &bits[..2], 0), 1); // 0b01
+        assert_eq!(lane_value_signed(&vals, &[], 0), 0);
     }
 
     #[test]

@@ -84,6 +84,26 @@ impl Rng {
     }
 }
 
+/// Two's-complement value of the low `bits` bits of `x` — the one
+/// sign-extension helper shared by the signed reference models
+/// ([`crate::multiplier::Design::expected`]) and the signed lane reader
+/// ([`crate::sim::lane_value_signed`]).
+pub fn sign_extend(x: u128, bits: usize) -> i128 {
+    if bits == 0 {
+        return 0;
+    }
+    debug_assert!(bits <= 127, "sign_extend supports up to 127 bits");
+    let v = x & ((1u128 << bits) - 1);
+    if v >> (bits - 1) & 1 == 1 {
+        // Negative: compute 2^bits - v in u128 first — the magnitude is at
+        // most 2^(bits-1) <= 2^126, so the cast cannot wrap even at the
+        // 127-bit product width of the widest fused MAC.
+        -(((1u128 << bits) - v) as i128)
+    } else {
+        v as i128
+    }
+}
+
 /// Minimal JSON value for report emission (no parsing needed in-tree).
 #[derive(Debug, Clone)]
 pub enum Json {
@@ -189,7 +209,7 @@ impl Json {
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
-        if p.pos != bytes.len() {
+        if p.pos != p.bytes.len() {
             return Err(format!("trailing data at byte {}", p.pos));
         }
         Ok(v)
@@ -534,6 +554,19 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sign_extend_covers_edges() {
+        assert_eq!(sign_extend(0, 0), 0);
+        assert_eq!(sign_extend(0b101, 3), -3);
+        assert_eq!(sign_extend(0b011, 3), 3);
+        assert_eq!(sign_extend(0xFF, 4), -1); // masks to the low bits
+        // 127-bit boundary (the widest fused-MAC product): MSB set means
+        // v - 2^127, computed without i128 wrap.
+        assert_eq!(sign_extend(1u128 << 126, 127), -(1i128 << 126));
+        assert_eq!(sign_extend((1u128 << 127) - 1, 127), -1);
+        assert_eq!(sign_extend((1u128 << 126) - 1, 127), (1i128 << 126) - 1);
+    }
 
     #[test]
     fn rng_is_deterministic_and_uniformish() {

@@ -85,6 +85,7 @@ fn repeated_sweep_is_served_from_cache() {
         budget: ufo_mac::baselines::BaselineBudget { rlmul_iters: 2, seed: 1 },
         verify_vectors: 128,
         use_pjrt: false,
+        ..Default::default()
     };
     let engine = Arc::new(SynthEngine::new(EngineConfig {
         verify_vectors: cfg.verify_vectors,

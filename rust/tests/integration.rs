@@ -227,6 +227,7 @@ fn integration_sweep_pareto_and_reports() {
         budget: BaselineBudget { rlmul_iters: 2, seed: 5 },
         verify_vectors: 256,
         use_pjrt: false,
+        ..Default::default()
     };
     let points = ufo_mac::coordinator::run_sweep(&cfg);
     assert_eq!(points.len(), 8);
