@@ -1,0 +1,41 @@
+//! Minimal client for the `ufo-mac serve` compile service.
+//!
+//! Start the server in one terminal, then run this in another:
+//!
+//! ```text
+//! cargo run --release --bin ufo-mac -- serve --addr 127.0.0.1:7878
+//! cargo run --release --example serve_client -- 127.0.0.1:7878
+//! ```
+//!
+//! It sends the same compile twice plus a `stats` probe, prints the three
+//! response lines, and demonstrates the cache doing its job: the second
+//! compile answers with `"source":"memory"` (or `"disk"` when the server
+//! was restarted over a persistent `--cache-dir`). The wire format is
+//! documented in `PROTOCOL.md`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() -> std::io::Result<()> {
+    let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let mut stream = TcpStream::connect(&addr)?;
+
+    let compile = |id: u32| {
+        format!(
+            "{{\"cmd\":\"compile\",\"id\":{id},\"request\":{{\"kind\":\"method\",\
+             \"method\":\"ufo\",\"n\":16,\"strategy\":\"tradeoff\",\"mac\":false}}}}"
+        )
+    };
+    let requests = [compile(1), compile(2), "{\"cmd\":\"stats\",\"id\":3}".to_string()];
+    for line in &requests {
+        writeln!(stream, "{line}")?;
+    }
+    stream.flush()?;
+
+    // Responses arrive in completion order; correlate by "id".
+    let reader = BufReader::new(stream.try_clone()?);
+    for response in reader.lines().take(requests.len()) {
+        println!("{}", response?);
+    }
+    Ok(())
+}

@@ -116,6 +116,25 @@ fn main() {
     let art = warm.compile(&req).unwrap();
     bench.metric("engine_timing_retime_fraction_16bit", art.timing.retime_fraction(), "fraction");
 
+    // Persistent-cache tiers: cold compile (above) vs warm in-memory hit
+    // (above) vs warm *disk* hit — the restarted-service steady state.
+    // Clearing the memory tier before each sample forces every compile to
+    // deserialize + checksum-verify the on-disk entry.
+    let disk_dir = std::env::temp_dir().join(format!("ufo_hotpath_disk_{}", std::process::id()));
+    std::fs::remove_dir_all(&disk_dir).ok();
+    let disk = SynthEngine::new(EngineConfig {
+        cache_dir: Some(disk_dir.clone()),
+        ..EngineConfig::default()
+    });
+    disk.compile(&req).unwrap(); // prime both tiers
+    bench.bench("engine_compile_16bit_warm_disk", || {
+        disk.clear_cache(); // memory tier only; the disk entry survives
+        disk.compile(&req).unwrap().sta.num_gates
+    });
+    let s = disk.cache_stats();
+    bench.metric("engine_disk_hits_16bit", s.disk_hits as f64, "count");
+    std::fs::remove_dir_all(&disk_dir).ok();
+
     // Full vs incremental STA on the repeated-optimization-move path: each
     // "move" shifts one middle-column input arrival of a 32-bit adder
     // carrying a trapezoidal CT profile (what a CT interconnect swap or a

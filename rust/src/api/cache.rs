@@ -1,56 +1,111 @@
-//! Sharded, content-addressed, in-memory design cache.
+//! Sharded, content-addressed design cache with an optional persistent
+//! disk tier.
 //!
 //! Keys are request [`Fingerprint`]s (content hashes of canonical request
 //! forms); values are immutable [`DesignArtifact`]s behind `Arc`, so a hit
 //! is one shard-lock acquisition plus a refcount bump — no netlist is ever
 //! copied. Sharding keeps the batch compiler's worker threads from
 //! serializing on one mutex; statistics are lock-free atomics.
+//!
+//! When constructed with [`DesignCache::with_disk`], every insert is also
+//! written through to a versioned, checksummed entry file (one JSON file
+//! per fingerprint — see [`crate::api::persist`] and `PROTOCOL.md`), and a
+//! memory miss falls back to the disk tier before reporting a miss. Warm
+//! designs therefore survive process restarts: a fresh engine pointed at
+//! the same directory serves them without recompiling. Disk defects
+//! (corrupted, truncated, or stale-version entries) are treated as misses
+//! and the entry is rewritten on the next insert.
 
 use super::engine::DesignArtifact;
+use super::persist;
 use super::request::Fingerprint;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Where a cache lookup was satisfied (or not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheTier {
+    /// Served from the in-memory map.
+    Memory,
+    /// Served from the persistent disk tier (and promoted to memory).
+    Disk,
+}
 
 /// Aggregate cache counters (monotone over the cache's lifetime).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups served from the cache.
+    /// Lookups served from the in-memory tier.
     pub hits: u64,
+    /// Lookups served from the persistent disk tier.
+    pub disk_hits: u64,
     /// Lookups that required a fresh synthesis.
     pub misses: u64,
-    /// Artifacts currently cached.
+    /// Compiles avoided by in-flight coalescing (identical requests that
+    /// waited on a concurrent compile instead of starting their own;
+    /// maintained by [`crate::api::SynthEngine`], always 0 for a bare
+    /// cache).
+    pub coalesced: u64,
+    /// Artifacts currently cached in memory.
     pub entries: usize,
 }
 
 impl CacheStats {
-    /// Hit fraction in `[0, 1]` (0 when the cache was never queried).
+    /// Hit fraction in `[0, 1]` over both tiers (0 when never queried).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let total = self.hits + self.disk_hits + self.misses;
         if total == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            (self.hits + self.disk_hits) as f64 / total as f64
         }
     }
 }
 
-/// Fingerprint → `Arc<DesignArtifact>` map, split over `shards` mutexes.
+/// Fingerprint → `Arc<DesignArtifact>` map, split over `shards` mutexes,
+/// with an optional write-through disk tier.
 pub struct DesignCache {
     shards: Vec<Mutex<HashMap<u128, Arc<DesignArtifact>>>>,
+    disk_dir: Option<PathBuf>,
     hits: AtomicU64,
+    disk_hits: AtomicU64,
     misses: AtomicU64,
 }
 
 impl DesignCache {
-    /// Empty cache split over `shards` mutexes (min 1).
+    /// Empty in-memory cache split over `shards` mutexes (min 1).
     pub fn new(shards: usize) -> Self {
         let shards = shards.max(1);
         DesignCache {
             shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            disk_dir: None,
             hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// [`DesignCache::new`] plus a persistent disk tier rooted at `dir`.
+    ///
+    /// The directory is created eagerly; if that fails (read-only
+    /// filesystem, permission error) the cache degrades to memory-only
+    /// rather than poisoning every compile.
+    pub fn with_disk(shards: usize, dir: PathBuf) -> Self {
+        let mut cache = DesignCache::new(shards);
+        match std::fs::create_dir_all(&dir) {
+            Ok(()) => cache.disk_dir = Some(dir),
+            Err(e) => eprintln!(
+                "design cache: disabling disk tier ({}: {e})",
+                dir.display()
+            ),
+        }
+        cache
+    }
+
+    /// The disk-tier directory, when one is configured.
+    pub fn disk_dir(&self) -> Option<&PathBuf> {
+        self.disk_dir.as_ref()
     }
 
     fn shard(&self, fp: Fingerprint) -> &Mutex<HashMap<u128, Arc<DesignArtifact>>> {
@@ -59,35 +114,95 @@ impl DesignCache {
 
     /// Look up a fingerprint, recording a hit or miss.
     pub fn get(&self, fp: Fingerprint) -> Option<Arc<DesignArtifact>> {
-        let found = self.shard(fp).lock().unwrap().get(&fp.0).cloned();
-        match &found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
-        found
+        self.get_traced(fp).map(|(a, _)| a)
+    }
+
+    /// [`DesignCache::get`] plus *which tier* satisfied the lookup. A disk
+    /// hit is promoted into the memory tier on the way out.
+    pub fn get_traced(&self, fp: Fingerprint) -> Option<(Arc<DesignArtifact>, CacheTier)> {
+        if let Some(hit) = self.shard(fp).lock().unwrap().get(&fp.0).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some((hit, CacheTier::Memory));
+        }
+        if let Some(dir) = &self.disk_dir {
+            if let Ok(art) = persist::read_entry(dir, fp) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                let arc = {
+                    let mut shard = self.shard(fp).lock().unwrap();
+                    shard.entry(fp.0).or_insert_with(|| Arc::new(art)).clone()
+                };
+                return Some((arc, CacheTier::Disk));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Look up without touching the hit/miss counters (the engine's
+    /// post-coalescing re-check).
+    pub(crate) fn peek(&self, fp: Fingerprint) -> Option<Arc<DesignArtifact>> {
+        self.shard(fp).lock().unwrap().get(&fp.0).cloned()
+    }
+
+    /// Reclassify the caller's just-recorded miss after in-flight
+    /// coalescing deduplicated it: the compile rode a concurrent
+    /// synthesis, so no *fresh* synthesis was required and `misses` must
+    /// not count it (the leader's miss already accounts for the one real
+    /// build).
+    pub(crate) fn forgive_miss(&self) {
+        self.misses.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Reclassify a just-recorded miss as a memory hit: the leader found
+    /// the artifact already inserted when it re-checked after registering
+    /// its in-flight entry.
+    pub(crate) fn miss_to_hit(&self) {
+        self.misses.fetch_sub(1, Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Insert an artifact, returning the canonical `Arc` for the key.
     ///
     /// If two workers compiled the same request concurrently, the first
     /// insert wins and both callers get the same pointer — the engine's
-    /// "identical request ⇒ identical artifact" guarantee.
+    /// "identical request ⇒ identical artifact" guarantee. The winning
+    /// insert is written through to the disk tier (best-effort: an
+    /// unwritable directory costs persistence, not correctness).
     pub fn insert(&self, fp: Fingerprint, artifact: DesignArtifact) -> Arc<DesignArtifact> {
-        let mut shard = self.shard(fp).lock().unwrap();
-        shard.entry(fp.0).or_insert_with(|| Arc::new(artifact)).clone()
+        let (arc, fresh) = {
+            let mut shard = self.shard(fp).lock().unwrap();
+            let mut fresh = false;
+            let arc = shard
+                .entry(fp.0)
+                .or_insert_with(|| {
+                    fresh = true;
+                    Arc::new(artifact)
+                })
+                .clone();
+            (arc, fresh)
+        };
+        if fresh {
+            if let Some(dir) = &self.disk_dir {
+                if let Err(e) = persist::write_entry(dir, fp, &arc) {
+                    eprintln!("design cache: disk write failed for {fp}: {e}");
+                }
+            }
+        }
+        arc
     }
 
-    /// Number of cached artifacts.
+    /// Number of cached artifacts in memory.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
-    /// Whether the cache currently holds no artifacts.
+    /// Whether the memory tier currently holds no artifacts.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drop every entry (counters are preserved).
+    /// Drop every in-memory entry (counters and disk entries survive — the
+    /// next lookup for a persisted design is a disk hit, not a recompute).
     pub fn clear(&self) {
         for s in &self.shards {
             s.lock().unwrap().clear();
@@ -98,7 +213,9 @@ impl DesignCache {
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            coalesced: 0,
             entries: self.len(),
         }
     }
@@ -130,6 +247,7 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.disk_hits, 0);
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
     }
 
@@ -142,5 +260,26 @@ mod tests {
         assert_eq!(cache.len(), 1);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn disk_tier_survives_clear() {
+        let dir = std::env::temp_dir()
+            .join(format!("ufo_cache_unit_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = DesignCache::with_disk(2, dir.clone());
+        let art = dummy();
+        let key = art.fingerprint;
+        cache.insert(key, art);
+        cache.clear();
+        assert!(cache.is_empty());
+        let (_, tier) = cache.get_traced(key).unwrap();
+        assert_eq!(tier, CacheTier::Disk);
+        // ...and the disk hit promoted the entry back into memory.
+        let (_, tier) = cache.get_traced(key).unwrap();
+        assert_eq!(tier, CacheTier::Memory);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.disk_hits, s.misses), (1, 1, 0));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

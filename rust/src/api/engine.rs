@@ -9,7 +9,7 @@
 //! helpers and `coordinator::run_sweep` are all thin shims over it, so a
 //! repeated request is served from cache as the same `Arc`.
 
-use super::cache::{CacheStats, DesignCache};
+use super::cache::{CacheStats, CacheTier, DesignCache};
 use super::request::{DesignRequest, Fingerprint, MethodRequest, ModuleKind};
 use crate::baselines::{self, BaselineBudget};
 use crate::coordinator::pool;
@@ -21,7 +21,10 @@ use crate::sta::{Sta, StaReport, TimingStats};
 use crate::synth::CompressorTiming;
 use crate::Result;
 use anyhow::anyhow;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Engine construction knobs.
 #[derive(Debug, Clone)]
@@ -36,6 +39,12 @@ pub struct EngineConfig {
     pub workers: usize,
     /// Mutex shards of the design cache.
     pub cache_shards: usize,
+    /// Directory of the persistent disk cache tier; `None` (the default)
+    /// keeps the cache in-memory only. With a directory, every compiled
+    /// artifact is written through to a checksummed entry file and served
+    /// back — across process restarts — without recompiling (see
+    /// `PROTOCOL.md` for the entry format).
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -45,7 +54,58 @@ impl Default for EngineConfig {
             use_pjrt: false,
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
             cache_shards: 16,
+            cache_dir: None,
         }
+    }
+}
+
+/// How a [`SynthEngine::compile_traced`] call obtained its artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompileSource {
+    /// In-memory cache hit.
+    Memory,
+    /// Persistent disk-tier hit (fresh process, warm cache).
+    Disk,
+    /// Freshly synthesized by this call.
+    Compiled,
+    /// Deduplicated onto a concurrent identical compile (this call waited
+    /// for the in-flight leader instead of synthesizing again).
+    Coalesced,
+}
+
+impl CompileSource {
+    /// Stable wire key (`source` field of server compile responses).
+    pub fn key(&self) -> &'static str {
+        match self {
+            CompileSource::Memory => "memory",
+            CompileSource::Disk => "disk",
+            CompileSource::Compiled => "compiled",
+            CompileSource::Coalesced => "coalesced",
+        }
+    }
+}
+
+/// One in-flight compile: waiters block on the condvar until the leader
+/// publishes the outcome (`anyhow::Error` is not `Clone`, so failures
+/// travel as rendered strings).
+#[derive(Default)]
+struct Flight {
+    slot: Mutex<Option<std::result::Result<Arc<DesignArtifact>, String>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn wait(&self) -> std::result::Result<Arc<DesignArtifact>, String> {
+        let mut slot = self.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        slot.clone().unwrap()
+    }
+
+    fn publish(&self, outcome: std::result::Result<Arc<DesignArtifact>, String>) {
+        *self.slot.lock().unwrap() = Some(outcome);
+        self.cv.notify_all();
     }
 }
 
@@ -126,6 +186,9 @@ pub struct SynthEngine {
     sta: Sta,
     runtime: Option<Mutex<Runtime>>,
     cache: DesignCache,
+    /// Fingerprint → in-flight compile, for request coalescing.
+    inflight: Mutex<HashMap<u128, Arc<Flight>>>,
+    coalesced: AtomicU64,
 }
 
 impl SynthEngine {
@@ -141,8 +204,20 @@ impl SynthEngine {
         } else {
             None
         };
-        let cache = DesignCache::new(cfg.cache_shards);
-        SynthEngine { cfg, lib, tm, sta, runtime, cache }
+        let cache = match cfg.cache_dir.clone() {
+            Some(dir) => DesignCache::with_disk(cfg.cache_shards, dir),
+            None => DesignCache::new(cfg.cache_shards),
+        };
+        SynthEngine {
+            cfg,
+            lib,
+            tm,
+            sta,
+            runtime,
+            cache,
+            inflight: Mutex::new(HashMap::new()),
+            coalesced: AtomicU64::new(0),
+        }
     }
 
     /// The configuration this engine was built with.
@@ -165,12 +240,14 @@ impl SynthEngine {
         &self.sta
     }
 
-    /// Hit/miss/entry counters of the design cache.
+    /// Hit/miss/entry counters of the design cache (including compiles
+    /// avoided by in-flight coalescing).
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        CacheStats { coalesced: self.coalesced.load(Ordering::Relaxed), ..self.cache.stats() }
     }
 
-    /// Drop all cached artifacts (hit/miss counters survive).
+    /// Drop all cached in-memory artifacts (hit/miss counters and
+    /// disk-tier entries survive).
     pub fn clear_cache(&self) {
         self.cache.clear();
     }
@@ -179,28 +256,142 @@ impl SynthEngine {
     ///
     /// The request is canonicalized first, so every spelling of the same
     /// design — explicit spec, method shorthand, differing dead fields —
-    /// resolves to one artifact.
+    /// resolves to one artifact. Concurrent identical requests are
+    /// *coalesced*: N simultaneous compiles of one fingerprint trigger
+    /// exactly one synthesis, and the other N−1 callers wait for it.
+    ///
+    /// ```
+    /// use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+    ///
+    /// let engine = SynthEngine::new(EngineConfig::default());
+    /// let art = engine.compile(&DesignRequest::multiplier(4))?;
+    /// assert!(art.sta.critical_delay_ns > 0.0);
+    ///
+    /// // The second compile of the same request is the identical Arc.
+    /// let again = engine.compile(&DesignRequest::multiplier(4))?;
+    /// assert!(std::sync::Arc::ptr_eq(&art, &again));
+    /// assert!(engine.cache_stats().hits >= 1);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn compile(&self, req: &DesignRequest) -> Result<Arc<DesignArtifact>> {
+        self.compile_traced(req).map(|(art, _)| art)
+    }
+
+    /// [`SynthEngine::compile`] plus *how* the artifact was obtained — a
+    /// memory hit, a disk-tier hit, a fresh synthesis, or a wait on a
+    /// coalesced in-flight compile. The server's wire responses surface
+    /// this as their `source` field.
+    pub fn compile_traced(
+        &self,
+        req: &DesignRequest,
+    ) -> Result<(Arc<DesignArtifact>, CompileSource)> {
         let canon = req.canonical();
         let fp = canon.fingerprint_of_canonical();
-        if let Some(hit) = self.cache.get(fp) {
-            return Ok(hit);
+        if let Some((hit, tier)) = self.cache.get_traced(fp) {
+            let src = match tier {
+                CacheTier::Memory => CompileSource::Memory,
+                CacheTier::Disk => CompileSource::Disk,
+            };
+            return Ok((hit, src));
         }
-        let artifact = self.build_artifact(&canon, fp)?;
-        Ok(self.cache.insert(fp, artifact))
+        // Miss: either join the in-flight compile for this fingerprint or
+        // become its leader.
+        let flight = {
+            let mut map = self.inflight.lock().unwrap();
+            if let Some(f) = map.get(&fp.0) {
+                let f = f.clone();
+                drop(map);
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                // This caller triggered no fresh synthesis — reclassify
+                // the miss the lookup just recorded.
+                self.cache.forgive_miss();
+                return match f.wait() {
+                    Ok(art) => Ok((art, CompileSource::Coalesced)),
+                    Err(e) => Err(anyhow!("coalesced compile failed: {e}")),
+                };
+            }
+            let f = Arc::new(Flight::default());
+            map.insert(fp.0, f.clone());
+            f
+        };
+        // Leader path. The guard publishes an error to any waiters even if
+        // synthesis panics (compile_batch catches the panic; without the
+        // guard the waiters would block forever).
+        struct Lead<'a> {
+            eng: &'a SynthEngine,
+            fp: Fingerprint,
+            flight: Arc<Flight>,
+            done: bool,
+        }
+        impl Lead<'_> {
+            fn finish(&mut self, outcome: std::result::Result<Arc<DesignArtifact>, String>) {
+                if self.done {
+                    return;
+                }
+                self.done = true;
+                self.flight.publish(outcome);
+                self.eng.inflight.lock().unwrap().remove(&self.fp.0);
+            }
+        }
+        impl Drop for Lead<'_> {
+            fn drop(&mut self) {
+                self.finish(Err("synthesis panicked".to_string()));
+            }
+        }
+        let mut lead = Lead { eng: self, fp, flight, done: false };
+        // A previous leader may have finished between our miss and our
+        // registration; re-check (without skewing the counters) before
+        // paying for a synthesis. Reporting that case as a memory hit
+        // keeps the invariant that exactly one caller per synthesis ever
+        // observes `Compiled`.
+        if let Some(hit) = self.cache.peek(fp) {
+            self.cache.miss_to_hit();
+            lead.finish(Ok(hit.clone()));
+            return Ok((hit, CompileSource::Memory));
+        }
+        match self.build_artifact(&canon, fp).map(|art| self.cache.insert(fp, art)) {
+            Ok(art) => {
+                lead.finish(Ok(art.clone()));
+                Ok((art, CompileSource::Compiled))
+            }
+            Err(e) => {
+                lead.finish(Err(format!("{e:#}")));
+                Err(e)
+            }
+        }
     }
 
     /// Compile many requests on the coordinator thread pool
     /// ([`pool::par_map_scoped`]), preserving input order — `result[i]`
     /// always corresponds to `reqs[i]`. Duplicate requests collapse onto
-    /// one cache entry (identical `Arc`s in the output); there is no
-    /// in-flight dedup, so duplicates that start *concurrently* on
-    /// separate workers may each synthesize before the first insert wins.
-    /// A synthesis panic is contained to its own row as an `Err` rather
-    /// than tearing down the whole batch.
+    /// one cache entry (identical `Arc`s in the output), and duplicates
+    /// that start *concurrently* on separate workers are coalesced onto
+    /// one synthesis. A synthesis panic is contained to its own row as an
+    /// `Err` rather than tearing down the whole batch.
+    ///
+    /// ```
+    /// use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+    ///
+    /// let engine = SynthEngine::new(EngineConfig::default());
+    /// let reqs: Vec<_> = [3usize, 4, 4].iter().map(|&n| DesignRequest::multiplier(n)).collect();
+    /// let arts = engine.compile_batch(&reqs);
+    /// assert_eq!(arts.len(), 3);
+    /// // Rows 1 and 2 are the same request, therefore the same artifact.
+    /// let (a, b) = (arts[1].as_ref().unwrap(), arts[2].as_ref().unwrap());
+    /// assert!(std::sync::Arc::ptr_eq(a, b));
+    /// ```
     pub fn compile_batch(&self, reqs: &[DesignRequest]) -> Vec<Result<Arc<DesignArtifact>>> {
-        let one = |req: &DesignRequest| -> Result<Arc<DesignArtifact>> {
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.compile(req)))
+        self.compile_batch_traced(reqs).into_iter().map(|r| r.map(|(a, _)| a)).collect()
+    }
+
+    /// [`SynthEngine::compile_batch`] with per-row [`CompileSource`]s (the
+    /// server's `batch` command reports them per result row).
+    pub fn compile_batch_traced(
+        &self,
+        reqs: &[DesignRequest],
+    ) -> Vec<Result<(Arc<DesignArtifact>, CompileSource)>> {
+        let one = |req: &DesignRequest| -> Result<(Arc<DesignArtifact>, CompileSource)> {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.compile_traced(req)))
                 .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))
         };
         if reqs.len() <= 1 || self.cfg.workers <= 1 {
@@ -398,6 +589,56 @@ mod tests {
         assert!(t.full_passes >= 2, "{t:?}");
         assert!(t.nodes_total >= art.netlist().len() as u64, "{t:?}");
         assert!(t.retime_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn concurrent_identical_compiles_coalesce() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let req = DesignRequest::multiplier(7);
+        let n = 8;
+        let barrier = std::sync::Barrier::new(n);
+        let sources = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    barrier.wait();
+                    let (_, src) = eng.compile_traced(&req).unwrap();
+                    sources.lock().unwrap().push(src);
+                });
+            }
+        });
+        let sources = sources.into_inner().unwrap();
+        // Exactly one synthesis; everyone else waited (or, if they raced
+        // in after the leader finished, hit the cache).
+        let compiled =
+            sources.iter().filter(|s| **s == CompileSource::Compiled).count();
+        assert_eq!(compiled, 1, "{sources:?}");
+        let s = eng.cache_stats();
+        let coalesced =
+            sources.iter().filter(|s| **s == CompileSource::Coalesced).count() as u64;
+        assert_eq!(s.coalesced, coalesced, "{sources:?}");
+        // Coalesced and converted lookups are reclassified: only the one
+        // real synthesis remains a miss.
+        assert_eq!(s.misses, 1, "{s:?} {sources:?}");
+    }
+
+    #[test]
+    fn failed_compile_propagates_to_coalesced_waiters() {
+        // Width 0 fails deterministically; N concurrent callers must all
+        // see an error (none may hang on the in-flight entry).
+        let eng = SynthEngine::new(EngineConfig::default());
+        let req = DesignRequest::multiplier(0);
+        let barrier = std::sync::Barrier::new(4);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    barrier.wait();
+                    assert!(eng.compile(&req).is_err());
+                });
+            }
+        });
+        // The in-flight table must be empty again (errors are not cached).
+        assert!(eng.inflight.lock().unwrap().is_empty());
     }
 
     #[test]

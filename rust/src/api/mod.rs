@@ -44,10 +44,13 @@
 
 mod cache;
 mod engine;
+pub mod persist;
 mod request;
 
-pub use cache::{CacheStats, DesignCache};
-pub use engine::{global as engine, ArtifactBody, DesignArtifact, EngineConfig, SynthEngine};
+pub use cache::{CacheStats, CacheTier, DesignCache};
+pub use engine::{
+    global as engine, ArtifactBody, CompileSource, DesignArtifact, EngineConfig, SynthEngine,
+};
 pub use request::{
     DesignRequest, Fingerprint, MacMode, MethodRequest, ModuleKind, ModuleRequest, MulRequest,
 };

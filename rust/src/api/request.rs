@@ -112,6 +112,20 @@ pub struct ModuleRequest {
 /// | `modules::fir_report` / `build_fir_stage` | [`DesignRequest::Module`] (`Fir`) |
 /// | `modules::systolic_report` / `build_pe` | [`DesignRequest::Module`] (`Systolic`) |
 /// | `coordinator::evaluate_point` | [`DesignRequest::Method`] |
+///
+/// Requests round-trip through JSON (the server's wire form, see
+/// `PROTOCOL.md`) with a stable content fingerprint:
+///
+/// ```
+/// use ufo_mac::api::DesignRequest;
+///
+/// let wire = r#"{"kind":"method","method":"ufo","n":8,"strategy":"tradeoff","mac":false}"#;
+/// let req = DesignRequest::parse(wire)?;
+/// let back = DesignRequest::parse(&req.to_json_string())?;
+/// assert_eq!(req.fingerprint(), back.fingerprint());
+/// assert_eq!(req.width(), 8);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 #[derive(Debug, Clone)]
 pub enum DesignRequest {
     /// Fully explicit multiplier/MAC specification.
@@ -479,9 +493,21 @@ impl DesignRequest {
                     .get("mac")
                     .and_then(|b| b.as_bool())
                     .ok_or_else(|| anyhow!("mac must be a bool"))?,
-                budget: BaselineBudget {
-                    rlmul_iters: usize_field(j, "rlmul_iters")?,
-                    seed: u64_str_field(j, "seed")?,
+                // The budget fields default when omitted (wire requests
+                // rarely spell them); serialization always emits them, so
+                // fingerprints are unaffected.
+                budget: {
+                    let d = BaselineBudget::default();
+                    BaselineBudget {
+                        rlmul_iters: match j.get("rlmul_iters") {
+                            None | Some(Json::Null) => d.rlmul_iters,
+                            Some(_) => usize_field(j, "rlmul_iters")?,
+                        },
+                        seed: match j.get("seed") {
+                            None | Some(Json::Null) => d.seed,
+                            Some(_) => u64_str_field(j, "seed")?,
+                        },
+                    }
                 },
             })),
             "fir" | "systolic" => Ok(DesignRequest::Module(ModuleRequest {
@@ -950,6 +976,26 @@ mod tests {
             }
             other => panic!("wrong form {other:?}"),
         }
+    }
+
+    #[test]
+    fn method_budget_fields_default_when_omitted() {
+        let wire = r#"{"kind":"method","method":"gomil","n":8,"strategy":"tradeoff","mac":false}"#;
+        let req = DesignRequest::parse(wire).unwrap();
+        match &req {
+            DesignRequest::Method(m) => assert_eq!(m.budget.rlmul_iters, BaselineBudget::default().rlmul_iters),
+            other => panic!("wrong form {other:?}"),
+        }
+        // Omitted budget == default budget, fingerprint-wise.
+        assert_eq!(
+            req.fingerprint(),
+            DesignRequest::method(Method::Gomil, 8, Strategy::TradeOff, false).fingerprint()
+        );
+        // Present-but-invalid values are still hard errors.
+        assert!(DesignRequest::parse(
+            r#"{"kind":"method","method":"gomil","n":8,"strategy":"tradeoff","mac":false,"seed":7}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //!   one borrowed closure against shared state until it returns. This is
 //!   the substrate for the parallel branch-and-bound search in
 //!   [`crate::ilp::branch_bound`], where workers pull subproblems from a
-//!   shared best-bound queue rather than from a pre-split job list.
+//!   shared best-bound queue rather than from a pre-split job list, and
+//!   for the compile service's request loop
+//!   ([`crate::server::Server::serve`]), where worker 0 reads
+//!   newline-delimited JSON and workers 1..=N answer commands from a
+//!   shared queue.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

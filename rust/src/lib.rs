@@ -63,6 +63,12 @@
 //! process-global engine — see the [`api`] module docs for the mapping
 //! from each legacy entry point to its request form.
 //!
+//! For long-lived use, the [`server`] module wraps an engine in a
+//! newline-delimited-JSON compile service (`ufo-mac serve`) whose cache
+//! persists across restarts when the engine is built with
+//! [`api::EngineConfig::cache_dir`] — see `PROTOCOL.md` for the wire
+//! format and the on-disk cache layout.
+//!
 //! See `ARCHITECTURE.md` at the repository root for the module-by-module
 //! map of the pipeline, including the incremental timing engine
 //! ([`sta::IncrementalSta`]) and the parallel ILP search
@@ -82,6 +88,7 @@ pub mod modules;
 pub mod multiplier;
 pub mod ppg;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod sta;
 pub mod synth;

@@ -20,9 +20,14 @@
 //!   verify    --width N [--mac]        Simulator + PJRT equivalence.
 //!   ablation  --width N                Per-ingredient ablation table.
 //!   request   --json '<request>'       Compile a serialized DesignRequest.
+//!   serve     [--transport tcp|stdio] [--addr 127.0.0.1:7878]
+//!             [--cache-dir DIR|none] [--workers N] [--verify N]
+//!             Long-lived compile service over newline-delimited JSON
+//!             (PROTOCOL.md); artifacts persist in the on-disk cache and
+//!             survive restarts.
 //!
-//! Unknown `--method` / `--strategy` values are hard errors listing the
-//! valid choices — no silent fallback.
+//! Unknown `--method` / `--strategy` / `--transport` values are hard
+//! errors listing the valid choices — no silent fallback.
 
 use ufo_mac::api::{engine, DesignRequest};
 use ufo_mac::baselines::Method;
@@ -305,6 +310,61 @@ fn cmd_request(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Strict numeric flag parse: a present-but-invalid value is a hard error
+/// naming the valid form (the `--method`/`--strategy` convention), never a
+/// silent fallback to the default.
+fn strict_usize(args: &Args, key: &str, default: usize) -> Result<usize> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --{key} '{v}' (valid: a non-negative integer)")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = strict_usize(
+        args,
+        "workers",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    )?;
+    let verify = strict_usize(args, "verify", 0)?;
+    // `--cache-dir none` opts out of persistence; any other value is the
+    // cache directory (created on demand). Default: the workspace cache.
+    let cache_dir = match args.get("cache-dir") {
+        None => Some(ufo_mac::runtime::default_cache_dir()),
+        Some("none") => None,
+        Some(dir) => Some(std::path::PathBuf::from(dir)),
+    };
+    let engine = std::sync::Arc::new(ufo_mac::api::SynthEngine::new(ufo_mac::api::EngineConfig {
+        verify_vectors: verify,
+        workers,
+        cache_dir: cache_dir.clone(),
+        ..Default::default()
+    }));
+    let server = ufo_mac::server::Server::new(engine);
+    match args.get("transport").unwrap_or("tcp") {
+        "tcp" => {
+            let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+            match &cache_dir {
+                Some(d) => println!("ufo-mac serve: persistent cache at {}", d.display()),
+                None => println!("ufo-mac serve: in-memory cache only (--cache-dir none)"),
+            }
+            server.serve_tcp(addr)
+        }
+        "stdio" => {
+            // Keep stdout pure NDJSON; banners go to stderr.
+            match &cache_dir {
+                Some(d) => eprintln!("ufo-mac serve: persistent cache at {}", d.display()),
+                None => eprintln!("ufo-mac serve: in-memory cache only (--cache-dir none)"),
+            }
+            let stdin = std::io::BufReader::new(std::io::stdin());
+            server.serve(stdin, std::io::stdout(), workers)
+        }
+        other => anyhow::bail!("unknown transport '{other}' (valid: stdio, tcp)"),
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -317,12 +377,16 @@ fn main() {
         "verify" => cmd_verify(&args),
         "ablation" => cmd_ablation(&args),
         "request" => cmd_request(&args),
+        "serve" => cmd_serve(&args),
         _ => {
             println!(
                 "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
-                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|request> [flags]\n\
+                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|request|serve> [flags]\n\
                  methods: ufo, gomil, rlmul, commercial; strategies: area, timing, tradeoff\n\
-                 see rust/src/main.rs header for flags"
+                 serve: --transport tcp|stdio (default tcp), --addr HOST:PORT,\n\
+                        --cache-dir DIR|none (default: workspace design_cache/),\n\
+                        --workers N, --verify N — wire format in PROTOCOL.md\n\
+                 see rust/src/main.rs header for all flags"
             );
             Ok(())
         }

@@ -356,6 +356,13 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Default persistent design-cache directory (workspace-relative; the
+/// `serve` subcommand's `--cache-dir` default — same convention as
+/// [`default_artifact_dir`]).
+pub fn default_cache_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("design_cache")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,398 @@
+//! Long-lived design-compilation service in front of a [`SynthEngine`].
+//!
+//! The server speaks newline-delimited JSON (`PROTOCOL.md` at the
+//! repository root is the normative wire description): each input line is
+//! one command (`compile`, `batch`, `sweep`, `stats`, `shutdown`), each
+//! output line one response envelope carrying the echoed request `id`.
+//! Commands are dispatched concurrently over
+//! [`crate::coordinator::pool::scoped_workers`], so a slow `sweep` does not
+//! block a `stats` probe; responses therefore arrive in *completion* order
+//! and clients correlate them by `id`.
+//!
+//! Three properties make the service cheap to hit repeatedly:
+//!
+//! - **content-addressed caching** — identical requests (any spelling, see
+//!   [`DesignRequest::canonical`]) resolve to one cache entry;
+//! - **in-flight coalescing** — N simultaneous identical compiles trigger
+//!   exactly one synthesis ([`SynthEngine::compile_traced`]);
+//! - **a persistent disk tier** — engines built with
+//!   [`EngineConfig::cache_dir`](crate::api::EngineConfig) write every
+//!   artifact through to checksummed entry files, so warm designs survive
+//!   restarts and a fresh process answers them from disk (`"source":
+//!   "disk"` in the response) without recompiling.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use ufo_mac::api::{EngineConfig, SynthEngine};
+//! use ufo_mac::server::Server;
+//!
+//! let server = Server::new(Arc::new(SynthEngine::new(EngineConfig::default())));
+//! let resp = server.handle_line(
+//!     r#"{"cmd":"compile","id":1,"request":{"kind":"method","method":"ufo","n":4,"strategy":"tradeoff","mac":false}}"#,
+//! );
+//! assert!(resp.contains(r#""ok":true"#) && resp.contains(r#""source":"compiled""#));
+//! ```
+
+mod protocol;
+
+pub use protocol::Command;
+
+use crate::api::{DesignRequest, SynthEngine};
+use crate::coordinator::{self, pool};
+use crate::sta::TimingStats;
+use crate::util::Json;
+use crate::Result;
+use anyhow::anyhow;
+use protocol::{artifact_summary, envelope_err, envelope_ok};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// The design-compilation server (see module docs).
+pub struct Server {
+    engine: Arc<SynthEngine>,
+    /// Requests admitted to the queue but not yet answered.
+    queue_depth: AtomicUsize,
+    /// Responses written over the server's lifetime.
+    served: AtomicU64,
+    /// Aggregate timing-evaluation work behind the artifacts this server
+    /// compiled or served (`compile`/`batch` commands).
+    timing: Mutex<TimingStats>,
+}
+
+impl Server {
+    /// Wrap an engine. The engine is shared — several servers (or a server
+    /// plus direct API callers) may compile through one engine and its
+    /// cache.
+    pub fn new(engine: Arc<SynthEngine>) -> Server {
+        Server {
+            engine,
+            queue_depth: AtomicUsize::new(0),
+            served: AtomicU64::new(0),
+            timing: Mutex::new(TimingStats::default()),
+        }
+    }
+
+    /// The engine this server compiles through.
+    pub fn engine(&self) -> &Arc<SynthEngine> {
+        &self.engine
+    }
+
+    /// Process one request line and return the response line (no trailing
+    /// newline). This is the whole protocol for one command; the loops in
+    /// [`Server::serve`]/[`Server::serve_tcp`] are plumbing around it.
+    pub fn handle_line(&self, line: &str) -> String {
+        self.respond(line).0
+    }
+
+    /// Handle one line; the flag reports whether the command asks the
+    /// serving loop to stop (`shutdown`).
+    fn respond(&self, line: &str) -> (String, bool) {
+        let (id, cmd) = protocol::parse_line(line);
+        let cmd = match cmd {
+            Ok(cmd) => cmd,
+            Err(e) => return (envelope_err(&id, &format!("{e:#}")).render(), false),
+        };
+        let shutdown = matches!(cmd, Command::Shutdown);
+        let result = self.dispatch(cmd);
+        let envelope = match result {
+            Ok(result) => envelope_ok(&id, result),
+            Err(e) => envelope_err(&id, &format!("{e:#}")),
+        };
+        (envelope.render(), shutdown)
+    }
+
+    fn dispatch(&self, cmd: Command) -> Result<Json> {
+        match cmd {
+            Command::Compile(req) => {
+                // Contain synthesis panics to this command (as `batch`
+                // does per row): one poison request must produce an error
+                // envelope, not tear down the serving loop.
+                let (art, source) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || self.engine.compile_traced(&req),
+                ))
+                .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))?;
+                self.timing.lock().unwrap().merge(&art.timing);
+                Ok(artifact_summary(&art, source))
+            }
+            Command::Batch(reqs) => {
+                let rows = self.engine.compile_batch_traced(&reqs);
+                let mut out = Vec::with_capacity(rows.len());
+                for row in rows {
+                    out.push(match row {
+                        Ok((art, source)) => {
+                            self.timing.lock().unwrap().merge(&art.timing);
+                            Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("result", artifact_summary(&art, source)),
+                            ])
+                        }
+                        Err(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::str(format!("{e:#}"))),
+                        ]),
+                    });
+                }
+                Ok(Json::obj(vec![
+                    ("count", Json::num(out.len() as f64)),
+                    ("results", Json::Arr(out)),
+                ]))
+            }
+            Command::Sweep(cfg) => {
+                let points = coordinator::run_sweep_with(&self.engine, &cfg);
+                Ok(Json::obj(vec![
+                    ("count", Json::num(points.len() as f64)),
+                    ("points", coordinator::points_json(&points)),
+                ]))
+            }
+            Command::Stats => Ok(self.stats_json()),
+            Command::Shutdown => Ok(Json::str("shutting down")),
+        }
+    }
+
+    /// The `stats` response body.
+    fn stats_json(&self) -> Json {
+        let s = self.engine.cache_stats();
+        let t = *self.timing.lock().unwrap();
+        Json::obj(vec![
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(s.hits as f64)),
+                    ("disk_hits", Json::num(s.disk_hits as f64)),
+                    ("misses", Json::num(s.misses as f64)),
+                    ("coalesced", Json::num(s.coalesced as f64)),
+                    ("entries", Json::num(s.entries as f64)),
+                    ("hit_rate", Json::num(s.hit_rate())),
+                ]),
+            ),
+            (
+                "timing",
+                Json::obj(vec![
+                    ("full_passes", Json::num(t.full_passes as f64)),
+                    ("incremental_passes", Json::num(t.incremental_passes as f64)),
+                    ("nodes_retimed", Json::num(t.nodes_retimed as f64)),
+                    ("nodes_total", Json::num(t.nodes_total as f64)),
+                    ("retime_fraction", Json::num(t.retime_fraction())),
+                ]),
+            ),
+            ("queue_depth", Json::num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            ("served", Json::num(self.served.load(Ordering::Relaxed) as f64)),
+            ("workers", Json::num(self.engine.config().workers as f64)),
+        ])
+    }
+
+    /// Serve newline-delimited JSON from `reader` to `writer` with
+    /// `workers` concurrent command handlers (plus one reader thread), all
+    /// on [`pool::scoped_workers`]. Returns when the input reaches EOF or
+    /// the stream errors. After a `shutdown` command has been answered the
+    /// queue is drained and the loop stops at the reader's *next* wakeup —
+    /// immediate for transports with a read timeout (the TCP listener sets
+    /// one), at the next line/EOF for a plain blocking reader such as
+    /// stdin. Piped stdio clients therefore need no explicit `shutdown`:
+    /// closing the pipe is enough.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use ufo_mac::api::{EngineConfig, SynthEngine};
+    /// use ufo_mac::server::Server;
+    ///
+    /// let server = Server::new(Arc::new(SynthEngine::new(EngineConfig::default())));
+    /// let input: &[u8] = b"{\"cmd\":\"stats\",\"id\":1}\n";
+    /// let mut output = Vec::new();
+    /// server.serve(input, &mut output, 2)?;
+    /// assert!(String::from_utf8(output)?.contains(r#""ok":true"#));
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn serve<R, W>(&self, reader: R, writer: W, workers: usize) -> Result<()>
+    where
+        R: BufRead + Send,
+        W: Write + Send,
+    {
+        let workers = workers.max(1);
+        let stop = AtomicBool::new(false);
+        let closed = AtomicBool::new(false);
+        let queue: Mutex<VecDeque<String>> = Mutex::new(VecDeque::new());
+        let ready = Condvar::new();
+        let writer = Mutex::new(writer);
+        let reader_cell = Mutex::new(Some(reader));
+        // Worker 0 is the reader; workers 1..=N handle commands.
+        pool::scoped_workers(workers + 1, |w| {
+            if w == 0 {
+                let mut reader = reader_cell.lock().unwrap().take().expect("one reader");
+                let mut buf = String::new();
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match reader.read_line(&mut buf) {
+                        Ok(0) => break, // EOF
+                        Ok(_) => {
+                            let line = buf.trim();
+                            if !line.is_empty() {
+                                self.queue_depth.fetch_add(1, Ordering::Relaxed);
+                                queue.lock().unwrap().push_back(line.to_string());
+                                ready.notify_one();
+                            }
+                            buf.clear();
+                        }
+                        // Read timeouts (the TCP transport polls so a
+                        // shutdown can close the connection) keep any
+                        // partial line in `buf` and try again.
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut
+                                    | std::io::ErrorKind::Interrupted
+                            ) => {}
+                        Err(_) => break,
+                    }
+                }
+                closed.store(true, Ordering::Relaxed);
+                ready.notify_all();
+            } else {
+                loop {
+                    let line = {
+                        let mut q = queue.lock().unwrap();
+                        loop {
+                            if let Some(line) = q.pop_front() {
+                                break Some(line);
+                            }
+                            if closed.load(Ordering::Relaxed) || stop.load(Ordering::Relaxed) {
+                                break None;
+                            }
+                            q = ready.wait(q).unwrap();
+                        }
+                    };
+                    let Some(line) = line else { break };
+                    let (resp, shutdown) = self.respond(&line);
+                    {
+                        let mut w = writer.lock().unwrap();
+                        let _ = writeln!(w, "{resp}");
+                        let _ = w.flush();
+                    }
+                    self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    self.served.fetch_add(1, Ordering::Relaxed);
+                    if shutdown {
+                        stop.store(true, Ordering::Relaxed);
+                        ready.notify_all();
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Accept TCP connections forever, serving each connection with
+    /// [`Server::serve`] on its own thread (connections are concurrent and
+    /// share the engine's cache). A `shutdown` command ends its own
+    /// connection; the listener keeps accepting.
+    pub fn serve_listener(&self, listener: TcpListener) -> Result<()> {
+        std::thread::scope(|s| {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { continue };
+                s.spawn(move || {
+                    // Poll reads so a served `shutdown` actually closes the
+                    // connection instead of blocking on the next line.
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                    let Ok(rd) = stream.try_clone() else { return };
+                    let workers = self.engine.config().workers;
+                    let _ = self.serve(BufReader::new(rd), stream, workers);
+                });
+            }
+        });
+        Ok(())
+    }
+
+    /// Bind `addr` and [`Server::serve_listener`] on it. Prints one
+    /// "listening" line to stdout and then runs until the process is
+    /// killed.
+    ///
+    /// ```no_run
+    /// use std::sync::Arc;
+    /// use ufo_mac::api::{EngineConfig, SynthEngine};
+    /// use ufo_mac::server::Server;
+    ///
+    /// let engine = Arc::new(SynthEngine::new(EngineConfig {
+    ///     cache_dir: Some(ufo_mac::runtime::default_cache_dir()),
+    ///     ..EngineConfig::default()
+    /// }));
+    /// Server::new(engine).serve_tcp("127.0.0.1:7878")?;
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn serve_tcp(&self, addr: &str) -> Result<()> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow!("cannot bind '{addr}': {e}"))?;
+        let local = listener.local_addr()?;
+        println!("ufo-mac serve: listening on {local} (newline-delimited JSON, see PROTOCOL.md)");
+        self.serve_listener(listener)
+    }
+}
+
+/// Convenience used by tests and examples: render one `compile` request
+/// line (NDJSON) for `req` with the given `id`.
+pub fn compile_line(id: u64, req: &DesignRequest) -> String {
+    Json::obj(vec![
+        ("cmd", Json::str("compile")),
+        ("id", Json::num(id as f64)),
+        ("request", req.to_json()),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EngineConfig;
+
+    fn server() -> Server {
+        Server::new(Arc::new(SynthEngine::new(EngineConfig::default())))
+    }
+
+    #[test]
+    fn unknown_cmd_lists_valid_values() {
+        let resp = server().handle_line(r#"{"cmd":"warp","id":9}"#);
+        assert!(resp.contains(r#""ok":false"#), "{resp}");
+        assert!(
+            resp.contains("valid: batch, compile, shutdown, stats, sweep"),
+            "{resp}"
+        );
+        assert!(resp.contains(r#""id":9"#), "{resp}");
+    }
+
+    #[test]
+    fn malformed_line_is_an_error_envelope() {
+        let resp = server().handle_line("not json at all");
+        assert!(resp.contains(r#""ok":false"#), "{resp}");
+        assert!(resp.contains(r#""id":null"#), "{resp}");
+    }
+
+    #[test]
+    fn compile_then_hit_then_stats() {
+        let srv = server();
+        let req = DesignRequest::multiplier(4);
+        let first = srv.handle_line(&compile_line(1, &req));
+        assert!(first.contains(r#""source":"compiled""#), "{first}");
+        let second = srv.handle_line(&compile_line(2, &req));
+        assert!(second.contains(r#""source":"memory""#), "{second}");
+        let stats = srv.handle_line(r#"{"cmd":"stats","id":3}"#);
+        let doc = Json::parse(&stats).unwrap();
+        let cache = doc.get("result").unwrap().get("cache").unwrap();
+        assert!(cache.get("hits").unwrap().as_f64().unwrap() >= 1.0, "{stats}");
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_axis_values_strictly() {
+        let srv = server();
+        let resp = srv.handle_line(r#"{"cmd":"sweep","id":1,"methods":["alien"]}"#);
+        assert!(resp.contains("valid: ufo, gomil, rlmul, commercial"), "{resp}");
+        let resp = srv.handle_line(r#"{"cmd":"sweep","id":1,"strategies":["fast"]}"#);
+        assert!(resp.contains("valid: area, timing, tradeoff"), "{resp}");
+        let resp = srv.handle_line(r#"{"cmd":"sweep","id":1,"signedness":["sorta"]}"#);
+        assert!(resp.contains("valid: signed, unsigned"), "{resp}");
+    }
+}

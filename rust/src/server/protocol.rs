@@ -1,0 +1,170 @@
+//! Wire-level types of the design-compilation protocol: command parsing
+//! and response construction. `PROTOCOL.md` at the repository root is the
+//! normative description; every JSON example there is replayed verbatim by
+//! `rust/tests/server.rs`.
+
+use crate::api::{persist, CompileSource, DesignArtifact, DesignRequest};
+use crate::coordinator::SweepConfig;
+use crate::ppg::Signedness;
+use crate::util::Json;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// One parsed wire command.
+#[derive(Debug)]
+pub enum Command {
+    /// Compile a single [`DesignRequest`].
+    Compile(DesignRequest),
+    /// Compile many requests on the engine's thread pool.
+    Batch(Vec<DesignRequest>),
+    /// Run a (method × width × strategy × signedness) DSE sweep through
+    /// the server's engine and cache.
+    Sweep(Box<SweepConfig>),
+    /// Report cache / timing / queue statistics.
+    Stats,
+    /// Stop serving this connection after responding.
+    Shutdown,
+}
+
+/// Parse one request line: returns the echoed `id` (JSON `null` when the
+/// line carries none or cannot be parsed) and the command or a protocol
+/// error.
+pub fn parse_line(line: &str) -> (Json, Result<Command>) {
+    let doc = match Json::parse(line) {
+        Ok(doc) => doc,
+        Err(e) => return (Json::Null, Err(anyhow!("request is not valid JSON: {e}"))),
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    (id, parse_command(&doc))
+}
+
+fn parse_command(doc: &Json) -> Result<Command> {
+    let cmd = doc
+        .get("cmd")
+        .and_then(|c| c.as_str())
+        .ok_or_else(|| anyhow!("missing or non-string field 'cmd'"))?;
+    match cmd {
+        "compile" => {
+            let req = doc
+                .get("request")
+                .ok_or_else(|| anyhow!("compile: missing field 'request'"))?;
+            Ok(Command::Compile(DesignRequest::from_json(req)?))
+        }
+        "batch" => {
+            let rows = doc
+                .get("requests")
+                .and_then(|r| r.as_arr())
+                .ok_or_else(|| anyhow!("batch: field 'requests' must be an array"))?;
+            if rows.is_empty() {
+                bail!("batch: 'requests' must not be empty");
+            }
+            rows.iter().map(DesignRequest::from_json).collect::<Result<Vec<_>>>().map(Command::Batch)
+        }
+        "sweep" => Ok(Command::Sweep(Box::new(sweep_config(doc)?))),
+        "stats" => Ok(Command::Stats),
+        "shutdown" => Ok(Command::Shutdown),
+        other => bail!("unknown cmd '{other}' (valid: batch, compile, shutdown, stats, sweep)"),
+    }
+}
+
+/// Build a [`SweepConfig`] from the optional axis fields of a `sweep`
+/// command (defaults from [`SweepConfig::default`] for omitted axes).
+/// Method/strategy/signedness names use the same strict parsers as the CLI
+/// flags — unknown values are errors listing the valid choices.
+fn sweep_config(doc: &Json) -> Result<SweepConfig> {
+    let mut cfg = SweepConfig::default();
+    if let Some(ws) = doc.get("widths") {
+        let ws = ws.as_arr().ok_or_else(|| anyhow!("sweep: 'widths' must be an array"))?;
+        cfg.widths = ws
+            .iter()
+            .map(|w| match w.as_f64() {
+                Some(x) if x.fract() == 0.0 && (1.0..=128.0).contains(&x) => Ok(x as usize),
+                _ => bail!("sweep: widths must be integers in 1..=128"),
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(ms) = doc.get("methods") {
+        let ms = ms.as_arr().ok_or_else(|| anyhow!("sweep: 'methods' must be an array"))?;
+        cfg.methods = ms
+            .iter()
+            .map(|m| {
+                m.as_str()
+                    .ok_or_else(|| anyhow!("sweep: methods must be strings"))?
+                    .parse()
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(ss) = doc.get("strategies") {
+        let ss = ss.as_arr().ok_or_else(|| anyhow!("sweep: 'strategies' must be an array"))?;
+        cfg.strategies = ss
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .ok_or_else(|| anyhow!("sweep: strategies must be strings"))?
+                    .parse()
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(sg) = doc.get("signedness") {
+        let sg = sg.as_arr().ok_or_else(|| anyhow!("sweep: 'signedness' must be an array"))?;
+        cfg.signedness = sg
+            .iter()
+            .map(|s| match s.as_str() {
+                Some("unsigned") => Ok(Signedness::Unsigned),
+                Some("signed") => Ok(Signedness::Signed),
+                _ => bail!("sweep: unknown signedness (valid: signed, unsigned)"),
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(mac) = doc.get("mac") {
+        cfg.mac = mac.as_bool().ok_or_else(|| anyhow!("sweep: 'mac' must be a bool"))?;
+    }
+    Ok(cfg)
+}
+
+// -------------------------------------------------------------------
+// Responses.
+// -------------------------------------------------------------------
+
+/// Success envelope: `{"id":…,"ok":true,"result":…}`.
+pub fn envelope_ok(id: &Json, result: Json) -> Json {
+    Json::obj(vec![("id", id.clone()), ("ok", Json::Bool(true)), ("result", result)])
+}
+
+/// Error envelope: `{"error":…,"id":…,"ok":false}`.
+pub fn envelope_err(id: &Json, error: &str) -> Json {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(error)),
+    ])
+}
+
+/// Compile-result summary: fingerprint, which tier/path produced the
+/// artifact, the canonical request, the STA headline numbers, the clocked
+/// module report when the request was a module, and the verification
+/// flags.
+pub fn artifact_summary(art: &DesignArtifact, source: CompileSource) -> Json {
+    let sta = Json::obj(vec![
+        ("critical_delay_ns", Json::num(art.sta.critical_delay_ns)),
+        ("area_um2", Json::num(art.sta.area_um2)),
+        ("power_mw", Json::num(art.sta.power_mw)),
+        ("num_gates", Json::num(art.sta.num_gates as f64)),
+        ("depth", Json::num(art.sta.depth as f64)),
+    ]);
+    Json::obj(vec![
+        ("fingerprint", Json::str(art.fingerprint.to_string())),
+        ("source", Json::str(source.key())),
+        ("canonical", art.request.to_json()),
+        ("sta", sta),
+        (
+            "module",
+            match art.module_report() {
+                None => Json::Null,
+                Some(r) => persist::report_to_json(r),
+            },
+        ),
+        ("verified", persist::opt_bool(art.verified)),
+        ("pjrt_verified", persist::opt_bool(art.pjrt_verified)),
+    ])
+}

@@ -243,6 +243,15 @@ impl Json {
             _ => None,
         }
     }
+    /// Object payload (sorted key map), if this is an object — the
+    /// structural accessor the wire-protocol tests use to compare response
+    /// envelopes key-by-key.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(map) => Some(map),
+            _ => None,
+        }
+    }
     /// Object field access (`None` for missing key or non-object).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -622,6 +631,15 @@ mod tests {
         assert_eq!(back.get("name").unwrap().as_str().unwrap(), "a\"b\\c\nμ");
         assert_eq!(back.get("neg").unwrap().as_f64().unwrap(), -3.25e-2);
         assert_eq!(back.get("xs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn json_as_obj_accessor() {
+        let j = Json::obj(vec![("a", Json::num(1.0)), ("b", Json::Null)]);
+        let map = j.as_obj().unwrap();
+        assert_eq!(map.keys().collect::<Vec<_>>(), ["a", "b"]);
+        assert!(Json::Null.as_obj().is_none());
+        assert!(Json::arr(vec![]).as_obj().is_none());
     }
 
     #[test]

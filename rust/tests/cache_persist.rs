@@ -1,0 +1,154 @@
+//! Integration tests for the persistent design-cache tier: artifacts
+//! survive an engine drop/recreate, corrupted or truncated entries fall
+//! back to recompute (and are rewritten), a format-version bump
+//! invalidates cleanly, and concurrent writers never interleave entries.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use ufo_mac::api::{persist, CompileSource, DesignRequest, EngineConfig, SynthEngine};
+
+/// Unique scratch directory per test (no tempfile crate in the image).
+fn scratch(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "ufo_cache_persist_{tag}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn engine_at(dir: &PathBuf) -> SynthEngine {
+    SynthEngine::new(EngineConfig { cache_dir: Some(dir.clone()), ..EngineConfig::default() })
+}
+
+#[test]
+fn roundtrip_across_engine_drop_and_recreate() {
+    let dir = scratch("roundtrip");
+    let req = DesignRequest::multiplier(6);
+    let (gates, fp) = {
+        let first = engine_at(&dir);
+        let (art, src) = first.compile_traced(&req).unwrap();
+        assert_eq!(src, CompileSource::Compiled);
+        (art.sta.num_gates, art.fingerprint)
+    }; // engine dropped — only the disk entry survives
+    let second = engine_at(&dir);
+    let (art, src) = second.compile_traced(&req).unwrap();
+    assert_eq!(src, CompileSource::Disk, "fresh engine must hit the disk tier");
+    assert_eq!(art.fingerprint, fp);
+    assert_eq!(art.sta.num_gates, gates);
+    let s = second.cache_stats();
+    assert_eq!((s.hits, s.disk_hits, s.misses), (0, 1, 0), "{s:?}");
+    // The served design is fully functional, not just metadata.
+    let design = art.design().expect("multiplier artifact");
+    assert!(ufo_mac::equiv::check_multiplier(design).unwrap().passed);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn module_artifacts_roundtrip_through_disk() {
+    use ufo_mac::baselines::Method;
+    use ufo_mac::multiplier::Strategy;
+    let dir = scratch("module");
+    let fir = DesignRequest::fir(Method::UfoMac, 4, Strategy::TradeOff, 1e9);
+    let sys = DesignRequest::systolic(Method::UfoMac, 4, Strategy::TradeOff, 1e9);
+    let wns = {
+        let eng = engine_at(&dir);
+        eng.compile(&sys).unwrap();
+        eng.compile(&fir).unwrap().module_report().unwrap().wns_ns
+    };
+    let eng = engine_at(&dir);
+    let (art, src) = eng.compile_traced(&fir).unwrap();
+    assert_eq!(src, CompileSource::Disk);
+    assert_eq!(art.module_report().unwrap().wns_ns, wns);
+    let (art, src) = eng.compile_traced(&sys).unwrap();
+    assert_eq!(src, CompileSource::Disk);
+    assert!(art.design().is_some(), "systolic PE artifact carries its design");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_and_truncated_entries_recompute_and_rewrite() {
+    let dir = scratch("corrupt");
+    let req = DesignRequest::multiplier(5);
+    let fp = {
+        let eng = engine_at(&dir);
+        eng.compile(&req).unwrap().fingerprint
+    };
+    let path = persist::entry_path(&dir, fp);
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // Truncated entry (torn write simulation): recompute, not a panic.
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    let eng = engine_at(&dir);
+    let (_, src) = eng.compile_traced(&req).unwrap();
+    assert_eq!(src, CompileSource::Compiled, "truncated entry must recompute");
+    // ...and the recompute rewrote a valid entry.
+    assert!(persist::read_entry(&dir, fp).is_ok(), "entry must be rewritten");
+
+    // Bit-rot inside the payload: caught by the checksum.
+    let rewritten = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, rewritten.replacen("\"ct_stages\":", "\"ct_stages \":", 1)).unwrap();
+    let eng = engine_at(&dir);
+    let (_, src) = eng.compile_traced(&req).unwrap();
+    assert_eq!(src, CompileSource::Compiled, "corrupted entry must recompute");
+    assert!(persist::read_entry(&dir, fp).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn format_version_bump_invalidates_cleanly() {
+    let dir = scratch("version");
+    let req = DesignRequest::multiplier(4);
+    let fp = {
+        let eng = engine_at(&dir);
+        eng.compile(&req).unwrap().fingerprint
+    };
+    let path = persist::entry_path(&dir, fp);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let needle = format!("\"version\":{}", persist::CACHE_FORMAT_VERSION);
+    assert!(text.contains(&needle), "{text:.120}");
+    std::fs::write(&path, text.replacen(&needle, "\"version\":999999", 1)).unwrap();
+    // A stale-version entry is a miss (future-proofing both directions:
+    // an old binary reading a new cache, and vice versa).
+    assert!(persist::read_entry(&dir, fp).is_err());
+    let eng = engine_at(&dir);
+    let (_, src) = eng.compile_traced(&req).unwrap();
+    assert_eq!(src, CompileSource::Compiled);
+    // The recompute wrote the current version back.
+    assert!(std::fs::read_to_string(&path).unwrap().contains(&needle));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_writers_do_not_interleave_entries() {
+    let dir = scratch("writers");
+    // Eight engines (eight independent caches, like eight processes)
+    // write the same fingerprints into one directory at once.
+    let reqs: Vec<DesignRequest> = (4..=6).map(DesignRequest::multiplier).collect();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                let eng = engine_at(&dir);
+                for r in &reqs {
+                    eng.compile(r).unwrap();
+                }
+            });
+        }
+    });
+    // Every entry parses and checksum-validates — no torn or interleaved
+    // writes — and no temp files are left behind.
+    let eng = engine_at(&dir);
+    for r in &reqs {
+        let (art, src) = eng.compile_traced(r).unwrap();
+        assert_eq!(src, CompileSource::Disk, "{r:?}");
+        assert!(persist::read_entry(&dir, art.fingerprint).is_ok());
+    }
+    for f in std::fs::read_dir(&dir).unwrap() {
+        let name = f.unwrap().file_name().to_string_lossy().to_string();
+        assert!(name.ends_with(".json"), "leftover temp file {name}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

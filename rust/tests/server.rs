@@ -1,0 +1,295 @@
+//! Server smoke tests: the in-process serve loop (compile → identical
+//! compile → stats), in-flight coalescing, the TCP transport, the
+//! cross-engine disk tier, and a verbatim replay of every wire example in
+//! `PROTOCOL.md`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::server::{compile_line, Server};
+use ufo_mac::util::Json;
+
+fn server() -> Server {
+    Server::new(Arc::new(SynthEngine::new(EngineConfig::default())))
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "ufo_server_{tag}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn result_str<'a>(doc: &'a Json, key: &str) -> Option<&'a str> {
+    doc.get("result").and_then(|r| r.get(key)).and_then(|s| s.as_str())
+}
+
+// ---------------------------------------------------------------------
+// The serve loop end-to-end: compile → identical compile → stats, single
+// worker so response order is deterministic.
+// ---------------------------------------------------------------------
+#[test]
+fn serve_loop_compile_hit_stats() {
+    let srv = server();
+    let req = DesignRequest::multiplier(6);
+    let input = format!(
+        "{}\n{}\n{}\n",
+        compile_line(1, &req),
+        compile_line(2, &req),
+        r#"{"cmd":"stats","id":3}"#
+    );
+    let mut out = Vec::new();
+    srv.serve(input.as_bytes(), &mut out, 1).unwrap();
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 3);
+    // One handler → FIFO responses.
+    assert_eq!(result_str(&lines[0], "source"), Some("compiled"));
+    assert_eq!(
+        result_str(&lines[1], "source"),
+        Some("memory"),
+        "the second identical request must be a cache hit"
+    );
+    let cache = lines[2].get("result").unwrap().get("cache").unwrap();
+    assert!(cache.get("hits").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(cache.get("misses").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(lines[2].get("result").unwrap().get("served").unwrap().as_f64().unwrap(), 2.0);
+}
+
+// ---------------------------------------------------------------------
+// Coalescing: N simultaneous identical requests, exactly one synthesis.
+// ---------------------------------------------------------------------
+#[test]
+fn simultaneous_identical_requests_coalesce_onto_one_compile() {
+    let srv = server();
+    let line = compile_line(1, &DesignRequest::multiplier(9));
+    let n = 8;
+    let barrier = Barrier::new(n);
+    let sources = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            s.spawn(|| {
+                barrier.wait();
+                let resp = Json::parse(&srv.handle_line(&line)).unwrap();
+                assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+                sources
+                    .lock()
+                    .unwrap()
+                    .push(result_str(&resp, "source").unwrap().to_string());
+            });
+        }
+    });
+    let sources = sources.into_inner().unwrap();
+    let compiled = sources.iter().filter(|s| *s == "compiled").count();
+    assert_eq!(compiled, 1, "exactly one synthesis: {sources:?}");
+    let stats = Json::parse(&srv.handle_line(r#"{"cmd":"stats","id":2}"#)).unwrap();
+    let cache = stats.get("result").unwrap().get("cache").unwrap();
+    let coalesced = sources.iter().filter(|s| *s == "coalesced").count() as f64;
+    assert_eq!(cache.get("coalesced").unwrap().as_f64().unwrap(), coalesced, "{sources:?}");
+    assert_eq!(cache.get("entries").unwrap().as_f64().unwrap(), 1.0);
+    // Only the one real synthesis counts as a miss; coalesced waiters are
+    // reclassified.
+    assert_eq!(cache.get("misses").unwrap().as_f64().unwrap(), 1.0, "{sources:?}");
+}
+
+// ---------------------------------------------------------------------
+// TCP transport: real sockets, shutdown closes the connection.
+// ---------------------------------------------------------------------
+#[test]
+fn tcp_round_trip_and_shutdown() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = Arc::new(server());
+    let accept = Arc::clone(&srv);
+    // The listener loop runs forever; leave it detached (the process ends
+    // with the test binary).
+    std::thread::spawn(move || {
+        let _ = accept.serve_listener(listener);
+    });
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(stream, "{}", compile_line(1, &DesignRequest::multiplier(4))).unwrap();
+    writeln!(stream, "{}", r#"{"cmd":"shutdown","id":2}"#).unwrap();
+    stream.flush().unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    let mut by_id = std::collections::HashMap::new();
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let doc = Json::parse(&line).unwrap();
+        let id = doc.get("id").unwrap().as_f64().unwrap() as u64;
+        by_id.insert(id, doc);
+        if by_id.len() == 2 {
+            break;
+        }
+    }
+    assert_eq!(result_str(&by_id[&1], "source"), Some("compiled"));
+    assert_eq!(by_id[&2].get("ok").unwrap().as_bool(), Some(true));
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: a design compiled by one server is served from the disk
+// cache by a *fresh* engine/server over the same directory — no
+// recompute, visible in the stats hit counters.
+// ---------------------------------------------------------------------
+#[test]
+fn fresh_server_serves_from_disk_without_recompute() {
+    let dir = scratch("disk");
+    let engine_at = || {
+        Arc::new(SynthEngine::new(EngineConfig {
+            cache_dir: Some(dir.clone()),
+            ..EngineConfig::default()
+        }))
+    };
+    let line = compile_line(1, &DesignRequest::multiplier(5));
+    {
+        let first = Server::new(engine_at());
+        let resp = Json::parse(&first.handle_line(&line)).unwrap();
+        assert_eq!(result_str(&resp, "source"), Some("compiled"));
+    } // first server and engine dropped
+    let second = Server::new(engine_at());
+    let resp = Json::parse(&second.handle_line(&line)).unwrap();
+    assert_eq!(result_str(&resp, "source"), Some("disk"), "{resp:?}");
+    let stats = Json::parse(&second.handle_line(r#"{"cmd":"stats","id":2}"#)).unwrap();
+    let cache = stats.get("result").unwrap().get("cache").unwrap();
+    assert_eq!(cache.get("disk_hits").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(cache.get("misses").unwrap().as_f64().unwrap(), 0.0, "no recompute");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Every documented wire example, replayed verbatim.
+// ---------------------------------------------------------------------
+
+fn obj_keys(j: &Json) -> Vec<String> {
+    j.as_obj().map(|m| m.keys().cloned().collect()).unwrap_or_default()
+}
+
+/// The disk-format example in PROTOCOL.md (the one fence tagged plain
+/// `json`) must match real entries: same envelope keys, same magic, same
+/// version.
+#[test]
+fn protocol_md_disk_entry_example_matches_real_entries() {
+    use ufo_mac::api::persist;
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../PROTOCOL.md");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut example = None;
+    let mut lines = text.lines();
+    while let Some(line) = lines.next() {
+        if line.trim() == "```json" {
+            let mut body = String::new();
+            for l in lines.by_ref() {
+                if l.trim() == "```" {
+                    break;
+                }
+                body.push_str(l);
+                body.push('\n');
+            }
+            assert!(example.is_none(), "PROTOCOL.md should have exactly one disk-format example");
+            example = Some(body);
+        }
+    }
+    let documented = Json::parse(&example.expect("disk-format example present")).unwrap();
+
+    let dir = scratch("entry_example");
+    let engine = SynthEngine::new(EngineConfig {
+        cache_dir: Some(dir.clone()),
+        ..EngineConfig::default()
+    });
+    let art = engine.compile(&DesignRequest::multiplier(4)).unwrap();
+    let entry = std::fs::read_to_string(persist::entry_path(&dir, art.fingerprint)).unwrap();
+    let actual = Json::parse(&entry).unwrap();
+
+    assert_eq!(obj_keys(&documented), obj_keys(&actual), "entry envelope keys");
+    assert_eq!(
+        actual.get("magic").unwrap().as_str(),
+        documented.get("magic").unwrap().as_str()
+    );
+    assert_eq!(
+        actual.get("version").unwrap().as_f64(),
+        documented.get("version").unwrap().as_f64()
+    );
+    // The documented checksum/fingerprint are illustrative but must have
+    // the real shape: 32 hex digits.
+    for key in ["checksum", "fingerprint"] {
+        for doc in [&documented, &actual] {
+            let s = doc.get(key).unwrap().as_str().unwrap();
+            assert_eq!(s.len(), 32, "{key} must be 32 hex digits, got '{s}'");
+            assert!(s.chars().all(|c| c.is_ascii_hexdigit()), "{key}: '{s}'");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn protocol_md_examples_replay() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../PROTOCOL.md");
+    let text = std::fs::read_to_string(&path).unwrap();
+    // Collect (request, documented response) fence pairs, in order.
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    let mut pending: Option<String> = None;
+    let mut lines = text.lines();
+    while let Some(line) = lines.next() {
+        let tag = line.trim();
+        if tag != "```json request" && tag != "```json response" {
+            continue;
+        }
+        let mut body = String::new();
+        for l in lines.by_ref() {
+            if l.trim() == "```" {
+                break;
+            }
+            body.push_str(l);
+            body.push('\n');
+        }
+        if tag == "```json request" {
+            assert!(pending.is_none(), "request block without a following response block");
+            pending = Some(body.trim().to_string());
+        } else {
+            let req = pending.take().expect("response block without a preceding request");
+            pairs.push((req, body));
+        }
+    }
+    assert!(pending.is_none(), "trailing request block without a response");
+    assert!(pairs.len() >= 9, "PROTOCOL.md should document ≥9 exchanges, found {}", pairs.len());
+
+    // One server replays the whole document in order, so the cache-state
+    // progression (compiled → memory) matches the narrative.
+    let srv = server();
+    for (req, documented) in &pairs {
+        assert_eq!(req.lines().count(), 1, "wire requests are single NDJSON lines:\n{req}");
+        let actual = Json::parse(&srv.handle_line(req))
+            .unwrap_or_else(|e| panic!("unparsable response for {req}: {e}"));
+        let documented = Json::parse(documented)
+            .unwrap_or_else(|e| panic!("unparsable documented response for {req}: {e}"));
+        assert_eq!(
+            documented.get("ok").and_then(|b| b.as_bool()),
+            actual.get("ok").and_then(|b| b.as_bool()),
+            "ok flag diverges for {req}: {actual:?}"
+        );
+        assert_eq!(
+            obj_keys(&documented),
+            obj_keys(&actual),
+            "envelope keys diverge for {req}"
+        );
+        let (doc_res, act_res) = (documented.get("result"), actual.get("result"));
+        if let (Some(d @ Json::Obj(_)), Some(a)) = (doc_res, act_res) {
+            assert_eq!(obj_keys(d), obj_keys(a), "result keys diverge for {req}");
+            // When the doc pins a cache source (compiled vs memory), the
+            // real server must reproduce it.
+            if let Some(ds) = d.get("source").and_then(|s| s.as_str()) {
+                assert_eq!(
+                    Some(ds),
+                    a.get("source").and_then(|s| s.as_str()),
+                    "source diverges for {req}"
+                );
+            }
+        }
+    }
+}
