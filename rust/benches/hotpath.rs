@@ -4,22 +4,34 @@
 //! bottleneck assignment dominates CT construction, and full design
 //! builds dominate the coordinator's jobs.
 //!
-//! Two comparative groups anchor the perf trajectory:
+//! Comparative groups anchor the perf trajectory:
 //!
 //! - **full vs incremental STA** on the repeated-optimization-move path
 //!   (one input arrival shifts per move, as CT/CPA optimization does);
 //! - **serial vs parallel branch & bound** on the §3.3 stage-assignment
-//!   ILP.
+//!   ILP;
+//! - **legacy enum IR vs flat SoA IR** (the PR-5 tentpole): a faithful
+//!   seed-layout netlist (one enum node + heap `Vec` fanin per gate) is
+//!   rebuilt in this harness and swept side-by-side with the flat IR on
+//!   identical 64×64 designs, so every run measures the before/after
+//!   delta — `sta_full_64x64` vs `sta_full_64x64_legacy_ir`,
+//!   `compiled_build_run_64x64` vs its `_legacy_ir` twin;
+//! - **serial vs parallel equivalence** at 32×32
+//!   (`equiv_sampled_32x32_parallel`, deterministic counterexamples).
 //!
-//! Results land in `BENCH_hotpath.json` via `Bench::finish`.
+//! Results land in `BENCH_hotpath.json` via `Bench::finish`; the CI
+//! bench-smoke gate (`ufo-mac bench-check`) compares them against
+//! `rust/benches/baseline_hotpath.json`.
 
 use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
 use ufo_mac::bench::Bench;
 use ufo_mac::cpa::{self, PrefixStructure};
+use ufo_mac::equiv::EquivOptions;
 use ufo_mac::ilp::assignment::bottleneck_assignment;
 use ufo_mac::ilp::SolveOptions;
+use ufo_mac::ir::{CellKind, CellLib, Netlist, Node, NodeId};
 use ufo_mac::multiplier::MultiplierSpec;
-use ufo_mac::sim::Simulator;
+use ufo_mac::sim::{CompiledNetlist, Simulator};
 use ufo_mac::sta::{IncrementalSta, Sta};
 use ufo_mac::util::Rng;
 
@@ -96,6 +108,91 @@ fn main() {
     bench.bench("equiv_sampled_1k_8bit", || {
         ufo_mac::equiv::check_multiplier_with(&d8, 1024).unwrap()
     });
+
+    // ---- Flat SoA IR: before/after on identical 64×64 designs ----
+    //
+    // `LegacyNetlist::of` rebuilds the seed storage layout (enum node +
+    // heap Vec fanin per gate) from the same design, so the `_legacy_ir`
+    // entries measure exactly what the flat IR replaced (EXPERIMENTS.md
+    // §Perf).
+
+    // Full 64×64 design construction through the uncached inner path
+    // (PPG → CT → CPA on the flat IR; the engine cache would reduce every
+    // sample after the first to a lookup).
+    bench.bench("netlist_build_64x64", || {
+        MultiplierSpec::new(64).build_with(&lib, &tm).unwrap().netlist.len()
+    });
+
+    let d64 = MultiplierSpec::new(64).build().unwrap();
+    println!(
+        "64-bit UFO multiplier: {} nodes / {} gates",
+        d64.netlist.len(),
+        d64.netlist.num_gates()
+    );
+    let legacy64 = LegacyNetlist::of(&d64.netlist);
+
+    // Whole-netlist STA report (arrivals + area + power fallback + gate
+    // count + depth). The flat engine serves gate count in O(1) and depth
+    // from the cached topology; the legacy engine pays the seed's three
+    // extra enum sweeps per report.
+    let full64 = bench.bench("sta_full_64x64", || sta.analyze(&d64.netlist));
+    let legacy_full64 =
+        bench.bench("sta_full_64x64_legacy_ir", || legacy64.analyze(&sta.lib));
+    bench.metric(
+        "sta_soa_speedup_64x64",
+        legacy_full64.mean_ns / full64.mean_ns.max(1.0),
+        "x",
+    );
+
+    // Simulator program construction + one 64-lane run. Flat IR:
+    // construction is a zero-copy borrow. Legacy IR: the seed's O(nodes)
+    // re-flattening walk (enum match + Vec deref per gate).
+    let mut rng64 = Rng::seed_from_u64(64);
+    let words64: Vec<u64> =
+        (0..d64.netlist.num_inputs()).map(|_| rng64.next_u64()).collect();
+    let mut cbuf: Vec<u64> = Vec::new();
+    let run64 = bench.bench("compiled_build_run_64x64", || {
+        let comp = CompiledNetlist::compile(&d64.netlist);
+        comp.run_into(&mut cbuf, &words64);
+        cbuf[d64.product[0].index()]
+    });
+    let legacy_run64 = bench.bench("compiled_build_run_64x64_legacy_ir", || {
+        let comp = legacy64.compile();
+        comp.run_into(&mut cbuf, &words64);
+        cbuf[d64.product[0].index()]
+    });
+    bench.metric(
+        "compiled_soa_speedup_64x64",
+        legacy_run64.mean_ns / run64.mean_ns.max(1.0),
+        "x",
+    );
+
+    // Sampled equivalence at 32×32: one worker vs all cores over the same
+    // deterministic batch plan (identical counterexamples by design).
+    let d32 = MultiplierSpec::new(32).build().unwrap();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+    let eq_budget = 1usize << 14;
+    let eq_ser = bench.bench("equiv_sampled_32x32_serial", || {
+        ufo_mac::equiv::check_multiplier_opts(
+            &d32,
+            &EquivOptions { budget: eq_budget, threads: 1 },
+        )
+        .unwrap()
+        .vectors
+    });
+    let eq_par = bench.bench("equiv_sampled_32x32_parallel", || {
+        ufo_mac::equiv::check_multiplier_opts(
+            &d32,
+            &EquivOptions { budget: eq_budget, threads },
+        )
+        .unwrap()
+        .vectors
+    });
+    bench.metric(
+        "equiv_parallel_speedup_32x32",
+        eq_ser.mean_ns / eq_par.mean_ns.max(1.0),
+        "x",
+    );
 
     // Unified-engine compile path: cold (fresh engine per call — pays the
     // full library/timing-model construction plus synthesis, the pre-API
@@ -195,4 +292,193 @@ fn main() {
     bench.metric("ilp_parallel_speedup", ser.mean_ns / par.mean_ns.max(1.0), "x");
 
     bench.finish().expect("write BENCH_hotpath.json");
+}
+
+// ---------------------------------------------------------------------
+// Seed-layout reference IR (the PR-5 "before"): one enum value per node
+// with a heap-allocated `Vec<NodeId>` fanin per gate, swept with the
+// seed's exact analysis loops. Rebuilt from a flat netlist so the
+// `_legacy_ir` benches run on identical designs.
+// ---------------------------------------------------------------------
+
+enum LegacyNode {
+    Input { arrival_ns: f64 },
+    Const(bool),
+    Gate { kind: CellKind, fanin: Vec<NodeId> },
+}
+
+struct LegacyNetlist {
+    nodes: Vec<LegacyNode>,
+    outputs: Vec<NodeId>,
+    output_load: f64,
+}
+
+struct LegacyCompiled {
+    ops: Vec<u8>,
+    fanin: Vec<[u32; 3]>,
+    n_inputs: usize,
+}
+
+impl LegacyNetlist {
+    fn of(nl: &Netlist) -> LegacyNetlist {
+        let nodes = nl
+            .iter()
+            .map(|n| match n {
+                Node::Input { arrival_ns, .. } => LegacyNode::Input { arrival_ns },
+                Node::Const(v) => LegacyNode::Const(v),
+                Node::Gate { kind, fanin } => {
+                    LegacyNode::Gate { kind, fanin: fanin.to_vec() }
+                }
+            })
+            .collect();
+        LegacyNetlist {
+            nodes,
+            outputs: nl.outputs().map(|(_, id)| id).collect(),
+            output_load: CellLib::nangate45().output_load,
+        }
+    }
+
+    fn loads(&self, lib: &CellLib) -> Vec<f64> {
+        let mut load = vec![0.0f64; self.nodes.len()];
+        for n in &self.nodes {
+            if let LegacyNode::Gate { kind, fanin } = n {
+                let cin = lib.params(*kind).input_cap;
+                for f in fanin {
+                    load[f.index()] += cin;
+                }
+            }
+        }
+        for id in &self.outputs {
+            load[id.index()] += self.output_load;
+        }
+        load
+    }
+
+    fn arrivals(&self, lib: &CellLib) -> Vec<f64> {
+        let loads = self.loads(lib);
+        let mut at = vec![0.0f64; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            at[i] = match node {
+                LegacyNode::Input { arrival_ns } => *arrival_ns,
+                LegacyNode::Const(_) => 0.0,
+                LegacyNode::Gate { kind, fanin } => {
+                    let worst =
+                        fanin.iter().map(|f| at[f.index()]).fold(f64::MIN, f64::max);
+                    worst + lib.delay_ns(*kind, loads[i])
+                }
+            };
+        }
+        at
+    }
+
+    /// The seed `Sta::analyze` sweep set (activity_rounds = 0): arrivals,
+    /// area, constant-activity power, plus the three extra enum sweeps the
+    /// flat engine eliminated (gate count, depths, depth-over-outputs).
+    fn analyze(&self, lib: &CellLib) -> (f64, f64, f64, usize, u32) {
+        let at = self.arrivals(lib);
+        let critical =
+            self.outputs.iter().map(|id| at[id.index()]).fold(0.0f64, f64::max);
+        let area: f64 = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                LegacyNode::Gate { kind, .. } => lib.params(*kind).area_um2,
+                _ => 0.0,
+            })
+            .sum();
+        let power: f64 = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                LegacyNode::Gate { kind, .. } => {
+                    0.15 * lib.params(*kind).switch_energy_fj
+                }
+                _ => 0.0,
+            })
+            .sum::<f64>()
+            / 1000.0;
+        let num_gates = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n, LegacyNode::Gate { .. }))
+            .count();
+        let mut depths = vec![0u32; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let LegacyNode::Gate { fanin, .. } = n {
+                depths[i] = 1 + fanin.iter().map(|f| depths[f.index()]).max().unwrap_or(0);
+            }
+        }
+        let depth =
+            self.outputs.iter().map(|id| depths[id.index()]).max().unwrap_or(0);
+        (critical, area, power, num_gates, depth)
+    }
+
+    /// The seed `CompiledNetlist::compile` re-flattening walk.
+    fn compile(&self) -> LegacyCompiled {
+        let mut ops = Vec::with_capacity(self.nodes.len());
+        let mut fanin = Vec::with_capacity(self.nodes.len());
+        let mut next_input = 0u32;
+        for node in &self.nodes {
+            match node {
+                LegacyNode::Input { .. } => {
+                    ops.push(13u8);
+                    fanin.push([next_input, 0, 0]);
+                    next_input += 1;
+                }
+                LegacyNode::Const(v) => {
+                    ops.push(if *v { 12 } else { 11 });
+                    fanin.push([0, 0, 0]);
+                }
+                LegacyNode::Gate { kind, fanin: f } => {
+                    ops.push(kind.opcode() as u8);
+                    let mut rec = [0u32; 3];
+                    for (k, id) in f.iter().enumerate() {
+                        rec[k] = id.0;
+                    }
+                    fanin.push(rec);
+                }
+            }
+        }
+        LegacyCompiled { ops, fanin, n_inputs: next_input as usize }
+    }
+}
+
+impl LegacyCompiled {
+    /// The seed evaluation loop, byte-for-byte (same unchecked reads), so
+    /// the `_legacy_ir` twin differs only in program *construction* cost.
+    fn run_into(&self, buf: &mut Vec<u64>, input_words: &[u64]) {
+        assert_eq!(input_words.len(), self.n_inputs, "input word count");
+        if buf.len() != self.ops.len() {
+            buf.resize(self.ops.len(), 0);
+        }
+        let b = buf.as_mut_slice();
+        for i in 0..self.ops.len() {
+            let [f0, f1, f2] = self.fanin[i];
+            // SAFETY: fanins come from a validated netlist (fanin < i) and
+            // input ordinals are bounded by the asserted input_words length.
+            let v = unsafe {
+                let g = |k: u32| *b.get_unchecked(k as usize);
+                match self.ops[i] {
+                    0 => g(f0),
+                    1 => !g(f0),
+                    2 => g(f0) & g(f1),
+                    3 => g(f0) | g(f1),
+                    4 => !(g(f0) & g(f1)),
+                    5 => !(g(f0) | g(f1)),
+                    6 => g(f0) ^ g(f1),
+                    7 => !(g(f0) ^ g(f1)),
+                    8 => !((g(f0) & g(f1)) | g(f2)),
+                    9 => !((g(f0) | g(f1)) & g(f2)),
+                    10 => {
+                        let (a, bb, c) = (g(f0), g(f1), g(f2));
+                        (a & bb) | (a & c) | (bb & c)
+                    }
+                    11 => 0,
+                    12 => !0,
+                    _ => *input_words.get_unchecked(f0 as usize),
+                }
+            };
+            b[i] = v;
+        }
+    }
 }

@@ -496,7 +496,12 @@ impl SynthEngine {
         let mut timing = design.timing;
         timing.merge(&TimingStats::full_pass(design.netlist.len()));
         let verified = if self.cfg.verify_vectors > 0 {
-            Some(crate::equiv::check_multiplier_with(&design, self.cfg.verify_vectors)?.passed)
+            // Single-threaded sweep: compiles already fan out across the
+            // engine's worker pool (compile_batch, the server), so a
+            // parallel inner verify would only oversubscribe the cores.
+            let opts =
+                crate::equiv::EquivOptions { budget: self.cfg.verify_vectors, threads: 1 };
+            Some(crate::equiv::check_multiplier_opts(&design, &opts)?.passed)
         } else {
             None
         };

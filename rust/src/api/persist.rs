@@ -227,25 +227,33 @@ pub fn artifact_from_json(j: &Json) -> Result<DesignArtifact> {
 /// Serialize a gate-level netlist. Nodes travel positionally (node ids are
 /// their indices), each as a compact array: `["i", name, arrival_ns]` for
 /// a primary input, `["k", 0|1]` for a constant, `[opcode, fanin…]` for a
-/// gate (opcodes are [`CellKind::opcode`], stable across versions).
+/// gate (opcodes are [`CellKind::opcode`], stable across versions). The
+/// records are read column-wise off the IR's flat arrays — no `Node`
+/// reconstruction — and the rendered bytes are identical to the pre-flat
+/// encoding, so existing disk-cache entries stay valid.
 pub fn netlist_to_json(nl: &Netlist) -> Json {
-    let nodes = nl
-        .nodes()
-        .iter()
-        .map(|n| match n {
-            Node::Input { name, arrival_ns } => Json::arr(vec![
-                Json::str("i"),
-                Json::str(name.clone()),
-                Json::num(*arrival_ns),
-            ]),
-            Node::Const(v) => {
-                Json::arr(vec![Json::str("k"), Json::num(if *v { 1.0 } else { 0.0 })])
-            }
-            Node::Gate { kind, fanin } => {
+    let ops = nl.ops();
+    let fan = nl.fanin_records();
+    let nodes = (0..nl.len())
+        .map(|i| match nl.kind_at(i) {
+            Some(kind) => {
                 let mut xs = vec![Json::num(kind.opcode() as f64)];
-                xs.extend(fanin.iter().map(|f| Json::num(f.0 as f64)));
+                let rec = fan[i];
+                xs.extend(rec.iter().take(kind.arity()).map(|&f| Json::num(f as f64)));
                 Json::arr(xs)
             }
+            None if ops[i] == crate::ir::OP_INPUT => match nl.node(NodeId(i as u32)) {
+                Node::Input { name, arrival_ns } => Json::arr(vec![
+                    Json::str("i"),
+                    Json::str(name),
+                    Json::num(arrival_ns),
+                ]),
+                _ => unreachable!("OP_INPUT node must view as Node::Input"),
+            },
+            None => Json::arr(vec![
+                Json::str("k"),
+                Json::num(if ops[i] == crate::ir::OP_CONST1 { 1.0 } else { 0.0 }),
+            ]),
         })
         .collect();
     Json::obj(vec![
@@ -255,9 +263,8 @@ pub fn netlist_to_json(nl: &Netlist) -> Json {
             "outputs",
             Json::arr(
                 nl.outputs()
-                    .iter()
                     .map(|(name, id)| {
-                        Json::arr(vec![Json::str(name.clone()), Json::num(id.0 as f64)])
+                        Json::arr(vec![Json::str(name), Json::num(id.0 as f64)])
                     })
                     .collect(),
             ),

@@ -179,7 +179,12 @@ pub fn evaluate_point_fmt(
     });
     let art = crate::api::engine().compile(&req)?;
     let design = art.design().expect("method artifact carries a design");
-    let equiv = crate::equiv::check_multiplier_with(design, verify_vectors)?;
+    // threads: 1 — sweep points already run on the coordinator's worker
+    // pool; a parallel inner verify would oversubscribe the cores.
+    let equiv = crate::equiv::check_multiplier_opts(
+        design,
+        &crate::equiv::EquivOptions { budget: verify_vectors, threads: 1 },
+    )?;
     let pjrt_verified = match rt {
         Some(rt) if rt.has_artifact("netlist_eval_small") => {
             crate::runtime::verify_design_pjrt(rt, design, 1).ok()

@@ -7,17 +7,35 @@
 //! The PJRT-backed variant (netlist-eval artifact executed from the Rust
 //! request path) lives in [`crate::runtime`] and is exercised by the
 //! examples.
+//!
+//! ## Parallel sweeps (EXPERIMENTS.md §Perf)
+//!
+//! The vector stream is organized as an indexed sequence of 64-lane
+//! batches whose contents depend only on the batch index — exhaustive
+//! batches enumerate the operand space positionally, sampled batches
+//! derive their RNG seed from the index. Workers on
+//! [`crate::coordinator::pool::scoped_workers`] claim batch indices from
+//! an atomic cursor, each with its own simulation buffers over one shared
+//! zero-copy [`CompiledNetlist`]. Failure selection is **deterministic**:
+//! the reported counterexample is the first failing lane of the
+//! lowest-index failing batch, so every worker count (including 1)
+//! reports the identical counterexample — pinned by
+//! `rust/tests/ir_flat.rs`.
 
+use crate::coordinator::pool;
 use crate::multiplier::Design;
 use crate::sim::{lane_value, CompiledNetlist};
 use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Outcome of an equivalence run.
 #[derive(Debug, Clone)]
 pub struct EquivReport {
     /// Whether every checked vector matched the golden model.
     pub passed: bool,
-    /// Vectors simulated.
+    /// Vectors simulated (on failure: the deterministic count up to and
+    /// including the failing batch, independent of worker count).
     pub vectors: usize,
     /// Whether the whole input space was covered.
     pub exhaustive: bool,
@@ -25,40 +43,215 @@ pub struct EquivReport {
     pub counterexample: Option<(u128, u128, u128, u128, u128)>,
 }
 
+/// Knobs for an equivalence run.
+#[derive(Debug, Clone, Copy)]
+pub struct EquivOptions {
+    /// Sampled-vector budget (ignored by exhaustive runs, which cover the
+    /// whole space).
+    pub budget: usize,
+    /// Worker threads for the batch sweep. The counterexample and vector
+    /// count are identical for every thread count; small runs (fewer than
+    /// 8 batches) fall back to a single inline worker.
+    pub threads: usize,
+}
+
+impl Default for EquivOptions {
+    fn default() -> Self {
+        EquivOptions { budget: 1 << 14, threads: default_threads() }
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+}
+
 /// Verify a multiplier/MAC design. Exhaustive when the total input space
-/// `2^(bits)` is at most `2^20`; sampled otherwise (`vectors` lanes).
+/// `2^(bits)` is at most `2^20`; sampled otherwise (default budget),
+/// sweeping batches in parallel across the available cores.
 pub fn check_multiplier(design: &Design) -> Result<EquivReport> {
-    check_multiplier_with(design, 1 << 14)
+    check_multiplier_opts(design, &EquivOptions::default())
 }
 
 /// As [`check_multiplier`] with an explicit sampled-vector budget.
+pub fn check_multiplier_with(design: &Design, budget: usize) -> Result<EquivReport> {
+    check_multiplier_opts(design, &EquivOptions { budget, ..Default::default() })
+}
+
+/// Fully parameterized equivalence run.
 ///
 /// Operand widths come from the design itself (`a`/`b`/`c` pin vectors),
 /// so rectangular formats are swept over their own per-operand ranges, and
 /// the golden model ([`Design::expected`]) applies the design's signedness.
-pub fn check_multiplier_with(design: &Design, budget: usize) -> Result<EquivReport> {
+pub fn check_multiplier_opts(design: &Design, opts: &EquivOptions) -> Result<EquivReport> {
     let total_bits = design.a.len() + design.b.len() + design.c.len();
-    if total_bits <= 20 {
-        exhaustive(design)
+    let plan = if total_bits <= 20 {
+        VectorPlan::exhaustive(design)
     } else {
-        sampled(design, budget)
+        VectorPlan::sampled(design, opts.budget)
+    };
+    Ok(run_plan(design, &plan, opts.threads))
+}
+
+// -------------------------------------------------------------------
+// Deterministic batch plan.
+// -------------------------------------------------------------------
+
+/// An indexed plan of 64-lane vector batches: batch `k`'s contents are a
+/// pure function of `k`, which is what makes the parallel sweep
+/// deterministic.
+struct VectorPlan {
+    exhaustive: bool,
+    /// Total vectors when every batch runs (exhaustive space, or corners +
+    /// padded random budget).
+    total: usize,
+    /// Number of batches (`ceil` of the per-phase vector counts by 64).
+    batches: usize,
+    /// Exhaustive enumeration dims (`b` and `c` spaces; `a` is the
+    /// quotient).
+    nb: u128,
+    nc: u128,
+    /// Sampled: precomputed corner triples (seed order preserved).
+    corners: Vec<(u128, u128, u128)>,
+    /// Sampled: batches covering `corners`.
+    corner_batches: usize,
+    /// Sampled: per-operand masks for random lanes.
+    amask: u128,
+    bmask: u128,
+    cmask: u128,
+}
+
+impl VectorPlan {
+    fn exhaustive(design: &Design) -> VectorPlan {
+        let na = 1u128 << design.a.len() as u32;
+        let nb = 1u128 << design.b.len() as u32;
+        let nc = if design.c.is_empty() { 1u128 } else { 1u128 << design.c.len() as u32 };
+        // total_bits <= 20 ⇒ the product fits comfortably in usize.
+        let total = (na * nb * nc) as usize;
+        VectorPlan {
+            exhaustive: true,
+            total,
+            batches: total.div_ceil(64),
+            nb,
+            nc,
+            corners: Vec::new(),
+            corner_batches: 0,
+            amask: 0,
+            bmask: 0,
+            cmask: 0,
+        }
+    }
+
+    fn sampled(design: &Design, budget: usize) -> VectorPlan {
+        let a_bits = design.a.len();
+        let b_bits = design.b.len();
+        let c_bits = design.c.len();
+        let amask = (1u128 << a_bits) - 1;
+        let bmask = (1u128 << b_bits) - 1;
+        let cmask = if c_bits == 0 { 0 } else { (1u128 << c_bits) - 1 };
+        // Corner vectors: boundary operands and walking ones, per operand.
+        let mut corners = Vec::new();
+        for &a in &corner_list(a_bits) {
+            for &b in &corner_list(b_bits) {
+                let c = (a.wrapping_mul(31) ^ b) & cmask;
+                corners.push((a, b, c));
+            }
+        }
+        let corner_batches = corners.len().div_ceil(64);
+        let random_batches = budget.saturating_sub(corners.len()).div_ceil(64);
+        VectorPlan {
+            exhaustive: false,
+            total: corners.len() + 64 * random_batches,
+            batches: corner_batches + random_batches,
+            nb: 0,
+            nc: 0,
+            corners,
+            corner_batches,
+            amask,
+            bmask,
+            cmask,
+        }
+    }
+
+    /// Fill `out` with batch `k`'s vectors (at most 64).
+    fn fill(&self, k: usize, out: &mut Vec<(u128, u128, u128)>) {
+        out.clear();
+        if self.exhaustive {
+            let start = 64 * k;
+            let end = (start + 64).min(self.total);
+            for idx in start..end {
+                let idx = idx as u128;
+                let c = idx % self.nc;
+                let rest = idx / self.nc;
+                let b = rest % self.nb;
+                let a = rest / self.nb;
+                out.push((a, b, c));
+            }
+        } else if k < self.corner_batches {
+            let start = 64 * k;
+            let end = (start + 64).min(self.corners.len());
+            out.extend_from_slice(&self.corners[start..end]);
+        } else {
+            // Random batch: the RNG stream is derived from the batch index,
+            // never from worker identity or claim order.
+            let j = (k - self.corner_batches) as u64;
+            let mut rng = crate::util::Rng::seed_from_u64(
+                0xE9E9 ^ (j + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            for _ in 0..64 {
+                let a = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64()))
+                    & self.amask;
+                let b = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64()))
+                    & self.bmask;
+                let c = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64()))
+                    & self.cmask;
+                out.push((a, b, c));
+            }
+        }
+    }
+
+    /// Vectors covered by batches `0..=k` — the deterministic `vectors`
+    /// count reported when batch `k` fails.
+    fn vectors_through(&self, k: usize) -> usize {
+        if self.exhaustive {
+            (64 * (k + 1)).min(self.total)
+        } else if k < self.corner_batches {
+            (64 * (k + 1)).min(self.corners.len())
+        } else {
+            self.corners.len() + 64 * (k + 1 - self.corner_batches)
+        }
     }
 }
 
+/// Boundary operands and walking ones for one operand width.
+fn corner_list(bits: usize) -> Vec<u128> {
+    let mask = (1u128 << bits) - 1;
+    let mut corners: Vec<u128> = vec![0, 1, mask, mask.saturating_sub(1), mask >> 1, (mask >> 1) + 1];
+    for k in 0..bits {
+        corners.push(1u128 << k);
+        corners.push(mask ^ (1u128 << k));
+    }
+    corners.sort();
+    corners.dedup();
+    corners.retain(|&c| c <= mask);
+    corners
+}
+
+/// Pack one batch into lane words, simulate, and compare lanes against the
+/// golden model. Inputs are created in a-then-b-then-c order by the
+/// generators, so operands pack straight into lane words — no per-vector
+/// `Vec<bool>` round-trip. `words` is a reusable scratch buffer.
 fn run_batch(
     design: &Design,
-    comp: &CompiledNetlist,
+    comp: &CompiledNetlist<'_>,
     buf: &mut Vec<u64>,
+    words: &mut Vec<u64>,
     batch: &[(u128, u128, u128)],
 ) -> Option<(u128, u128, u128, u128, u128)> {
-    // Pack operands straight into lane words (inputs are created in
-    // a-then-b-then-c order by the generators) — no per-vector Vec<bool>
-    // round-trip, no buffer copy. This is the §Perf-optimized form; see
-    // EXPERIMENTS.md.
     let a_bits = design.a.len();
     let b_bits = design.b.len();
     let c_bits = design.c.len();
-    let mut words = vec![0u64; a_bits + b_bits + c_bits];
+    words.clear();
+    words.resize(a_bits + b_bits + c_bits, 0);
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let bit = 1u64 << lane;
         for k in 0..a_bits {
@@ -77,7 +270,7 @@ fn run_batch(
             }
         }
     }
-    comp.run_into(buf, &words);
+    comp.run_into(buf, words);
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let got = lane_value(buf, &design.product, lane as u32);
         let want = design.expected(*a, *b, *c);
@@ -88,126 +281,51 @@ fn run_batch(
     None
 }
 
-fn exhaustive(design: &Design) -> Result<EquivReport> {
-    let c_bits = design.c.len() as u32;
+/// Execute a plan with `threads` workers claiming batch indices from an
+/// atomic cursor. Any worker that finds a failure records `(batch, cex)`
+/// and lowers the shared fail bound; workers stop claiming past it. The
+/// reported counterexample is the one from the minimum failing batch
+/// index, so the result is independent of the worker count.
+fn run_plan(design: &Design, plan: &VectorPlan, threads: usize) -> EquivReport {
     let comp = CompiledNetlist::compile(&design.netlist);
-    let mut buf: Vec<u64> = Vec::new();
-    let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
-    let mut vectors = 0usize;
-    let na = 1u128 << design.a.len() as u32;
-    let nb = 1u128 << design.b.len() as u32;
-    let nc = 1u128 << c_bits;
-    let mut a = 0u128;
-    while a < na {
-        let mut b = 0u128;
-        while b < nb {
-            let mut c = 0u128;
-            while c < nc {
-                batch.push((a, b, c));
-                vectors += 1;
-                if batch.len() == 64 {
-                    if let Some(cex) = run_batch(design, &comp, &mut buf, &batch) {
-                        return Ok(EquivReport {
-                            passed: false,
-                            vectors,
-                            exhaustive: true,
-                            counterexample: Some(cex),
-                        });
-                    }
-                    batch.clear();
-                }
-                c += 1;
+    let threads = if plan.batches < 8 { 1 } else { threads.max(1).min(plan.batches) };
+    let next = AtomicUsize::new(0);
+    let first_fail = AtomicUsize::new(usize::MAX);
+    let failures: Mutex<Vec<(usize, (u128, u128, u128, u128, u128))>> = Mutex::new(Vec::new());
+    pool::scoped_workers(threads, |_worker| {
+        let mut buf: Vec<u64> = Vec::new();
+        let mut words: Vec<u64> = Vec::new();
+        let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
+        loop {
+            let k = next.fetch_add(1, Ordering::Relaxed);
+            // Claims are monotonic, so every index below a recorded failure
+            // has been claimed by some worker; skipping indices above the
+            // current bound can never drop the minimum failing batch.
+            if k >= plan.batches || k > first_fail.load(Ordering::Relaxed) {
+                break;
             }
-            b += 1;
-        }
-        a += 1;
-    }
-    if !batch.is_empty() {
-        if let Some(cex) = run_batch(design, &comp, &mut buf, &batch) {
-            return Ok(EquivReport {
-                passed: false,
-                vectors,
-                exhaustive: true,
-                counterexample: Some(cex),
-            });
-        }
-    }
-    Ok(EquivReport { passed: true, vectors, exhaustive: true, counterexample: None })
-}
-
-/// Boundary operands and walking ones for one operand width.
-fn corner_list(bits: usize) -> Vec<u128> {
-    let mask = (1u128 << bits) - 1;
-    let mut corners: Vec<u128> = vec![0, 1, mask, mask.saturating_sub(1), mask >> 1, (mask >> 1) + 1];
-    for k in 0..bits {
-        corners.push(1u128 << k);
-        corners.push(mask ^ (1u128 << k));
-    }
-    corners.sort();
-    corners.dedup();
-    corners.retain(|&c| c <= mask);
-    corners
-}
-
-fn sampled(design: &Design, budget: usize) -> Result<EquivReport> {
-    let a_bits = design.a.len();
-    let b_bits = design.b.len();
-    let c_bits = design.c.len();
-    let amask = (1u128 << a_bits) - 1;
-    let bmask = (1u128 << b_bits) - 1;
-    let cmask = if c_bits == 0 { 0 } else { (1u128 << c_bits) - 1 };
-    let mut rng = crate::util::Rng::seed_from_u64(0xE9E9);
-    let comp = CompiledNetlist::compile(&design.netlist);
-    let mut buf: Vec<u64> = Vec::new();
-    let mut vectors = 0usize;
-
-    // Corner vectors: boundary operands and walking ones, per operand.
-    let corners_a = corner_list(a_bits);
-    let corners_b = corner_list(b_bits);
-    let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
-    let flush = |batch: &mut Vec<(u128, u128, u128)>,
-                 buf: &mut Vec<u64>,
-                 vectors: &mut usize|
-     -> Option<(u128, u128, u128, u128, u128)> {
-        *vectors += batch.len();
-        let r = run_batch(design, &comp, buf, batch);
-        batch.clear();
-        r
-    };
-    for &a in &corners_a {
-        for &b in &corners_b {
-            let c = (a.wrapping_mul(31) ^ b) & cmask;
-            batch.push((a, b, c));
-            if batch.len() == 64 {
-                if let Some(cex) = flush(&mut batch, &mut buf, &mut vectors) {
-                    return Ok(EquivReport {
-                        passed: false,
-                        vectors,
-                        exhaustive: false,
-                        counterexample: Some(cex),
-                    });
-                }
+            plan.fill(k, &mut batch);
+            if let Some(cex) = run_batch(design, &comp, &mut buf, &mut words, &batch) {
+                first_fail.fetch_min(k, Ordering::Relaxed);
+                failures.lock().unwrap().push((k, cex));
             }
         }
+    });
+    let failures = failures.into_inner().unwrap();
+    match failures.into_iter().min_by_key(|&(k, _)| k) {
+        Some((k, cex)) => EquivReport {
+            passed: false,
+            vectors: plan.vectors_through(k),
+            exhaustive: plan.exhaustive,
+            counterexample: Some(cex),
+        },
+        None => EquivReport {
+            passed: true,
+            vectors: plan.total,
+            exhaustive: plan.exhaustive,
+            counterexample: None,
+        },
     }
-    // Random lanes.
-    while vectors < budget {
-        while batch.len() < 64 {
-            let a = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & amask;
-            let b = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & bmask;
-            let c = (u128::from(rng.next_u64()) << 64 | u128::from(rng.next_u64())) & cmask;
-            batch.push((a, b, c));
-        }
-        if let Some(cex) = flush(&mut batch, &mut buf, &mut vectors) {
-            return Ok(EquivReport {
-                passed: false,
-                vectors,
-                exhaustive: false,
-                counterexample: Some(cex),
-            });
-        }
-    }
-    Ok(EquivReport { passed: true, vectors, exhaustive: false, counterexample: None })
 }
 
 #[cfg(test)]
@@ -274,5 +392,45 @@ mod tests {
             got
         });
         assert_ne!(got, want);
+    }
+
+    #[test]
+    fn exhaustive_enumeration_matches_nested_loops() {
+        // The positional index → (a, b, c) decode must reproduce the
+        // canonical a-outer/b-middle/c-inner order.
+        let d = MultiplierSpec::new(3).fused_mac(true).build().unwrap();
+        let plan = VectorPlan::exhaustive(&d);
+        let mut expect = Vec::new();
+        for a in 0..8u128 {
+            for b in 0..8u128 {
+                for c in 0..64u128 {
+                    expect.push((a, b, c));
+                }
+            }
+        }
+        let mut got = Vec::new();
+        let mut batch = Vec::with_capacity(64);
+        for k in 0..plan.batches {
+            plan.fill(k, &mut batch);
+            got.extend_from_slice(&batch);
+        }
+        assert_eq!(got, expect);
+        assert_eq!(plan.vectors_through(plan.batches - 1), plan.total);
+    }
+
+    #[test]
+    fn sampled_plan_is_batch_index_deterministic() {
+        let d = MultiplierSpec::new(16).build().unwrap();
+        let plan = VectorPlan::sampled(&d, 2048);
+        let (mut b1, mut b2) = (Vec::new(), Vec::new());
+        // Refilling any batch yields identical vectors (no shared RNG
+        // state), including a corner batch and a random batch.
+        for k in [0usize, plan.corner_batches, plan.batches - 1] {
+            plan.fill(k, &mut b1);
+            plan.fill(k, &mut b2);
+            assert_eq!(b1, b2, "batch {k}");
+            assert!(!b1.is_empty());
+        }
+        assert!(plan.total >= 2048);
     }
 }

@@ -2,10 +2,14 @@
 //!
 //! This is the substrate every other module builds on: the paper's
 //! generators emit [`Netlist`]s, the STA engine times them, the simulator
-//! and the PJRT-backed evaluator execute them.
+//! and the PJRT-backed evaluator execute them. The netlist is stored as
+//! flat struct-of-arrays (opcode byte + inline fanin record per node) with
+//! a lazily built, edit-invalidated [`Topology`] cache — see
+//! [`netlist`] for the layout and invalidation rules.
 
 pub mod cell;
 pub mod netlist;
 
 pub use cell::{CellKind, CellLib, CellParams};
-pub use netlist::{Netlist, Node, NodeId};
+pub use netlist::{Netlist, Node, NodeId, NodeIter, OutputIter, Topology};
+pub use netlist::{OP_CONST0, OP_CONST1, OP_INPUT};

@@ -1,17 +1,58 @@
-//! Gate-level netlist IR.
+//! Gate-level netlist IR — flat struct-of-arrays storage.
 //!
 //! A [`Netlist`] is a topologically-ordered DAG of standard cells over
 //! primary inputs and constants. Nodes are created append-only and may only
 //! reference already-created nodes, so every forward pass (simulation, STA,
 //! power) is a single linear sweep — the property the coordinator's hot
 //! paths rely on.
+//!
+//! ## Storage layout (EXPERIMENTS.md §Perf)
+//!
+//! Nodes are stored as parallel flat arrays rather than one enum value per
+//! node: an opcode byte and an inline `[u32; 3]` fanin record per node, one
+//! arrival-time entry per *input* (indexed by input ordinal, not node id),
+//! and every input/output name interned into a single string table. There
+//! is no per-gate heap allocation and no enum match in hot loops: the
+//! simulator borrows the arrays zero-copy ([`crate::sim::CompiledNetlist`]),
+//! both STA engines sweep them directly, and the PJRT / persistence
+//! encodings copy them out column-wise. The [`Node`] *view* type
+//! reconstructs the classic enum shape on demand for code that prefers
+//! readability over throughput (Verilog export, serialization, tests).
+//!
+//! ## Cached topology
+//!
+//! Derived topology — CSR fanout adjacency, fanout counts, logic depths,
+//! max depth over outputs — is built lazily on first use and shared behind
+//! an `Arc` ([`Netlist::topology`]): [`crate::sta::Sta::analyze`] serves
+//! depth from it and [`crate::sta::IncrementalSta`] walks its CSR
+//! consumers, so every STA-scored pass over one netlist reuses one build
+//! instead of re-deriving adjacency/depths itself.
+//! Invalidation rules: structural edits ([`Netlist::gate`],
+//! [`Netlist::input`], [`Netlist::constant`], [`Netlist::output`])
+//! invalidate the cache; [`Netlist::set_input_arrival`] does **not**,
+//! because arrival times live outside the topology — which is what keeps
+//! the optimization-move loop (shift one arrival, re-time the cone)
+//! entirely allocation-free.
 
 use super::cell::{CellKind, CellLib};
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Opcode marking a constant-0 node in the flat encoding (gate opcodes are
+/// [`CellKind::opcode`], 0–10). Shared with [`crate::sim`] and the PJRT
+/// artifact encoding in [`crate::runtime`].
+pub const OP_CONST0: u8 = 11;
+/// Opcode marking a constant-1 node in the flat encoding.
+pub const OP_CONST1: u8 = 12;
+/// Opcode marking a primary input in the flat encoding; the first slot of
+/// its fanin record holds the input *ordinal* (index into the arrival and
+/// name arrays), not a node id.
+pub const OP_INPUT: u8 = 13;
 
 /// Index of a node (primary input, constant, or gate output) in a netlist.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(transparent)]
 pub struct NodeId(pub u32);
 
 impl NodeId {
@@ -22,31 +63,168 @@ impl NodeId {
     }
 }
 
-/// A netlist node.
-#[derive(Debug, Clone)]
-pub enum Node {
+/// A read-only view of one netlist node, reconstructed from the flat
+/// arrays. Cheap to build (no allocation); hot loops should read the flat
+/// arrays directly via [`Netlist::ops`] / [`Netlist::fanin_records`].
+#[derive(Debug, Clone, Copy)]
+pub enum Node<'a> {
     /// Primary input with an externally supplied arrival time (ns).
-    Input { name: String, arrival_ns: f64 },
+    Input {
+        /// Interned input name.
+        name: &'a str,
+        /// Arrival time in ns.
+        arrival_ns: f64,
+    },
     /// Constant 0 / 1.
     Const(bool),
     /// A standard cell instance; `fanin.len() == kind.arity()`.
-    Gate { kind: CellKind, fanin: Vec<NodeId> },
+    Gate {
+        /// Cell function.
+        kind: CellKind,
+        /// Fanin node ids (length = arity).
+        fanin: &'a [NodeId],
+    },
 }
 
-/// Gate-level netlist with named primary outputs.
+/// Interned string storage: every name lives in one backing `String`, so a
+/// netlist with thousands of input/output names costs two allocations, not
+/// thousands.
 #[derive(Debug, Clone, Default)]
+struct StrTable {
+    data: String,
+    ends: Vec<u32>,
+}
+
+impl StrTable {
+    fn intern(&mut self, s: &str) -> u32 {
+        self.data.push_str(s);
+        self.ends.push(self.data.len() as u32);
+        (self.ends.len() - 1) as u32
+    }
+
+    fn get(&self, id: u32) -> &str {
+        let i = id as usize;
+        let end = self.ends[i] as usize;
+        let start = if i == 0 { 0 } else { self.ends[i - 1] as usize };
+        &self.data[start..end]
+    }
+}
+
+/// Lazily built, edit-invalidated topology cache slot.
+type TopoCell = Mutex<Option<Arc<Topology>>>;
+
+/// Derived topology of one netlist, built once and shared by every
+/// analysis pass ([`crate::sta::Sta::analyze`],
+/// [`crate::sta::IncrementalSta`], power extraction): CSR fanout
+/// adjacency, fanout counts, per-node logic depths and the max depth over
+/// primary outputs. Obtained from [`Netlist::topology`]; structural edits
+/// invalidate the netlist's cached copy, arrival edits do not.
+#[derive(Debug)]
+pub struct Topology {
+    /// Fanout count per node (gate-input references + one per primary
+    /// output registration).
+    fanout: Vec<u32>,
+    /// CSR row offsets into `consumers` (length = nodes + 1). Rows cover
+    /// *gate* consumers only; primary outputs are counted in `fanout` but
+    /// have no consumer entry.
+    offsets: Vec<u32>,
+    /// CSR payload: for each node, the gate nodes reading it, in
+    /// increasing topological order (duplicates kept for gates sampling
+    /// one driver twice).
+    consumers: Vec<u32>,
+    /// Logic depth (gate count) per node; inputs/constants are depth 0.
+    depths: Vec<u32>,
+    /// Maximum logic depth over primary outputs.
+    depth: u32,
+}
+
+impl Topology {
+    /// Gate nodes that read node `i` (duplicates allowed for gates
+    /// sampling one driver twice), in topological order.
+    #[inline]
+    pub fn consumers(&self, i: usize) -> &[u32] {
+        &self.consumers[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Fanout count per node (number of gate inputs each node drives;
+    /// primary outputs add `1` each).
+    #[inline]
+    pub fn fanout_counts(&self) -> &[u32] {
+        &self.fanout
+    }
+
+    /// Logic depth (gate count) per node; inputs/constants are depth 0.
+    #[inline]
+    pub fn depths(&self) -> &[u32] {
+        &self.depths
+    }
+
+    /// Maximum logic depth over primary outputs.
+    #[inline]
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+}
+
+/// Gate-level netlist with named primary outputs, stored as flat
+/// struct-of-arrays (see the module docs for the layout).
+#[derive(Debug, Default)]
 pub struct Netlist {
     /// Diagnostic name (used in error messages and reports).
     pub name: String,
-    nodes: Vec<Node>,
-    outputs: Vec<(String, NodeId)>,
-    n_inputs: usize,
+    /// Opcode per node: 0–10 = [`CellKind::opcode`], [`OP_CONST0`],
+    /// [`OP_CONST1`], [`OP_INPUT`].
+    ops: Vec<u8>,
+    /// Inline fanin record per node. Gates: fanin node ids in slots
+    /// `0..arity` (rest zero). Inputs: slot 0 holds the input ordinal.
+    /// Constants: all zero.
+    fanin: Vec<[u32; 3]>,
+    /// Node id per input ordinal, in creation order.
+    input_ids: Vec<NodeId>,
+    /// Arrival time (ns) per input ordinal.
+    input_arrivals: Vec<f64>,
+    /// Interned input and output names.
+    names: StrTable,
+    /// Interned name id per input ordinal.
+    input_names: Vec<u32>,
+    /// `(interned name, node)` per primary output, in registration order.
+    outputs: Vec<(u32, NodeId)>,
+    /// Gate count (excludes inputs/constants), maintained eagerly.
+    n_gates: usize,
+    /// Lazily built topology (see [`Netlist::topology`]).
+    topo: TopoCell,
+}
+
+impl Clone for Netlist {
+    fn clone(&self) -> Self {
+        Netlist {
+            name: self.name.clone(),
+            ops: self.ops.clone(),
+            fanin: self.fanin.clone(),
+            input_ids: self.input_ids.clone(),
+            input_arrivals: self.input_arrivals.clone(),
+            names: self.names.clone(),
+            input_names: self.input_names.clone(),
+            outputs: self.outputs.clone(),
+            n_gates: self.n_gates,
+            // The clone rebuilds its topology lazily on first use.
+            topo: Mutex::new(None),
+        }
+    }
 }
 
 impl Netlist {
     /// Empty netlist with a diagnostic name.
     pub fn new(name: impl Into<String>) -> Self {
         Netlist { name: name.into(), ..Default::default() }
+    }
+
+    /// Reset the cached topology after a structural edit.
+    fn invalidate(&mut self) {
+        match self.topo.get_mut() {
+            Ok(slot) => *slot = None,
+            Err(poisoned) => *poisoned.into_inner() = None,
+        }
     }
 
     /// Add a primary input arriving at t=0.
@@ -57,9 +235,15 @@ impl Netlist {
     /// Add a primary input with a non-zero arrival time (ns) — the mechanism
     /// behind the paper's non-uniform CPA arrival profiles.
     pub fn input_at(&mut self, name: impl Into<String>, arrival_ns: f64) -> NodeId {
-        let id = NodeId(self.nodes.len() as u32);
-        self.nodes.push(Node::Input { name: name.into(), arrival_ns });
-        self.n_inputs += 1;
+        let id = NodeId(self.ops.len() as u32);
+        let ordinal = self.input_ids.len() as u32;
+        self.ops.push(OP_INPUT);
+        self.fanin.push([ordinal, 0, 0]);
+        self.input_ids.push(id);
+        self.input_arrivals.push(arrival_ns);
+        let name_id = self.names.intern(&name.into());
+        self.input_names.push(name_id);
+        self.invalidate();
         id
     }
 
@@ -67,19 +251,24 @@ impl Netlist {
     /// mutation an optimization move makes when an upstream change (a CT
     /// interconnect swap, a revised column profile) shifts when this
     /// input's data shows up. [`crate::sta::IncrementalSta`] re-times only
-    /// the input's fan-out cone after such an edit. Panics if `id` is not
-    /// an input.
+    /// the input's fan-out cone after such an edit. Arrival times live
+    /// outside the topology, so this edit does **not** invalidate the
+    /// cached [`Topology`]. Panics if `id` is not an input.
     pub fn set_input_arrival(&mut self, id: NodeId, arrival_ns: f64) {
-        match &mut self.nodes[id.index()] {
-            Node::Input { arrival_ns: t, .. } => *t = arrival_ns,
-            other => panic!("set_input_arrival on non-input node {other:?}"),
+        let i = id.index();
+        if self.ops[i] != OP_INPUT {
+            panic!("set_input_arrival on non-input node {:?}", self.view(i));
         }
+        let ordinal = self.fanin[i][0] as usize;
+        self.input_arrivals[ordinal] = arrival_ns;
     }
 
     /// Add a constant node.
     pub fn constant(&mut self, value: bool) -> NodeId {
-        let id = NodeId(self.nodes.len() as u32);
-        self.nodes.push(Node::Const(value));
+        let id = NodeId(self.ops.len() as u32);
+        self.ops.push(if value { OP_CONST1 } else { OP_CONST0 });
+        self.fanin.push([0, 0, 0]);
+        self.invalidate();
         id
     }
 
@@ -87,11 +276,16 @@ impl Netlist {
     /// forward reference (which would break topological order).
     pub fn gate(&mut self, kind: CellKind, fanin: &[NodeId]) -> NodeId {
         assert_eq!(fanin.len(), kind.arity(), "{kind:?} arity");
-        let id = NodeId(self.nodes.len() as u32);
-        for f in fanin {
+        let id = NodeId(self.ops.len() as u32);
+        let mut rec = [0u32; 3];
+        for (k, f) in fanin.iter().enumerate() {
             assert!(f.0 < id.0, "fanin {f:?} is a forward reference");
+            rec[k] = f.0;
         }
-        self.nodes.push(Node::Gate { kind, fanin: fanin.to_vec() });
+        self.ops.push(kind.opcode() as u8);
+        self.fanin.push(rec);
+        self.n_gates += 1;
+        self.invalidate();
         id
     }
 
@@ -143,163 +337,346 @@ impl Netlist {
 
     /// Register a named primary output.
     pub fn output(&mut self, name: impl Into<String>, id: NodeId) {
-        self.outputs.push((name.into(), id));
+        let name_id = self.names.intern(&name.into());
+        self.outputs.push((name_id, id));
+        self.invalidate();
     }
 
-    // -- accessors --------------------------------------------------------
-    /// All nodes in topological order.
+    // -- flat accessors (the hot-loop API) -------------------------------
+    /// Opcode per node: 0–10 = [`CellKind::opcode`], then [`OP_CONST0`],
+    /// [`OP_CONST1`], [`OP_INPUT`].
     #[inline]
-    pub fn nodes(&self) -> &[Node] {
-        &self.nodes
+    pub fn ops(&self) -> &[u8] {
+        &self.ops
     }
-    /// One node by id.
+
+    /// Inline fanin record per node — gate fanin node ids in slots
+    /// `0..arity`; for inputs, slot 0 is the input ordinal.
     #[inline]
-    pub fn node(&self, id: NodeId) -> &Node {
-        &self.nodes[id.index()]
+    pub fn fanin_records(&self) -> &[[u32; 3]] {
+        &self.fanin
     }
+
+    /// Arrival time (ns) per input ordinal (creation order).
+    #[inline]
+    pub fn input_arrivals(&self) -> &[f64] {
+        &self.input_arrivals
+    }
+
+    /// Node id per input ordinal (creation order), as a borrowed slice.
+    #[inline]
+    pub fn input_ids(&self) -> &[NodeId] {
+        &self.input_ids
+    }
+
+    /// Cell kind of node `i`, or `None` for inputs/constants.
+    #[inline]
+    pub fn kind_at(&self, i: usize) -> Option<CellKind> {
+        let op = self.ops[i];
+        if op <= 10 {
+            Some(CellKind::ALL[op as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Fanin node ids of node `i` (`arity` entries; empty for
+    /// inputs/constants).
+    #[inline]
+    fn fanin_slice(&self, i: usize) -> &[NodeId] {
+        let arity = match self.kind_at(i) {
+            Some(kind) => kind.arity(),
+            None => 0,
+        };
+        // SAFETY: `NodeId` is `#[repr(transparent)]` over `u32`, so a
+        // `[u32; 3]` prefix of length `arity <= 3` reinterprets soundly;
+        // the lifetime is tied to `&self`.
+        unsafe { std::slice::from_raw_parts(self.fanin[i].as_ptr() as *const NodeId, arity) }
+    }
+
+    /// View of node `i` (internal, index-based).
+    fn view(&self, i: usize) -> Node<'_> {
+        match self.ops[i] {
+            OP_INPUT => {
+                let ordinal = self.fanin[i][0] as usize;
+                Node::Input {
+                    name: self.names.get(self.input_names[ordinal]),
+                    arrival_ns: self.input_arrivals[ordinal],
+                }
+            }
+            OP_CONST0 => Node::Const(false),
+            OP_CONST1 => Node::Const(true),
+            op => Node::Gate { kind: CellKind::ALL[op as usize], fanin: self.fanin_slice(i) },
+        }
+    }
+
+    // -- view accessors ---------------------------------------------------
+    /// One node by id, as a [`Node`] view.
+    #[inline]
+    pub fn node(&self, id: NodeId) -> Node<'_> {
+        self.view(id.index())
+    }
+
+    /// Iterate [`Node`] views in topological order.
+    pub fn iter(&self) -> NodeIter<'_> {
+        NodeIter { nl: self, i: 0 }
+    }
+
     /// Node count (inputs + constants + gates).
     #[inline]
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.ops.len()
     }
     /// Whether the netlist has no nodes.
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.ops.is_empty()
     }
-    /// Named primary outputs in registration order.
-    pub fn outputs(&self) -> &[(String, NodeId)] {
-        &self.outputs
+    /// Named primary outputs in registration order, as `(name, id)` pairs.
+    pub fn outputs(&self) -> OutputIter<'_> {
+        OutputIter { nl: self, i: 0 }
+    }
+    /// Number of registered primary outputs.
+    #[inline]
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
     }
     /// Primary-input count.
+    #[inline]
     pub fn num_inputs(&self) -> usize {
-        self.n_inputs
+        self.input_ids.len()
     }
 
-    /// Number of gate instances (excludes inputs/constants).
+    /// Number of gate instances (excludes inputs/constants). O(1): the
+    /// count is maintained on append, not recomputed by a sweep.
+    #[inline]
     pub fn num_gates(&self) -> usize {
-        self.nodes.iter().filter(|n| matches!(n, Node::Gate { .. })).count()
+        self.n_gates
     }
 
     /// Primary inputs in creation order.
     pub fn inputs(&self) -> Vec<NodeId> {
-        self.nodes
-            .iter()
-            .enumerate()
-            .filter(|(_, n)| matches!(n, Node::Input { .. }))
-            .map(|(i, _)| NodeId(i as u32))
-            .collect()
+        self.input_ids.clone()
     }
 
     /// Map input name → node id.
     pub fn input_map(&self) -> HashMap<String, NodeId> {
-        self.nodes
+        self.input_names
             .iter()
-            .enumerate()
-            .filter_map(|(i, n)| match n {
-                Node::Input { name, .. } => Some((name.clone(), NodeId(i as u32))),
-                _ => None,
-            })
+            .zip(&self.input_ids)
+            .map(|(&name, &id)| (self.names.get(name).to_string(), id))
             .collect()
     }
 
     /// Total cell area in µm².
     pub fn area_um2(&self, lib: &CellLib) -> f64 {
-        self.nodes
+        self.ops
             .iter()
-            .map(|n| match n {
-                Node::Gate { kind, .. } => lib.params(*kind).area_um2,
-                _ => 0.0,
+            .map(|&op| {
+                if op <= 10 {
+                    lib.params(CellKind::ALL[op as usize]).area_um2
+                } else {
+                    0.0
+                }
             })
             .sum()
     }
 
-    /// Fanout count per node (number of gate inputs each node drives;
-    /// primary outputs add `1` each).
-    pub fn fanout_counts(&self) -> Vec<u32> {
-        let mut fo = vec![0u32; self.nodes.len()];
-        for n in &self.nodes {
-            if let Node::Gate { fanin, .. } = n {
-                for f in fanin {
-                    fo[f.index()] += 1;
+    /// The shared, lazily built [`Topology`] of this netlist. The first
+    /// call after a structural edit rebuilds it (one O(nodes + edges)
+    /// pass); subsequent calls clone the `Arc`.
+    pub fn topology(&self) -> Arc<Topology> {
+        let mut slot = match self.topo.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(t) = slot.as_ref() {
+            return Arc::clone(t);
+        }
+        let t = Arc::new(self.build_topology());
+        *slot = Some(Arc::clone(&t));
+        t
+    }
+
+    fn build_topology(&self) -> Topology {
+        let n = self.ops.len();
+        // Gate-consumer degree per node (pre output bumps) drives the CSR.
+        let mut fanout = vec![0u32; n];
+        for i in 0..n {
+            if let Some(kind) = self.kind_at(i) {
+                let rec = self.fanin[i];
+                for slot in rec.iter().take(kind.arity()) {
+                    fanout[*slot as usize] += 1;
                 }
             }
         }
-        for (_, id) in &self.outputs {
-            fo[id.index()] += 1;
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + fanout[i];
         }
-        fo
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        let mut consumers = vec![0u32; offsets[n] as usize];
+        for i in 0..n {
+            if let Some(kind) = self.kind_at(i) {
+                let rec = self.fanin[i];
+                for slot in rec.iter().take(kind.arity()) {
+                    let driver = *slot as usize;
+                    consumers[cursor[driver] as usize] = i as u32;
+                    cursor[driver] += 1;
+                }
+            }
+        }
+        // Primary outputs count toward fanout but have no consumer row.
+        for &(_, id) in &self.outputs {
+            fanout[id.index()] += 1;
+        }
+        let mut depths = vec![0u32; n];
+        for i in 0..n {
+            if let Some(kind) = self.kind_at(i) {
+                let rec = self.fanin[i];
+                let mut d = 0u32;
+                for slot in rec.iter().take(kind.arity()) {
+                    d = d.max(depths[*slot as usize]);
+                }
+                depths[i] = 1 + d;
+            }
+        }
+        let depth =
+            self.outputs.iter().map(|&(_, id)| depths[id.index()]).max().unwrap_or(0);
+        Topology { fanout, offsets, consumers, depths, depth }
+    }
+
+    /// Fanout count per node (number of gate inputs each node drives;
+    /// primary outputs add `1` each). Served from the cached topology.
+    pub fn fanout_counts(&self) -> Vec<u32> {
+        self.topology().fanout_counts().to_vec()
     }
 
     /// Capacitive load per node in unit loads (sum of driven input caps;
-    /// primary outputs add `lib.output_load`).
+    /// primary outputs add `lib.output_load`). One linear pass over the
+    /// flat fanin records; the accumulation order is fixed (gate
+    /// contributions in topological order, then outputs in registration
+    /// order) so repeated calls are bit-identical.
     pub fn loads(&self, lib: &CellLib) -> Vec<f64> {
-        let mut load = vec![0.0f64; self.nodes.len()];
-        for n in &self.nodes {
-            if let Node::Gate { kind, fanin } = n {
-                let cin = lib.params(*kind).input_cap;
-                for f in fanin {
-                    load[f.index()] += cin;
+        let mut load = vec![0.0f64; self.ops.len()];
+        for i in 0..self.ops.len() {
+            if let Some(kind) = self.kind_at(i) {
+                let cin = lib.params(kind).input_cap;
+                let rec = self.fanin[i];
+                for slot in rec.iter().take(kind.arity()) {
+                    load[*slot as usize] += cin;
                 }
             }
         }
-        for (_, id) in &self.outputs {
+        for &(_, id) in &self.outputs {
             load[id.index()] += lib.output_load;
         }
         load
     }
 
     /// Logic depth (gate count) per node; inputs/constants are depth 0.
+    /// Served from the cached topology.
     pub fn depths(&self) -> Vec<u32> {
-        let mut d = vec![0u32; self.nodes.len()];
-        for (i, n) in self.nodes.iter().enumerate() {
-            if let Node::Gate { fanin, .. } = n {
-                d[i] = 1 + fanin.iter().map(|f| d[f.index()]).max().unwrap_or(0);
-            }
-        }
-        d
+        self.topology().depths().to_vec()
     }
 
-    /// Maximum logic depth over primary outputs.
+    /// Maximum logic depth over primary outputs. Served from the cached
+    /// topology.
     pub fn depth(&self) -> u32 {
-        let d = self.depths();
-        self.outputs.iter().map(|(_, id)| d[id.index()]).max().unwrap_or(0)
+        self.topology().depth()
     }
 
     /// Histogram of cell kinds, for reports.
     pub fn cell_histogram(&self) -> HashMap<CellKind, usize> {
         let mut h = HashMap::new();
-        for n in &self.nodes {
-            if let Node::Gate { kind, .. } = n {
-                *h.entry(*kind).or_insert(0) += 1;
+        for &op in &self.ops {
+            if op <= 10 {
+                *h.entry(CellKind::ALL[op as usize]).or_insert(0) += 1;
             }
         }
         h
     }
 
-    /// Structural validation: arities and topological order. Returns a
-    /// human-readable error description on failure.
+    /// Structural validation: opcodes, input ordinals and topological
+    /// order. Returns a human-readable error description on failure.
     pub fn validate(&self) -> Result<(), String> {
-        for (i, n) in self.nodes.iter().enumerate() {
-            if let Node::Gate { kind, fanin } = n {
-                if fanin.len() != kind.arity() {
-                    return Err(format!("node {i}: {kind:?} with {} fanins", fanin.len()));
-                }
-                for f in fanin {
-                    if f.index() >= i {
-                        return Err(format!("node {i}: forward/self reference to {}", f.0));
+        for i in 0..self.ops.len() {
+            let op = self.ops[i];
+            if let Some(kind) = self.kind_at(i) {
+                let rec = self.fanin[i];
+                for slot in rec.iter().take(kind.arity()) {
+                    if *slot as usize >= i {
+                        return Err(format!("node {i}: forward/self reference to {slot}"));
                     }
                 }
+            } else if op == OP_INPUT {
+                let ordinal = self.fanin[i][0] as usize;
+                if ordinal >= self.input_ids.len() || self.input_ids[ordinal].index() != i {
+                    return Err(format!("node {i}: corrupt input ordinal {ordinal}"));
+                }
+            } else if op != OP_CONST0 && op != OP_CONST1 {
+                return Err(format!("node {i}: unknown opcode {op}"));
             }
         }
-        for (name, id) in &self.outputs {
-            if id.index() >= self.nodes.len() {
+        for (name, id) in self.outputs() {
+            if id.index() >= self.ops.len() {
                 return Err(format!("output {name}: dangling node {}", id.0));
             }
         }
         Ok(())
     }
 }
+
+/// Iterator of [`Node`] views in topological order — see [`Netlist::iter`].
+#[derive(Clone)]
+pub struct NodeIter<'a> {
+    nl: &'a Netlist,
+    i: usize,
+}
+
+impl<'a> Iterator for NodeIter<'a> {
+    type Item = Node<'a>;
+
+    fn next(&mut self) -> Option<Node<'a>> {
+        if self.i >= self.nl.ops.len() {
+            return None;
+        }
+        let node = self.nl.view(self.i);
+        self.i += 1;
+        Some(node)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.nl.ops.len() - self.i;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for NodeIter<'_> {}
+
+/// Iterator over named primary outputs — see [`Netlist::outputs`].
+#[derive(Clone)]
+pub struct OutputIter<'a> {
+    nl: &'a Netlist,
+    i: usize,
+}
+
+impl<'a> Iterator for OutputIter<'a> {
+    type Item = (&'a str, NodeId);
+
+    fn next(&mut self) -> Option<(&'a str, NodeId)> {
+        let &(name, id) = self.nl.outputs.get(self.i)?;
+        self.i += 1;
+        Some((self.nl.names.get(name), id))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.nl.outputs.len() - self.i;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for OutputIter<'_> {}
 
 #[cfg(test)]
 mod tests {
@@ -359,5 +736,89 @@ mod tests {
         let lib = CellLib::nangate45();
         let expect = 3.0 * lib.params(CellKind::Xor2).area_um2;
         assert!((nl.area_um2(&lib) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_views_roundtrip_flat_storage() {
+        let mut nl = Netlist::new("views");
+        let a = nl.input_at("alpha", 0.25);
+        let b = nl.input("beta");
+        let k = nl.constant(true);
+        let g = nl.aoi21(a, b, k);
+        nl.output("g", g);
+        match nl.node(a) {
+            Node::Input { name, arrival_ns } => {
+                assert_eq!(name, "alpha");
+                assert_eq!(arrival_ns, 0.25);
+            }
+            other => panic!("not an input view: {other:?}"),
+        }
+        match nl.node(k) {
+            Node::Const(v) => assert!(v),
+            other => panic!("not a const view: {other:?}"),
+        }
+        match nl.node(g) {
+            Node::Gate { kind, fanin } => {
+                assert_eq!(kind, CellKind::Aoi21);
+                assert_eq!(fanin, &[a, b, k]);
+            }
+            other => panic!("not a gate view: {other:?}"),
+        }
+        assert_eq!(nl.iter().count(), nl.len());
+        let outs: Vec<(&str, NodeId)> = nl.outputs().collect();
+        assert_eq!(outs, vec![("g", g)]);
+        assert_eq!(nl.outputs().len(), 1);
+    }
+
+    #[test]
+    fn topology_invalidates_on_append_not_on_arrival_edit() {
+        let mut nl = xor_chain(4);
+        let t0 = nl.topology();
+        // Arrival edits keep the cached topology (same Arc).
+        let inputs = nl.inputs();
+        nl.set_input_arrival(inputs[0], 0.5);
+        let t1 = nl.topology();
+        assert!(Arc::ptr_eq(&t0, &t1), "arrival edit must not invalidate topology");
+        assert_eq!(t1.depth(), 4);
+        // Structural edits rebuild it.
+        let extra = nl.inv(inputs[0]);
+        nl.output("x", extra);
+        let t2 = nl.topology();
+        assert!(!Arc::ptr_eq(&t1, &t2), "append must invalidate topology");
+        assert_eq!(t2.fanout_counts()[inputs[0].index()], 2); // xor + inv
+        assert_eq!(t2.depths()[extra.index()], 1);
+    }
+
+    #[test]
+    fn interned_names_survive_growth() {
+        let mut nl = Netlist::new("names");
+        let ids: Vec<NodeId> =
+            (0..100).map(|k| nl.input(format!("in_{k}"))).collect();
+        let g = nl.and2(ids[0], ids[99]);
+        nl.output("the_output", g);
+        let im = nl.input_map();
+        assert_eq!(im.len(), 100);
+        assert_eq!(im["in_42"], ids[42]);
+        match nl.node(ids[7]) {
+            Node::Input { name, .. } => assert_eq!(name, "in_7"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(nl.outputs().next().unwrap().0, "the_output");
+    }
+
+    #[test]
+    fn csr_consumers_match_fanin_records() {
+        let mut nl = Netlist::new("csr");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x = nl.xor2(a, b);
+        let y = nl.and2(x, x); // duplicate sampling of one driver
+        let z = nl.or2(x, y);
+        nl.output("z", z);
+        let t = nl.topology();
+        assert_eq!(t.consumers(x.index()), &[y.0, y.0, z.0]);
+        assert_eq!(t.consumers(a.index()), &[x.0]);
+        assert_eq!(t.fanout_counts()[x.index()], 3);
+        assert_eq!(t.fanout_counts()[z.index()], 1); // the output
     }
 }

@@ -25,6 +25,13 @@
 //!             Long-lived compile service over newline-delimited JSON
 //!             (PROTOCOL.md); artifacts persist in the on-disk cache and
 //!             survive restarts.
+//!   bench-check [--baseline FILE] [--current FILE] [--max-ratio 2.0]
+//!             [--update]
+//!             Compare a `BENCH_*.json` run against the committed baseline
+//!             (CI's bench-smoke gate): every timed baseline entry must be
+//!             present and no more than `max-ratio` slower; metric entries
+//!             (speedups) must not fall below `baseline / max-ratio`.
+//!             `--update` snapshots the current run as the new baseline.
 //!
 //! Unknown `--method` / `--strategy` / `--transport` values are hard
 //! errors listing the valid choices — no silent fallback.
@@ -365,6 +372,112 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// Bench records from one `BENCH_*.json` suite file: `(name, min_ns,
+/// metric value)` — timed entries carry `min_ns`, metric entries `value`.
+fn load_bench_results(
+    path: &std::path::Path,
+) -> Result<Vec<(String, Option<f64>, Option<f64>)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let doc = ufo_mac::util::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    let results = doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{}: missing 'results' array", path.display()))?;
+    let mut out = Vec::new();
+    for r in results {
+        let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        if name.is_empty() {
+            continue;
+        }
+        let min_ns = r.get("min_ns").and_then(|v| v.as_f64());
+        let value = r.get("value").and_then(|v| v.as_f64());
+        out.push((name, min_ns, value));
+    }
+    Ok(out)
+}
+
+/// Resolve a repo-relative file against both the repo root and the cargo
+/// package root: cargo runs benches with `rust/` as cwd, while CI and
+/// humans usually sit at the repo root, so both spellings must work. When
+/// the file exists nowhere (e.g. `--update` writing a fresh baseline),
+/// falls back to the path as given.
+fn resolve_bench_path(path: &str) -> std::path::PathBuf {
+    for candidate in [path.to_string(), format!("rust/{path}"), format!("../{path}")] {
+        let p = std::path::PathBuf::from(candidate);
+        if p.exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from(path)
+}
+
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let baseline_arg = args.get("baseline").unwrap_or("rust/benches/baseline_hotpath.json");
+    let current_arg = args.get("current").unwrap_or("BENCH_hotpath.json");
+    let max_ratio = args.get_f64("max-ratio", 2.0);
+    let baseline_path = resolve_bench_path(baseline_arg);
+    let current_file = resolve_bench_path(current_arg);
+    if !current_file.exists() {
+        anyhow::bail!(
+            "current bench file '{current_arg}' not found — run \
+             `cargo bench --bench hotpath` first"
+        );
+    }
+    if args.has("update") {
+        std::fs::copy(&current_file, &baseline_path)
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", baseline_path.display()))?;
+        println!(
+            "bench-check: baseline {} updated from {}",
+            baseline_path.display(),
+            current_file.display()
+        );
+        return Ok(());
+    }
+    let base = load_bench_results(&baseline_path)?;
+    let cur = load_bench_results(&current_file)?;
+    let cur_map: std::collections::HashMap<&str, (Option<f64>, Option<f64>)> =
+        cur.iter().map(|(n, m, v)| (n.as_str(), (*m, *v))).collect();
+    let mut failures: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    for (name, min_ns, value) in &base {
+        let Some(&(cur_min, cur_val)) = cur_map.get(name.as_str()) else {
+            // Entry-set drift is surfaced but does not block: a renamed or
+            // conditionally-skipped bench should be fixed in review, while
+            // a hard failure here would make the gate brittle.
+            println!("bench-check WARNING: {name} in baseline but missing from current run");
+            continue;
+        };
+        if let (Some(b), Some(c)) = (*min_ns, cur_min) {
+            let ratio = c / b.max(1.0);
+            println!("bench-check {name}: {c:.0} ns vs baseline {b:.0} ns ({ratio:.2}x)");
+            if ratio > max_ratio {
+                failures.push(format!(
+                    "{name}: {ratio:.2}x slower than baseline (limit {max_ratio:.2}x)"
+                ));
+            }
+            compared += 1;
+        }
+        if let (Some(b), Some(c)) = (*value, cur_val) {
+            let floor = b / max_ratio;
+            println!("bench-check {name}: {c:.3} vs baseline floor {floor:.3}");
+            if c < floor {
+                failures.push(format!(
+                    "{name}: metric {c:.3} fell below {floor:.3} (baseline {b:.3} / {max_ratio:.2})"
+                ));
+            }
+            compared += 1;
+        }
+    }
+    if failures.is_empty() {
+        println!("bench-check: {compared} baseline entries OK (no hot path regressed >{max_ratio:.1}x)");
+        Ok(())
+    } else {
+        anyhow::bail!("bench-check failed:\n  {}", failures.join("\n  "))
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -378,14 +491,16 @@ fn main() {
         "ablation" => cmd_ablation(&args),
         "request" => cmd_request(&args),
         "serve" => cmd_serve(&args),
+        "bench-check" => cmd_bench_check(&args),
         _ => {
             println!(
                 "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
-                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|request|serve> [flags]\n\
+                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|request|serve|bench-check> [flags]\n\
                  methods: ufo, gomil, rlmul, commercial; strategies: area, timing, tradeoff\n\
                  serve: --transport tcp|stdio (default tcp), --addr HOST:PORT,\n\
                         --cache-dir DIR|none (default: workspace design_cache/),\n\
                         --workers N, --verify N — wire format in PROTOCOL.md\n\
+                 bench-check: --baseline FILE --current FILE --max-ratio X --update\n\
                  see rust/src/main.rs header for all flags"
             );
             Ok(())

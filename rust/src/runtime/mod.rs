@@ -15,7 +15,7 @@
 //! caller (the [`crate::api::SynthEngine`], the coordinator, the CLI
 //! `verify` subcommand) degrades to simulator-only verification.
 
-use crate::ir::{Netlist, Node};
+use crate::ir::Netlist;
 use crate::multiplier::Design;
 use crate::Result;
 use anyhow::bail;
@@ -37,6 +37,14 @@ const OP_CONST0: i32 = 11;
 const OP_CONST1: i32 = 12;
 const OP_INPUT: i32 = 13;
 
+// The artifact opcodes and the IR's flat-storage opcodes are one scheme —
+// `encode_netlist` relies on it to copy columns without translation.
+const _: () = {
+    assert!(crate::ir::OP_CONST0 as i32 == OP_CONST0);
+    assert!(crate::ir::OP_CONST1 as i32 == OP_CONST1);
+    assert!(crate::ir::OP_INPUT as i32 == OP_INPUT);
+};
+
 /// A netlist encoded for the PJRT evaluator.
 #[derive(Debug, Clone)]
 pub struct EncodedNetlist {
@@ -57,6 +65,11 @@ pub struct EncodedNetlist {
 }
 
 /// Encode a netlist into the padded artifact format.
+///
+/// The IR's flat storage already uses this opcode scheme (gate opcodes,
+/// const-0/1, input-with-ordinal-in-`f0`), so encoding is a column-wise
+/// widen-and-copy of the opcode/fanin arrays into the padded `i32` buffers
+/// — no node walk, no enum reconstruction.
 pub fn encode_netlist(nl: &Netlist) -> Result<EncodedNetlist> {
     let n_nodes = nl.len();
     let n_inputs = nl.num_inputs();
@@ -71,28 +84,18 @@ pub fn encode_netlist(nl: &Netlist) -> Result<EncodedNetlist> {
     let mut f0 = vec![0i32; max_nodes];
     let mut f1 = vec![0i32; max_nodes];
     let mut f2 = vec![0i32; max_nodes];
-    let mut input_ordinal = 0i32;
-    for (i, node) in nl.nodes().iter().enumerate() {
-        match node {
-            Node::Input { .. } => {
-                ops[i] = OP_INPUT;
-                f0[i] = input_ordinal;
-                input_ordinal += 1;
-            }
-            Node::Const(v) => {
-                ops[i] = if *v { OP_CONST1 } else { OP_CONST0 };
-            }
-            Node::Gate { kind, fanin } => {
-                ops[i] = kind.opcode();
-                f0[i] = fanin[0].0 as i32;
-                if let Some(f) = fanin.get(1) {
-                    f1[i] = f.0 as i32;
-                }
-                if let Some(f) = fanin.get(2) {
-                    f2[i] = f.0 as i32;
-                }
-            }
-        }
+    let src_ops = nl.ops();
+    let src_fan = nl.fanin_records();
+    for i in 0..n_nodes {
+        // The IR's u8 opcodes coincide with the artifact's i32 opcodes,
+        // including the const/input markers (asserted in the unit tests).
+        ops[i] = src_ops[i] as i32;
+        let rec = src_fan[i];
+        // Unused slots are zero in the flat records, matching the padded
+        // encoding; inputs carry their ordinal in slot 0.
+        f0[i] = rec[0] as i32;
+        f1[i] = rec[1] as i32;
+        f2[i] = rec[2] as i32;
     }
     Ok(EncodedNetlist { ops, f0, f1, f2, n_nodes, n_inputs, bucket })
 }

@@ -6,54 +6,35 @@
 //! ([`crate::equiv`]) and the toggle-based dynamic-power estimate in
 //! [`crate::sta`]; the same levelized evaluation is what the Pallas
 //! `netlist_eval` kernel performs on the PJRT side with u32 lanes.
+//!
+//! Since the netlist IR itself stores nodes as flat opcode/fanin arrays,
+//! [`CompiledNetlist`] is a **zero-copy borrow** of those arrays — the
+//! seed implementation paid an O(nodes) re-flattening pass (enum walk +
+//! per-gate `Vec` deref) before every equivalence run; construction is now
+//! free (EXPERIMENTS.md §Perf).
 
-use crate::ir::{Netlist, Node, NodeId};
+use crate::ir::netlist::{OP_CONST0, OP_CONST1, OP_INPUT};
+use crate::ir::{Netlist, NodeId};
 
-/// A netlist pre-compiled to a flat instruction stream: one `(op, f0, f1,
-/// f2)` record per node, no per-gate heap indirection. Compiling once and
-/// replaying is ~2× faster than walking [`Node`]s — the §Perf-optimized
-/// inner loop for equivalence checking and toggle extraction.
-#[derive(Debug, Clone)]
-pub struct CompiledNetlist {
-    ops: Vec<u8>,
-    fanin: Vec<[u32; 3]>,
+/// A netlist viewed as a flat instruction stream: one `(op, f0, f1, f2)`
+/// record per node, no per-gate heap indirection. This is a zero-copy
+/// borrow of the netlist's own struct-of-arrays storage (the IR and the
+/// simulator share one encoding: opcodes 0–10 = `CellKind::opcode`,
+/// [`OP_CONST0`], [`OP_CONST1`], [`OP_INPUT`] with the input ordinal in
+/// `f0`) — the §Perf-optimized inner loop for equivalence checking and
+/// toggle extraction, identical to the PJRT artifact encoding.
+#[derive(Debug, Clone, Copy)]
+pub struct CompiledNetlist<'a> {
+    ops: &'a [u8],
+    fanin: &'a [[u32; 3]],
     n_inputs: usize,
 }
 
-/// Opcodes: 0-10 = `CellKind::opcode`, 11 = const0, 12 = const1,
-/// 13 = input (f0 = input ordinal). Matches the PJRT artifact encoding.
-const OP_CONST0: u8 = 11;
-const OP_CONST1: u8 = 12;
-const OP_INPUT: u8 = 13;
-
-impl CompiledNetlist {
-    /// Compile a netlist into the simulator's flat op list.
-    pub fn compile(nl: &Netlist) -> Self {
-        let mut ops = Vec::with_capacity(nl.len());
-        let mut fanin = Vec::with_capacity(nl.len());
-        let mut next_input = 0u32;
-        for node in nl.nodes() {
-            match node {
-                Node::Input { .. } => {
-                    ops.push(OP_INPUT);
-                    fanin.push([next_input, 0, 0]);
-                    next_input += 1;
-                }
-                Node::Const(v) => {
-                    ops.push(if *v { OP_CONST1 } else { OP_CONST0 });
-                    fanin.push([0, 0, 0]);
-                }
-                Node::Gate { kind, fanin: f } => {
-                    ops.push(kind.opcode() as u8);
-                    let mut rec = [0u32; 3];
-                    for (k, id) in f.iter().enumerate() {
-                        rec[k] = id.0;
-                    }
-                    fanin.push(rec);
-                }
-            }
-        }
-        CompiledNetlist { ops, fanin, n_inputs: next_input as usize }
+impl<'a> CompiledNetlist<'a> {
+    /// Borrow a netlist as the simulator's flat op list. Zero-copy: the
+    /// netlist already stores this encoding.
+    pub fn compile(nl: &'a Netlist) -> Self {
+        CompiledNetlist { ops: nl.ops(), fanin: nl.fanin_records(), n_inputs: nl.num_inputs() }
     }
 
     /// Number of compiled ops (== netlist nodes).
@@ -79,7 +60,7 @@ impl CompiledNetlist {
         let b = buf.as_mut_slice();
         for i in 0..self.ops.len() {
             let [f0, f1, f2] = self.fanin[i];
-            // SAFETY: `compile` records fanins from a validated `Netlist`
+            // SAFETY: the fanin records come straight from a `Netlist`
             // whose construction (`Netlist::gate`) enforces `fanin < i <
             // len`, and input ordinals are bounded by the asserted
             // `input_words` length. Dropping the bounds checks is worth
@@ -118,7 +99,8 @@ pub struct Simulator {
 }
 
 impl Simulator {
-    /// Fresh simulator (programs are cached per netlist identity).
+    /// Fresh simulator (the per-netlist "program" is the netlist's own
+    /// flat storage, so there is nothing to cache beyond the word buffer).
     pub fn new() -> Self {
         Self::default()
     }
@@ -129,34 +111,8 @@ impl Simulator {
     /// (in creation order). Returns the packed words of every node; index
     /// with [`NodeId::index`].
     pub fn run(&mut self, nl: &Netlist, input_words: &[u64]) -> &[u64] {
-        let nodes = nl.nodes();
-        if self.words.len() != nodes.len() {
-            self.words.resize(nodes.len(), 0);
-        }
-        let mut next_input = 0usize;
-        for (i, node) in nodes.iter().enumerate() {
-            self.words[i] = match node {
-                Node::Input { .. } => {
-                    let w = input_words[next_input];
-                    next_input += 1;
-                    w
-                }
-                Node::Const(v) => {
-                    if *v {
-                        !0u64
-                    } else {
-                        0u64
-                    }
-                }
-                Node::Gate { kind, fanin } => {
-                    let a = self.words[fanin[0].index()];
-                    let b = fanin.get(1).map_or(0, |f| self.words[f.index()]);
-                    let c = fanin.get(2).map_or(0, |f| self.words[f.index()]);
-                    kind.eval(a, b, c)
-                }
-            };
-        }
-        assert_eq!(next_input, nl.num_inputs(), "input word count mismatch");
+        let comp = CompiledNetlist::compile(nl);
+        comp.run_into(&mut self.words, input_words);
         &self.words
     }
 
@@ -168,7 +124,7 @@ impl Simulator {
 
     /// Extract the named outputs as packed words.
     pub fn output_words(&self, nl: &Netlist) -> Vec<(String, u64)> {
-        nl.outputs().iter().map(|(n, id)| (n.clone(), self.words[id.index()])).collect()
+        nl.outputs().map(|(n, id)| (n.to_string(), self.words[id.index()])).collect()
     }
 }
 
@@ -209,7 +165,10 @@ pub fn pack_lanes(assignments: &[Vec<bool>]) -> Vec<u64> {
 /// the activity factor feeding the dynamic-power report.
 ///
 /// Runs `rounds`×64 random vectors (xorshift-seeded, deterministic) and
-/// returns per-node toggle probability in [0,1].
+/// returns per-node toggle probability in [0,1]. All buffers (current and
+/// previous node words, input words) are allocated once and reused across
+/// rounds — the seed implementation cloned the first round's buffer and
+/// allocated a fresh input-word `Vec` per round (EXPERIMENTS.md §Perf).
 pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
     let comp = CompiledNetlist::compile(nl);
     let mut state = seed | 1;
@@ -221,22 +180,23 @@ pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
         state.wrapping_mul(0x2545_F491_4F6C_DD1D)
     };
     let n_in = nl.num_inputs();
-    let mut prev: Option<Vec<u64>> = None;
     let mut toggles = vec![0u64; nl.len()];
     let mut total_pairs = 0u64;
-    let mut buf: Vec<u64> = Vec::new();
-    for _ in 0..rounds {
-        let words: Vec<u64> = (0..n_in).map(|_| rng()).collect();
-        comp.run_into(&mut buf, &words);
-        if let Some(p) = &mut prev {
-            for i in 0..buf.len() {
-                toggles[i] += (buf[i] ^ p[i]).count_ones() as u64;
+    let mut cur: Vec<u64> = Vec::new();
+    let mut prev: Vec<u64> = Vec::new();
+    let mut words = vec![0u64; n_in];
+    for round in 0..rounds {
+        for w in words.iter_mut() {
+            *w = rng();
+        }
+        comp.run_into(&mut cur, &words);
+        if round > 0 {
+            for i in 0..cur.len() {
+                toggles[i] += (cur[i] ^ prev[i]).count_ones() as u64;
             }
             total_pairs += 64;
-            std::mem::swap(p, &mut buf);
-        } else {
-            prev = Some(buf.clone());
         }
+        std::mem::swap(&mut cur, &mut prev);
     }
     toggles
         .iter()
@@ -313,6 +273,16 @@ mod tests {
         sim.run(&nl, &[]);
         assert_eq!(sim.word(o), 0);
         assert_eq!(sim.word(o2), !0);
+    }
+
+    #[test]
+    fn compiled_is_zero_copy_of_the_netlist() {
+        let (nl, _) = adder2();
+        let comp = CompiledNetlist::compile(&nl);
+        assert_eq!(comp.len(), nl.len());
+        assert_eq!(comp.num_inputs(), nl.num_inputs());
+        assert!(std::ptr::eq(comp.ops.as_ptr(), nl.ops().as_ptr()));
+        assert!(std::ptr::eq(comp.fanin.as_ptr(), nl.fanin_records().as_ptr()));
     }
 
     #[test]

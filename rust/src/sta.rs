@@ -7,23 +7,29 @@
 //! report. Arrival times honour per-input arrival offsets, which is how the
 //! CPA sees the compressor tree's non-uniform ("trapezoidal") profile.
 //!
-//! Two engines share one arrival formula:
+//! Two engines share one arrival formula, evaluated directly over the
+//! netlist's flat struct-of-arrays storage (EXPERIMENTS.md §Perf):
 //!
-//! - [`Sta`] — the whole-netlist engine (one levelized sweep, plus area and
-//!   toggle-based power).
+//! - [`Sta`] — the whole-netlist engine (one levelized sweep over the flat
+//!   opcode/fanin arrays, plus area and toggle-based power).
+//!   [`Sta::analyze`] serves gate count and depth from the netlist's
+//!   cached [`crate::ir::Topology`] instead of re-sweeping — the seed
+//!   implementation paid three extra full passes per report.
 //! - [`IncrementalSta`] — the engine for workloads that edit one netlist
 //!   repeatedly (arrival-profile perturbation loops, appended logic): it
-//!   caches arrival times, loads and the fan-out adjacency and, after an
-//!   edit (input-arrival change, appended gates), re-times **only the
-//!   fan-out cones of the changed cells** through a dirty-set worklist.
+//!   caches arrival times and loads, shares the netlist's cached CSR
+//!   fan-out adjacency (no private adjacency rebuild), and after an edit
+//!   (input-arrival change, appended gates) re-times **only the fan-out
+//!   cones of the changed cells** through a dirty-set worklist.
 //!   Arrival times are bit-identical to a full [`Sta::arrivals_ns`] sweep
-//!   — both paths evaluate the same [`node_arrival_ns`] formula — and
+//!   — both paths evaluate the same arrival formula — and
 //!   [`TimingStats`] records how much work the incremental path avoided.
 
-use crate::ir::{CellLib, Netlist, Node, NodeId};
+use crate::ir::netlist::OP_INPUT;
+use crate::ir::{CellKind, CellLib, Netlist, Node, NodeId, Topology};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-
+use std::sync::Arc;
 
 /// Timing/area/power report for one netlist.
 #[derive(Debug, Clone)]
@@ -70,19 +76,57 @@ impl Default for Sta {
     }
 }
 
-/// Arrival time of node `i` given the arrivals of its fan-ins and its
-/// capacitive load — the one formula both [`Sta`] (full sweep) and
-/// [`IncrementalSta`] (dirty-cone re-timing) evaluate, so the two engines
-/// agree bit-for-bit.
+/// Arrival time of a node given the arrivals of its fan-ins and its
+/// capacitive load, evaluated on a [`Node`] view — the reference form of
+/// the one formula both engines implement. The hot loops evaluate the
+/// private `arrival_flat` kernel over the flat arrays instead; the two
+/// are operation-for-operation identical (`rust/tests/ir_flat.rs` pins
+/// them bit-for-bit against each other).
 #[inline]
-pub fn node_arrival_ns(lib: &CellLib, node: &Node, at: &[f64], load: f64) -> f64 {
+pub fn node_arrival_ns(lib: &CellLib, node: Node<'_>, at: &[f64], load: f64) -> f64 {
     match node {
-        Node::Input { arrival_ns, .. } => *arrival_ns,
+        Node::Input { arrival_ns, .. } => arrival_ns,
         Node::Const(_) => 0.0,
         Node::Gate { kind, fanin } => {
             let worst = fanin.iter().map(|f| at[f.index()]).fold(f64::MIN, f64::max);
-            worst + lib.delay_ns(*kind, load)
+            worst + lib.delay_ns(kind, load)
         }
+    }
+}
+
+/// The flat-array arrival kernel shared by [`Sta::arrivals_ns`] and
+/// [`IncrementalSta::propagate`]: no enum construction, no per-gate heap
+/// indirection. `ops`/`fan` are the netlist's flat node arrays, `arr` the
+/// per-ordinal input arrivals.
+#[inline]
+fn arrival_flat(
+    lib: &CellLib,
+    ops: &[u8],
+    fan: &[[u32; 3]],
+    arr: &[f64],
+    at: &[f64],
+    load: f64,
+    i: usize,
+) -> f64 {
+    let op = ops[i];
+    if op <= 10 {
+        let kind = CellKind::ALL[op as usize];
+        let rec = fan[i];
+        // Same fold order as the `Node`-view formula: left-to-right max
+        // seeded by the first fanin ⇒ bit-identical floats.
+        let mut worst = at[rec[0] as usize];
+        let arity = kind.arity();
+        if arity > 1 {
+            worst = worst.max(at[rec[1] as usize]);
+        }
+        if arity > 2 {
+            worst = worst.max(at[rec[2] as usize]);
+        }
+        worst + lib.delay_ns(kind, load)
+    } else if op == OP_INPUT {
+        arr[fan[i][0] as usize]
+    } else {
+        0.0
     }
 }
 
@@ -92,21 +136,28 @@ impl Sta {
         Sta { lib, ..Default::default() }
     }
 
-    /// Arrival time (ns) of every node: one levelized forward sweep.
+    /// Arrival time (ns) of every node: one levelized forward sweep over
+    /// the flat arrays.
     pub fn arrivals_ns(&self, nl: &Netlist) -> Vec<f64> {
         let loads = nl.loads(&self.lib);
+        let ops = nl.ops();
+        let fan = nl.fanin_records();
+        let arr = nl.input_arrivals();
         let mut at = vec![0.0f64; nl.len()];
-        for (i, node) in nl.nodes().iter().enumerate() {
-            at[i] = node_arrival_ns(&self.lib, node, &at, loads[i]);
+        for i in 0..ops.len() {
+            at[i] = arrival_flat(&self.lib, ops, fan, arr, &at, loads[i], i);
         }
         at
     }
 
-    /// Full report: timing + area + toggle-based dynamic power.
+    /// Full report: timing + area + toggle-based dynamic power. Gate count
+    /// is O(1) and depth comes from the cached topology — no extra sweeps
+    /// beyond the one arrival pass (and the power simulation when
+    /// `activity_rounds > 0`).
     pub fn analyze(&self, nl: &Netlist) -> StaReport {
         let at = self.arrivals_ns(nl);
         let output_arrivals_ns: Vec<f64> =
-            nl.outputs().iter().map(|(_, id)| at[id.index()]).collect();
+            nl.outputs().map(|(_, id)| at[id.index()]).collect();
         let critical_delay_ns =
             output_arrivals_ns.iter().copied().fold(0.0f64, f64::max);
         let area_um2 = nl.area_um2(&self.lib);
@@ -117,7 +168,7 @@ impl Sta {
             power_mw,
             output_arrivals_ns,
             num_gates: nl.num_gates(),
-            depth: nl.depth(),
+            depth: nl.topology().depth(),
         }
     }
 
@@ -129,9 +180,10 @@ impl Sta {
             vec![self.default_activity; nl.len()]
         };
         let mut energy_fj_per_cycle = 0.0;
-        for (i, node) in nl.nodes().iter().enumerate() {
-            if let Node::Gate { kind, .. } = node {
-                energy_fj_per_cycle += activities[i] * self.lib.params(*kind).switch_energy_fj;
+        for (i, &op) in nl.ops().iter().enumerate() {
+            if op <= 10 {
+                let kind = CellKind::ALL[op as usize];
+                energy_fj_per_cycle += activities[i] * self.lib.params(kind).switch_energy_fj;
             }
         }
         // fJ/cycle × GHz = µW; report mW.
@@ -209,30 +261,33 @@ impl TimingStats {
 
 /// Incremental arrival-time engine over one netlist.
 ///
-/// Holds the arrival vector, per-node loads and the fan-out adjacency of a
-/// netlist, and re-times **only the fan-out cones of changed cells**:
+/// Holds the arrival vector and per-node loads of a netlist, shares the
+/// netlist's cached CSR fan-out adjacency ([`Netlist::topology`] — no
+/// private adjacency rebuild), and re-times **only the fan-out cones of
+/// changed cells**:
 ///
 /// - [`IncrementalSta::touch`] marks a cell whose inputs changed (e.g. an
 ///   input whose arrival was edited via
 ///   [`Netlist::set_input_arrival`]);
 /// - [`IncrementalSta::sync`] absorbs gates appended to the netlist since
-///   the last sync (netlists are append-only), dirtying the appended cone
-///   *and* the existing drivers whose loads the new gates increased;
+///   the last sync (netlists are append-only), refreshing the shared
+///   topology and dirtying the appended cone *and* the existing drivers
+///   whose loads the new gates increased;
 /// - [`IncrementalSta::propagate`] drains the dirty set in topological
 ///   order, stopping each ray as soon as a recomputed arrival is unchanged.
 ///
 /// Arrival times after `propagate` are bit-identical to a fresh
 /// [`Sta::arrivals_ns`] sweep over the same netlist: both paths evaluate
-/// [`node_arrival_ns`] with bit-identical load vectors, and a node is
-/// skipped only when every quantity its arrival depends on is unchanged.
+/// the same flat arrival kernel with bit-identical load vectors, and a
+/// node is skipped only when every quantity its arrival depends on is
+/// unchanged.
 #[derive(Debug, Clone)]
 pub struct IncrementalSta {
     lib: CellLib,
     at: Vec<f64>,
     loads: Vec<f64>,
-    /// `consumers[i]` = gate nodes that read node `i` (duplicates allowed
-    /// for gates sampling one driver twice).
-    consumers: Vec<Vec<u32>>,
+    /// Shared topology snapshot (CSR consumers) of the synced netlist.
+    topo: Arc<Topology>,
     /// Netlist nodes already absorbed.
     synced_nodes: usize,
     /// Primary outputs already absorbed into the load vector.
@@ -245,24 +300,22 @@ pub struct IncrementalSta {
 impl IncrementalSta {
     /// Build the engine with one full timing pass over `nl`.
     pub fn new(sta: &Sta, nl: &Netlist) -> Self {
+        let topo = nl.topology();
         let loads = nl.loads(&sta.lib);
+        let ops = nl.ops();
+        let fan = nl.fanin_records();
+        let arr = nl.input_arrivals();
         let mut at = vec![0.0f64; nl.len()];
-        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); nl.len()];
-        for (i, node) in nl.nodes().iter().enumerate() {
-            at[i] = node_arrival_ns(&sta.lib, node, &at, loads[i]);
-            if let Node::Gate { fanin, .. } = node {
-                for f in fanin {
-                    consumers[f.index()].push(i as u32);
-                }
-            }
+        for i in 0..ops.len() {
+            at[i] = arrival_flat(&sta.lib, ops, fan, arr, &at, loads[i], i);
         }
         IncrementalSta {
             lib: sta.lib.clone(),
             at,
             loads,
-            consumers,
+            topo,
             synced_nodes: nl.len(),
-            synced_outputs: nl.outputs().len(),
+            synced_outputs: nl.num_outputs(),
             dirty: BinaryHeap::new(),
             in_dirty: vec![false; nl.len()],
             stats: TimingStats::full_pass(nl.len()),
@@ -285,12 +338,15 @@ impl IncrementalSta {
 
     /// Absorb nodes and outputs appended to `nl` since the last sync.
     ///
-    /// Loads are recomputed wholesale (bit-identical to [`Netlist::loads`];
-    /// cheap integer/float accumulation), then diffed: an existing driver
-    /// whose load grew is dirtied — its own delay changed — alongside every
-    /// appended cell, so `propagate` re-times exactly the affected cones.
+    /// Refreshes the shared topology (the netlist invalidated its cache on
+    /// append, so this is one rebuild shared with every other consumer),
+    /// then recomputes loads wholesale (bit-identical to
+    /// [`Netlist::loads`]; cheap integer/float accumulation) and diffs
+    /// them: an existing driver whose load grew is dirtied — its own delay
+    /// changed — alongside every appended cell, so `propagate` re-times
+    /// exactly the affected cones.
     pub fn sync(&mut self, nl: &Netlist) {
-        if nl.len() == self.synced_nodes && nl.outputs().len() == self.synced_outputs {
+        if nl.len() == self.synced_nodes && nl.num_outputs() == self.synced_outputs {
             return;
         }
         assert!(
@@ -301,14 +357,7 @@ impl IncrementalSta {
         );
         self.at.resize(nl.len(), 0.0);
         self.in_dirty.resize(nl.len(), false);
-        self.consumers.resize(nl.len(), Vec::new());
-        for i in self.synced_nodes..nl.len() {
-            if let Node::Gate { fanin, .. } = &nl.nodes()[i] {
-                for f in fanin {
-                    self.consumers[f.index()].push(i as u32);
-                }
-            }
-        }
+        self.topo = nl.topology();
         // Recompute loads exactly as a fresh pass would (same accumulation
         // order ⇒ same floats), then dirty every node whose load changed.
         let loads = nl.loads(&self.lib);
@@ -322,7 +371,7 @@ impl IncrementalSta {
         }
         self.loads = loads;
         self.synced_nodes = nl.len();
-        self.synced_outputs = nl.outputs().len();
+        self.synced_outputs = nl.num_outputs();
     }
 
     /// Drain the dirty set in topological order, re-timing each dirty cell
@@ -330,6 +379,10 @@ impl IncrementalSta {
     /// the number of cells re-timed.
     pub fn propagate(&mut self, nl: &Netlist) -> usize {
         debug_assert_eq!(nl.len(), self.synced_nodes, "sync() before propagate()");
+        let topo = Arc::clone(&self.topo);
+        let ops = nl.ops();
+        let fan = nl.fanin_records();
+        let arr = nl.input_arrivals();
         let mut retimed = 0usize;
         while let Some(Reverse(i)) = self.dirty.pop() {
             let i = i as usize;
@@ -337,12 +390,12 @@ impl IncrementalSta {
                 continue; // stale duplicate heap entry
             }
             self.in_dirty[i] = false;
-            let new = node_arrival_ns(&self.lib, &nl.nodes()[i], &self.at, self.loads[i]);
+            let new = arrival_flat(&self.lib, ops, fan, arr, &self.at, self.loads[i], i);
             retimed += 1;
             if new != self.at[i] {
                 self.at[i] = new;
-                for c in 0..self.consumers[i].len() {
-                    let consumer = self.consumers[i][c] as usize;
+                for &consumer in topo.consumers(i) {
+                    let consumer = consumer as usize;
                     if !self.in_dirty[consumer] {
                         self.in_dirty[consumer] = true;
                         self.dirty.push(Reverse(consumer as u32));
@@ -369,12 +422,12 @@ impl IncrementalSta {
 
     /// Worst arrival over primary outputs (ns).
     pub fn critical_delay_ns(&self, nl: &Netlist) -> f64 {
-        nl.outputs().iter().map(|(_, id)| self.at[id.index()]).fold(0.0f64, f64::max)
+        nl.outputs().map(|(_, id)| self.at[id.index()]).fold(0.0f64, f64::max)
     }
 
     /// Arrival time per primary output, in output order (ns).
     pub fn output_arrivals(&self, nl: &Netlist) -> Vec<f64> {
-        nl.outputs().iter().map(|(_, id)| self.at[id.index()]).collect()
+        nl.outputs().map(|(_, id)| self.at[id.index()]).collect()
     }
 
     /// Cumulative work counters for this engine.
@@ -445,6 +498,21 @@ mod tests {
     }
 
     #[test]
+    fn view_formula_matches_flat_kernel() {
+        // node_arrival_ns (Node view) and arrival_flat (hot kernel) are the
+        // same formula, bit for bit.
+        let nl = xor_chain(9);
+        let sta = Sta::default();
+        let loads = nl.loads(&sta.lib);
+        let flat = sta.arrivals_ns(&nl);
+        let mut at = vec![0.0f64; nl.len()];
+        for i in 0..nl.len() {
+            at[i] = node_arrival_ns(&sta.lib, nl.node(NodeId(i as u32)), &at, loads[i]);
+        }
+        assert_eq!(at, flat);
+    }
+
+    #[test]
     fn wns_sign_convention() {
         let rep = StaReport {
             critical_delay_ns: 1.5,
@@ -512,7 +580,7 @@ mod tests {
         // Tap a mid-chain *gate*: its load grows, so the gate itself and the
         // whole chain suffix behind it must re-time.
         let mid_gate = (0..nl.len())
-            .filter(|&i| matches!(nl.nodes()[i], Node::Gate { .. }))
+            .filter(|&i| nl.kind_at(i).is_some())
             .map(|i| NodeId(i as u32))
             .nth(2)
             .unwrap();

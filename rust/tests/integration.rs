@@ -333,7 +333,6 @@ fn failure_injection_detected() {
         // Flip one random gate kind to a different function.
         let gates: Vec<usize> = d
             .netlist
-            .nodes()
             .iter()
             .enumerate()
             .filter(|(_, n)| matches!(n, Node::Gate { kind, .. } if kind.arity() == 2))
@@ -341,13 +340,13 @@ fn failure_injection_detected() {
             .collect();
         let pick = gates[rng.index(gates.len())];
         let mut nl = Netlist::new(d.netlist.name.clone());
-        for (i, node) in d.netlist.nodes().iter().enumerate() {
+        for (i, node) in d.netlist.iter().enumerate() {
             match node {
                 Node::Input { name, arrival_ns } => {
-                    nl.input_at(name.clone(), *arrival_ns);
+                    nl.input_at(name, arrival_ns);
                 }
                 Node::Const(v) => {
-                    nl.constant(*v);
+                    nl.constant(v);
                 }
                 Node::Gate { kind, fanin } => {
                     let k = if i == pick {
@@ -357,17 +356,17 @@ fn failure_injection_detected() {
                             CellKind::Nand2 => CellKind::Nor2,
                             CellKind::Or2 => CellKind::And2,
                             CellKind::Nor2 => CellKind::Nand2,
-                            other => *other,
+                            other => other,
                         }
                     } else {
-                        *kind
+                        kind
                     };
                     nl.gate(k, fanin);
                 }
             }
         }
         for (name, id) in d.netlist.outputs() {
-            nl.output(name.clone(), *id);
+            nl.output(name, id);
         }
         d.netlist = nl;
         let rep = ufo_mac::equiv::check_multiplier(&d).unwrap();

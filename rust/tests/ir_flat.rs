@@ -1,0 +1,222 @@
+//! Flat-IR acceptance tests (the struct-of-arrays tentpole): the flat
+//! netlist must be observationally identical to the classic enum-per-node
+//! IR — bit-identical STA arrivals and loads, identical simulation words,
+//! identical area/gate-count/depth and byte-identical Verilog and
+//! serialization — across the tier-1 design families. The parallel
+//! equivalence sweep must report the identical counterexample and vector
+//! count for every worker count.
+
+use ufo_mac::api::persist::{netlist_from_json, netlist_to_json};
+use ufo_mac::equiv::{self, EquivOptions};
+use ufo_mac::ir::{CellLib, Netlist, Node, NodeId};
+use ufo_mac::multiplier::{Design, MultiplierSpec, OperandFormat};
+use ufo_mac::ppg::PpgKind;
+use ufo_mac::sim::{CompiledNetlist, Simulator};
+use ufo_mac::sta::{node_arrival_ns, Sta};
+use ufo_mac::synth::verilog;
+use ufo_mac::util::Rng;
+
+/// One design per tier-1 family: plain UFO multiplier, Booth PPG, fused
+/// MAC, separate MAC, signed rectangular.
+fn families() -> Vec<Design> {
+    vec![
+        MultiplierSpec::new(8).build().unwrap(),
+        MultiplierSpec::new(4).ppg(PpgKind::Booth4).build().unwrap(),
+        MultiplierSpec::new(4).fused_mac(true).build().unwrap(),
+        MultiplierSpec::new(4).separate_mac(true).build().unwrap(),
+        MultiplierSpec::new_fmt(OperandFormat::signed_rect(3, 5)).build().unwrap(),
+    ]
+}
+
+/// Reference loads computed the seed way, over `Node` views.
+fn view_loads(nl: &Netlist, lib: &CellLib) -> Vec<f64> {
+    let mut load = vec![0.0f64; nl.len()];
+    for n in nl.iter() {
+        if let Node::Gate { kind, fanin } = n {
+            let cin = lib.params(kind).input_cap;
+            for f in fanin {
+                load[f.index()] += cin;
+            }
+        }
+    }
+    for (_, id) in nl.outputs() {
+        load[id.index()] += lib.output_load;
+    }
+    load
+}
+
+#[test]
+fn flat_sta_matches_view_reference_bit_for_bit() {
+    let sta = Sta { activity_rounds: 0, ..Sta::default() };
+    for d in families() {
+        let nl = &d.netlist;
+        let ctx = nl.name.clone();
+        // Loads: view accumulation == flat accumulation, bit for bit.
+        let loads = view_loads(nl, &sta.lib);
+        assert_eq!(loads, nl.loads(&sta.lib), "{ctx}: loads");
+        // Arrivals: the seed per-node view formula == the flat sweep.
+        let mut at = vec![0.0f64; nl.len()];
+        for i in 0..nl.len() {
+            at[i] = node_arrival_ns(&sta.lib, nl.node(NodeId(i as u32)), &at, loads[i]);
+        }
+        assert_eq!(at, sta.arrivals_ns(nl), "{ctx}: arrivals");
+        // Report quantities served by the O(1) counter / cached topology.
+        let rep = sta.analyze(nl);
+        let view_gates = nl.iter().filter(|n| matches!(n, Node::Gate { .. })).count();
+        assert_eq!(rep.num_gates, view_gates, "{ctx}: gate count");
+        let mut depths = vec![0u32; nl.len()];
+        for (i, n) in nl.iter().enumerate() {
+            if let Node::Gate { fanin, .. } = n {
+                depths[i] = 1 + fanin.iter().map(|f| depths[f.index()]).max().unwrap_or(0);
+            }
+        }
+        let view_depth = nl.outputs().map(|(_, id)| depths[id.index()]).max().unwrap_or(0);
+        assert_eq!(rep.depth, view_depth, "{ctx}: depth");
+        let view_area: f64 = nl
+            .iter()
+            .map(|n| match n {
+                Node::Gate { kind, .. } => sta.lib.params(kind).area_um2,
+                _ => 0.0,
+            })
+            .sum();
+        assert_eq!(rep.area_um2, view_area, "{ctx}: area");
+    }
+}
+
+#[test]
+fn flat_simulation_matches_view_interpreter() {
+    // A seed-style interpreter over Node views vs the zero-copy compiled
+    // run — every node word must agree, on every family.
+    let mut rng = Rng::seed_from_u64(0xF1A7);
+    for d in families() {
+        let nl = &d.netlist;
+        for _ in 0..4 {
+            let words: Vec<u64> = (0..nl.num_inputs()).map(|_| rng.next_u64()).collect();
+            let mut view_vals = vec![0u64; nl.len()];
+            let mut next_input = 0usize;
+            for (i, n) in nl.iter().enumerate() {
+                view_vals[i] = match n {
+                    Node::Input { .. } => {
+                        let w = words[next_input];
+                        next_input += 1;
+                        w
+                    }
+                    Node::Const(v) => {
+                        if v {
+                            !0u64
+                        } else {
+                            0u64
+                        }
+                    }
+                    Node::Gate { kind, fanin } => {
+                        let a = view_vals[fanin[0].index()];
+                        let b = fanin.get(1).map_or(0, |f| view_vals[f.index()]);
+                        let c = fanin.get(2).map_or(0, |f| view_vals[f.index()]);
+                        kind.eval(a, b, c)
+                    }
+                };
+            }
+            let comp = CompiledNetlist::compile(nl);
+            let mut buf = Vec::new();
+            comp.run_into(&mut buf, &words);
+            assert_eq!(buf, view_vals, "{}: compiled vs view interpreter", nl.name);
+            let mut sim = Simulator::new();
+            assert_eq!(sim.run(nl, &words), &view_vals[..], "{}: simulator", nl.name);
+        }
+    }
+}
+
+#[test]
+fn verilog_is_identical_after_view_roundtrip() {
+    // Rebuilding a netlist through the Node-view API must reproduce the
+    // emitted Verilog byte for byte — the views carry complete structure.
+    for d in families() {
+        let nl = &d.netlist;
+        let mut rebuilt = Netlist::new(nl.name.clone());
+        for n in nl.iter() {
+            match n {
+                Node::Input { name, arrival_ns } => {
+                    rebuilt.input_at(name, arrival_ns);
+                }
+                Node::Const(v) => {
+                    rebuilt.constant(v);
+                }
+                Node::Gate { kind, fanin } => {
+                    rebuilt.gate(kind, fanin);
+                }
+            }
+        }
+        for (name, id) in nl.outputs() {
+            rebuilt.output(name, id);
+        }
+        rebuilt.validate().unwrap();
+        assert_eq!(verilog::emit(nl), verilog::emit(&rebuilt), "{}", nl.name);
+    }
+}
+
+#[test]
+fn persisted_netlist_roundtrips_from_flat_arrays() {
+    // netlist_to_json reads the flat arrays directly; the reconstruction
+    // must re-serialize byte-identically and simulate identically.
+    let mut rng = Rng::seed_from_u64(0x5E7A);
+    for d in families() {
+        let j = netlist_to_json(&d.netlist);
+        let back = netlist_from_json(&j).unwrap();
+        assert_eq!(j.render(), netlist_to_json(&back).render(), "{}", d.netlist.name);
+        assert_eq!(back.len(), d.netlist.len());
+        assert_eq!(back.num_inputs(), d.netlist.num_inputs());
+        assert_eq!(back.num_outputs(), d.netlist.num_outputs());
+        let words: Vec<u64> =
+            (0..d.netlist.num_inputs()).map(|_| rng.next_u64()).collect();
+        let mut sim = Simulator::new();
+        let orig = sim.run(&d.netlist, &words).to_vec();
+        let mut sim2 = Simulator::new();
+        assert_eq!(sim2.run(&back, &words), &orig[..], "{}", d.netlist.name);
+    }
+}
+
+#[test]
+fn parallel_equiv_reports_identical_counterexamples() {
+    // Inject a fault, then sweep with 1/2/4/7 workers: the counterexample,
+    // the vector count and the exhaustive flag must be identical — the
+    // batch plan and min-index failure selection are worker-count-free.
+    let mut small = MultiplierSpec::new(8).build().unwrap();
+    small.product[5] = small.product[6]; // exhaustive path (16 operand bits)
+    let mut big = MultiplierSpec::new(16).build().unwrap();
+    big.product[9] = big.product[3]; // sampled path (32 operand bits)
+    for d in [&small, &big] {
+        let reports: Vec<_> = [1usize, 2, 4, 7]
+            .iter()
+            .map(|&threads| {
+                equiv::check_multiplier_opts(d, &EquivOptions { budget: 4096, threads })
+                    .unwrap()
+            })
+            .collect();
+        let first = &reports[0];
+        assert!(!first.passed, "{}: fault not detected", d.netlist.name);
+        assert!(first.counterexample.is_some());
+        for r in &reports[1..] {
+            assert_eq!(r.passed, first.passed, "{}", d.netlist.name);
+            assert_eq!(r.exhaustive, first.exhaustive, "{}", d.netlist.name);
+            assert_eq!(r.vectors, first.vectors, "{}", d.netlist.name);
+            assert_eq!(
+                r.counterexample, first.counterexample,
+                "{}: counterexample depends on worker count",
+                d.netlist.name
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_equiv_matches_serial_on_passing_designs() {
+    let d = MultiplierSpec::new(16).fused_mac(true).build().unwrap();
+    let serial =
+        equiv::check_multiplier_opts(&d, &EquivOptions { budget: 2048, threads: 1 }).unwrap();
+    let parallel =
+        equiv::check_multiplier_opts(&d, &EquivOptions { budget: 2048, threads: 4 }).unwrap();
+    assert!(serial.passed && parallel.passed);
+    assert!(!serial.exhaustive && !parallel.exhaustive);
+    assert_eq!(serial.vectors, parallel.vectors);
+    assert!(serial.vectors >= 2048);
+}
