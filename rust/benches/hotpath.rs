@@ -167,9 +167,23 @@ fn main() {
         "x",
     );
 
+    // Full static-analysis sweep on a 32×32 design: the structural passes
+    // over the cached CSR topology plus every datapath check the build
+    // trace supports — the per-compile cost the engine's lint gate adds.
+    let (d32, d32_trace) = MultiplierSpec::new(32).build_with_trace(&lib, &tm).unwrap();
+    bench.bench("lint_full_32x32", || {
+        ufo_mac::lint::lint_design(
+            &d32,
+            Some(&d32_trace),
+            &lib,
+            &ufo_mac::lint::LintOptions::default(),
+        )
+        .diagnostics
+        .len()
+    });
+
     // Sampled equivalence at 32×32: one worker vs all cores over the same
     // deterministic batch plan (identical counterexamples by design).
-    let d32 = MultiplierSpec::new(32).build().unwrap();
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
     let eq_budget = 1usize << 14;
     let eq_ser = bench.bench("equiv_sampled_32x32_serial", || {

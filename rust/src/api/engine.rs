@@ -14,8 +14,9 @@ use super::request::{DesignRequest, Fingerprint, MethodRequest, ModuleKind};
 use crate::baselines::{self, BaselineBudget};
 use crate::coordinator::pool;
 use crate::ir::{CellLib, Netlist, NodeId};
+use crate::lint::{self, LintOptions, LintReport, Severity};
 use crate::modules::{self, ModuleReport};
-use crate::multiplier::Design;
+use crate::multiplier::{DatapathTrace, Design};
 use crate::runtime::{default_artifact_dir, verify_design_pjrt, Runtime};
 use crate::sta::{Sta, StaReport, TimingStats};
 use crate::synth::CompressorTiming;
@@ -45,6 +46,12 @@ pub struct EngineConfig {
     /// back — across process restarts — without recompiling (see
     /// `PROTOCOL.md` for the entry format).
     pub cache_dir: Option<PathBuf>,
+    /// Lint gate: a freshly synthesized design whose [`LintReport`]
+    /// reaches this severity is rejected (the compile fails *before* any
+    /// equivalence simulation). `None` disables the gate; the default
+    /// denies [`Severity::Error`]. The report itself is stored on the
+    /// artifact either way.
+    pub lint_deny: Option<Severity>,
 }
 
 impl Default for EngineConfig {
@@ -55,6 +62,7 @@ impl Default for EngineConfig {
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
             cache_shards: 16,
             cache_dir: None,
+            lint_deny: Some(Severity::Error),
         }
     }
 }
@@ -146,6 +154,11 @@ pub struct DesignArtifact {
     pub verified: Option<bool>,
     /// PJRT artifact cross-check (None without runtime/artifacts).
     pub pjrt_verified: Option<bool>,
+    /// Static-analysis report of the compiled payload — the full
+    /// structural + datapath sweep for freshly synthesized designs,
+    /// structural-only for module bodies. `None` for artifacts rehydrated
+    /// from disk entries written before the lint subsystem existed.
+    pub lint: Option<LintReport>,
 }
 
 impl DesignArtifact {
@@ -400,17 +413,40 @@ impl SynthEngine {
         pool::par_map_scoped(self.cfg.workers, reqs.to_vec(), |req| one(&req))
     }
 
+    /// Compile (or fetch) a request and return its static-analysis report
+    /// alongside the artifact and how it was obtained.
+    ///
+    /// Cached artifacts reuse the report stored at synthesis time;
+    /// artifacts rehydrated from pre-lint disk entries fall back to a
+    /// fresh structural-only sweep of the cached netlist (the datapath
+    /// evidence is never persisted). The `ufo-mac lint` CLI and the
+    /// server's `lint` command are thin wrappers over this.
+    pub fn lint(
+        &self,
+        req: &DesignRequest,
+    ) -> Result<(LintReport, Arc<DesignArtifact>, CompileSource)> {
+        let (art, src) = self.compile_traced(req)?;
+        let report = match &art.lint {
+            Some(r) => r.clone(),
+            None => LintReport::from_diagnostics(lint::lint_netlist(
+                art.netlist(),
+                &LintOptions::default(),
+            )),
+        };
+        Ok((report, art, src))
+    }
+
     // ---------------------------------------------------------------
 
     fn build_artifact(&self, canon: &DesignRequest, fp: Fingerprint) -> Result<DesignArtifact> {
         match canon {
             DesignRequest::Multiplier(m) => {
-                let design = m.to_spec().build_with(&self.lib, &self.tm)?;
-                self.finish_design(canon.clone(), fp, design)
+                let (design, trace) = m.to_spec().build_with_trace(&self.lib, &self.tm)?;
+                self.finish_design(canon.clone(), fp, design, Some(&trace))
             }
             DesignRequest::Method(mr) => {
-                let design = self.build_method(mr)?;
-                self.finish_design(canon.clone(), fp, design)
+                let (design, trace) = self.build_method(mr)?;
+                self.finish_design(canon.clone(), fp, design, Some(&trace))
             }
             DesignRequest::Module(m) => {
                 // The stage/PE wraps an inner method design that is itself
@@ -435,6 +471,13 @@ impl SynthEngine {
                         let mut timing = inner_art.timing;
                         timing.merge(&TimingStats::full_pass(netlist.len()));
                         let report = modules::fir::report_from_stage(&rep, m.n, m.freq_hz);
+                        // Module bodies carry no datapath trace (the stage
+                        // adder is not a compressor tree); structural-only.
+                        let lint_rep = LintReport::from_diagnostics(lint::lint_netlist(
+                            &netlist,
+                            &LintOptions::default(),
+                        ));
+                        self.lint_gate(&lint_rep)?;
                         Ok(DesignArtifact {
                             request: canon.clone(),
                             fingerprint: fp,
@@ -443,6 +486,7 @@ impl SynthEngine {
                             body: ArtifactBody::FirStage { netlist, y, report },
                             verified: None,
                             pjrt_verified: None,
+                            lint: Some(lint_rep),
                         })
                     }
                     ModuleKind::Systolic => {
@@ -450,6 +494,10 @@ impl SynthEngine {
                         let mut timing = inner_art.timing;
                         timing.merge(&TimingStats::full_pass(design.netlist.len()));
                         let report = modules::systolic::report_from_pe(&rep, m.n, m.freq_hz);
+                        // The PE *is* the inner design's netlist — its full
+                        // lint (run when the inner compile finished) carries
+                        // over unchanged.
+                        let lint_rep = inner_art.lint.clone();
                         Ok(DesignArtifact {
                             request: canon.clone(),
                             fingerprint: fp,
@@ -458,6 +506,7 @@ impl SynthEngine {
                             body: ArtifactBody::SystolicPe { pe: design.clone(), report },
                             verified: inner_art.verified,
                             pjrt_verified: inner_art.pjrt_verified,
+                            lint: lint_rep,
                         })
                     }
                 }
@@ -467,7 +516,7 @@ impl SynthEngine {
 
     /// Build a method-form request (post-canonicalization this is only the
     /// search-based RL-MUL, but any method compiles correctly).
-    fn build_method(&self, mr: &MethodRequest) -> Result<Design> {
+    fn build_method(&self, mr: &MethodRequest) -> Result<(Design, DatapathTrace)> {
         let fmt = crate::ppg::OperandFormat {
             signedness: mr.signedness,
             a_bits: mr.n,
@@ -481,7 +530,19 @@ impl SynthEngine {
             &mr.budget,
             &self.lib,
         );
-        spec.build_with(&self.lib, &self.tm)
+        spec.build_with_trace(&self.lib, &self.tm)
+    }
+
+    /// Fail the compile when the report reaches the configured deny
+    /// severity. The rendered diagnostics travel in the error so callers
+    /// (CLI, server) surface *what* was wrong, not just that the gate fired.
+    fn lint_gate(&self, report: &LintReport) -> Result<()> {
+        if let Some(deny) = self.cfg.lint_deny {
+            if report.denies(deny) {
+                return Err(anyhow!("lint gate rejected the design:\n{report}"));
+            }
+        }
+        Ok(())
     }
 
     fn finish_design(
@@ -489,12 +550,17 @@ impl SynthEngine {
         request: DesignRequest,
         fingerprint: Fingerprint,
         design: Design,
+        trace: Option<&DatapathTrace>,
     ) -> Result<DesignArtifact> {
         let sta = self.sta.analyze(&design.netlist);
         // Build-time work (the CPA's incremental optimize loop) plus the
         // engine's own full analysis pass.
         let mut timing = design.timing;
         timing.merge(&TimingStats::full_pass(design.netlist.len()));
+        // Static analysis gates the compile *before* simulation is paid
+        // for: a malformed candidate never reaches the equivalence sweep.
+        let lint_rep = lint::lint_design(&design, trace, &self.lib, &LintOptions::default());
+        self.lint_gate(&lint_rep)?;
         let verified = if self.cfg.verify_vectors > 0 {
             // Single-threaded sweep: compiles already fan out across the
             // engine's worker pool (compile_batch, the server), so a
@@ -514,6 +580,7 @@ impl SynthEngine {
             body: ArtifactBody::Design(design),
             verified,
             pjrt_verified,
+            lint: Some(lint_rep),
         })
     }
 
@@ -582,6 +649,36 @@ mod tests {
         let art = eng.compile(&DesignRequest::multiplier(4)).unwrap();
         assert_eq!(art.verified, Some(true));
         assert!(art.sta.critical_delay_ns > 0.0);
+    }
+
+    #[test]
+    fn artifacts_carry_a_clean_lint_report() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        for req in [
+            DesignRequest::multiplier(4),
+            DesignRequest::fir(Method::UfoMac, 4, Strategy::TradeOff, 1e9),
+            DesignRequest::systolic(Method::UfoMac, 4, Strategy::TradeOff, 1e9),
+        ] {
+            let art = eng.compile(&req).unwrap();
+            let rep = art.lint.as_ref().expect("fresh compiles store a lint report");
+            assert!(rep.is_clean(), "{req:?}: {rep}");
+            // The lint entry point reuses the stored report.
+            let (again, _, _) = eng.lint(&req).unwrap();
+            assert!(again.is_clean());
+        }
+    }
+
+    #[test]
+    fn lint_gate_rejects_malformed_plan_without_simulation() {
+        // An infeasible explicit CT plan must fail the compile at the
+        // static-analysis layer — with a verification budget configured,
+        // reaching the equivalence sweep would mean simulating a tree that
+        // cannot even be built.
+        let eng = SynthEngine::new(EngineConfig { verify_vectors: 256, ..Default::default() });
+        let plan = crate::ct::StagePlan { f: vec![vec![9, 0, 0]], h: vec![vec![0, 0, 0]] };
+        let req = DesignRequest::from_spec(&MultiplierSpec::new(2).with_plan(plan));
+        let err = format!("{:#}", eng.compile(&req).unwrap_err());
+        assert!(err.contains("UFO1"), "error must carry the lint code: {err}");
     }
 
     #[test]

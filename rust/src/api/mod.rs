@@ -52,7 +52,8 @@ pub use engine::{
     global as engine, ArtifactBody, CompileSource, DesignArtifact, EngineConfig, SynthEngine,
 };
 pub use request::{
-    DesignRequest, Fingerprint, MacMode, MethodRequest, ModuleKind, ModuleRequest, MulRequest,
+    tier1_requests, DesignRequest, Fingerprint, MacMode, MethodRequest, ModuleKind, ModuleRequest,
+    MulRequest,
 };
 
 pub use crate::ppg::{OperandFormat, Signedness};

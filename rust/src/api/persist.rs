@@ -32,6 +32,7 @@
 use super::engine::{ArtifactBody, DesignArtifact};
 use super::request::{DesignRequest, Fingerprint};
 use crate::ir::{CellKind, Netlist, Node, NodeId};
+use crate::lint::LintReport;
 use crate::modules::ModuleReport;
 use crate::multiplier::Design;
 use crate::ppg::{OperandFormat, Signedness};
@@ -174,6 +175,15 @@ pub fn artifact_to_json(a: &DesignArtifact) -> Json {
         ("body", body),
         ("verified", opt_bool(a.verified)),
         ("pjrt_verified", opt_bool(a.pjrt_verified)),
+        // Always present (null when absent) so the rendered bytes are a
+        // pure function of the artifact, never of the writer's version.
+        (
+            "lint",
+            match &a.lint {
+                None => Json::Null,
+                Some(r) => r.to_json(),
+            },
+        ),
     ])
 }
 
@@ -217,6 +227,12 @@ pub fn artifact_from_json(j: &Json) -> Result<DesignArtifact> {
         body,
         verified: opt_bool_from(j, "verified")?,
         pjrt_verified: opt_bool_from(j, "pjrt_verified")?,
+        // Tolerant: entries written before the lint subsystem carry no
+        // key; either spelling of absence reads back as None.
+        lint: match j.get("lint") {
+            None | Some(Json::Null) => None,
+            Some(l) => Some(LintReport::from_json(l)?),
+        },
     })
 }
 
@@ -580,6 +596,24 @@ mod tests {
             assert_eq!(back.netlist().len(), art.netlist().len());
             assert_eq!(back.netlist().outputs().len(), art.netlist().outputs().len());
         }
+    }
+
+    #[test]
+    fn lint_roundtrips_and_pre_lint_entries_read_as_none() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let art = eng.compile(&DesignRequest::multiplier(4)).unwrap();
+        let j = artifact_to_json(&art);
+        let back = artifact_from_json(&j).unwrap();
+        assert!(back.lint.as_ref().expect("lint persisted").is_clean());
+        // An entry written before the lint subsystem (no "lint" key) must
+        // still deserialize — as an artifact without a stored report.
+        let mut obj = match j {
+            Json::Obj(m) => m,
+            other => panic!("artifact payload must be an object, got {other:?}"),
+        };
+        obj.remove("lint");
+        let old = artifact_from_json(&Json::Obj(obj)).unwrap();
+        assert!(old.lint.is_none());
     }
 
     #[test]

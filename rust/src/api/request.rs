@@ -531,6 +531,40 @@ impl DesignRequest {
     }
 }
 
+/// The tier-1 design sweep: every design family × operand format the fast
+/// test suite keeps green, at width `n` — the four compressor-tree
+/// architectures and both accumulator modes across unsigned/signed and
+/// square/rectangular formats, plus the Booth-4 generator on the square
+/// formats. `ufo-mac lint` with no request iterates exactly this list (as
+/// does the CI lint sweep and the clean-sweep lint test), so "tier-1 lints
+/// clean" means the same thing everywhere.
+pub fn tier1_requests(n: usize) -> Vec<DesignRequest> {
+    let m = (n.saturating_sub(2)).max(1);
+    let formats = [
+        OperandFormat::unsigned(n),
+        OperandFormat::signed(n),
+        OperandFormat::rect(n, m),
+        OperandFormat::signed_rect(n, m),
+    ];
+    let mut out = Vec::new();
+    for fmt in formats {
+        for ct in [
+            CtArchitecture::UfoMac,
+            CtArchitecture::Wallace,
+            CtArchitecture::Dadda,
+            CtArchitecture::Gomil,
+        ] {
+            out.push(DesignRequest::from_spec(&MultiplierSpec::new_fmt(fmt).ct(ct)));
+        }
+        out.push(DesignRequest::from_spec(&MultiplierSpec::new_fmt(fmt).fused_mac(true)));
+        out.push(DesignRequest::from_spec(&MultiplierSpec::new_fmt(fmt).separate_mac(true)));
+    }
+    for fmt in [OperandFormat::unsigned(n), OperandFormat::signed(n)] {
+        out.push(DesignRequest::from_spec(&MultiplierSpec::new_fmt(fmt).ppg(PpgKind::Booth4)));
+    }
+    out
+}
+
 impl MulRequest {
     /// Lower back to the builder spec the synthesis pipeline consumes.
     pub fn to_spec(&self) -> MultiplierSpec {

@@ -98,7 +98,9 @@ pub fn search(pp_columns: &[Vec<Sig>], budget: usize, seed: u64) -> RlMulResult 
         let j = rng.index(w);
         cand[j] = if cand[j] == 2 { 1 } else { 2 };
         let cand_counts = counts_from_outputs(&pp, &cand);
-        if cand_counts.validate().is_err() {
+        // Always-on cheap lint subset: infeasible candidates (UFO103
+        // class) are skipped before the cost model is paid for.
+        if !crate::lint::check_counts(&cand_counts).is_empty() {
             continue;
         }
         let cand_cost = evaluate(pp_columns, &cand_counts, lambda, &tm);

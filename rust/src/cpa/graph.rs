@@ -151,7 +151,11 @@ impl PrefixGraph {
                 if !m.is_leaf() {
                     m.tf = remap[m.tf];
                     m.ntf = remap[m.ntf];
-                    debug_assert!(m.tf != NONE && m.ntf != NONE);
+                    // Release-mode invariant (UFO104 class): a live node
+                    // whose fan-in was pruned means the live mask and the
+                    // node list disagree — expanding such a graph would
+                    // index out of bounds far from the cause.
+                    assert!(m.tf != NONE && m.ntf != NONE, "prune dropped a live fan-in");
                 }
                 remap[i] = new_nodes.len();
                 new_nodes.push(m);
@@ -344,7 +348,10 @@ pub fn brent_kung(n: usize) -> PrefixGraph {
         // take the lowest set bit of (i+1).
         let blk = (i + 1) & (i + 1).wrapping_neg();
         let k = i + 1 - blk;
-        debug_assert!(k > 0);
+        // k = 0 would mean bit i is itself an aligned block, which the
+        // memo-hit branch above already returned; recursing on k-1 with
+        // k = 0 underflows, so keep this checked in release too.
+        assert!(k > 0, "aligned-block decomposition bottomed out at bit {i}");
         let hi = *memo.get(&(i, k)).expect("aligned span missing");
         let lo = root_for(g, memo, k - 1);
         let idx = g.combine(hi, lo);

@@ -12,7 +12,7 @@ pub mod netlist;
 pub mod optimize;
 pub mod timing;
 
-pub use graph::{build, hybrid_regions, PrefixGraph, PrefixStructure};
+pub use graph::{build, hybrid_regions, PIdx, PNode, PrefixGraph, PrefixStructure, NONE};
 pub use netlist::{expand, standalone_adder, CpaColumn, CpaOut};
 pub use optimize::{estimate_bit_delays, optimize, OptReport};
 pub use timing::{fdc_features, fit_fdc, FdcFeatures, FdcModel, Fidelity};
@@ -229,7 +229,9 @@ pub fn random_adder_dataset(widths: &[usize], count: usize, seed: u64) -> Vec<Pr
             optimize::graphopt(&mut g, p);
         }
         g.prune();
-        debug_assert!(g.validate().is_ok());
+        // Release-mode invariant: the dataset feeds the FDC fit — one
+        // malformed sample would poison the model silently.
+        assert!(g.validate().is_ok(), "random adder sample failed validation");
         out.push(g);
     }
     out

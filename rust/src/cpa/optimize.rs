@@ -234,7 +234,10 @@ pub fn graphopt_tracked(g: &mut PrefixGraph, p: PIdx) -> Option<Vec<PIdx>> {
     // s = tf(p) ∘ tf(x): spans [msb_p : lsb(tf(x))].
     let tf_p = g.node(pn.tf);
     let tf_x = g.node(xn.tf);
-    debug_assert_eq!(tf_p.lsb, tf_x.msb + 1);
+    // Release-mode invariant (UFO104 class): the transform only preserves
+    // prefix semantics when the two trivial fan-ins are span-adjacent; a
+    // violation here would silently rewire the carry network.
+    assert_eq!(tf_p.lsb, tf_x.msb + 1, "GRAPHOPT on non-adjacent spans");
     let s = PNode { msb: tf_p.msb, lsb: tf_x.lsb, tf: pn.tf, ntf: xn.tf };
     g.nodes.push(s);
     let s_idx = g.nodes.len() - 1;
@@ -268,7 +271,10 @@ pub fn retopologize(g: &mut PrefixGraph) -> Vec<PIdx> {
             let mut m = nd;
             m.tf = remap[nd.tf];
             m.ntf = remap[nd.ntf];
-            debug_assert!(m.tf != NONE && m.ntf != NONE, "child not mapped");
+            // Release-mode invariant (UFO104 class): the postorder pushes
+            // both children before re-expanding, so an unmapped child
+            // means the traversal itself is broken.
+            assert!(m.tf != NONE && m.ntf != NONE, "child not mapped");
             remap[i] = out.len();
             out.push(m);
         } else {
@@ -436,6 +442,13 @@ pub fn optimize(
         *g = best_graph;
     }
     g.prune();
+    // Release-mode invariant: every transform above must preserve prefix
+    // semantics, so the optimized graph still validates. The per-move
+    // cache-identity debug_assert stays debug-only (it is O(n) per move);
+    // this single exit check is what release/server builds rely on.
+    if let Err(e) = g.validate() {
+        panic!("GRAPHOPT produced an invalid prefix graph: {e}");
+    }
     let mut timing = cache.stats();
     let est = estimate_bit_delays(g, arrivals, model);
     timing.merge(&TimingStats::full_pass(g.nodes.len()));

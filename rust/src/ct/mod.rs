@@ -41,6 +41,22 @@ pub enum CtArchitecture {
     Gomil,
 }
 
+/// What [`synthesize`] decided on the way to gates: the built two-row
+/// output plus the stage plan (and, for count-driven architectures, the
+/// Algorithm-1 counts) it executed. The lint subsystem's datapath passes
+/// consume this evidence instead of re-deriving the tree from gates.
+#[derive(Debug, Clone)]
+pub struct CtSynthesis {
+    /// The compressed two-row output (what [`synthesize`] returns).
+    pub out: CtOutput,
+    /// The stage plan that was executed.
+    pub plan: StagePlan,
+    /// Algorithm-1 counts the plan implements — `Some` only for the
+    /// count-driven architectures (UFO-MAC, UFO-MAC-ILP, GOMIL); Wallace
+    /// and Dadda schedules are population-driven and carry no counts.
+    pub counts: Option<CtCounts>,
+}
+
 /// Build a compressor tree of the chosen architecture over `columns`.
 ///
 /// Returns the compressed two-row output; the netlist gains all compressor
@@ -53,11 +69,24 @@ pub fn synthesize(
     arch: CtArchitecture,
     order_override: Option<OrderStrategy>,
 ) -> CtOutput {
+    synthesize_traced(nl, tm, columns, arch, order_override).out
+}
+
+/// [`synthesize`] that also returns the stage plan / counts it executed,
+/// so callers (the multiplier builder feeding [`crate::lint`]) can
+/// cross-check the built tree without re-deriving the schedule.
+pub fn synthesize_traced(
+    nl: &mut Netlist,
+    tm: &CompressorTiming,
+    columns: Vec<Vec<Sig>>,
+    arch: CtArchitecture,
+    order_override: Option<OrderStrategy>,
+) -> CtSynthesis {
     let populations: Vec<usize> = columns.iter().map(|c| c.len()).collect();
-    let (plan, default_order) = match arch {
+    let (plan, counts, default_order) = match arch {
         CtArchitecture::UfoMac => {
             let c = CtCounts::from_populations(&populations);
-            (assign_greedy(&c), OrderStrategy::Optimized)
+            (assign_greedy(&c), Some(c), OrderStrategy::Optimized)
         }
         CtArchitecture::UfoMacIlp => {
             // The greedy plan is computed once and handed to the exact ILP
@@ -68,19 +97,20 @@ pub fn synthesize(
                 ..Default::default()
             };
             let greedy = assign_greedy(&c);
-            (assign_ilp_with(&c, greedy, &opts).0, OrderStrategy::Optimized)
+            (assign_ilp_with(&c, greedy, &opts).0, Some(c), OrderStrategy::Optimized)
         }
-        CtArchitecture::Wallace => (wallace_plan(&populations), OrderStrategy::Naive),
-        CtArchitecture::Dadda => (dadda_plan(&populations), OrderStrategy::Naive),
+        CtArchitecture::Wallace => (wallace_plan(&populations), None, OrderStrategy::Naive),
+        CtArchitecture::Dadda => (dadda_plan(&populations), None, OrderStrategy::Naive),
         CtArchitecture::Gomil => {
             let c = CtCounts::from_populations(&populations);
-            (assign_column_serial(&c), OrderStrategy::Naive)
+            (assign_column_serial(&c), Some(c), OrderStrategy::Naive)
         }
     };
     let order = order_override.unwrap_or(default_order);
     let mut cols = columns;
     cols.resize(plan.width().max(cols.len()), Vec::new());
-    build_ct(nl, tm, cols, &plan, order)
+    let out = build_ct(nl, tm, cols, &plan, order);
+    CtSynthesis { out, plan, counts }
 }
 
 #[cfg(test)]

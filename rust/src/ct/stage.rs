@@ -218,7 +218,10 @@ pub fn assign_greedy(counts: &CtCounts) -> StagePlan {
         plan.h.push(hi);
         avail = next;
     }
-    debug_assert!(
+    // Release-mode invariant (UFO103 class): a plan that silently drops
+    // compressors would build a CT that leaves columns uncompressed, and
+    // the server runs release builds — keep this a hard assert.
+    assert!(
         rem_f.iter().all(|&x| x == 0) && rem_h.iter().all(|&x| x == 0),
         "greedy stage assignment did not converge"
     );
@@ -367,7 +370,10 @@ pub fn assign_ilp_with(counts: &CtCounts, greedy: StagePlan, opts: &SolveOptions
             plan.h[i][j] = sol.int_value(h_v[i][j]) as usize;
         }
     }
-    if plan.validate(counts).is_err() {
+    // Always-on lint guard on the candidate-evaluation loop: a rounded
+    // MILP incumbent can be plausible-but-malformed, so the cheap UFO1xx
+    // checks vet it before it replaces the known-good greedy plan.
+    if !crate::lint::check_plan_counts(counts, &plan).is_empty() {
         return (greedy, sol.nodes);
     }
     (plan, sol.nodes)

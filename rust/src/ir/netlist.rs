@@ -289,6 +289,25 @@ impl Netlist {
         id
     }
 
+    /// Append a raw `(opcode, fanin-record)` node with **no validity
+    /// checks** — forward references, unknown opcodes and corrupt input
+    /// ordinals all go through.
+    ///
+    /// This deliberately bypasses the invariants [`Netlist::gate`]
+    /// enforces; it exists so lint tests and fuzzers can build malformed
+    /// netlists that the checked constructors make unrepresentable. Never
+    /// use it in synthesis code.
+    pub fn push_raw(&mut self, op: u8, fanin: [u32; 3]) -> NodeId {
+        let id = NodeId(self.ops.len() as u32);
+        self.ops.push(op);
+        self.fanin.push(fanin);
+        if op <= 10 {
+            self.n_gates += 1;
+        }
+        self.invalidate();
+        id
+    }
+
     // -- convenience constructors used throughout the synthesizer --------
     /// `a · b`.
     pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
@@ -383,6 +402,7 @@ impl Netlist {
     /// Fanin node ids of node `i` (`arity` entries; empty for
     /// inputs/constants).
     #[inline]
+    #[allow(unsafe_code)] // sole unsafe in the library crate; see SAFETY below
     fn fanin_slice(&self, i: usize) -> &[NodeId] {
         let arity = match self.kind_at(i) {
             Some(kind) => kind.arity(),

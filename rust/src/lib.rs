@@ -75,6 +75,10 @@
 //! ([`ilp::SolveOptions::threads`]).
 
 #![warn(missing_docs)]
+// The crate is unsafe-free except for one audited slice reinterpretation
+// in `ir::Netlist::fanin_slice` (allowed locally); `lint` additionally
+// forbids unsafe outright.
+#![deny(unsafe_code)]
 
 pub mod api;
 pub mod baselines;
@@ -84,6 +88,7 @@ pub mod ct;
 pub mod equiv;
 pub mod ilp;
 pub mod ir;
+pub mod lint;
 pub mod modules;
 pub mod multiplier;
 pub mod ppg;

@@ -1,0 +1,382 @@
+//! Datapath lint passes (`UFO1xx`) and timing cross-checks (`UFO2xx`).
+//!
+//! These are domain-aware: they know what a compressor tree and a parallel
+//! prefix adder are supposed to look like, and check the *evidence* a
+//! build leaves behind (Algorithm-1 counts, the stage plan, recorded stage
+//! arrival profiles, the prefix graphs, and the separate-MAC arrival
+//! handoff) rather than re-deriving the datapath from gates.
+
+use crate::cpa::{PrefixGraph, NONE};
+use crate::ct::{CtCounts, StagePlan};
+
+use super::report::{Diagnostic, Locus, UFO101, UFO102, UFO103, UFO104, UFO105, UFO201, UFO202};
+
+/// Tolerance for arrival-time comparisons (ns). STA is deterministic
+/// `f64` arithmetic, so this only needs to absorb association order.
+pub const ARRIVAL_EPS_NS: f64 = 1e-9;
+
+/// Check Algorithm-1 counts for internal consistency ([`UFO103`]).
+///
+/// This wraps [`CtCounts::validate`] into a diagnostic and is the cheap
+/// always-on guard the RL-MUL / ILP candidate loops run on every sampled
+/// compressor allocation before paying for timing evaluation.
+pub fn check_counts(counts: &CtCounts) -> Vec<Diagnostic> {
+    match counts.validate() {
+        Ok(()) => Vec::new(),
+        Err(e) => vec![Diagnostic::new(UFO103, Locus::Design, format!("Algorithm-1 counts invalid: {e}"))],
+    }
+}
+
+/// Simulate a [`StagePlan`] over initial column populations and check the
+/// per-stage weight bookkeeping.
+///
+/// Emits [`UFO105`] for infeasible slices (a stage schedules more
+/// compressor inputs than the column holds), [`UFO101`] for weight leaks
+/// (carries scheduled out of the top column, or ragged plan rows that make
+/// the bookkeeping undefined), and [`UFO102`] for columns still holding
+/// more than two bits after the final stage.
+pub fn check_plan(initial: &[usize], plan: &StagePlan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let w = plan.width();
+    if plan.h.len() != plan.f.len() {
+        diags.push(Diagnostic::new(
+            UFO101,
+            Locus::Design,
+            format!("plan has {} f-stages but {} h-stages", plan.f.len(), plan.h.len()),
+        ));
+        return diags;
+    }
+    if initial.len() > w {
+        diags.push(Diagnostic::new(
+            UFO101,
+            Locus::Design,
+            format!("plan width {w} narrower than the {} input columns", initial.len()),
+        ));
+        return diags;
+    }
+    for (i, (fr, hr)) in plan.f.iter().zip(plan.h.iter()).enumerate() {
+        if fr.len() != w || hr.len() != w {
+            diags.push(Diagnostic::new(
+                UFO101,
+                Locus::Stage { stage: i, column: 0 },
+                format!("stage {i}: ragged rows ({}×f, {}×h, plan width {w})", fr.len(), hr.len()),
+            ));
+            return diags;
+        }
+    }
+    let mut pop = vec![0usize; w];
+    pop[..initial.len()].copy_from_slice(initial);
+    for i in 0..plan.stages() {
+        let mut next = pop.clone();
+        for j in 0..w {
+            let (fij, hij) = (plan.f[i][j], plan.h[i][j]);
+            if fij == 0 && hij == 0 {
+                continue;
+            }
+            if 3 * fij + 2 * hij > pop[j] {
+                diags.push(Diagnostic::new(
+                    UFO105,
+                    Locus::Stage { stage: i, column: j },
+                    format!(
+                        "stage {i} col {j}: {fij}×3:2 + {hij}×2:2 need {} bits, column holds {}",
+                        3 * fij + 2 * hij,
+                        pop[j]
+                    ),
+                ));
+                continue;
+            }
+            // A 3:2 turns 3 bits into 1 sum + 1 carry; a 2:2 turns 2 bits
+            // into 1 + 1. Sum bits stay in column j, carries move to j+1.
+            next[j] -= 2 * fij + hij;
+            if j + 1 < w {
+                next[j + 1] += fij + hij;
+            } else {
+                diags.push(Diagnostic::new(
+                    UFO101,
+                    Locus::Stage { stage: i, column: j },
+                    format!(
+                        "stage {i} col {j}: {} carries leak past the plan width {w} — bit weight 2^{w} is silently dropped",
+                        fij + hij
+                    ),
+                ));
+            }
+        }
+        pop = next;
+    }
+    for (j, &p) in pop.iter().enumerate() {
+        if p > 2 {
+            diags.push(Diagnostic::new(
+                UFO102,
+                Locus::Column(j),
+                format!("column {j} still holds {p} bits after the final stage (CPA accepts at most 2)"),
+            ));
+        }
+    }
+    diags
+}
+
+/// Check a stage plan against the Algorithm-1 counts it claims to
+/// implement: runs [`check_counts`] and [`check_plan`], then compares
+/// per-column compressor totals ([`UFO103`]).
+pub fn check_plan_counts(counts: &CtCounts, plan: &StagePlan) -> Vec<Diagnostic> {
+    let mut diags = check_counts(counts);
+    diags.extend(check_plan(&counts.initial, plan));
+    let w = plan.width();
+    for j in 0..w.min(counts.width()) {
+        let (tf, th): (usize, usize) =
+            (0..plan.stages()).map(|i| (plan.f[i][j], plan.h[i][j])).fold((0, 0), |a, x| {
+                (a.0 + x.0, a.1 + x.1)
+            });
+        let (cf, ch) = (counts.f[j], counts.h[j]);
+        if (tf, th) != (cf, ch) {
+            diags.push(Diagnostic::new(
+                UFO103,
+                Locus::Column(j),
+                format!("column {j}: plan schedules {tf}×3:2 + {th}×2:2, Algorithm 1 requires {cf} + {ch}"),
+            ));
+        }
+    }
+    diags
+}
+
+/// Check a CPA prefix graph for coverage and contiguity ([`UFO104`]).
+///
+/// Every output bit must have a root computing the prefix over
+/// `[bit:0]`; every internal node must combine an adjacent
+/// (trivial-fanin, non-trivial-fanin) pair of earlier nodes. This is
+/// [`PrefixGraph::validate`] re-expressed as per-locus diagnostics so a
+/// gapped graph reports every gap, not just the first.
+pub fn check_prefix(g: &PrefixGraph) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (i, nd) in g.nodes.iter().enumerate() {
+        if nd.is_leaf() {
+            if nd.ntf != NONE || nd.msb != nd.lsb {
+                diags.push(Diagnostic::new(
+                    UFO104,
+                    Locus::Bit(nd.msb),
+                    format!("prefix node {i}: malformed leaf [{}:{}]", nd.msb, nd.lsb),
+                ));
+            }
+            continue;
+        }
+        if nd.tf >= i || nd.ntf >= i {
+            diags.push(Diagnostic::new(
+                UFO104,
+                Locus::Bit(nd.msb),
+                format!("prefix node {i}: fan-in is not an earlier node"),
+            ));
+            continue;
+        }
+        let (tf, ntf) = (&g.nodes[nd.tf], &g.nodes[nd.ntf]);
+        if tf.msb != nd.msb || ntf.lsb != nd.lsb || tf.lsb != ntf.msb + 1 {
+            diags.push(Diagnostic::new(
+                UFO104,
+                Locus::Bit(nd.msb),
+                format!(
+                    "prefix node {i} [{}:{}] is not the adjacent combine of [{}:{}] and [{}:{}]",
+                    nd.msb, nd.lsb, tf.msb, tf.lsb, ntf.msb, ntf.lsb
+                ),
+            ));
+        }
+    }
+    for bit in 0..g.n {
+        match g.roots.get(bit).copied() {
+            None | Some(NONE) => diags.push(Diagnostic::new(
+                UFO104,
+                Locus::Bit(bit),
+                format!("bit {bit}: no root computes its carry (prefix coverage gap)"),
+            )),
+            Some(r) if r >= g.nodes.len() => diags.push(Diagnostic::new(
+                UFO104,
+                Locus::Bit(bit),
+                format!("bit {bit}: root index {r} out of range"),
+            )),
+            Some(r) => {
+                let nd = &g.nodes[r];
+                if nd.msb != bit || nd.lsb != 0 {
+                    diags.push(Diagnostic::new(
+                        UFO104,
+                        Locus::Bit(bit),
+                        format!("bit {bit}: root covers [{}:{}], want [{bit}:0]", nd.msb, nd.lsb),
+                    ));
+                }
+            }
+        }
+    }
+    diags
+}
+
+/// Check the bits-per-column record of the built CT's final rows: every
+/// column must hold at most two bits for the CPA to accept it
+/// ([`UFO102`]).
+pub fn check_final_rows(final_rows: &[usize]) -> Vec<Diagnostic> {
+    final_rows
+        .iter()
+        .enumerate()
+        .filter(|&(_, &r)| r > 2)
+        .map(|(j, &r)| {
+            Diagnostic::new(
+                UFO102,
+                Locus::Column(j),
+                format!("built CT hands {r} bits in column {j} to the CPA (max 2)"),
+            )
+        })
+        .collect()
+}
+
+/// Check recorded per-stage arrival snapshots for sane timing values
+/// ([`UFO202`]) and consistent widths across stages ([`UFO101`]).
+pub fn check_stage_profiles(stage_profiles: &[Vec<f64>]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let w = stage_profiles.first().map_or(0, Vec::len);
+    for (i, snap) in stage_profiles.iter().enumerate() {
+        if snap.len() != w {
+            diags.push(Diagnostic::new(
+                UFO101,
+                Locus::Stage { stage: i, column: 0 },
+                format!("stage {i} snapshot has {} columns, stage 0 has {w}", snap.len()),
+            ));
+        }
+        for (j, &t) in snap.iter().enumerate() {
+            if !t.is_finite() || t < 0.0 {
+                diags.push(Diagnostic::new(
+                    UFO202,
+                    Locus::Stage { stage: i, column: j },
+                    format!("stage {i} col {j}: arrival {t} ns is not a valid time"),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Cross-check the separate-MAC second-CPA arrival handoff ([`UFO201`]).
+///
+/// `measured` is the STA arrival profile read off the first CPA's sum
+/// bits when the second CPA was synthesized; `basis` is the profile that
+/// was actually handed to the prefix optimizer; `recomputed` is the same
+/// set of sum-bit arrivals re-derived from the *final* netlist. The PR-3
+/// bug class — synthesizing the second CPA against a profile that is not
+/// the first CPA's — shows up as `basis` dropping below `measured`, and a
+/// stale `measured` shows up as exceeding `recomputed` (adding the second
+/// CPA only ever increases load, so real arrivals never shrink).
+pub fn check_mac_profile(
+    measured: &[f64],
+    basis: &[f64],
+    recomputed: &[f64],
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if basis.len() != measured.len() || recomputed.len() != measured.len() {
+        diags.push(Diagnostic::new(
+            UFO201,
+            Locus::Design,
+            format!(
+                "second-CPA profile width mismatch: {} measured, {} basis, {} recomputed",
+                measured.len(),
+                basis.len(),
+                recomputed.len()
+            ),
+        ));
+        return diags;
+    }
+    for j in 0..measured.len() {
+        if basis[j] + ARRIVAL_EPS_NS < measured[j] {
+            diags.push(Diagnostic::new(
+                UFO201,
+                Locus::Bit(j),
+                format!(
+                    "bit {j}: second CPA was optimized for arrival {:.4} ns but the first CPA delivers {:.4} ns",
+                    basis[j], measured[j]
+                ),
+            ));
+        }
+        if measured[j] > recomputed[j] + ARRIVAL_EPS_NS {
+            diags.push(Diagnostic::new(
+                UFO201,
+                Locus::Bit(j),
+                format!(
+                    "bit {j}: recorded first-CPA arrival {:.4} ns exceeds the netlist's own {:.4} ns",
+                    measured[j], recomputed[j]
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn valid_counts_and_plan_are_clean() {
+        let pops = [1usize, 2, 3, 2, 1];
+        let counts = CtCounts::from_populations(&pops);
+        let plan = crate::ct::assign_greedy(&counts);
+        assert!(check_plan_counts(&counts, &plan).is_empty());
+    }
+
+    #[test]
+    fn weight_leak_and_overfull_column_are_flagged() {
+        // One column of 3 bits, plan width 1: the 3:2's carry has nowhere
+        // to go.
+        let plan = StagePlan { f: vec![vec![1]], h: vec![vec![0]] };
+        let diags = check_plan(&[3], &plan);
+        assert_eq!(codes(&diags), [UFO101]);
+        // No compression at all: column keeps its 3 bits.
+        let lazy = StagePlan { f: vec![vec![0, 0]], h: vec![vec![0, 0]] };
+        assert_eq!(codes(&check_plan(&[3, 0], &lazy)), [UFO102]);
+    }
+
+    #[test]
+    fn infeasible_slice_is_flagged() {
+        let plan = StagePlan { f: vec![vec![2, 0]], h: vec![vec![0, 0]] };
+        let diags = check_plan(&[3, 1], &plan);
+        assert_eq!(codes(&diags), [UFO105]);
+    }
+
+    #[test]
+    fn totals_mismatch_is_flagged() {
+        let counts = CtCounts::from_populations(&[3, 1]);
+        // Plan that compresses with a 2:2 where Algorithm 1 wants a 3:2.
+        let plan = StagePlan { f: vec![vec![0, 0]], h: vec![vec![1, 0]] };
+        let diags = check_plan_counts(&counts, &plan);
+        assert!(diags.iter().any(|d| d.code == UFO103), "{diags:?}");
+    }
+
+    #[test]
+    fn gapped_prefix_graph_reports_every_gap() {
+        let mut g = PrefixGraph::leaves(4);
+        let r1 = g.combine(1, 0);
+        g.roots[1] = r1;
+        g.roots[2] = NONE; // gap
+        g.roots[3] = NONE; // gap
+        let diags = check_prefix(&g);
+        assert_eq!(codes(&diags), [UFO104, UFO104]);
+        assert_eq!(diags[0].locus, crate::lint::Locus::Bit(2));
+    }
+
+    #[test]
+    fn bad_profiles_are_flagged() {
+        assert!(check_stage_profiles(&[vec![0.0, 0.1]]).is_empty());
+        let diags = check_stage_profiles(&[vec![0.0, f64::NAN], vec![0.0]]);
+        assert_eq!(codes(&diags), [UFO202, UFO101]);
+    }
+
+    #[test]
+    fn mac_profile_mismatch_is_flagged() {
+        let measured = [0.5, 0.7];
+        let recomputed = [0.5, 0.7];
+        assert!(check_mac_profile(&measured, &[0.5, 0.7], &recomputed).is_empty());
+        // PR-3 bug class: second CPA synthesized against uniform zeros.
+        let diags = check_mac_profile(&measured, &[0.0, 0.0], &recomputed);
+        assert_eq!(codes(&diags), [UFO201, UFO201]);
+        // Stale recording: netlist says arrivals are earlier than recorded.
+        let diags = check_mac_profile(&measured, &[0.5, 0.7], &[0.5, 0.3]);
+        assert_eq!(codes(&diags), [UFO201]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Static analysis over netlists and datapath build evidence.
+//!
+//! A staged lint engine with catalogued diagnostic codes (`LINTS.md`):
+//!
+//! - **`UFO0xx` structural** ([`structural`]) — passes over the flat SoA
+//!   [`crate::ir::Netlist`] + its cached CSR topology: cycles/forward
+//!   references, dangling fanins and outputs, multiply-defined output
+//!   names, opcode corruption, and (pedantic) dead / constant-foldable /
+//!   duplicate gates.
+//! - **`UFO1xx` datapath** ([`datapath`]) — domain-aware checks over the
+//!   evidence a build records ([`crate::multiplier::DatapathTrace`]):
+//!   per-stage column weight conservation, the ≤2-row final CT
+//!   requirement, compressor-count consistency against Algorithm 1
+//!   (`ct/counts.rs`), and prefix-graph coverage/contiguity.
+//! - **`UFO2xx` timing** ([`datapath`]) — recorded-profile sanity and the
+//!   separate-MAC second-CPA arrival cross-check (the PR-3 bug class,
+//!   detected statically).
+//!
+//! Entry points: [`lint_netlist`] for a bare netlist, [`lint_design`] for
+//! a built design plus its trace. The engine
+//! ([`crate::api::SynthEngine`]) runs [`lint_design`] on every uncached
+//! compile and stores the [`LintReport`] on the artifact; `ufo-mac lint`
+//! and the server's `lint` command surface the same reports. The cheap
+//! subset ([`check_counts`], [`check_plan`]) is always on inside the
+//! RL-MUL / ILP candidate-evaluation loops.
+#![forbid(unsafe_code)]
+
+pub mod datapath;
+pub mod report;
+pub mod structural;
+
+pub use datapath::{
+    check_counts, check_final_rows, check_mac_profile, check_plan, check_plan_counts,
+    check_prefix, check_stage_profiles, ARRIVAL_EPS_NS,
+};
+pub use report::{code_info, CodeInfo, Diagnostic, LintOptions, LintReport, Locus, Severity, CODES};
+pub use structural::lint_netlist;
+
+use crate::ir::CellLib;
+use crate::multiplier::{DatapathTrace, Design};
+
+/// Lint a built design: the structural netlist passes, plus every
+/// datapath/timing pass the build evidence supports.
+///
+/// `trace` is the build's own record (from
+/// [`crate::multiplier::MultiplierSpec::build_with_trace`]); without it
+/// only the structural passes run (the
+/// situation for designs rehydrated from the disk cache). `lib` must be
+/// the cell library the design was built against — the separate-MAC
+/// cross-check re-runs STA with it to compare arrivals exactly.
+pub fn lint_design(
+    design: &Design,
+    trace: Option<&DatapathTrace>,
+    lib: &CellLib,
+    opts: &LintOptions,
+) -> LintReport {
+    let mut diags = structural::lint_netlist(&design.netlist, opts);
+    if let Some(tr) = trace {
+        match &tr.counts {
+            Some(c) => diags.extend(datapath::check_plan_counts(c, &tr.plan)),
+            None => diags.extend(datapath::check_plan(&tr.initial_pops, &tr.plan)),
+        }
+        diags.extend(datapath::check_stage_profiles(&tr.stage_profiles));
+        diags.extend(datapath::check_final_rows(&tr.final_rows));
+        diags.extend(datapath::check_prefix(&tr.prefix));
+        if let Some(g2) = &tr.prefix2 {
+            diags.extend(datapath::check_prefix(g2));
+        }
+        if let Some(mac) = &tr.mac {
+            // Re-derive the first CPA's sum arrivals from the final
+            // netlist: recorded arrivals may only be ≤ these (the second
+            // CPA added load), and the synthesis basis must cover them.
+            let sta = crate::sta::Sta { activity_rounds: 0, ..crate::sta::Sta::with_lib(lib.clone()) };
+            let at = sta.arrivals_ns(&design.netlist);
+            let recomputed: Vec<f64> =
+                mac.sum_nodes.iter().map(|id| at[id.index()]).collect();
+            diags.extend(datapath::check_mac_profile(&mac.measured, &mac.basis, &recomputed));
+        }
+    }
+    LintReport::from_diagnostics(diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::MultiplierSpec;
+    use crate::synth::CompressorTiming;
+
+    #[test]
+    fn built_designs_lint_clean_with_full_evidence() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        for spec in [
+            MultiplierSpec::new(4),
+            MultiplierSpec::new(4).separate_mac(true),
+            MultiplierSpec::new(3).fused_mac(true),
+        ] {
+            let (design, trace) = spec.build_with_trace(&lib, &tm).unwrap();
+            let report = lint_design(&design, Some(&trace), &lib, &LintOptions::default());
+            assert!(report.is_clean(), "{spec:?}: {report}");
+        }
+    }
+
+    #[test]
+    fn tampered_trace_is_detected() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        let (design, mut trace) =
+            MultiplierSpec::new(4).separate_mac(true).build_with_trace(&lib, &tm).unwrap();
+        // Simulate the PR-3 bug: pretend the second CPA was synthesized
+        // against a uniform-zero profile.
+        for b in trace.mac.as_mut().unwrap().basis.iter_mut() {
+            *b = 0.0;
+        }
+        let report = lint_design(&design, Some(&trace), &lib, &LintOptions::default());
+        assert!(report.diagnostics.iter().any(|d| d.code == "UFO201"), "{report}");
+    }
+}

@@ -1,0 +1,472 @@
+//! Diagnostic types of the lint subsystem: codes, severities, loci,
+//! [`Diagnostic`] records and the [`LintReport`] container that travels on
+//! compile artifacts and over the wire. `LINTS.md` at the repository root
+//! is the human-facing catalog; [`CODES`] is its machine-readable twin.
+
+use crate::util::Json;
+
+/// How bad a finding is. Ordered: `Info < Warning < Error`, so severity
+/// thresholds compare directly (`d.severity >= deny`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Stylistic / informational — never fails a gate by default.
+    Info,
+    /// Suspicious but not provably wrong.
+    Warning,
+    /// A structural or datapath invariant is violated; the design is
+    /// malformed.
+    Error,
+}
+
+impl Severity {
+    /// Stable machine-readable key (wire + persistence form).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+
+    /// Strict parse of [`Severity::key`] — unknown names are an error
+    /// listing the valid values.
+    pub fn from_key(s: &str) -> Result<Severity, String> {
+        match s {
+            "info" => Ok(Severity::Info),
+            "warning" => Ok(Severity::Warning),
+            "error" => Ok(Severity::Error),
+            other => Err(format!("unknown severity '{other}' (valid: error, info, warning)")),
+        }
+    }
+}
+
+/// Where a diagnostic points: a netlist node, an output slot, a CT stage ×
+/// column slice, a column, a CPA bit — or the design as a whole.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Locus {
+    /// The design as a whole (no narrower locus applies).
+    Design,
+    /// A netlist node by id.
+    Node(u32),
+    /// A primary output by registration index.
+    Output(usize),
+    /// A compressor-tree slice: stage `stage`, column `column`.
+    Stage {
+        /// Stage index (0-based).
+        stage: usize,
+        /// Column index (bit weight).
+        column: usize,
+    },
+    /// A compressor-tree column (bit weight).
+    Column(usize),
+    /// A CPA output bit.
+    Bit(usize),
+}
+
+impl Locus {
+    /// Stable machine-readable key: `design`, `node:<id>`, `output:<i>`,
+    /// `stage:<i>:<j>`, `col:<j>`, `bit:<i>`.
+    pub fn key(&self) -> String {
+        match self {
+            Locus::Design => "design".to_string(),
+            Locus::Node(id) => format!("node:{id}"),
+            Locus::Output(i) => format!("output:{i}"),
+            Locus::Stage { stage, column } => format!("stage:{stage}:{column}"),
+            Locus::Column(j) => format!("col:{j}"),
+            Locus::Bit(i) => format!("bit:{i}"),
+        }
+    }
+
+    /// Parse the [`Locus::key`] form back.
+    pub fn from_key(s: &str) -> Result<Locus, String> {
+        let bad = |s: &str| format!("unparsable locus '{s}'");
+        if s == "design" {
+            return Ok(Locus::Design);
+        }
+        let mut parts = s.split(':');
+        let head = parts.next().ok_or_else(|| bad(s))?;
+        let mut num = |p: Option<&str>| -> Result<usize, String> {
+            p.and_then(|v| v.parse::<usize>().ok()).ok_or_else(|| bad(s))
+        };
+        let locus = match head {
+            "node" => Locus::Node(num(parts.next())? as u32),
+            "output" => Locus::Output(num(parts.next())?),
+            "stage" => Locus::Stage { stage: num(parts.next())?, column: num(parts.next())? },
+            "col" => Locus::Column(num(parts.next())?),
+            "bit" => Locus::Bit(num(parts.next())?),
+            _ => return Err(bad(s)),
+        };
+        if parts.next().is_some() {
+            return Err(bad(s));
+        }
+        Ok(locus)
+    }
+}
+
+/// One catalog entry: the code, its default severity, and a one-line
+/// summary (the long-form catalog lives in `LINTS.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct CodeInfo {
+    /// The `UFOxxx` code.
+    pub code: &'static str,
+    /// Severity every diagnostic with this code carries.
+    pub severity: Severity,
+    /// Whether the pass only runs with [`LintOptions::pedantic`].
+    pub pedantic: bool,
+    /// One-line summary of what the code means.
+    pub summary: &'static str,
+}
+
+/// Combinational cycle / forward reference in the netlist DAG.
+pub const UFO001: &str = "UFO001";
+/// Dangling fanin or output: a reference past the end of the netlist.
+pub const UFO002: &str = "UFO002";
+/// Dead gate: unreachable from any primary output.
+pub const UFO003: &str = "UFO003";
+/// Multiply-defined primary output name.
+pub const UFO004: &str = "UFO004";
+/// Opcode / arity / input-ordinal corruption.
+pub const UFO005: &str = "UFO005";
+/// Constant-foldable gate (all-constant or self-identical fanins).
+pub const UFO006: &str = "UFO006";
+/// Structurally duplicate gate (same opcode and fanin record).
+pub const UFO007: &str = "UFO007";
+/// CT stage leaks bit weight (carry past the plan width, or ragged rows).
+pub const UFO101: &str = "UFO101";
+/// Final CT population exceeds two rows.
+pub const UFO102: &str = "UFO102";
+/// Compressor counts inconsistent with Algorithm-1 (`ct/counts.rs`).
+pub const UFO103: &str = "UFO103";
+/// CPA prefix graph does not cover `[bit:0]` contiguously.
+pub const UFO104: &str = "UFO104";
+/// Infeasible CT slice: compressors exceed the column population.
+pub const UFO105: &str = "UFO105";
+/// Separate-MAC second-CPA arrival profile disagrees with the netlist.
+pub const UFO201: &str = "UFO201";
+/// Non-finite or negative arrival time in a recorded stage profile.
+pub const UFO202: &str = "UFO202";
+
+/// The machine-readable diagnostic-code catalog (mirrors `LINTS.md`).
+pub const CODES: &[CodeInfo] = &[
+    CodeInfo {
+        code: UFO001,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "combinational cycle (forward/self reference breaks topological order)",
+    },
+    CodeInfo {
+        code: UFO002,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "dangling reference (fanin or output points past the netlist)",
+    },
+    CodeInfo {
+        code: UFO003,
+        severity: Severity::Info,
+        pedantic: true,
+        summary: "dead gate unreachable from any primary output",
+    },
+    CodeInfo {
+        code: UFO004,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "multiply-defined primary output name",
+    },
+    CodeInfo {
+        code: UFO005,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "opcode/arity/input-ordinal corruption",
+    },
+    CodeInfo {
+        code: UFO006,
+        severity: Severity::Info,
+        pedantic: true,
+        summary: "constant-foldable gate",
+    },
+    CodeInfo {
+        code: UFO007,
+        severity: Severity::Info,
+        pedantic: true,
+        summary: "structurally duplicate gate",
+    },
+    CodeInfo {
+        code: UFO101,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "CT stage leaks bit weight",
+    },
+    CodeInfo {
+        code: UFO102,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "final CT population exceeds two rows",
+    },
+    CodeInfo {
+        code: UFO103,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "compressor counts inconsistent with Algorithm 1",
+    },
+    CodeInfo {
+        code: UFO104,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "prefix graph coverage/contiguity violation",
+    },
+    CodeInfo {
+        code: UFO105,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "infeasible CT slice (compressors exceed population)",
+    },
+    CodeInfo {
+        code: UFO201,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "second-CPA arrival profile disagrees with the first CPA's netlist",
+    },
+    CodeInfo {
+        code: UFO202,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "non-finite or negative arrival in a recorded profile",
+    },
+];
+
+/// Catalog lookup by code string (returns the interned static form).
+pub fn code_info(code: &str) -> Option<&'static CodeInfo> {
+    CODES.iter().find(|c| c.code == code)
+}
+
+/// One finding: a catalogued code, its severity, where it points, and a
+/// human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Catalogued `UFOxxx` code.
+    pub code: &'static str,
+    /// Severity (always the catalog severity of `code`).
+    pub severity: Severity,
+    /// Node / stage / bit locus.
+    pub locus: Locus,
+    /// Human-readable description of the finding.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic for a catalogued code (severity comes from the
+    /// catalog). Panics on an uncatalogued code — every emitting pass uses
+    /// the `UFOxxx` constants above.
+    pub fn new(code: &'static str, locus: Locus, message: impl Into<String>) -> Diagnostic {
+        let info = code_info(code).unwrap_or_else(|| panic!("uncatalogued lint code {code}"));
+        Diagnostic { code: info.code, severity: info.severity, locus, message: message.into() }
+    }
+
+    /// Wire/persistence form:
+    /// `{"code":…,"locus":…,"message":…,"severity":…}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("locus", Json::str(self.locus.key())),
+            ("message", Json::str(&self.message)),
+            ("severity", Json::str(self.severity.key())),
+        ])
+    }
+
+    /// Parse the [`Diagnostic::to_json`] form back. Unknown codes are an
+    /// error (a cache entry written by a newer catalog reads as a defect
+    /// and recompiles).
+    pub fn from_json(j: &Json) -> Result<Diagnostic, String> {
+        let s = |k: &str| -> Result<&str, String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("diagnostic: missing string field '{k}'"))
+        };
+        let code =
+            code_info(s("code")?).ok_or_else(|| format!("unknown lint code '{}'", s("code").unwrap_or("?")))?;
+        let severity = Severity::from_key(s("severity")?)?;
+        Ok(Diagnostic {
+            code: code.code,
+            severity,
+            locus: Locus::from_key(s("locus")?)?,
+            message: s("message")?.to_string(),
+        })
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}: {}",
+            self.code,
+            self.severity.key(),
+            self.locus.key(),
+            self.message
+        )
+    }
+}
+
+/// Knobs of a lint run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LintOptions {
+    /// Also run the informational passes (dead gates, const-foldable and
+    /// duplicate gates — [`UFO003`]/[`UFO006`]/[`UFO007`]). Off by
+    /// default: arithmetic netlists legitimately truncate overflow carries
+    /// (modular products) and share constant injections (Baugh–Wooley),
+    /// so these fire on perfectly correct designs.
+    pub pedantic: bool,
+}
+
+/// The outcome of a lint run: every diagnostic the enabled passes emitted,
+/// in pass order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LintReport {
+    /// Findings in pass order (structural passes first, then datapath).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    /// Report over a finding list.
+    pub fn from_diagnostics(diagnostics: Vec<Diagnostic>) -> LintReport {
+        LintReport { diagnostics }
+    }
+
+    /// No findings at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Worst severity present, or `None` when clean.
+    pub fn max_severity(&self) -> Option<Severity> {
+        self.diagnostics.iter().map(|d| d.severity).max()
+    }
+
+    /// Number of findings at exactly `sev`.
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    /// Whether any finding is at or above `deny` — the engine's gate
+    /// predicate.
+    pub fn denies(&self, deny: Severity) -> bool {
+        self.max_severity().is_some_and(|m| m >= deny)
+    }
+
+    /// Wire/persistence form: `{"diagnostics":[…]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "diagnostics",
+            Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+        )])
+    }
+
+    /// Parse the [`LintReport::to_json`] form back.
+    pub fn from_json(j: &Json) -> Result<LintReport, String> {
+        let rows = j
+            .get("diagnostics")
+            .and_then(|v| v.as_arr())
+            .ok_or("lint report: missing 'diagnostics' array")?;
+        let diagnostics =
+            rows.iter().map(Diagnostic::from_json).collect::<Result<Vec<_>, _>>()?;
+        Ok(LintReport { diagnostics })
+    }
+
+    /// Wire summary with counts, used by the server's `lint` command:
+    /// `{"clean":…,"counts":{…},"diagnostics":[…]}`.
+    pub fn summary_json(&self) -> Json {
+        let counts = Json::obj(vec![
+            ("error", Json::num(self.count(Severity::Error) as f64)),
+            ("info", Json::num(self.count(Severity::Info) as f64)),
+            ("warning", Json::num(self.count(Severity::Warning) as f64)),
+        ]);
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            ("counts", counts),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Display for LintReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean (0 diagnostics)");
+        }
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_roundtrips() {
+        assert!(Severity::Info < Severity::Warning);
+        assert!(Severity::Warning < Severity::Error);
+        for s in [Severity::Info, Severity::Warning, Severity::Error] {
+            assert_eq!(Severity::from_key(s.key()).unwrap(), s);
+        }
+        assert!(Severity::from_key("fatal").is_err());
+    }
+
+    #[test]
+    fn locus_roundtrips() {
+        for l in [
+            Locus::Design,
+            Locus::Node(17),
+            Locus::Output(2),
+            Locus::Stage { stage: 1, column: 9 },
+            Locus::Column(5),
+            Locus::Bit(3),
+        ] {
+            assert_eq!(Locus::from_key(&l.key()).unwrap(), l);
+        }
+        assert!(Locus::from_key("node:x").is_err());
+        assert!(Locus::from_key("stage:1").is_err());
+        assert!(Locus::from_key("node:1:2").is_err());
+    }
+
+    #[test]
+    fn catalog_is_consistent() {
+        // Codes unique, families well-formed, severities match the
+        // documented policy (pedantic passes are Info).
+        let mut seen = std::collections::BTreeSet::new();
+        for c in CODES {
+            assert!(seen.insert(c.code), "duplicate code {}", c.code);
+            assert!(c.code.starts_with("UFO") && c.code.len() == 6, "{}", c.code);
+            if c.pedantic {
+                assert_eq!(c.severity, Severity::Info, "{}", c.code);
+            }
+        }
+        assert!(code_info("UFO001").is_some());
+        assert!(code_info("UFO999").is_none());
+    }
+
+    #[test]
+    fn report_roundtrips_and_counts() {
+        let rep = LintReport::from_diagnostics(vec![
+            Diagnostic::new(UFO001, Locus::Node(4), "cycle via node 9"),
+            Diagnostic::new(UFO006, Locus::Node(7), "const-foldable"),
+        ]);
+        assert!(!rep.is_clean());
+        assert_eq!(rep.max_severity(), Some(Severity::Error));
+        assert_eq!(rep.count(Severity::Error), 1);
+        assert_eq!(rep.count(Severity::Info), 1);
+        assert!(rep.denies(Severity::Error));
+        assert!(!LintReport::default().denies(Severity::Info));
+        let back = LintReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back, rep);
+        assert_eq!(back.to_json().render(), rep.to_json().render());
+    }
+}

@@ -1,0 +1,309 @@
+//! Structural lint passes over the flat SoA [`Netlist`] (`UFO0xx` codes).
+//!
+//! The passes are staged: reference integrity ([`UFO001`]/[`UFO002`]/
+//! [`UFO005`]) runs first, and the topology-dependent passes (dead gates,
+//! duplicates) only run when it found nothing — walking consumers of a
+//! netlist with dangling references would index out of bounds.
+
+use crate::ir::{CellKind, Netlist, OP_CONST0, OP_CONST1, OP_INPUT};
+
+use super::report::{
+    Diagnostic, LintOptions, Locus, UFO001, UFO002, UFO003, UFO004, UFO005, UFO006, UFO007,
+};
+
+/// Run every structural pass over `nl` and return the findings in pass
+/// order. This is the netlist half of [`super::lint_design`]; it is also
+/// the whole lint for module bodies that carry no datapath evidence.
+pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> Vec<Diagnostic> {
+    let mut diags = pass_references(nl);
+    let refs_ok = diags.is_empty();
+    diags.extend(pass_output_names(nl));
+    if refs_ok && opts.pedantic {
+        diags.extend(pass_dead_gates(nl));
+        diags.extend(pass_const_foldable(nl));
+        diags.extend(pass_duplicate_gates(nl));
+    }
+    diags
+}
+
+/// Reference integrity: opcode validity ([`UFO005`]), input-ordinal
+/// consistency ([`UFO005`]), dangling fanins/outputs ([`UFO002`]) and
+/// topological-order violations ([`UFO001`]).
+///
+/// The append-only IR stores nodes in topological order, so a fanin
+/// pointing at the node itself or forward *is* a combinational cycle: any
+/// cyclic netlist flattened into the SoA arrays must contain at least one
+/// such edge.
+fn pass_references(nl: &Netlist) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let ops = nl.ops();
+    let fanin = nl.fanin_records();
+    let n = nl.len();
+    for i in 0..n {
+        let op = ops[i];
+        match op {
+            OP_CONST0 | OP_CONST1 => {}
+            OP_INPUT => {
+                let ord = fanin[i][0] as usize;
+                let ok = nl.input_ids().get(ord).is_some_and(|id| id.index() == i);
+                if !ok {
+                    diags.push(Diagnostic::new(
+                        UFO005,
+                        Locus::Node(i as u32),
+                        format!("input node {i} carries corrupt ordinal {ord}"),
+                    ));
+                }
+            }
+            op if (op as usize) < CellKind::ALL.len() => {
+                let kind = CellKind::ALL[op as usize];
+                for slot in 0..kind.arity() {
+                    let f = fanin[i][slot] as usize;
+                    if f >= n {
+                        diags.push(Diagnostic::new(
+                            UFO002,
+                            Locus::Node(i as u32),
+                            format!("{kind:?} node {i} fanin {slot} dangles (points at {f}, netlist has {n} nodes)"),
+                        ));
+                    } else if f >= i {
+                        diags.push(Diagnostic::new(
+                            UFO001,
+                            Locus::Node(i as u32),
+                            format!("{kind:?} node {i} fanin {slot} references node {f}: topological order is violated (combinational cycle)"),
+                        ));
+                    }
+                }
+            }
+            other => {
+                diags.push(Diagnostic::new(
+                    UFO005,
+                    Locus::Node(i as u32),
+                    format!("node {i} has unknown opcode {other}"),
+                ));
+            }
+        }
+    }
+    for (slot, (name, id)) in nl.outputs().enumerate() {
+        if id.index() >= n {
+            diags.push(Diagnostic::new(
+                UFO002,
+                Locus::Output(slot),
+                format!("output '{name}' dangles (points at node {}, netlist has {n} nodes)", id.index()),
+            ));
+        }
+    }
+    diags
+}
+
+/// Multiply-defined output names ([`UFO004`]). Two registrations of the
+/// same name are a defect even when they point at the same node: whichever
+/// consumer resolves the name gets an arbitrary winner.
+fn pass_output_names(nl: &Netlist) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut first = std::collections::HashMap::new();
+    for (slot, (name, _)) in nl.outputs().enumerate() {
+        if let Some(prev) = first.insert(name.to_string(), slot) {
+            diags.push(Diagnostic::new(
+                UFO004,
+                Locus::Output(slot),
+                format!("output '{name}' multiply defined (slots {prev} and {slot})"),
+            ));
+        }
+    }
+    diags
+}
+
+/// Dead gates ([`UFO003`], pedantic): gates from which no primary output
+/// is reachable. Seeds a worklist with unconsumed non-output gates from
+/// the cached CSR topology's fanout counts, then grows the dead set
+/// through `consumers()`: a gate all of whose consumers are dead is dead.
+///
+/// Arithmetic netlists produce these legitimately — a compressor whose
+/// carry would land past the output width still instantiates its carry
+/// gate, and truncated products orphan the top CPA bits — which is why the
+/// pass is informational and off by default.
+fn pass_dead_gates(nl: &Netlist) -> Vec<Diagnostic> {
+    let n = nl.len();
+    let topo = nl.topology();
+    let ops = nl.ops();
+    let fanin = nl.fanin_records();
+    let is_gate = |i: usize| (ops[i] as usize) < CellKind::ALL.len();
+    let mut is_output = vec![false; n];
+    for (_, id) in nl.outputs() {
+        is_output[id.index()] = true;
+    }
+    let mut dead = vec![false; n];
+    let mut stack: Vec<usize> = (0..n)
+        .filter(|&i| is_gate(i) && !is_output[i] && topo.fanout_counts()[i] == 0)
+        .collect();
+    for &i in &stack {
+        dead[i] = true;
+    }
+    while let Some(i) = stack.pop() {
+        for slot in 0..CellKind::ALL[ops[i] as usize].arity() {
+            let f = fanin[i][slot] as usize;
+            if dead[f] || is_output[f] || !is_gate(f) {
+                continue;
+            }
+            if topo.consumers(f).iter().all(|&c| dead[c as usize]) {
+                dead[f] = true;
+                stack.push(f);
+            }
+        }
+    }
+    let mut diags = Vec::new();
+    for (i, &d) in dead.iter().enumerate() {
+        if d {
+            diags.push(Diagnostic::new(
+                UFO003,
+                Locus::Node(i as u32),
+                format!(
+                    "{:?} node {i} is unreachable from every primary output",
+                    CellKind::ALL[ops[i] as usize]
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+/// Constant-foldable gates ([`UFO006`], pedantic): every fanin is a
+/// constant, or a binary gate reads the same node twice.
+fn pass_const_foldable(nl: &Netlist) -> Vec<Diagnostic> {
+    let ops = nl.ops();
+    let fanin = nl.fanin_records();
+    let mut diags = Vec::new();
+    for i in 0..nl.len() {
+        let op = ops[i] as usize;
+        if op >= CellKind::ALL.len() {
+            continue;
+        }
+        let kind = CellKind::ALL[op];
+        let arity = kind.arity();
+        let is_const =
+            |slot: usize| matches!(ops[fanin[i][slot] as usize], OP_CONST0 | OP_CONST1);
+        if (0..arity).all(is_const) {
+            diags.push(Diagnostic::new(
+                UFO006,
+                Locus::Node(i as u32),
+                format!("{kind:?} node {i} reads only constants"),
+            ));
+        } else if arity == 2 && fanin[i][0] == fanin[i][1] {
+            diags.push(Diagnostic::new(
+                UFO006,
+                Locus::Node(i as u32),
+                format!("{kind:?} node {i} reads node {} on both pins", fanin[i][0]),
+            ));
+        }
+    }
+    diags
+}
+
+/// Structurally duplicate gates ([`UFO007`], pedantic): same opcode and
+/// same fanin record as an earlier gate. Commutativity is deliberately not
+/// canonicalized — `and2(a, b)` vs `and2(b, a)` have different pin timing
+/// in the cell library, so only exact duplicates are flagged.
+fn pass_duplicate_gates(nl: &Netlist) -> Vec<Diagnostic> {
+    let ops = nl.ops();
+    let fanin = nl.fanin_records();
+    let mut seen = std::collections::HashMap::new();
+    let mut diags = Vec::new();
+    for i in 0..nl.len() {
+        if (ops[i] as usize) >= CellKind::ALL.len() {
+            continue;
+        }
+        if let Some(prev) = seen.insert((ops[i], fanin[i]), i) {
+            diags.push(Diagnostic::new(
+                UFO007,
+                Locus::Node(i as u32),
+                format!(
+                    "{:?} node {i} duplicates node {prev} (same opcode and fanins)",
+                    CellKind::ALL[ops[i] as usize]
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_netlist_has_no_findings() {
+        let mut nl = Netlist::new("clean");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let y = nl.and2(a, b);
+        nl.output("y", y);
+        assert!(lint_netlist(&nl, &LintOptions { pedantic: true }).is_empty());
+    }
+
+    #[test]
+    fn forward_reference_is_a_cycle() {
+        let mut nl = Netlist::new("cyc");
+        let a = nl.input("a");
+        // and2 whose second fanin points at itself: a 1-cycle.
+        let id = nl.push_raw(CellKind::And2.opcode() as u8, [a.0, 2, 0]);
+        nl.output("y", id);
+        let diags = lint_netlist(&nl, &LintOptions::default());
+        assert_eq!(codes(&diags), [UFO001]);
+    }
+
+    #[test]
+    fn dangling_fanin_and_output() {
+        let mut nl = Netlist::new("dangle");
+        let a = nl.input("a");
+        let id = nl.push_raw(CellKind::Inv.opcode() as u8, [99, 0, 0]);
+        nl.output("y", id);
+        nl.output("z", crate::ir::NodeId(500));
+        let _ = a;
+        let diags = lint_netlist(&nl, &LintOptions::default());
+        assert_eq!(codes(&diags), [UFO002, UFO002]);
+    }
+
+    #[test]
+    fn duplicate_output_name() {
+        let mut nl = Netlist::new("dup");
+        let a = nl.input("a");
+        nl.output("y", a);
+        nl.output("y", a);
+        let diags = lint_netlist(&nl, &LintOptions::default());
+        assert_eq!(codes(&diags), [UFO004]);
+    }
+
+    #[test]
+    fn unknown_opcode_and_corrupt_ordinal() {
+        let mut nl = Netlist::new("op");
+        let a = nl.input("a");
+        nl.output("a", a);
+        let _bad = nl.push_raw(42, [0, 0, 0]);
+        let _fake_input = nl.push_raw(crate::ir::OP_INPUT, [7, 0, 0]);
+        let diags = lint_netlist(&nl, &LintOptions::default());
+        assert_eq!(codes(&diags), [UFO005, UFO005]);
+    }
+
+    #[test]
+    fn pedantic_passes_flag_dead_const_and_duplicate_gates() {
+        let mut nl = Netlist::new("pedantic");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let k = nl.constant(true);
+        let dead = nl.xor2(a, b); // never consumed, not an output
+        let folded = nl.and2(k, k); // all-constant fanins
+        let y1 = nl.or2(a, b);
+        let y2 = nl.or2(a, b); // exact duplicate of y1
+        nl.output("f", folded);
+        nl.output("y1", y1);
+        nl.output("y2", y2);
+        let _ = dead;
+        let quiet = lint_netlist(&nl, &LintOptions::default());
+        assert!(quiet.is_empty(), "{quiet:?}");
+        let diags = lint_netlist(&nl, &LintOptions { pedantic: true });
+        assert_eq!(codes(&diags), [UFO003, UFO006, UFO007]);
+    }
+}

@@ -19,6 +19,11 @@
 //!   systolic  --width N --freq 1e9     Table-2 style systolic report.
 //!   verify    --width N [--mac]        Simulator + PJRT equivalence.
 //!   ablation  --width N                Per-ingredient ablation table.
+//!   lint      [--width N] [--request '<json>'] [--json]
+//!             Static analysis (LINTS.md codes). With no `--request`,
+//!             sweeps the tier-1 design families × operand formats at
+//!             `--width` (default 8). Exits nonzero when any design
+//!             carries an Error-severity diagnostic.
 //!   request   --json '<request>'       Compile a serialized DesignRequest.
 //!   serve     [--transport tcp|stdio] [--addr 127.0.0.1:7878]
 //!             [--cache-dir DIR|none] [--workers N] [--verify N]
@@ -292,6 +297,62 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 8);
+    let reqs: Vec<DesignRequest> = match args.get("request") {
+        Some(text) => vec![DesignRequest::parse(text)?],
+        None => ufo_mac::api::tier1_requests(n),
+    };
+    // A reporting engine: the deny gate is off so a dirty design comes
+    // back as a report to print — the exit code carries the verdict.
+    let eng = ufo_mac::api::SynthEngine::new(ufo_mac::api::EngineConfig {
+        lint_deny: None,
+        ..Default::default()
+    });
+    let as_json = args.has("json");
+    let mut designs_with_errors = 0usize;
+    let mut rows: Vec<ufo_mac::util::Json> = Vec::new();
+    for req in &reqs {
+        let (report, art, _) = eng.lint(req)?;
+        if report.count(ufo_mac::lint::Severity::Error) > 0 {
+            designs_with_errors += 1;
+        }
+        if as_json {
+            let ufo_mac::util::Json::Obj(mut m) = report.summary_json() else {
+                unreachable!("lint summary must be an object");
+            };
+            m.insert("canonical".to_string(), art.request.to_json());
+            m.insert(
+                "fingerprint".to_string(),
+                ufo_mac::util::Json::str(art.fingerprint.to_string()),
+            );
+            rows.push(ufo_mac::util::Json::Obj(m));
+        } else {
+            println!(
+                "{} {}",
+                if report.is_clean() { "clean" } else { "DIRTY" },
+                art.request.to_json_string()
+            );
+            for d in &report.diagnostics {
+                println!("  {d}");
+            }
+        }
+    }
+    if as_json {
+        let doc = ufo_mac::util::Json::obj(vec![
+            ("clean", ufo_mac::util::Json::Bool(designs_with_errors == 0)),
+            ("designs", ufo_mac::util::Json::Arr(rows)),
+        ]);
+        println!("{}", doc.render());
+    } else {
+        println!("lint: {} design(s), {designs_with_errors} with errors", reqs.len());
+    }
+    if designs_with_errors > 0 {
+        anyhow::bail!("lint found Error-severity diagnostics in {designs_with_errors} design(s)");
+    }
+    Ok(())
+}
+
 fn cmd_request(args: &Args) -> Result<()> {
     // Compile a serialized request — the service-style entry point.
     let json = args
@@ -489,14 +550,16 @@ fn main() {
         "systolic" => cmd_systolic(&args),
         "verify" => cmd_verify(&args),
         "ablation" => cmd_ablation(&args),
+        "lint" => cmd_lint(&args),
         "request" => cmd_request(&args),
         "serve" => cmd_serve(&args),
         "bench-check" => cmd_bench_check(&args),
         _ => {
             println!(
                 "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
-                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|request|serve|bench-check> [flags]\n\
+                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|lint|request|serve|bench-check> [flags]\n\
                  methods: ufo, gomil, rlmul, commercial; strategies: area, timing, tradeoff\n\
+                 lint: --width N (tier-1 sweep), --request '<json>' (one design), --json\n\
                  serve: --transport tcp|stdio (default tcp), --addr HOST:PORT,\n\
                         --cache-dir DIR|none (default: workspace design_cache/),\n\
                         --workers N, --verify N — wire format in PROTOCOL.md\n\

@@ -12,8 +12,8 @@
 //! sum, the same §2.2 information flow the paper prescribes for the CT→CPA
 //! boundary.
 
-use crate::cpa::{self, CpaColumn, CpaStrategy, FdcModel, PrefixStructure};
-use crate::ct::{self, CtArchitecture, OrderStrategy, StagePlan};
+use crate::cpa::{self, CpaColumn, CpaStrategy, FdcModel, PrefixGraph, PrefixStructure};
+use crate::ct::{self, CtArchitecture, CtCounts, OrderStrategy, StagePlan};
 use crate::ir::{CellLib, Netlist, NodeId};
 use crate::ppg::{self, PpgKind, Signedness};
 use crate::sta::TimingStats;
@@ -166,6 +166,19 @@ impl MultiplierSpec {
     /// the engine's uncached inner path. Prefer [`MultiplierSpec::build`]
     /// (cached) unless you are the engine.
     pub fn build_with(&self, lib: &CellLib, tm: &CompressorTiming) -> Result<Design> {
+        Ok(self.build_with_trace(lib, tm)?.0)
+    }
+
+    /// [`MultiplierSpec::build_with`] that also returns the
+    /// [`DatapathTrace`] — the stage plan, counts, recorded arrival
+    /// profiles and prefix graphs the build executed — so
+    /// [`crate::lint::lint_design`] can cross-check the netlist against
+    /// the evidence instead of re-deriving the datapath from gates.
+    pub fn build_with_trace(
+        &self,
+        lib: &CellLib,
+        tm: &CompressorTiming,
+    ) -> Result<(Design, DatapathTrace)> {
         let fmt = self.format;
         if let Err(e) = fmt.validate() {
             bail!("invalid operand format: {e}");
@@ -215,20 +228,36 @@ impl MultiplierSpec {
         }
 
         // CT.
-        let ct_out = match &self.ct_plan {
+        let initial_pops: Vec<usize> = matrix.columns.iter().map(Vec::len).collect();
+        let (ct_out, ct_plan_used, ct_counts) = match &self.ct_plan {
             Some(plan) => {
                 let mut cols = matrix.columns;
                 cols.resize(plan.width().max(cols.len()), Vec::new());
-                ct::build_ct(
+                // Lint gate on externally-supplied plans (RL-MUL searched
+                // trees, server requests): `build_ct` panics on malformed
+                // schedules, so vet the plan first and fail with the
+                // diagnostic instead. This is the cheap always-on subset
+                // guarding the candidate-evaluation loops.
+                let pops: Vec<usize> = cols.iter().map(Vec::len).collect();
+                if let Some(d) = crate::lint::check_plan(&pops, plan).into_iter().next() {
+                    bail!("invalid CT stage plan: {d}");
+                }
+                let out = ct::build_ct(
                     &mut nl,
                     tm,
                     cols,
                     plan,
                     self.order_override.unwrap_or(OrderStrategy::Naive),
-                )
+                );
+                (out, plan.clone(), None)
             }
-            None => ct::synthesize(&mut nl, tm, matrix.columns, self.ct, self.order_override),
+            None => {
+                let t =
+                    ct::synthesize_traced(&mut nl, tm, matrix.columns, self.ct, self.order_override);
+                (t.out, t.plan, t.counts)
+            }
         };
+        let final_rows: Vec<usize> = ct_out.rows.iter().map(Vec::len).collect();
 
         // CPA over the two compressed rows.
         let width = ct_out.rows.len();
@@ -270,6 +299,8 @@ impl MultiplierSpec {
 
         // Conventional MAC: a second, separate CPA adds the accumulator.
         let mut cpa2_profile: Option<Vec<f64>> = None;
+        let mut prefix2: Option<PrefixGraph> = None;
+        let mut mac_trace: Option<MacProfileTrace> = None;
         if self.separate_mac {
             let add_w = out_w;
             // §2.2 arrival-profile propagation (the headline fix): the
@@ -305,6 +336,12 @@ impl MultiplierSpec {
             };
             let out2 = cpa::expand(&mut nl, &g2, &cols2);
             cpa_nodes += g2.size();
+            mac_trace = Some(MacProfileTrace {
+                sum_nodes: product[..add_w].to_vec(),
+                measured: (0..add_w).map(|j| at[product[j].index()]).collect(),
+                basis: profile2.clone(),
+            });
+            prefix2 = Some(g2);
             let mut sum2 = out2.sum;
             if signed {
                 // (a·b + c) mod 2^{w+1} for w-bit two's-complement addends:
@@ -322,7 +359,17 @@ impl MultiplierSpec {
             nl.output(format!("p{i}"), p);
         }
         nl.validate().map_err(|e| anyhow::anyhow!("netlist invalid: {e}"))?;
-        Ok(Design {
+        let trace = DatapathTrace {
+            initial_pops,
+            plan: ct_plan_used,
+            counts: ct_counts,
+            stage_profiles: ct_out.stage_profiles,
+            final_rows,
+            prefix: graph,
+            prefix2,
+            mac: mac_trace,
+        };
+        let design = Design {
             n: fmt.max_bits(),
             format: fmt,
             is_mac,
@@ -336,7 +383,8 @@ impl MultiplierSpec {
             cpa_nodes,
             timing: cpa_timing,
             cpa2_profile,
-        })
+        };
+        Ok((design, trace))
     }
 }
 
@@ -372,6 +420,47 @@ pub struct Design {
     /// CPA was synthesized against (`max` of the first CPA's sum arrival
     /// and the accumulator pin arrival per column).
     pub cpa2_profile: Option<Vec<f64>>,
+}
+
+/// Datapath evidence captured by [`MultiplierSpec::build_with_trace`]:
+/// everything the build decided (schedules, counts, recorded profiles,
+/// prefix graphs) that a gate-level netlist alone no longer shows. The
+/// lint subsystem's `UFO1xx`/`UFO2xx` passes cross-check the design
+/// against this record; it is never persisted.
+#[derive(Debug, Clone)]
+pub struct DatapathTrace {
+    /// Partial-product population per column entering the CT (pre-resize).
+    pub initial_pops: Vec<usize>,
+    /// The stage plan the CT executed.
+    pub plan: StagePlan,
+    /// Algorithm-1 counts the plan implements (`None` for explicit
+    /// searched plans and the population-driven Wallace/Dadda schedules).
+    pub counts: Option<CtCounts>,
+    /// Exact per-stage arrival snapshots recorded while building the CT.
+    pub stage_profiles: Vec<Vec<f64>>,
+    /// Bits per column after the final CT stage (must be ≤ 2).
+    pub final_rows: Vec<usize>,
+    /// The first (product) CPA's prefix graph.
+    pub prefix: PrefixGraph,
+    /// The separate-MAC second CPA's prefix graph, when one was built.
+    pub prefix2: Option<PrefixGraph>,
+    /// Separate-MAC arrival-handoff record (the PR-3 bug class evidence).
+    pub mac: Option<MacProfileTrace>,
+}
+
+/// The separate-MAC §2.2 arrival handoff, as recorded at build time: which
+/// first-CPA sum nodes fed the second CPA, what STA measured at them, and
+/// the profile the second CPA was actually synthesized against.
+#[derive(Debug, Clone)]
+pub struct MacProfileTrace {
+    /// First-CPA sum bits (LSB first) that feed the second CPA.
+    pub sum_nodes: Vec<NodeId>,
+    /// STA-measured arrival (ns) at each of [`MacProfileTrace::sum_nodes`]
+    /// when the second CPA was synthesized.
+    pub measured: Vec<f64>,
+    /// The per-column profile handed to the second CPA's optimizer
+    /// (`max(measured, accumulator arrival)`).
+    pub basis: Vec<f64>,
 }
 
 impl Design {

@@ -2,7 +2,7 @@
 //!
 //! The server speaks newline-delimited JSON (`PROTOCOL.md` at the
 //! repository root is the normative wire description): each input line is
-//! one command (`compile`, `batch`, `sweep`, `stats`, `shutdown`), each
+//! one command (`compile`, `batch`, `lint`, `sweep`, `stats`, `shutdown`), each
 //! output line one response envelope carrying the echoed request `id`.
 //! Commands are dispatched concurrently over
 //! [`crate::coordinator::pool::scoped_workers`], so a slow `sweep` does not
@@ -43,7 +43,7 @@ use crate::sta::TimingStats;
 use crate::util::Json;
 use crate::Result;
 use anyhow::anyhow;
-use protocol::{artifact_summary, envelope_err, envelope_ok};
+use protocol::{artifact_summary, envelope_err, envelope_ok, lint_summary};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
@@ -140,6 +140,16 @@ impl Server {
                     ("count", Json::num(out.len() as f64)),
                     ("results", Json::Arr(out)),
                 ]))
+            }
+            Command::Lint(req) => {
+                // Same panic containment as `compile`: linting an uncached
+                // request synthesizes it first.
+                let (report, art, source) = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| self.engine.lint(&req)),
+                )
+                .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))?;
+                self.timing.lock().unwrap().merge(&art.timing);
+                Ok(lint_summary(&report, &art, source))
             }
             Command::Sweep(cfg) => {
                 let points = coordinator::run_sweep_with(&self.engine, &cfg);
@@ -358,7 +368,7 @@ mod tests {
         let resp = server().handle_line(r#"{"cmd":"warp","id":9}"#);
         assert!(resp.contains(r#""ok":false"#), "{resp}");
         assert!(
-            resp.contains("valid: batch, compile, shutdown, stats, sweep"),
+            resp.contains("valid: batch, compile, lint, shutdown, stats, sweep"),
             "{resp}"
         );
         assert!(resp.contains(r#""id":9"#), "{resp}");
@@ -383,6 +393,20 @@ mod tests {
         let doc = Json::parse(&stats).unwrap();
         let cache = doc.get("result").unwrap().get("cache").unwrap();
         assert!(cache.get("hits").unwrap().as_f64().unwrap() >= 1.0, "{stats}");
+    }
+
+    #[test]
+    fn lint_reports_clean_design_with_cache_provenance() {
+        let srv = server();
+        let line = r#"{"cmd":"lint","id":4,"request":{"kind":"method","method":"ufo","n":4,"strategy":"tradeoff","mac":false}}"#;
+        let resp = srv.handle_line(line);
+        assert!(resp.contains(r#""ok":true"#), "{resp}");
+        assert!(resp.contains(r#""clean":true"#), "{resp}");
+        assert!(resp.contains(r#""source":"compiled""#), "{resp}");
+        // A `compile` of the same request shares the cache entry, so the
+        // second lint is a memory hit.
+        let again = srv.handle_line(line);
+        assert!(again.contains(r#""source":"memory""#), "{again}");
     }
 
     #[test]

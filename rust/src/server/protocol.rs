@@ -5,6 +5,7 @@
 
 use crate::api::{persist, CompileSource, DesignArtifact, DesignRequest};
 use crate::coordinator::SweepConfig;
+use crate::lint::LintReport;
 use crate::ppg::Signedness;
 use crate::util::Json;
 use crate::Result;
@@ -17,6 +18,9 @@ pub enum Command {
     Compile(DesignRequest),
     /// Compile many requests on the engine's thread pool.
     Batch(Vec<DesignRequest>),
+    /// Compile (or fetch) a request and return its static-analysis report
+    /// ([`crate::lint`]) instead of the STA summary.
+    Lint(DesignRequest),
     /// Run a (method × width × strategy × signedness) DSE sweep through
     /// the server's engine and cache.
     Sweep(Box<SweepConfig>),
@@ -60,10 +64,17 @@ fn parse_command(doc: &Json) -> Result<Command> {
             }
             rows.iter().map(DesignRequest::from_json).collect::<Result<Vec<_>>>().map(Command::Batch)
         }
+        "lint" => {
+            let req =
+                doc.get("request").ok_or_else(|| anyhow!("lint: missing field 'request'"))?;
+            Ok(Command::Lint(DesignRequest::from_json(req)?))
+        }
         "sweep" => Ok(Command::Sweep(Box::new(sweep_config(doc)?))),
         "stats" => Ok(Command::Stats),
         "shutdown" => Ok(Command::Shutdown),
-        other => bail!("unknown cmd '{other}' (valid: batch, compile, shutdown, stats, sweep)"),
+        other => {
+            bail!("unknown cmd '{other}' (valid: batch, compile, lint, shutdown, stats, sweep)")
+        }
     }
 }
 
@@ -167,4 +178,16 @@ pub fn artifact_summary(art: &DesignArtifact, source: CompileSource) -> Json {
         ("verified", persist::opt_bool(art.verified)),
         ("pjrt_verified", persist::opt_bool(art.pjrt_verified)),
     ])
+}
+
+/// `lint`-command result: the report summary (clean flag, per-severity
+/// counts, the diagnostics themselves) plus the fingerprint and cache
+/// provenance of the artifact it describes.
+pub fn lint_summary(report: &LintReport, art: &DesignArtifact, source: CompileSource) -> Json {
+    let Json::Obj(mut m) = report.summary_json() else {
+        unreachable!("lint summary must be an object");
+    };
+    m.insert("fingerprint".to_string(), Json::str(art.fingerprint.to_string()));
+    m.insert("source".to_string(), Json::str(source.key()));
+    Json::Obj(m)
 }

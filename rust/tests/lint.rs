@@ -1,0 +1,101 @@
+//! Tier-1 integration tests of the static-analysis subsystem: each
+//! deliberately broken fixture must yield its exact diagnostic code, every
+//! tier-1 design family × operand format must lint clean end-to-end, and
+//! the engine's lint gate must reject a malformed candidate before any
+//! simulation is paid for.
+
+use ufo_mac::api::{tier1_requests, DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::cpa::{PrefixGraph, NONE};
+use ufo_mac::ct::StagePlan;
+use ufo_mac::ir::{CellKind, Netlist};
+use ufo_mac::lint::{check_plan, check_prefix, lint_netlist, LintOptions, Locus};
+use ufo_mac::multiplier::MultiplierSpec;
+
+fn codes(diags: &[ufo_mac::lint::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code).collect()
+}
+
+#[test]
+fn combinational_cycle_is_ufo001() {
+    let mut nl = Netlist::new("cycle");
+    let a = nl.input("a");
+    let _b = nl.input("b");
+    // Node 2 names itself as a fan-in: in the append-only topological IR a
+    // non-earlier reference *is* a cycle.
+    let g = nl.push_raw(CellKind::And2.opcode() as u8, [a.0, 2, 0]);
+    nl.output("y", g);
+    let diags = lint_netlist(&nl, &LintOptions::default());
+    assert_eq!(codes(&diags), vec!["UFO001"], "{diags:?}");
+    assert_eq!(diags[0].locus, Locus::Node(2));
+}
+
+#[test]
+fn dangling_fanin_is_ufo002() {
+    let mut nl = Netlist::new("dangling");
+    let a = nl.input("a");
+    let g = nl.push_raw(CellKind::And2.opcode() as u8, [a.0, 7, 0]);
+    nl.output("y", g);
+    let diags = lint_netlist(&nl, &LintOptions::default());
+    assert_eq!(codes(&diags), vec!["UFO002"], "{diags:?}");
+}
+
+#[test]
+fn duplicate_output_name_is_ufo004() {
+    let mut nl = Netlist::new("dup");
+    let a = nl.input("a");
+    let b = nl.input("b");
+    nl.output("y", a);
+    nl.output("y", b);
+    let diags = lint_netlist(&nl, &LintOptions::default());
+    assert_eq!(codes(&diags), vec!["UFO004"], "{diags:?}");
+}
+
+#[test]
+fn weight_leaking_ct_stage_is_ufo101() {
+    // One stage of full adders over populations [3,3,3]: the top column's
+    // carry leaves the declared width — weight is not conserved.
+    let plan = StagePlan { f: vec![vec![1, 1, 1]], h: vec![vec![0, 0, 0]] };
+    let diags = check_plan(&[3, 3, 3], &plan);
+    assert_eq!(codes(&diags), vec!["UFO101"], "{diags:?}");
+}
+
+#[test]
+fn gapped_prefix_graph_is_ufo104() {
+    // Roots for bits 0, 1 and 3 but none for bit 2: coverage gap.
+    let mut g = PrefixGraph::leaves(4);
+    let n10 = g.combine(1, 0);
+    g.roots[1] = n10;
+    let n32 = g.combine(3, 2);
+    let n30 = g.combine(n32, n10);
+    g.roots[3] = n30;
+    assert_eq!(g.roots[2], NONE);
+    let diags = check_prefix(&g);
+    assert_eq!(codes(&diags), vec!["UFO104"], "{diags:?}");
+    assert_eq!(diags[0].locus, Locus::Bit(2));
+}
+
+#[test]
+fn tier1_families_and_formats_lint_clean() {
+    // The same list `ufo-mac lint` sweeps: every CT architecture, both
+    // accumulator modes, Booth-4, across unsigned/signed square and
+    // rectangular operand formats. Fresh compiles run the full structural
+    // + datapath sweep over the build's own trace.
+    let eng = SynthEngine::new(EngineConfig::default());
+    for req in tier1_requests(8) {
+        let (report, art, _) = eng.lint(&req).unwrap();
+        assert!(report.is_clean(), "{req:?}: {report}");
+        assert!(art.lint.as_ref().unwrap().is_clean());
+    }
+}
+
+#[test]
+fn engine_gate_rejects_malformed_candidate_without_simulation() {
+    // verify_vectors is configured, but the infeasible plan must die in
+    // the lint pre-check — the error carries the diagnostic code, and the
+    // equivalence sweep (which would dominate the runtime) never runs.
+    let eng = SynthEngine::new(EngineConfig { verify_vectors: 1 << 16, ..Default::default() });
+    let plan = StagePlan { f: vec![vec![9, 0, 0]], h: vec![vec![0, 0, 0]] };
+    let req = DesignRequest::from_spec(&MultiplierSpec::new(2).with_plan(plan));
+    let err = format!("{:#}", eng.compile(&req).unwrap_err());
+    assert!(err.contains("UFO1"), "{err}");
+}
