@@ -180,6 +180,11 @@ impl DesignArtifact {
         }
     }
 
+    /// Pipeline metadata, when the compiled body is a pipelined design.
+    pub fn pipeline(&self) -> Option<&crate::multiplier::PipelineInfo> {
+        self.design().and_then(|d| d.pipeline.as_ref())
+    }
+
     /// The clocked module report (FIR / systolic requests only).
     pub fn module_report(&self) -> Option<&ModuleReport> {
         match &self.body {
@@ -585,6 +590,12 @@ impl SynthEngine {
     }
 
     fn pjrt_check(&self, design: &Design) -> Option<bool> {
+        // The PJRT netlist encoding is combinational-only (no register
+        // opcode in the kernel wire format); pipelined designs are covered
+        // by the clocked equivalence sweep instead.
+        if design.pipeline.is_some() {
+            return None;
+        }
         // One runtime, one lock: PJRT verification serializes across batch
         // workers. Fine for the cross-check's sample sizes; per-worker
         // runtimes would trade memory (a compiled executable cache each)
@@ -666,6 +677,18 @@ mod tests {
             let (again, _, _) = eng.lint(&req).unwrap();
             assert!(again.is_clean());
         }
+    }
+
+    #[test]
+    fn pipelined_compile_verifies_through_the_clocked_sweep() {
+        let eng = SynthEngine::new(EngineConfig { verify_vectors: 256, ..Default::default() });
+        let req = DesignRequest::from_spec(&MultiplierSpec::new(4).pipeline_stages(2));
+        let art = eng.compile(&req).unwrap();
+        // The equivalence budget routes to the bounded sequential check;
+        // the PJRT cross-check abstains (combinational-only encoding).
+        assert_eq!(art.verified, Some(true));
+        assert_eq!(art.pjrt_verified, None);
+        assert!(art.sta.critical_delay_ns > 0.0);
     }
 
     #[test]

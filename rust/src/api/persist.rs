@@ -34,7 +34,7 @@ use super::request::{DesignRequest, Fingerprint};
 use crate::ir::{CellKind, Netlist, Node, NodeId};
 use crate::lint::LintReport;
 use crate::modules::ModuleReport;
-use crate::multiplier::Design;
+use crate::multiplier::{Design, PipelineInfo};
 use crate::ppg::{OperandFormat, Signedness};
 use crate::sta::{StaReport, TimingStats};
 use crate::util::Json;
@@ -242,10 +242,12 @@ pub fn artifact_from_json(j: &Json) -> Result<DesignArtifact> {
 
 /// Serialize a gate-level netlist. Nodes travel positionally (node ids are
 /// their indices), each as a compact array: `["i", name, arrival_ns]` for
-/// a primary input, `["k", 0|1]` for a constant, `[opcode, fanin…]` for a
-/// gate (opcodes are [`CellKind::opcode`], stable across versions). The
-/// records are read column-wise off the IR's flat arrays — no `Node`
-/// reconstruction — and the rendered bytes are identical to the pre-flat
+/// a primary input, `["k", 0|1]` for a constant, `["r", d, en, clr, 0|1]`
+/// for a register (pin order matches [`Netlist::reg`]; the trailing flag
+/// is the init/reset value), `[opcode, fanin…]` for a gate (opcodes are
+/// [`CellKind::opcode`], stable across versions). The records are read
+/// column-wise off the IR's flat arrays — no `Node` reconstruction — and
+/// combinational netlists render byte-identically to the pre-sequential
 /// encoding, so existing disk-cache entries stay valid.
 pub fn netlist_to_json(nl: &Netlist) -> Json {
     let ops = nl.ops();
@@ -266,6 +268,16 @@ pub fn netlist_to_json(nl: &Netlist) -> Json {
                 ]),
                 _ => unreachable!("OP_INPUT node must view as Node::Input"),
             },
+            None if ops[i] == crate::ir::OP_REG => {
+                let rec = fan[i];
+                Json::arr(vec![
+                    Json::str("r"),
+                    Json::num(rec[0] as f64),
+                    Json::num(rec[1] as f64),
+                    Json::num(rec[2] as f64),
+                    Json::num(if nl.reg_init(NodeId(i as u32)) { 1.0 } else { 0.0 }),
+                ])
+            }
             None => Json::arr(vec![
                 Json::str("k"),
                 Json::num(if ops[i] == crate::ir::OP_CONST1 { 1.0 } else { 0.0 }),
@@ -317,6 +329,19 @@ pub fn netlist_from_json(j: &Json) -> Result<Netlist> {
                     .and_then(|v| v.as_f64())
                     .ok_or_else(|| anyhow!("node {i}: constant record must be [\"k\", 0|1]"))?;
                 nl.constant(v != 0.0);
+            }
+            Json::Str(tag) if tag == "r" => {
+                let (d, en, clr, init) = match parts {
+                    [_, Json::Num(d), Json::Num(en), Json::Num(clr), Json::Num(init)] => {
+                        (*d as u32, *en as u32, *clr as u32, *init != 0.0)
+                    }
+                    _ => bail!("node {i}: register record must be [\"r\", d, en, clr, 0|1]"),
+                };
+                // `reg_raw` places no ordering constraints of its own; the
+                // final `validate()` below re-checks every register pin
+                // (forward `d` is legal feedback, `en`/`clr` must be
+                // strictly earlier), so corrupted entries fail cleanly.
+                nl.reg_raw(d, en, clr, init);
             }
             Json::Num(op) => {
                 let op = *op as usize;
@@ -379,6 +404,20 @@ fn design_to_json(d: &Design) -> Json {
                 Some(p) => Json::arr(p.iter().map(|&x| Json::num(x)).collect()),
             },
         ),
+        // Always present (null for combinational designs) so the rendered
+        // bytes are a pure function of the design, never of the writer's
+        // version; pre-sequential entries carry no key and read as None.
+        (
+            "pipeline",
+            match &d.pipeline {
+                None => Json::Null,
+                Some(p) => Json::obj(vec![
+                    ("stages", Json::num(p.stages as f64)),
+                    ("en", Json::num(p.en.0 as f64)),
+                    ("clr", Json::num(p.clr.0 as f64)),
+                ]),
+            },
+        ),
     ])
 }
 
@@ -394,6 +433,23 @@ fn design_from_json(j: &Json) -> Result<Design> {
     if !(check_ids(&a) && check_ids(&b) && check_ids(&c) && check_ids(&product)) {
         bail!("design interface references nodes outside the netlist");
     }
+    let pipeline = match j.get("pipeline") {
+        None | Some(Json::Null) => None,
+        Some(p) => {
+            let info = PipelineInfo {
+                stages: num_field(p, "stages")? as usize,
+                en: NodeId(num_field(p, "en")? as u32),
+                clr: NodeId(num_field(p, "clr")? as u32),
+            };
+            if info.stages == 0 {
+                bail!("design.pipeline.stages must be positive");
+            }
+            if !check_ids(&[info.en, info.clr]) {
+                bail!("design.pipeline references nodes outside the netlist");
+            }
+            Some(info)
+        }
+    };
     Ok(Design {
         n: num_field(j, "n")? as usize,
         format: format_from_json(j.get("format").ok_or_else(|| anyhow!("design.format"))?)?,
@@ -411,6 +467,7 @@ fn design_from_json(j: &Json) -> Result<Design> {
             None | Some(Json::Null) => None,
             Some(_) => Some(f64s_from_json(j, "cpa2_profile")?),
         },
+        pipeline,
     })
 }
 
@@ -635,6 +692,35 @@ mod tests {
         write_entry(&dir, fp, &art).unwrap();
         assert!(read_entry(&dir, fp).is_ok());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pipelined_design_roundtrips_registers_and_metadata() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let req = DesignRequest::from_spec(
+            &crate::multiplier::MultiplierSpec::new(4).fused_mac(true).pipeline_stages(2),
+        );
+        let art = eng.compile(&req).unwrap();
+        let j = artifact_to_json(&art);
+        let back = artifact_from_json(&j).unwrap();
+        assert_eq!(j.render(), artifact_to_json(&back).render());
+        let (orig, restored) = match (&art.body, &back.body) {
+            (ArtifactBody::Design(o), ArtifactBody::Design(r)) => (o, r),
+            other => panic!("wrong bodies {other:?}"),
+        };
+        let info = restored.pipeline.as_ref().expect("pipeline metadata persisted");
+        assert_eq!(Some(info), orig.pipeline.as_ref());
+        assert_eq!(info.stages, 2);
+        assert!(restored.netlist.is_sequential());
+        assert_eq!(restored.netlist.num_regs(), orig.netlist.num_regs());
+        // Register init values survive the trip (all pipeline regs reset
+        // to 0, and every one is re-validated by netlist_from_json).
+        for &(r, init) in restored.netlist.registers() {
+            assert_eq!(init, orig.netlist.reg_init(NodeId(r)));
+        }
+        // The restored sequential design still passes bounded equivalence.
+        let rep = crate::equiv::check_multiplier(restored).unwrap();
+        assert!(rep.exhaustive && rep.passed, "{rep:?}");
     }
 
     #[test]

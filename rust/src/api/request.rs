@@ -57,6 +57,10 @@ pub struct MulRequest {
     pub mac: MacMode,
     /// FDC timing model driving CPA optimization.
     pub fdc: FdcModel,
+    /// Register ranks cut into the datapath (`0` = combinational).
+    /// Serialization omits the field when `0`, keeping every
+    /// pre-pipeline request fingerprint byte-stable.
+    pub pipeline_stages: usize,
 }
 
 /// A baseline-method design request (the coordinator's sweep axis).
@@ -249,6 +253,7 @@ impl DesignRequest {
                 MacMode::None
             },
             fdc: spec.fdc_model,
+            pipeline_stages: spec.pipeline_stages,
         })
     }
 
@@ -373,6 +378,12 @@ impl DesignRequest {
                         ]),
                     ));
                 }
+                // Combinational requests rendered no `pipeline_stages`
+                // key before the sequential IR existed; omitting the 0
+                // default keeps their fingerprints byte-stable.
+                if m.pipeline_stages > 0 {
+                    fields.push(("pipeline_stages", Json::num(m.pipeline_stages as f64)));
+                }
                 Json::obj(fields)
             }
             DesignRequest::Method(m) => {
@@ -475,6 +486,11 @@ impl DesignRequest {
                     strategy: str_field(j, "strategy")?.parse()?,
                     mac: parse_mac(str_field(j, "mac")?)?,
                     fdc,
+                    // Missing key = pre-pipeline (combinational) request.
+                    pipeline_stages: match j.get("pipeline_stages") {
+                        None | Some(Json::Null) => 0,
+                        Some(_) => usize_field(j, "pipeline_stages")?,
+                    },
                 }))
             }
             "method" => Ok(DesignRequest::Method(MethodRequest {
@@ -562,6 +578,14 @@ pub fn tier1_requests(n: usize) -> Vec<DesignRequest> {
     for fmt in [OperandFormat::unsigned(n), OperandFormat::signed(n)] {
         out.push(DesignRequest::from_spec(&MultiplierSpec::new_fmt(fmt).ppg(PpgKind::Booth4)));
     }
+    // Pipelined variants: the sequential IR's tier-1 coverage — a 1-stage
+    // registered multiplier plus 2-stage fused MACs in both signednesses.
+    out.push(DesignRequest::from_spec(&MultiplierSpec::new(n).pipeline_stages(1)));
+    for fmt in [OperandFormat::unsigned(n), OperandFormat::signed(n)] {
+        out.push(DesignRequest::from_spec(
+            &MultiplierSpec::new_fmt(fmt).fused_mac(true).pipeline_stages(2),
+        ));
+    }
     out
 }
 
@@ -580,6 +604,7 @@ impl MulRequest {
             fused_mac: self.mac == MacMode::Fused,
             separate_mac: self.mac == MacMode::Separate,
             fdc_model: self.fdc,
+            pipeline_stages: self.pipeline_stages,
         }
     }
 }
@@ -794,6 +819,7 @@ mod tests {
             DesignRequest::from_spec(&MultiplierSpec::new(8).order(OrderStrategy::Naive)),
             DesignRequest::from_spec(&MultiplierSpec::new(8).signed(true)),
             DesignRequest::from_spec(&MultiplierSpec::new_fmt(OperandFormat::rect(8, 7))),
+            DesignRequest::from_spec(&MultiplierSpec::new(8).pipeline_stages(2)),
         ];
         for v in &variants {
             assert_ne!(a.fingerprint(), v.fingerprint(), "{v:?}");
@@ -816,6 +842,9 @@ mod tests {
             assert!(!text.contains("format"), "{text}");
             assert!(!text.contains("signedness"), "{text}");
         }
+        // A combinational request renders no pipeline key either.
+        let text = DesignRequest::multiplier(8).canonical().to_json_string();
+        assert!(!text.contains("pipeline"), "{text}");
         // An explicit unsigned square format is the same request.
         let explicit =
             DesignRequest::from_spec(&MultiplierSpec::new(8).format(OperandFormat::unsigned(8)));
@@ -961,6 +990,46 @@ mod tests {
             with_ct(CtArchitecture::Wallace).fingerprint(),
             with_ct(CtArchitecture::Gomil).fingerprint()
         );
+    }
+
+    #[test]
+    fn pipeline_stages_roundtrip_and_split_the_cache_key() {
+        let piped = DesignRequest::from_spec(
+            &MultiplierSpec::new(8).fused_mac(true).pipeline_stages(2),
+        );
+        let text = piped.to_json_string();
+        assert!(text.contains("\"pipeline_stages\":2"), "{text}");
+        let back = DesignRequest::parse(&text).unwrap();
+        assert_eq!(piped.fingerprint(), back.fingerprint());
+        match back {
+            DesignRequest::Multiplier(m) => assert_eq!(m.pipeline_stages, 2),
+            other => panic!("wrong form {other:?}"),
+        }
+        // Depths split the cache key; depth 0 equals the legacy request.
+        let flat = DesignRequest::from_spec(&MultiplierSpec::new(8).fused_mac(true));
+        assert_ne!(piped.fingerprint(), flat.fingerprint());
+        let p3 =
+            DesignRequest::from_spec(&MultiplierSpec::new(8).fused_mac(true).pipeline_stages(3));
+        assert_ne!(piped.fingerprint(), p3.fingerprint());
+        let explicit0 =
+            DesignRequest::from_spec(&MultiplierSpec::new(8).fused_mac(true).pipeline_stages(0));
+        assert_eq!(flat.fingerprint(), explicit0.fingerprint());
+        // Legacy JSON with no key parses to depth 0.
+        let legacy = DesignRequest::parse(&flat.to_json_string()).unwrap();
+        match legacy {
+            DesignRequest::Multiplier(m) => assert_eq!(m.pipeline_stages, 0),
+            other => panic!("wrong form {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tier1_includes_pipelined_variants() {
+        let reqs = tier1_requests(8);
+        let piped: Vec<_> = reqs
+            .iter()
+            .filter(|r| matches!(r, DesignRequest::Multiplier(m) if m.pipeline_stages > 0))
+            .collect();
+        assert_eq!(piped.len(), 3, "expected 3 pipelined tier-1 variants");
     }
 
     #[test]

@@ -24,8 +24,9 @@
 
 use crate::coordinator::pool;
 use crate::multiplier::Design;
-use crate::sim::{lane_value, CompiledNetlist};
+use crate::sim::{lane_value, ClockedSim, CompiledNetlist};
 use crate::Result;
+use anyhow::bail;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -83,6 +84,9 @@ pub fn check_multiplier_with(design: &Design, budget: usize) -> Result<EquivRepo
 /// so rectangular formats are swept over their own per-operand ranges, and
 /// the golden model ([`Design::expected`]) applies the design's signedness.
 pub fn check_multiplier_opts(design: &Design, opts: &EquivOptions) -> Result<EquivReport> {
+    if design.pipeline.is_some() {
+        return check_pipelined(design, opts);
+    }
     let total_bits = design.a.len() + design.b.len() + design.c.len();
     let plan = if total_bits <= 20 {
         VectorPlan::exhaustive(design)
@@ -90,6 +94,46 @@ pub fn check_multiplier_opts(design: &Design, opts: &EquivOptions) -> Result<Equ
         VectorPlan::sampled(design, opts.budget)
     };
     Ok(run_plan(design, &plan, opts.threads))
+}
+
+/// Bounded sequential equivalence for a pipelined design: unroll the
+/// clocked simulator over each vector batch and compare the
+/// latency-shifted outputs against the combinational golden model
+/// ([`Design::expected`]).
+///
+/// Reuses the same deterministic [`VectorPlan`] as the combinational
+/// sweep (exhaustive when the operand space is at most `2^20`), so the
+/// counterexample and vector count are worker-count independent. Each
+/// batch is driven from reset with `pipe_en = 1, pipe_clr = 0` on every
+/// lane, operands held for `latency + 1` cycles, and the product read
+/// after the pipeline has filled — the bounded-unrolling model of
+/// "the pipeline computes the same function, `k` cycles later".
+/// Reset/stall/clear semantics are covered by `rust/tests/sequential.rs`
+/// on top of this.
+pub fn check_pipelined(design: &Design, opts: &EquivOptions) -> Result<EquivReport> {
+    let Some(info) = design.pipeline.as_ref() else {
+        bail!("check_pipelined on a combinational design '{}'", design.netlist.name);
+    };
+    let total_bits = design.a.len() + design.b.len() + design.c.len();
+    if design.netlist.num_inputs() != total_bits + 2 {
+        bail!(
+            "pipelined design '{}' has {} inputs, want {} operand bits + en + clr",
+            design.netlist.name,
+            design.netlist.num_inputs(),
+            total_bits
+        );
+    }
+    let plan = if total_bits <= 20 {
+        VectorPlan::exhaustive(design)
+    } else {
+        VectorPlan::sampled(design, opts.budget)
+    };
+    Ok(run_plan_clocked(design, &plan, opts.threads, info.stages))
+}
+
+/// As [`check_pipelined`] with an explicit sampled-vector budget.
+pub fn check_pipelined_with(design: &Design, budget: usize) -> Result<EquivReport> {
+    check_pipelined(design, &EquivOptions { budget, ..Default::default() })
 }
 
 // -------------------------------------------------------------------
@@ -236,22 +280,22 @@ fn corner_list(bits: usize) -> Vec<u128> {
     corners
 }
 
-/// Pack one batch into lane words, simulate, and compare lanes against the
-/// golden model. Inputs are created in a-then-b-then-c order by the
-/// generators, so operands pack straight into lane words — no per-vector
-/// `Vec<bool>` round-trip. `words` is a reusable scratch buffer.
-fn run_batch(
+/// Pack one batch of `(a, b, c)` triples into per-input lane words.
+/// Inputs are created in a-then-b-then-c order by the generators, so
+/// operands pack straight into lane words. `extra` appends that many
+/// zeroed trailing words (the pipelined netlists' `pipe_en`/`pipe_clr`
+/// control ordinals, set by the caller).
+fn pack_operands(
     design: &Design,
-    comp: &CompiledNetlist<'_>,
-    buf: &mut Vec<u64>,
     words: &mut Vec<u64>,
     batch: &[(u128, u128, u128)],
-) -> Option<(u128, u128, u128, u128, u128)> {
+    extra: usize,
+) {
     let a_bits = design.a.len();
     let b_bits = design.b.len();
     let c_bits = design.c.len();
     words.clear();
-    words.resize(a_bits + b_bits + c_bits, 0);
+    words.resize(a_bits + b_bits + c_bits + extra, 0);
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let bit = 1u64 << lane;
         for k in 0..a_bits {
@@ -270,6 +314,18 @@ fn run_batch(
             }
         }
     }
+}
+
+/// Pack one batch into lane words, simulate, and compare lanes against the
+/// golden model. `buf`/`words` are reusable scratch buffers.
+fn run_batch(
+    design: &Design,
+    comp: &CompiledNetlist<'_>,
+    buf: &mut Vec<u64>,
+    words: &mut Vec<u64>,
+    batch: &[(u128, u128, u128)],
+) -> Option<(u128, u128, u128, u128, u128)> {
+    pack_operands(design, words, batch, 0);
     comp.run_into(buf, words);
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let got = lane_value(buf, &design.product, lane as u32);
@@ -306,6 +362,79 @@ fn run_plan(design: &Design, plan: &VectorPlan, threads: usize) -> EquivReport {
             }
             plan.fill(k, &mut batch);
             if let Some(cex) = run_batch(design, &comp, &mut buf, &mut words, &batch) {
+                first_fail.fetch_min(k, Ordering::Relaxed);
+                failures.lock().unwrap().push((k, cex));
+            }
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    match failures.into_iter().min_by_key(|&(k, _)| k) {
+        Some((k, cex)) => EquivReport {
+            passed: false,
+            vectors: plan.vectors_through(k),
+            exhaustive: plan.exhaustive,
+            counterexample: Some(cex),
+        },
+        None => EquivReport {
+            passed: true,
+            vectors: plan.total,
+            exhaustive: plan.exhaustive,
+            counterexample: None,
+        },
+    }
+}
+
+/// One clocked batch: drive the pipeline from reset with `en = 1,
+/// clr = 0`, hold the operands for `latency` edges, and compare the
+/// filled pipeline's product lanes against the golden model.
+fn run_batch_clocked(
+    design: &Design,
+    sim: &mut ClockedSim<'_>,
+    words: &mut Vec<u64>,
+    batch: &[(u128, u128, u128)],
+    latency: usize,
+) -> Option<(u128, u128, u128, u128, u128)> {
+    let total = design.a.len() + design.b.len() + design.c.len();
+    pack_operands(design, words, batch, 2);
+    words[total] = !0; // pipe_en: run every lane
+    words[total + 1] = 0; // pipe_clr: never clear
+    sim.reset();
+    for _ in 0..latency {
+        sim.step(words);
+    }
+    // The product was latched at edge `latency`; the next sweep's
+    // pre-edge view exposes it.
+    let view = sim.step(words);
+    for (lane, (a, b, c)) in batch.iter().enumerate() {
+        let got = lane_value(view, &design.product, lane as u32);
+        let want = design.expected(*a, *b, *c);
+        if got != want {
+            return Some((*a, *b, *c, got, want));
+        }
+    }
+    None
+}
+
+/// Clocked twin of [`run_plan`]: the same atomic batch cursor, shared
+/// fail bound and minimum-failing-batch selection, with each worker
+/// driving its own [`ClockedSim`] over the shared netlist. Deterministic
+/// for every worker count, exactly like the combinational sweep.
+fn run_plan_clocked(design: &Design, plan: &VectorPlan, threads: usize, latency: usize) -> EquivReport {
+    let threads = if plan.batches < 8 { 1 } else { threads.max(1).min(plan.batches) };
+    let next = AtomicUsize::new(0);
+    let first_fail = AtomicUsize::new(usize::MAX);
+    let failures: Mutex<Vec<(usize, (u128, u128, u128, u128, u128))>> = Mutex::new(Vec::new());
+    pool::scoped_workers(threads, |_worker| {
+        let mut sim = ClockedSim::new(&design.netlist);
+        let mut words: Vec<u64> = Vec::new();
+        let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
+        loop {
+            let k = next.fetch_add(1, Ordering::Relaxed);
+            if k >= plan.batches || k > first_fail.load(Ordering::Relaxed) {
+                break;
+            }
+            plan.fill(k, &mut batch);
+            if let Some(cex) = run_batch_clocked(design, &mut sim, &mut words, &batch, latency) {
                 first_fail.fetch_min(k, Ordering::Relaxed);
                 failures.lock().unwrap().push((k, cex));
             }
@@ -416,6 +545,56 @@ mod tests {
         }
         assert_eq!(got, expect);
         assert_eq!(plan.vectors_through(plan.batches - 1), plan.total);
+    }
+
+    fn build_pipelined(n: usize, stages: usize, fused: bool) -> Design {
+        let lib = crate::ir::CellLib::nangate45();
+        let tm = crate::synth::CompressorTiming::from_lib(&lib);
+        let mut spec = MultiplierSpec::new(n).pipeline_stages(stages);
+        if fused {
+            spec = spec.fused_mac(true);
+        }
+        spec.build_with(&lib, &tm).unwrap()
+    }
+
+    #[test]
+    fn pipelined_multiplier_exhaustive() {
+        for stages in [1usize, 2, 3] {
+            let d = build_pipelined(4, stages, false);
+            let r = check_pipelined(&d, &EquivOptions::default()).unwrap();
+            assert!(r.passed, "stages={stages}: cex {:?}", r.counterexample);
+            assert!(r.exhaustive);
+            assert_eq!(r.vectors, 256);
+        }
+    }
+
+    #[test]
+    fn pipelined_fused_mac_exhaustive() {
+        let d = build_pipelined(3, 2, true);
+        // The default entry point routes pipelined designs to the
+        // clocked checker automatically.
+        let r = check_multiplier(&d).unwrap();
+        assert!(r.passed, "cex {:?}", r.counterexample);
+        assert!(r.exhaustive);
+        assert_eq!(r.vectors, 1 << 12);
+    }
+
+    #[test]
+    fn pipelined_fault_detected() {
+        let mut d = build_pipelined(4, 2, false);
+        d.product[3] = d.product[4];
+        let r = check_pipelined(&d, &EquivOptions::default()).unwrap();
+        assert!(!r.passed);
+        let (_, _, _, got, want) = r.counterexample.unwrap();
+        assert_ne!(got, want);
+    }
+
+    #[test]
+    fn check_pipelined_rejects_combinational() {
+        let lib = crate::ir::CellLib::nangate45();
+        let tm = crate::synth::CompressorTiming::from_lib(&lib);
+        let d = MultiplierSpec::new(4).build_with(&lib, &tm).unwrap();
+        assert!(check_pipelined(&d, &EquivOptions::default()).is_err());
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod netlist;
 
 pub use cell::{CellKind, CellLib, CellParams};
 pub use netlist::{Netlist, Node, NodeId, NodeIter, OutputIter, Topology};
-pub use netlist::{OP_CONST0, OP_CONST1, OP_INPUT};
+pub use netlist::{OP_CONST0, OP_CONST1, OP_INPUT, OP_REG};

@@ -49,6 +49,17 @@ pub const OP_CONST1: u8 = 12;
 /// its fanin record holds the input *ordinal* (index into the arrival and
 /// name arrays), not a node id.
 pub const OP_INPUT: u8 = 13;
+/// Opcode marking a clocked register (D flip-flop with synchronous enable
+/// and clear) in the flat encoding. The fanin record is `[d, en, clr]`; the
+/// reset/init value lives in a side array ([`Netlist::reg_init`]) because
+/// the inline record has no spare slot. Registers are *sequential cut
+/// points*: the topology gives them depth 0, STA restarts arrivals at the
+/// clock edge ([`crate::sta`]), and — uniquely in the IR — the `d` fanin
+/// may reference a *later* node, which is how sequential feedback
+/// (accumulators) flattens into the otherwise append-only arrays. `en` and
+/// `clr` must still reference earlier nodes: control has to settle from
+/// this cycle's values before the edge.
+pub const OP_REG: u8 = 14;
 
 /// Index of a node (primary input, constant, or gate output) in a netlist.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -83,6 +94,18 @@ pub enum Node<'a> {
         kind: CellKind,
         /// Fanin node ids (length = arity).
         fanin: &'a [NodeId],
+    },
+    /// A clocked register (see [`OP_REG`] for the cut-point semantics).
+    /// Per clock edge: `q ← clr ? init : (en ? d : q)`.
+    Reg {
+        /// Data input (may reference a later node: sequential feedback).
+        d: NodeId,
+        /// Synchronous enable (1 = capture `d`).
+        en: NodeId,
+        /// Synchronous clear (1 = load `init`; priority over `en`).
+        clr: NodeId,
+        /// Reset / clear value.
+        init: bool,
     },
 }
 
@@ -132,9 +155,11 @@ pub struct Topology {
     /// increasing topological order (duplicates kept for gates sampling
     /// one driver twice).
     consumers: Vec<u32>,
-    /// Logic depth (gate count) per node; inputs/constants are depth 0.
+    /// Logic depth (gate count) per node; inputs/constants/registers are
+    /// depth 0 (registers are sequential cut points).
     depths: Vec<u32>,
-    /// Maximum logic depth over primary outputs.
+    /// Maximum logic depth over sequential endpoints: primary outputs and
+    /// register data pins (the deepest combinational segment).
     depth: u32,
 }
 
@@ -159,7 +184,8 @@ impl Topology {
         &self.depths
     }
 
-    /// Maximum logic depth over primary outputs.
+    /// Maximum logic depth over sequential endpoints (primary outputs and
+    /// register data pins) — the deepest combinational segment.
     #[inline]
     pub fn depth(&self) -> u32 {
         self.depth
@@ -173,11 +199,11 @@ pub struct Netlist {
     /// Diagnostic name (used in error messages and reports).
     pub name: String,
     /// Opcode per node: 0–10 = [`CellKind::opcode`], [`OP_CONST0`],
-    /// [`OP_CONST1`], [`OP_INPUT`].
+    /// [`OP_CONST1`], [`OP_INPUT`], [`OP_REG`].
     ops: Vec<u8>,
     /// Inline fanin record per node. Gates: fanin node ids in slots
     /// `0..arity` (rest zero). Inputs: slot 0 holds the input ordinal.
-    /// Constants: all zero.
+    /// Registers: `[d, en, clr]`. Constants: all zero.
     fanin: Vec<[u32; 3]>,
     /// Node id per input ordinal, in creation order.
     input_ids: Vec<NodeId>,
@@ -189,8 +215,12 @@ pub struct Netlist {
     input_names: Vec<u32>,
     /// `(interned name, node)` per primary output, in registration order.
     outputs: Vec<(u32, NodeId)>,
-    /// Gate count (excludes inputs/constants), maintained eagerly.
+    /// Gate count (excludes inputs/constants/registers), maintained eagerly.
     n_gates: usize,
+    /// `(node id, init value)` per register, in creation order (node ids
+    /// strictly increasing, so lookup is a binary search). The init bit has
+    /// no slot in the inline fanin record.
+    reg_inits: Vec<(u32, bool)>,
     /// Lazily built topology (see [`Netlist::topology`]).
     topo: TopoCell,
 }
@@ -207,6 +237,7 @@ impl Clone for Netlist {
             input_names: self.input_names.clone(),
             outputs: self.outputs.clone(),
             n_gates: self.n_gates,
+            reg_inits: self.reg_inits.clone(),
             // The clone rebuilds its topology lazily on first use.
             topo: Mutex::new(None),
         }
@@ -289,6 +320,84 @@ impl Netlist {
         id
     }
 
+    /// Instantiate a clocked register `q ← clr ? init : (en ? d : q)` with
+    /// all three fanins already built (the feed-forward form every
+    /// pipeline cut uses). For sequential feedback — a `d` that does not
+    /// exist yet — create the register with a provisional `d` (itself, via
+    /// [`Netlist::reg`] after the fact is impossible append-only) and patch
+    /// it with [`Netlist::set_reg_data`]. Panics if `en`/`clr` are forward
+    /// references.
+    pub fn reg(&mut self, d: NodeId, en: NodeId, clr: NodeId, init: bool) -> NodeId {
+        let id = NodeId(self.ops.len() as u32);
+        assert!(d.0 < id.0, "reg data fanin {d:?} is a forward reference (use set_reg_data)");
+        assert!(en.0 < id.0, "reg enable fanin {en:?} is a forward reference");
+        assert!(clr.0 < id.0, "reg clear fanin {clr:?} is a forward reference");
+        self.ops.push(OP_REG);
+        self.fanin.push([d.0, en.0, clr.0]);
+        self.reg_inits.push((id.0, init));
+        self.invalidate();
+        id
+    }
+
+    /// Re-point an existing register's data fanin — the one sanctioned
+    /// *edit* of a fanin record, which is how sequential feedback loops
+    /// (`acc ← acc + x`) are built: create the register first (its `d`
+    /// provisionally pointing anywhere valid, e.g. at itself via
+    /// [`Netlist::reg_raw`]), build the logic that reads its output, then
+    /// patch `d` to the loop's closing node. `d` may reference *any* node
+    /// including later ones; the cycle is legal because it crosses the
+    /// sequential cut. Panics if `r` is not a register or `d` is out of
+    /// bounds.
+    pub fn set_reg_data(&mut self, r: NodeId, d: NodeId) {
+        let i = r.index();
+        assert_eq!(self.ops[i], OP_REG, "set_reg_data on non-register node {i}");
+        assert!((d.0 as usize) < self.ops.len(), "reg data fanin {d:?} out of bounds");
+        self.fanin[i][0] = d.0;
+        self.invalidate();
+    }
+
+    /// Append a register record with **no reference checks** (mirror of
+    /// [`Netlist::push_raw`] for the sequential opcode): `d`, `en` and
+    /// `clr` are taken verbatim, so forward references and dangling ids go
+    /// through. Used by deserialization (which re-validates afterwards),
+    /// lint fixtures, and as the seed node of a feedback loop
+    /// ([`Netlist::set_reg_data`]).
+    pub fn reg_raw(&mut self, d: u32, en: u32, clr: u32, init: bool) -> NodeId {
+        let id = NodeId(self.ops.len() as u32);
+        self.ops.push(OP_REG);
+        self.fanin.push([d, en, clr]);
+        self.reg_inits.push((id.0, init));
+        self.invalidate();
+        id
+    }
+
+    /// Init/reset value of register `id`. Panics if `id` is not a register.
+    pub fn reg_init(&self, id: NodeId) -> bool {
+        let at = self
+            .reg_inits
+            .binary_search_by_key(&id.0, |&(n, _)| n)
+            .unwrap_or_else(|_| panic!("node {} is not a register", id.0));
+        self.reg_inits[at].1
+    }
+
+    /// Number of register nodes. O(1).
+    #[inline]
+    pub fn num_regs(&self) -> usize {
+        self.reg_inits.len()
+    }
+
+    /// Whether the netlist is sequential (contains at least one register).
+    #[inline]
+    pub fn is_sequential(&self) -> bool {
+        !self.reg_inits.is_empty()
+    }
+
+    /// `(node id, init value)` per register, in creation order.
+    #[inline]
+    pub fn registers(&self) -> &[(u32, bool)] {
+        &self.reg_inits
+    }
+
     /// Append a raw `(opcode, fanin-record)` node with **no validity
     /// checks** — forward references, unknown opcodes and corrupt input
     /// ordinals all go through.
@@ -363,7 +472,7 @@ impl Netlist {
 
     // -- flat accessors (the hot-loop API) -------------------------------
     /// Opcode per node: 0–10 = [`CellKind::opcode`], then [`OP_CONST0`],
-    /// [`OP_CONST1`], [`OP_INPUT`].
+    /// [`OP_CONST1`], [`OP_INPUT`], [`OP_REG`].
     #[inline]
     pub fn ops(&self) -> &[u8] {
         &self.ops
@@ -426,6 +535,17 @@ impl Netlist {
             }
             OP_CONST0 => Node::Const(false),
             OP_CONST1 => Node::Const(true),
+            OP_REG => {
+                let [d, en, clr] = self.fanin[i];
+                // Tolerate a missing side entry (push_raw-built fixtures):
+                // the view defaults to init=false rather than panicking.
+                let init = self
+                    .reg_inits
+                    .binary_search_by_key(&(i as u32), |&(n, _)| n)
+                    .map(|at| self.reg_inits[at].1)
+                    .unwrap_or(false);
+                Node::Reg { d: NodeId(d), en: NodeId(en), clr: NodeId(clr), init }
+            }
             op => Node::Gate { kind: CellKind::ALL[op as usize], fanin: self.fanin_slice(i) },
         }
     }
@@ -550,6 +670,19 @@ impl Netlist {
         for &(_, id) in &self.outputs {
             fanout[id.index()] += 1;
         }
+        // Register pins likewise count toward fanout (a register is a real
+        // consumer of its d/en/clr nets) but get no consumer rows: the CSR
+        // walk is how arrival propagation travels, and a register is a
+        // sequential cut — nothing combinational propagates through it.
+        for i in 0..n {
+            if self.ops[i] == OP_REG {
+                for &f in &self.fanin[i] {
+                    if (f as usize) < n {
+                        fanout[f as usize] += 1;
+                    }
+                }
+            }
+        }
         let mut depths = vec![0u32; n];
         for i in 0..n {
             if let Some(kind) = self.kind_at(i) {
@@ -560,9 +693,23 @@ impl Netlist {
                 }
                 depths[i] = 1 + d;
             }
+            // OP_REG keeps the default depth 0: registers restart the
+            // depth count exactly as they restart STA arrivals.
         }
-        let depth =
+        // Sequential endpoints: a path ends at a primary output or at a
+        // register's data pin, so the reported depth is the max over both —
+        // the deepest *combinational segment*, not the input→output depth
+        // (which is 0 for a fully registered output).
+        let mut depth =
             self.outputs.iter().map(|&(_, id)| depths[id.index()]).max().unwrap_or(0);
+        for i in 0..n {
+            if self.ops[i] == OP_REG {
+                let d = self.fanin[i][0] as usize;
+                if d < n {
+                    depth = depth.max(depths[d]);
+                }
+            }
+        }
         Topology { fanout, offsets, consumers, depths, depth }
     }
 
@@ -633,6 +780,21 @@ impl Netlist {
                 let ordinal = self.fanin[i][0] as usize;
                 if ordinal >= self.input_ids.len() || self.input_ids[ordinal].index() != i {
                     return Err(format!("node {i}: corrupt input ordinal {ordinal}"));
+                }
+            } else if op == OP_REG {
+                // The data pin may point anywhere in the netlist (sequential
+                // feedback crosses the cut); control must be strictly
+                // earlier — a same-cycle loop through en/clr never settles.
+                let [d, en, clr] = self.fanin[i];
+                if d as usize >= self.ops.len() {
+                    return Err(format!("node {i}: register data fanin {d} dangles"));
+                }
+                for (pin, f) in [("enable", en), ("clear", clr)] {
+                    if f as usize >= i {
+                        return Err(format!(
+                            "node {i}: register {pin} fanin {f} is not strictly earlier"
+                        ));
+                    }
                 }
             } else if op != OP_CONST0 && op != OP_CONST1 {
                 return Err(format!("node {i}: unknown opcode {op}"));
@@ -840,5 +1002,66 @@ mod tests {
         assert_eq!(t.consumers(a.index()), &[x.0]);
         assert_eq!(t.fanout_counts()[x.index()], 3);
         assert_eq!(t.fanout_counts()[z.index()], 1); // the output
+    }
+
+    #[test]
+    fn registers_are_topology_cut_points() {
+        let mut nl = Netlist::new("seq");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let en = nl.constant(true);
+        let clr = nl.constant(false);
+        let x = nl.xor2(a, b); // depth 1
+        let r = nl.reg(x, en, clr, false);
+        let y = nl.and2(r, a); // depth restarts after the register
+        nl.output("y", y);
+        nl.validate().unwrap();
+        assert_eq!(nl.num_regs(), 1);
+        assert!(nl.is_sequential());
+        assert!(!nl.reg_init(r));
+        let t = nl.topology();
+        assert_eq!(t.depths()[x.index()], 1);
+        assert_eq!(t.depths()[r.index()], 0, "register cuts the depth count");
+        assert_eq!(t.depths()[y.index()], 1);
+        // Deepest combinational segment: the xor feeding the register's d
+        // pin ties the and2 at the output.
+        assert_eq!(t.depth(), 1);
+        // The register is a fanout consumer of its pins but has no CSR row
+        // (nothing combinational propagates through the cut).
+        assert_eq!(t.fanout_counts()[x.index()], 1);
+        assert!(t.consumers(x.index()).is_empty());
+        match nl.node(r) {
+            Node::Reg { d, en: e, clr: c, init } => {
+                assert_eq!((d, e, c, init), (x, en, clr, false));
+            }
+            other => panic!("not a register view: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn feedback_register_patches_and_validates() {
+        // Toggle flip-flop: q feeds an inverter that feeds q back.
+        let mut nl = Netlist::new("tff");
+        let en = nl.input("en");
+        let clr = nl.constant(false);
+        let q = nl.reg_raw(0, en.0, clr.0, false); // provisional d
+        let nq = nl.inv(q);
+        nl.set_reg_data(q, nq);
+        nl.output("q", q);
+        nl.validate().unwrap();
+        match nl.node(q) {
+            Node::Reg { d, .. } => assert_eq!(d, nq, "patched data pin"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn validate_rejects_forward_register_control() {
+        let mut nl = Netlist::new("badctl");
+        let d = nl.input("d");
+        // enable points at the register itself: a same-cycle control loop.
+        let r = nl.reg_raw(d.0, 1, 1, false);
+        nl.output("q", r);
+        assert!(nl.validate().unwrap_err().contains("enable"));
     }
 }

@@ -15,6 +15,10 @@
 //! - **`UFO2xx` timing** ([`datapath`]) — recorded-profile sanity and the
 //!   separate-MAC second-CPA arrival cross-check (the PR-3 bug class,
 //!   detected statically).
+//! - **`UFO3xx` sequential** ([`sequential`]) — register-pin reference
+//!   integrity under the sequential rules (forward data is feedback, not
+//!   a cycle), unclocked-register detection, and (pedantic) pipeline
+//!   stage-balance analysis.
 //!
 //! Entry points: [`lint_netlist`] for a bare netlist, [`lint_design`] for
 //! a built design plus its trace. The engine
@@ -27,6 +31,7 @@
 
 pub mod datapath;
 pub mod report;
+pub mod sequential;
 pub mod structural;
 
 pub use datapath::{
@@ -34,6 +39,7 @@ pub use datapath::{
     check_prefix, check_stage_profiles, ARRIVAL_EPS_NS,
 };
 pub use report::{code_info, CodeInfo, Diagnostic, LintOptions, LintReport, Locus, Severity, CODES};
+pub use sequential::{pass_registers, pass_stage_balance};
 pub use structural::lint_netlist;
 
 use crate::ir::CellLib;
@@ -66,10 +72,13 @@ pub fn lint_design(
         if let Some(g2) = &tr.prefix2 {
             diags.extend(datapath::check_prefix(g2));
         }
-        if let Some(mac) = &tr.mac {
+        if let Some(mac) = tr.mac.as_ref().filter(|_| design.pipeline.is_none()) {
             // Re-derive the first CPA's sum arrivals from the final
             // netlist: recorded arrivals may only be ≤ these (the second
             // CPA added load), and the synthesis basis must cover them.
+            // Skipped for pipelined designs: the trace's node ids refer to
+            // the pre-pipeline netlist and do not survive the rebuild, so
+            // the re-derived arrivals would compare the wrong nodes.
             let sta = crate::sta::Sta { activity_rounds: 0, ..crate::sta::Sta::with_lib(lib.clone()) };
             let at = sta.arrivals_ns(&design.netlist);
             let recomputed: Vec<f64> =
@@ -94,6 +103,21 @@ mod tests {
             MultiplierSpec::new(4),
             MultiplierSpec::new(4).separate_mac(true),
             MultiplierSpec::new(3).fused_mac(true),
+        ] {
+            let (design, trace) = spec.build_with_trace(&lib, &tm).unwrap();
+            let report = lint_design(&design, Some(&trace), &lib, &LintOptions::default());
+            assert!(report.is_clean(), "{spec:?}: {report}");
+        }
+    }
+
+    #[test]
+    fn pipelined_designs_lint_clean_with_full_evidence() {
+        let lib = CellLib::nangate45();
+        let tm = CompressorTiming::from_lib(&lib);
+        for spec in [
+            MultiplierSpec::new(4).pipeline_stages(2),
+            MultiplierSpec::new(3).fused_mac(true).pipeline_stages(2),
+            MultiplierSpec::new(4).separate_mac(true).pipeline_stages(1),
         ] {
             let (design, trace) = spec.build_with_trace(&lib, &tm).unwrap();
             let report = lint_design(&design, Some(&trace), &lib, &LintOptions::default());

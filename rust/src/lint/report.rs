@@ -145,6 +145,15 @@ pub const UFO105: &str = "UFO105";
 pub const UFO201: &str = "UFO201";
 /// Non-finite or negative arrival time in a recorded stage profile.
 pub const UFO202: &str = "UFO202";
+/// Unclocked register: the enable pin is tied to constant 0, so the
+/// register can never capture data.
+pub const UFO301: &str = "UFO301";
+/// Combinational loop through a register's control pins (en/clr must be
+/// strictly earlier nodes; only the data pin may reference forward).
+pub const UFO302: &str = "UFO302";
+/// Pipeline stage imbalance: one combinational segment between register
+/// ranks is much deeper than another.
+pub const UFO303: &str = "UFO303";
 
 /// The machine-readable diagnostic-code catalog (mirrors `LINTS.md`).
 pub const CODES: &[CodeInfo] = &[
@@ -231,6 +240,24 @@ pub const CODES: &[CodeInfo] = &[
         severity: Severity::Error,
         pedantic: false,
         summary: "non-finite or negative arrival in a recorded profile",
+    },
+    CodeInfo {
+        code: UFO301,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "unclocked register (enable tied to constant 0)",
+    },
+    CodeInfo {
+        code: UFO302,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "combinational loop through a register's control pins",
+    },
+    CodeInfo {
+        code: UFO303,
+        severity: Severity::Info,
+        pedantic: true,
+        summary: "pipeline stage imbalance (uneven combinational segments)",
     },
 ];
 

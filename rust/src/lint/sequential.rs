@@ -1,0 +1,226 @@
+//! Sequential lint passes over registered netlists (`UFO3xx` codes).
+//!
+//! Registers relax the IR's append-only ordering in exactly one place —
+//! the data pin may reference forward (that *is* sequential feedback) —
+//! so the structural reference pass skips `OP_REG` nodes and this module
+//! re-checks every register pin under the sequential rules instead:
+//!
+//! - [`UFO302`]: `en`/`clr` must be strictly earlier nodes. A forward or
+//!   self reference there is a combinational cycle through the register's
+//!   control path, which no two-phase clocked evaluation can order.
+//! - [`UFO002`]: any pin past the end of the netlist dangles, exactly as
+//!   for gate fanins.
+//! - [`UFO301`]: an enable tied to constant 0 means the register can
+//!   never capture data — it is a reset-value generator, almost certainly
+//!   a miswired pipeline control.
+//! - [`UFO303`] (pedantic): the combinational segments between register
+//!   ranks are wildly uneven, so the clock period is set by one deep
+//!   segment while others idle — the cut placement is wasting registers.
+
+use crate::ir::{Netlist, OP_CONST0, OP_REG};
+
+use super::report::{Diagnostic, Locus, UFO002, UFO301, UFO302, UFO303};
+
+/// Reference and clocking integrity of every register node. Returns
+/// findings in node order; empty for combinational netlists.
+pub fn pass_registers(nl: &Netlist) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let ops = nl.ops();
+    let fanin = nl.fanin_records();
+    let n = nl.len();
+    for i in 0..n {
+        if ops[i] != OP_REG {
+            continue;
+        }
+        let [d, en, clr] = fanin[i];
+        for (pin, f) in [("d", d), ("en", en), ("clr", clr)] {
+            if f as usize >= n {
+                diags.push(Diagnostic::new(
+                    UFO002,
+                    Locus::Node(i as u32),
+                    format!("register {i} pin '{pin}' dangles (points at {f}, netlist has {n} nodes)"),
+                ));
+            }
+        }
+        // The data pin may legally point forward (feedback); the control
+        // pins may not — their values gate this very edge's update.
+        for (pin, f) in [("en", en), ("clr", clr)] {
+            if (f as usize) < n && f as usize >= i {
+                diags.push(Diagnostic::new(
+                    UFO302,
+                    Locus::Node(i as u32),
+                    format!("register {i} pin '{pin}' references node {f}: control must be a strictly earlier node (combinational loop through the register)"),
+                ));
+            }
+        }
+        if (en as usize) < n && ops[en as usize] == OP_CONST0 {
+            diags.push(Diagnostic::new(
+                UFO301,
+                Locus::Node(i as u32),
+                format!("register {i} enable is tied to constant 0; it can never capture data"),
+            ));
+        }
+    }
+    diags
+}
+
+/// Pipeline stage balance ([`UFO303`], pedantic): compare the
+/// combinational depth feeding every register's data pin (its *segment* —
+/// registers restart the depth count, mirroring STA arrivals). A register
+/// whose segment is less than half the deepest segment is flagged: the
+/// clock period is set by the deep segment while this rank's slack idles.
+///
+/// Registers whose data pin is another register (back-to-back ranks over
+/// a zero-depth net) are skipped — retiming staging like that is a
+/// legitimate latency-matching idiom, not an imbalance.
+///
+/// Only meaningful on reference-clean netlists (the caller gates on the
+/// reference passes, like every topology-dependent pass).
+pub fn pass_stage_balance(nl: &Netlist) -> Vec<Diagnostic> {
+    if !nl.is_sequential() {
+        return Vec::new();
+    }
+    let topo = nl.topology();
+    let depths = topo.depths();
+    let ops = nl.ops();
+    let segments: Vec<(usize, u32)> = nl
+        .registers()
+        .iter()
+        .map(|&(r, _)| (r as usize, nl.fanin_records()[r as usize][0] as usize))
+        .filter(|&(_, d)| ops[d] != OP_REG)
+        .map(|(r, d)| (r, depths[d]))
+        .collect();
+    let Some(&(_, max_seg)) = segments.iter().max_by_key(|&&(_, s)| s) else {
+        return Vec::new();
+    };
+    let mut diags = Vec::new();
+    if max_seg < 2 {
+        return diags;
+    }
+    for &(r, seg) in &segments {
+        if seg * 2 < max_seg {
+            diags.push(Diagnostic::new(
+                UFO303,
+                Locus::Node(r as u32),
+                format!(
+                    "register {r} closes a {seg}-deep combinational segment while the deepest segment is {max_seg}: the stage cut is imbalanced"
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{lint_netlist, LintOptions};
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_pipeline_register_has_no_findings() {
+        let mut nl = Netlist::new("seq_clean");
+        let a = nl.input("a");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        let q = nl.reg(a, en, clr, false);
+        nl.output("q", q);
+        nl.validate().unwrap();
+        assert!(lint_netlist(&nl, &LintOptions { pedantic: true }).is_empty());
+    }
+
+    #[test]
+    fn feedback_through_the_data_pin_is_legal() {
+        let mut nl = Netlist::new("seq_fb");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        let q = nl.reg_raw(0, en.0, clr.0, false);
+        let nq = nl.inv(q);
+        nl.set_reg_data(q, nq);
+        nl.output("q", q);
+        nl.validate().unwrap();
+        assert!(lint_netlist(&nl, &LintOptions::default()).is_empty());
+    }
+
+    #[test]
+    fn forward_control_pin_is_a_loop() {
+        let mut nl = Netlist::new("seq_loop");
+        let a = nl.input("a");
+        let clr = nl.input("clr");
+        // Enable points at the register itself: the edge's own update
+        // gates the edge.
+        let q = nl.reg_raw(a.0, 2, clr.0, false);
+        nl.output("q", q);
+        assert_eq!(codes(&pass_registers(&nl)), [UFO302]);
+    }
+
+    #[test]
+    fn dangling_register_pins_are_reported_per_pin() {
+        let mut nl = Netlist::new("seq_dangle");
+        let _a = nl.input("a");
+        let q = nl.reg_raw(99, 98, 0, false);
+        nl.output("q", q);
+        // d and en dangle (two UFO002); en also fails the earlier-node
+        // rule only when in bounds, so no UFO302 piles on.
+        assert_eq!(codes(&pass_registers(&nl)), [UFO002, UFO002]);
+    }
+
+    #[test]
+    fn const0_enable_is_unclocked() {
+        let mut nl = Netlist::new("seq_unclocked");
+        let a = nl.input("a");
+        let zero = nl.constant(false);
+        let clr = nl.input("clr");
+        let q = nl.reg(a, zero, clr, true);
+        nl.output("q", q);
+        nl.validate().unwrap();
+        assert_eq!(codes(&pass_registers(&nl)), [UFO301]);
+    }
+
+    #[test]
+    fn uneven_stage_cuts_are_pedantic_info() {
+        let mut nl = Netlist::new("seq_imbalance");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        // Deep segment: a 6-gate XOR chain into one register.
+        let mut deep = a;
+        for _ in 0..6 {
+            deep = nl.xor2(deep, b);
+        }
+        let q_deep = nl.reg(deep, en, clr, false);
+        // Shallow segment: a single gate into another register.
+        let shallow = nl.and2(a, b);
+        let q_shallow = nl.reg(shallow, en, clr, false);
+        let y = nl.or2(q_deep, q_shallow);
+        nl.output("y", y);
+        nl.validate().unwrap();
+        let non_pedantic = lint_netlist(&nl, &LintOptions::default());
+        assert!(non_pedantic.is_empty(), "{non_pedantic:?}");
+        let diags = pass_stage_balance(&nl);
+        assert_eq!(codes(&diags), [UFO303]);
+        assert_eq!(diags[0].locus, Locus::Node(q_shallow.0));
+    }
+
+    #[test]
+    fn balanced_ranks_and_register_chains_stay_quiet() {
+        let mut nl = Netlist::new("seq_balanced");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        let s1 = nl.xor2(a, b);
+        let q1 = nl.reg(s1, en, clr, false);
+        // Latency-matching chain: q2's data pin is a register — exempt.
+        let q2 = nl.reg(q1, en, clr, false);
+        let s2 = nl.xor2(q2, b);
+        let q3 = nl.reg(s2, en, clr, false);
+        nl.output("y", q3);
+        nl.validate().unwrap();
+        assert!(pass_stage_balance(&nl).is_empty());
+    }
+}

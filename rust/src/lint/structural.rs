@@ -5,7 +5,7 @@
 //! duplicates) only run when it found nothing — walking consumers of a
 //! netlist with dangling references would index out of bounds.
 
-use crate::ir::{CellKind, Netlist, OP_CONST0, OP_CONST1, OP_INPUT};
+use crate::ir::{CellKind, Netlist, OP_CONST0, OP_CONST1, OP_INPUT, OP_REG};
 
 use super::report::{
     Diagnostic, LintOptions, Locus, UFO001, UFO002, UFO003, UFO004, UFO005, UFO006, UFO007,
@@ -16,12 +16,18 @@ use super::report::{
 /// the whole lint for module bodies that carry no datapath evidence.
 pub fn lint_netlist(nl: &Netlist, opts: &LintOptions) -> Vec<Diagnostic> {
     let mut diags = pass_references(nl);
+    // Register pins follow sequential rules (forward data is feedback,
+    // not a cycle), so their reference integrity is a separate pass —
+    // but it gates the topology-dependent passes exactly like the
+    // combinational reference findings do.
+    diags.extend(super::sequential::pass_registers(nl));
     let refs_ok = diags.is_empty();
     diags.extend(pass_output_names(nl));
     if refs_ok && opts.pedantic {
         diags.extend(pass_dead_gates(nl));
         diags.extend(pass_const_foldable(nl));
         diags.extend(pass_duplicate_gates(nl));
+        diags.extend(super::sequential::pass_stage_balance(nl));
     }
     diags
 }
@@ -43,6 +49,9 @@ fn pass_references(nl: &Netlist) -> Vec<Diagnostic> {
         let op = ops[i];
         match op {
             OP_CONST0 | OP_CONST1 => {}
+            // Registers are checked by `sequential::pass_registers` — the
+            // data pin may legally reference forward (feedback).
+            OP_REG => {}
             OP_INPUT => {
                 let ord = fanin[i][0] as usize;
                 let ok = nl.input_ids().get(ord).is_some_and(|id| id.index() == i);
@@ -144,7 +153,14 @@ fn pass_dead_gates(nl: &Netlist) -> Vec<Diagnostic> {
             if dead[f] || is_output[f] || !is_gate(f) {
                 continue;
             }
-            if topo.consumers(f).iter().all(|&c| dead[c as usize]) {
+            // Registers and outputs bump the fanout count but have no CSR
+            // consumer rows; a count exceeding the row length means a
+            // consumer the walk can't see — the node is live.
+            let rows = topo.consumers(f);
+            if topo.fanout_counts()[f] as usize > rows.len() {
+                continue;
+            }
+            if rows.iter().all(|&c| dead[c as usize]) {
                 dead[f] = true;
                 stack.push(f);
             }

@@ -8,10 +8,13 @@
 //!   generate  --width N [--bwidth M] [--signed]
 //!             [--method ufo|gomil|rlmul|commercial]
 //!             [--strategy area|timing|tradeoff] [--mac] [--booth]
+//!             [--pipeline K]
 //!             Generate one design, verify it, print the STA report.
 //!             `--signed` selects two's-complement operands (any method);
 //!             `--bwidth` selects a rectangular a×b format (UFO-MAC spec
-//!             path only).
+//!             path only). `--pipeline K` inserts K register ranks at
+//!             STA-balanced depth cuts (UFO-MAC spec path only) and
+//!             verifies through the clocked simulator.
 //!   sweep     --widths 8,16,32 [--mac] [--signed] [--pjrt] [--out reports/]
 //!             Full method×strategy DSE sweep; prints Pareto frontiers.
 //!   profile   --width N   Print the CT output arrival profile (Figure 1).
@@ -67,9 +70,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let signed = args.has("signed");
     let b_width = args.get_usize("bwidth", n);
     let rect = b_width != n;
-    if (booth || rect) && method != Method::UfoMac {
+    let pipeline = strict_usize(args, "pipeline", 0)?;
+    if (booth || rect || pipeline > 0) && method != Method::UfoMac {
         anyhow::bail!(
-            "--booth/--bwidth select the UFO-MAC spec path; drop --method {}",
+            "--booth/--bwidth/--pipeline select the UFO-MAC spec path; drop --method {}",
             method.key()
         );
     }
@@ -78,12 +82,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
     } else {
         OperandFormat::rect(n, b_width)
     };
-    let req = if booth || rect {
+    let req = if booth || rect || pipeline > 0 {
         DesignRequest::from_spec(
             &MultiplierSpec::new_fmt(fmt)
                 .strategy(strategy)
                 .fused_mac(mac)
-                .ppg(if booth { PpgKind::Booth4 } else { PpgKind::AndArray }),
+                .ppg(if booth { PpgKind::Booth4 } else { PpgKind::AndArray })
+                .pipeline_stages(pipeline),
         )
     } else if signed {
         // Square signed designs are reachable for every method family.
@@ -109,11 +114,20 @@ fn cmd_generate(args: &Args) -> Result<()> {
     println!("  delay:       {:.4} ns", art.sta.critical_delay_ns);
     println!("  power@1GHz:  {:.4} mW", art.sta.power_mw);
     println!("  CT stages:   {}", design.ct_stages);
+    if let Some(p) = &design.pipeline {
+        println!(
+            "  pipeline:    {} stage(s), latency {} cycle(s), {} registers",
+            p.stages,
+            p.latency(),
+            design.netlist.num_regs()
+        );
+    }
     println!(
-        "  equivalence: {} ({} vectors{})",
+        "  equivalence: {} ({} vectors{}{})",
         if equiv.passed { "PASS" } else { "FAIL" },
         equiv.vectors,
-        if equiv.exhaustive { ", exhaustive" } else { "" }
+        if equiv.exhaustive { ", exhaustive" } else { "" },
+        if design.pipeline.is_some() { ", clocked" } else { "" }
     );
     if let Some(path) = args.get("verilog") {
         std::fs::write(path, ufo_mac::synth::verilog::emit_design(design))?;
@@ -496,6 +510,23 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
+    // A baseline may be marked `"provisional": true` at the top level:
+    // authored as an order-of-magnitude envelope rather than recorded on
+    // real hardware. The comparison still runs, but say so loudly — the
+    // ratios are advisory until someone re-records with `--update`.
+    let provisional = std::fs::read_to_string(&baseline_path)
+        .ok()
+        .and_then(|t| ufo_mac::util::Json::parse(&t).ok())
+        .and_then(|d| d.get("provisional").and_then(|p| p.as_bool()))
+        .unwrap_or(false);
+    if provisional {
+        println!("bench-check: ****************************************************************");
+        println!("bench-check: ** PROVISIONAL BASELINE — {} ", baseline_path.display());
+        println!("bench-check: ** was authored as an envelope estimate, not measured on this");
+        println!("bench-check: ** hardware. Ratios below are advisory; re-record with");
+        println!("bench-check: ** `cargo bench --bench hotpath && ufo-mac bench-check --update`.");
+        println!("bench-check: ****************************************************************");
+    }
     let base = load_bench_results(&baseline_path)?;
     let cur = load_bench_results(&current_file)?;
     let cur_map: std::collections::HashMap<&str, (Option<f64>, Option<f64>)> =
@@ -532,7 +563,10 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         }
     }
     if failures.is_empty() {
-        println!("bench-check: {compared} baseline entries OK (no hot path regressed >{max_ratio:.1}x)");
+        println!(
+            "bench-check: {compared} baseline entries OK (no hot path regressed >{max_ratio:.1}x){}",
+            if provisional { " [PROVISIONAL baseline]" } else { "" }
+        );
         Ok(())
     } else {
         anyhow::bail!("bench-check failed:\n  {}", failures.join("\n  "))
@@ -559,6 +593,7 @@ fn main() {
                 "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
                  usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|lint|request|serve|bench-check> [flags]\n\
                  methods: ufo, gomil, rlmul, commercial; strategies: area, timing, tradeoff\n\
+                 generate: --pipeline K inserts K register ranks (clocked verify + always_ff RTL)\n\
                  lint: --width N (tier-1 sweep), --request '<json>' (one design), --json\n\
                  serve: --transport tcp|stdio (default tcp), --addr HOST:PORT,\n\
                         --cache-dir DIR|none (default: workspace design_cache/),\n\

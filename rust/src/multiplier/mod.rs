@@ -24,6 +24,9 @@ use anyhow::bail;
 
 pub use crate::ppg::OperandFormat;
 
+pub mod pipeline;
+pub use pipeline::{insert_pipeline, PipelineInfo, PipelinedNetlist};
+
 /// Which CPA the design uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CpaChoice {
@@ -63,6 +66,10 @@ pub struct MultiplierSpec {
     pub separate_mac: bool,
     /// FDC timing model driving CPA optimization.
     pub fdc_model: FdcModel,
+    /// Register ranks to cut into the datapath (`0` = combinational).
+    /// Cuts are placed along the STA arrival profile; see
+    /// [`pipeline::insert_pipeline`].
+    pub pipeline_stages: usize,
 }
 
 impl MultiplierSpec {
@@ -80,6 +87,7 @@ impl MultiplierSpec {
             fused_mac: false,
             separate_mac: false,
             fdc_model: FdcModel::default_prior(),
+            pipeline_stages: 0,
         }
     }
 
@@ -143,6 +151,14 @@ impl MultiplierSpec {
     /// Use a fitted FDC timing model.
     pub fn fdc(mut self, m: FdcModel) -> Self {
         self.fdc_model = m;
+        self
+    }
+    /// Cut `k` register ranks into the datapath along the STA arrival
+    /// profile (`0` keeps the design combinational). The built design
+    /// then has a `k`-cycle latency and shared `pipe_en`/`pipe_clr`
+    /// control inputs.
+    pub fn pipeline_stages(mut self, k: usize) -> Self {
+        self.pipeline_stages = k;
         self
     }
 
@@ -369,7 +385,7 @@ impl MultiplierSpec {
             prefix2,
             mac: mac_trace,
         };
-        let design = Design {
+        let mut design = Design {
             n: fmt.max_bits(),
             format: fmt,
             is_mac,
@@ -383,7 +399,29 @@ impl MultiplierSpec {
             cpa_nodes,
             timing: cpa_timing,
             cpa2_profile,
+            pipeline: None,
         };
+        if self.pipeline_stages > 0 {
+            // Rebuild the validated combinational netlist with register
+            // ranks cut along its arrival profile, then remap the
+            // interface metadata into the new id space. The slicing pass
+            // runs one STA sweep, accounted in the timing counters.
+            let p = pipeline::insert_pipeline(&design.netlist, lib, self.pipeline_stages);
+            design.timing.merge(&TimingStats::full_pass(design.netlist.len()));
+            let remap = |bits: &[NodeId]| -> Vec<NodeId> {
+                bits.iter().map(|id| p.base[id.index()]).collect()
+            };
+            design.a = remap(&design.a);
+            design.b = remap(&design.b);
+            design.c = remap(&design.c);
+            design.product = p.outputs.clone();
+            design.netlist = p.netlist;
+            design.pipeline = Some(p.info);
+            design
+                .netlist
+                .validate()
+                .map_err(|e| anyhow::anyhow!("pipelined netlist invalid: {e}"))?;
+        }
         Ok((design, trace))
     }
 }
@@ -420,6 +458,9 @@ pub struct Design {
     /// CPA was synthesized against (`max` of the first CPA's sum arrival
     /// and the accumulator pin arrival per column).
     pub cpa2_profile: Option<Vec<f64>>,
+    /// Set when the datapath was pipelined: stage count and the shared
+    /// `pipe_en`/`pipe_clr` control inputs. `None` = combinational.
+    pub pipeline: Option<PipelineInfo>,
 }
 
 /// Datapath evidence captured by [`MultiplierSpec::build_with_trace`]:

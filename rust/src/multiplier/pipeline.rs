@@ -1,0 +1,328 @@
+//! Arrival-profile-driven pipeline-cut insertion.
+//!
+//! Turns a combinational design into a k-stage pipeline by slicing the
+//! netlist along STA arrival thresholds and rebuilding it with register
+//! ranks between slices — the registered `always_ff` MACs every exemplar
+//! in SNIPPETS.md ships, grown automatically from the same arrival
+//! information UFO-MAC's CPA optimizer already exploits (§IV): cuts land
+//! where the measured slack runs out, not at fixed structural boundaries.
+//!
+//! The IR is append-only, so cuts cannot be *inserted*; instead the
+//! netlist is **rebuilt** in node order. Nodes keep their topological
+//! order, every gate is assigned the slice its arrival time falls in
+//! (`slice = #{j in 1..k : T·j/k < arrival}`), and a fanin crossing from
+//! slice `s` to slice `s' > s` is routed through a lazily grown chain of
+//! `s' - s` registers. Arrival monotonicity along fanin edges guarantees
+//! cuts only ever go forward. Primary outputs are registered at rank `k`,
+//! so the pipeline latency is exactly `k` cycles.
+//!
+//! All data registers share two fresh control inputs appended after the
+//! operand inputs (operand ordinals are preserved): `pipe_en` (hold the
+//! whole pipeline when low) and `pipe_clr` (synchronously return every
+//! rank to zero). Driving `en = 1, clr = 0` gives the pure pipeline the
+//! equivalence checker unrolls. Constants are time-invariant and are
+//! never piped.
+
+use crate::ir::netlist::{OP_CONST0, OP_CONST1, OP_INPUT};
+use crate::ir::{CellKind, CellLib, Netlist, Node, NodeId};
+use crate::sta::Sta;
+
+/// How a [`super::Design`] was pipelined — carried on the design so the
+/// engine, persistence layer and Verilog emitter agree on the clocked
+/// interface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineInfo {
+    /// Number of register ranks (== pipeline latency in cycles).
+    pub stages: usize,
+    /// The shared `pipe_en` control input (all data registers stall
+    /// together when it is low).
+    pub en: NodeId,
+    /// The shared `pipe_clr` control input (synchronous clear to the
+    /// reset state).
+    pub clr: NodeId,
+}
+
+impl PipelineInfo {
+    /// Cycles between presenting operands and the matching product
+    /// appearing at the outputs (with `en` held high).
+    pub fn latency(&self) -> usize {
+        self.stages
+    }
+}
+
+/// Result of [`insert_pipeline`]: the rebuilt sequential netlist plus the
+/// id remapping the caller needs to fix up its interface metadata.
+#[derive(Debug)]
+pub struct PipelinedNetlist {
+    /// The rebuilt netlist (original name suffixed `_p{k}`).
+    pub netlist: Netlist,
+    /// New id of each original node *at its own slice* (pre-piping).
+    /// Inputs keep ordinal order, so operand bit vectors remap through
+    /// this table.
+    pub base: Vec<NodeId>,
+    /// New ids of the original primary outputs, in output order — these
+    /// are the rank-`k` registers.
+    pub outputs: Vec<NodeId>,
+    /// Pipeline control metadata (shared `en`/`clr`, stage count).
+    pub info: PipelineInfo,
+}
+
+/// Grow the register chain for original node `i` up to `rank` and return
+/// the new id carrying its value at that rank. `piped` is the lazily
+/// filled `(node × rank)` table; time-invariant nodes (constants) are
+/// returned untouched.
+#[allow(clippy::too_many_arguments)]
+fn pipe(
+    out: &mut Netlist,
+    piped: &mut [Option<NodeId>],
+    k: usize,
+    time_invariant: &[bool],
+    slice: &[usize],
+    en: NodeId,
+    clr: NodeId,
+    i: usize,
+    rank: usize,
+) -> NodeId {
+    let row = i * (k + 1);
+    if time_invariant[i] {
+        return piped[row + slice[i]].expect("constant built before use");
+    }
+    debug_assert!(rank >= slice[i], "cuts only go forward");
+    if let Some(id) = piped[row + rank] {
+        return id;
+    }
+    let mut r = rank;
+    while piped[row + r].is_none() {
+        r -= 1; // slice[i] is always populated, so this terminates
+    }
+    let mut cur = piped[row + r].expect("base rank populated");
+    for rr in r + 1..=rank {
+        cur = out.reg(cur, en, clr, false);
+        piped[row + rr] = Some(cur);
+    }
+    cur
+}
+
+/// Rebuild `nl` as a `stages`-rank pipeline cut along its STA arrival
+/// profile (see the module docs for the slicing rule). `nl` must be
+/// combinational; panics on an already-sequential netlist.
+pub fn insert_pipeline(nl: &Netlist, lib: &CellLib, stages: usize) -> PipelinedNetlist {
+    assert!(stages >= 1, "a pipeline needs at least one register rank");
+    assert!(!nl.is_sequential(), "cannot re-pipeline a sequential netlist");
+    let k = stages;
+    let sta = Sta { activity_rounds: 0, ..Sta::with_lib(lib.clone()) };
+    let at = sta.arrivals_ns(nl);
+    let total = at.iter().copied().fold(0.0f64, f64::max);
+    let ops = nl.ops();
+    let fan = nl.fanin_records();
+    let n = nl.len();
+
+    // Slice assignment: gates fall in the arrival band their output lands
+    // in; inputs and constants sit in slice 0. Arrival is strictly
+    // increasing along fanin edges, so slice(fanin) <= slice(gate).
+    let slice: Vec<usize> = (0..n)
+        .map(|i| {
+            if ops[i] > 10 || total <= 0.0 {
+                return 0;
+            }
+            let mut s = 0usize;
+            for j in 1..k {
+                if total * (j as f64) / (k as f64) < at[i] {
+                    s = j;
+                }
+            }
+            s
+        })
+        .collect();
+    let time_invariant: Vec<bool> =
+        ops.iter().map(|&op| op == OP_CONST0 || op == OP_CONST1).collect();
+
+    let mut out = Netlist::new(format!("{}_p{k}", nl.name));
+    let mut base = vec![NodeId(0); n];
+    // Inputs first, in node order — creation order defines the ordinal,
+    // so operand ordinals are preserved and the two control inputs land
+    // *after* them (ordinals n_in and n_in + 1).
+    for i in 0..n {
+        if ops[i] == OP_INPUT {
+            if let Node::Input { name, arrival_ns } = nl.node(NodeId(i as u32)) {
+                base[i] = out.input_at(name, arrival_ns);
+            }
+        }
+    }
+    let en = out.input("pipe_en");
+    let clr = out.input("pipe_clr");
+
+    let mut piped: Vec<Option<NodeId>> = vec![None; n * (k + 1)];
+    for i in 0..n {
+        let row = i * (k + 1);
+        match ops[i] {
+            OP_INPUT => {
+                piped[row] = Some(base[i]);
+            }
+            OP_CONST0 | OP_CONST1 => {
+                let id = out.constant(ops[i] == OP_CONST1);
+                base[i] = id;
+                piped[row] = Some(id);
+            }
+            op if op <= 10 => {
+                let kind = CellKind::ALL[op as usize];
+                let s = slice[i];
+                let arity = kind.arity();
+                let rec = fan[i];
+                let mut f = [NodeId(0); 3];
+                for (slot, &src) in f.iter_mut().zip(rec.iter()).take(arity) {
+                    *slot = pipe(
+                        &mut out,
+                        &mut piped,
+                        k,
+                        &time_invariant,
+                        &slice,
+                        en,
+                        clr,
+                        src as usize,
+                        s,
+                    );
+                }
+                let id = out.gate(kind, &f[..arity]);
+                base[i] = id;
+                piped[row + s] = Some(id);
+            }
+            other => panic!("cannot pipeline opcode {other} at node {i}"),
+        }
+    }
+
+    // Primary outputs are registered at rank k: the product of the
+    // operands presented on cycle t appears on cycle t + k.
+    let mut outputs = Vec::with_capacity(nl.num_outputs());
+    for (name, id) in nl.outputs() {
+        let nid = pipe(
+            &mut out,
+            &mut piped,
+            k,
+            &time_invariant,
+            &slice,
+            en,
+            clr,
+            id.index(),
+            k,
+        );
+        out.output(name, nid);
+        outputs.push(nid);
+    }
+
+    PipelinedNetlist { netlist: out, base, outputs, info: PipelineInfo { stages: k, en, clr } }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{lane_value, ClockedSim};
+
+    fn mul4() -> crate::multiplier::Design {
+        let lib = CellLib::nangate45();
+        let tm = crate::synth::CompressorTiming::from_lib(&lib);
+        crate::multiplier::MultiplierSpec::new(4).build_with(&lib, &tm).unwrap()
+    }
+
+    #[test]
+    fn pipeline_preserves_function_with_latency() {
+        let d = mul4();
+        for k in 1..=3usize {
+            let p = insert_pipeline(&d.netlist, &CellLib::nangate45(), k);
+            p.netlist.validate().unwrap();
+            assert!(p.netlist.num_regs() > 0, "k={k} produced no registers");
+            // Stream 64 exhaustive (a, b) pairs per lane-batch and check
+            // the product appears k cycles later.
+            let mut sim = ClockedSim::new(&p.netlist);
+            let n_in = p.netlist.num_inputs();
+            let mut words = vec![0u64; n_in];
+            // en = 1, clr = 0 on every lane; ordinals are a0..a3 b0..b3
+            // then pipe_en, pipe_clr.
+            words[n_in - 2] = !0;
+            for lane in 0..64u32 {
+                let a = u64::from(lane) & 0xF;
+                let b = u64::from(lane) >> 4;
+                for bit in 0..4 {
+                    if a >> bit & 1 != 0 {
+                        words[bit] |= 1 << lane;
+                    }
+                    if b >> bit & 1 != 0 {
+                        words[4 + bit] |= 1 << lane;
+                    }
+                }
+            }
+            for _ in 0..k {
+                sim.step(&words);
+            }
+            let view = sim.step(&words).to_vec();
+            for lane in 0..64u32 {
+                let a = u128::from(lane) & 0xF;
+                let b = u128::from(lane) >> 4;
+                let got = lane_value(&view, &p.outputs, lane);
+                assert_eq!(got, a * b & 0xFF, "k={k} lane={lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn control_inputs_follow_the_operands() {
+        let d = mul4();
+        let p = insert_pipeline(&d.netlist, &CellLib::nangate45(), 2);
+        let n_in = p.netlist.num_inputs();
+        assert_eq!(n_in, d.netlist.num_inputs() + 2);
+        assert_eq!(p.info.en.index(), n_in - 2);
+        assert_eq!(p.info.clr.index(), n_in - 1);
+        assert_eq!(p.info.latency(), 2);
+        // Operand remap: same ordinal order, and with operands created
+        // first in the builder the ids are even identical.
+        for &a in &d.a {
+            assert_eq!(p.base[a.index()], a);
+        }
+    }
+
+    #[test]
+    fn deeper_pipelines_cut_the_critical_segment() {
+        let d = mul4();
+        let lib = CellLib::nangate45();
+        let sta = Sta { activity_rounds: 0, ..Sta::with_lib(lib.clone()) };
+        let base = sta.analyze(&d.netlist).critical_delay_ns;
+        for k in [2usize, 3] {
+            let p = insert_pipeline(&d.netlist, &lib, k);
+            let seg = sta.analyze(&p.netlist).critical_delay_ns;
+            assert!(
+                seg < base,
+                "k={k}: segment {seg} not below combinational {base}"
+            );
+        }
+    }
+
+    #[test]
+    fn clr_clears_and_en_stalls_the_whole_pipeline() {
+        let d = mul4();
+        let p = insert_pipeline(&d.netlist, &CellLib::nangate45(), 2);
+        let n_in = p.netlist.num_inputs();
+        let mut sim = ClockedSim::new(&p.netlist);
+        // a = 3, b = 5 on all lanes, en = 1.
+        let mut words = vec![0u64; n_in];
+        words[0] = !0;
+        words[1] = !0;
+        words[4] = !0;
+        words[6] = !0;
+        words[n_in - 2] = !0;
+        sim.step(&words);
+        sim.step(&words);
+        let view = sim.step(&words).to_vec();
+        assert_eq!(lane_value(&view, &p.outputs, 0), 15);
+        // Stall: en = 0, junk operands — outputs must hold.
+        let mut stall = vec![0u64; n_in];
+        stall[2] = !0;
+        let view = sim.step(&stall).to_vec();
+        assert_eq!(lane_value(&view, &p.outputs, 0), 15, "stall must hold the product");
+        // Clear: one clr cycle flushes every rank to zero.
+        let mut clr = vec![0u64; n_in];
+        clr[n_in - 1] = !0;
+        sim.step(&clr);
+        let view = sim.step(&stall).to_vec();
+        assert_eq!(lane_value(&view, &p.outputs, 0), 0, "clr must flush the pipeline");
+    }
+}

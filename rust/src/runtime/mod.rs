@@ -36,6 +36,10 @@ pub const K_STEPS: usize = 64;
 const OP_CONST0: i32 = 11;
 const OP_CONST1: i32 = 12;
 const OP_INPUT: i32 = 13;
+// Not part of the artifact encoding: the kernels are combinational
+// evaluators, so `encode_netlist` rejects any netlist carrying this
+// opcode instead of shipping a node the kernel would misinterpret.
+const OP_REG: i32 = 14;
 
 // The artifact opcodes and the IR's flat-storage opcodes are one scheme —
 // `encode_netlist` relies on it to copy columns without translation.
@@ -43,6 +47,7 @@ const _: () = {
     assert!(crate::ir::OP_CONST0 as i32 == OP_CONST0);
     assert!(crate::ir::OP_CONST1 as i32 == OP_CONST1);
     assert!(crate::ir::OP_INPUT as i32 == OP_INPUT);
+    assert!(crate::ir::OP_REG as i32 == OP_REG);
 };
 
 /// A netlist encoded for the PJRT evaluator.
@@ -71,6 +76,13 @@ pub struct EncodedNetlist {
 /// widen-and-copy of the opcode/fanin arrays into the padded `i32` buffers
 /// — no node walk, no enum reconstruction.
 pub fn encode_netlist(nl: &Netlist) -> Result<EncodedNetlist> {
+    if nl.is_sequential() {
+        bail!(
+            "netlist '{}' has {} registers; the artifact encoding is combinational-only",
+            nl.name,
+            nl.num_regs()
+        );
+    }
     let n_nodes = nl.len();
     let n_inputs = nl.num_inputs();
     let (bucket, (max_nodes, _max_inputs)) = if n_nodes <= SMALL.0 && n_inputs <= SMALL.1 {

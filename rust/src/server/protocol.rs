@@ -175,6 +175,20 @@ pub fn artifact_summary(art: &DesignArtifact, source: CompileSource) -> Json {
                 Some(r) => persist::report_to_json(r),
             },
         ),
+        // Pipeline metadata of registered designs (`null` for purely
+        // combinational artifacts): stage count, cycle latency, and the
+        // number of registers in the emitted netlist.
+        (
+            "pipeline",
+            match art.pipeline() {
+                None => Json::Null,
+                Some(p) => Json::obj(vec![
+                    ("stages", Json::num(p.stages as f64)),
+                    ("latency", Json::num(p.latency() as f64)),
+                    ("registers", Json::num(art.netlist().num_regs() as f64)),
+                ]),
+            },
+        ),
         ("verified", persist::opt_bool(art.verified)),
         ("pjrt_verified", persist::opt_bool(art.pjrt_verified)),
     ])

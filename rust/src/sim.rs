@@ -13,7 +13,7 @@
 //! per-gate `Vec` deref) before every equivalence run; construction is now
 //! free (EXPERIMENTS.md §Perf).
 
-use crate::ir::netlist::{OP_CONST0, OP_CONST1, OP_INPUT};
+use crate::ir::netlist::{OP_CONST0, OP_CONST1, OP_INPUT, OP_REG};
 use crate::ir::{Netlist, NodeId};
 
 /// A netlist viewed as a flat instruction stream: one `(op, f0, f1, f2)`
@@ -33,7 +33,17 @@ pub struct CompiledNetlist<'a> {
 impl<'a> CompiledNetlist<'a> {
     /// Borrow a netlist as the simulator's flat op list. Zero-copy: the
     /// netlist already stores this encoding.
+    ///
+    /// Panics on a sequential netlist: this simulator is combinational
+    /// (the unchecked hot loop would read a register's record as an input
+    /// ordinal). Sequential netlists go through [`ClockedSim`].
     pub fn compile(nl: &'a Netlist) -> Self {
+        assert!(
+            !nl.is_sequential(),
+            "CompiledNetlist is combinational; use sim::ClockedSim for '{}' ({} registers)",
+            nl.name,
+            nl.num_regs()
+        );
         CompiledNetlist { ops: nl.ops(), fanin: nl.fanin_records(), n_inputs: nl.num_inputs() }
     }
 
@@ -125,6 +135,160 @@ impl Simulator {
     /// Extract the named outputs as packed words.
     pub fn output_words(&self, nl: &Netlist) -> Vec<(String, u64)> {
         nl.outputs().map(|(n, id)| (n.to_string(), self.words[id.index()])).collect()
+    }
+}
+
+/// Cycle-accurate, bit-parallel simulator for **sequential** netlists —
+/// the clocked counterpart of [`CompiledNetlist`].
+///
+/// Like the combinational simulator it evaluates 64 independent vectors at
+/// once (one per bit lane of a `u64`), but register state is carried
+/// across [`ClockedSim::step`] calls. Each step models one clock cycle:
+///
+/// 1. a full combinational sweep in which every [`crate::ir::OP_REG`] node
+///    presents its *current* state `q`, then
+/// 2. the synchronous update `q ← clr ? init : (en ? d : q)` per register,
+///    per lane, read from the fully evaluated sweep — which is what makes
+///    feedback (`d` referencing a later node) well-defined.
+///
+/// [`ClockedSim::reset`] models the asynchronous reset: every register
+/// returns to its init value and the cycle counter restarts. Construction
+/// applies it, so a fresh simulator is already in the reset state.
+#[derive(Debug, Clone)]
+pub struct ClockedSim<'a> {
+    ops: &'a [u8],
+    fanin: &'a [[u32; 3]],
+    n_inputs: usize,
+    /// Dense register ordinal per node (`u32::MAX` for non-registers).
+    state_ix: Vec<u32>,
+    /// Lane-broadcast init word per register (all-ones or all-zeros).
+    init_words: Vec<u64>,
+    /// Current register state, one word per register.
+    state: Vec<u64>,
+    /// Node values of the most recent [`ClockedSim::step`] sweep.
+    words: Vec<u64>,
+    /// Clock edges since the last reset.
+    cycles: u64,
+}
+
+impl<'a> ClockedSim<'a> {
+    /// Borrow a netlist (sequential or combinational — a register-free
+    /// netlist simply has no state and `step` degenerates to one
+    /// combinational sweep per call).
+    pub fn new(nl: &'a Netlist) -> Self {
+        let n = nl.len();
+        let mut state_ix = vec![u32::MAX; n];
+        let mut init_words = Vec::with_capacity(nl.num_regs());
+        for i in 0..n {
+            if nl.ops()[i] == OP_REG {
+                state_ix[i] = init_words.len() as u32;
+                let init = match nl.node(NodeId(i as u32)) {
+                    crate::ir::Node::Reg { init, .. } => init,
+                    _ => unreachable!("opcode says register"),
+                };
+                init_words.push(if init { !0u64 } else { 0 });
+            }
+        }
+        let state = init_words.clone();
+        ClockedSim {
+            ops: nl.ops(),
+            fanin: nl.fanin_records(),
+            n_inputs: nl.num_inputs(),
+            state_ix,
+            init_words,
+            state,
+            words: vec![0u64; n],
+            cycles: 0,
+        }
+    }
+
+    /// Asynchronous reset: every register back to its init value, cycle
+    /// counter to zero. Node words keep their last sweep (stale until the
+    /// next step).
+    pub fn reset(&mut self) {
+        self.state.copy_from_slice(&self.init_words);
+        self.cycles = 0;
+    }
+
+    /// Advance one clock cycle: evaluate the combinational sweep against
+    /// `input_words` (one lane-packed word per primary input, creation
+    /// order) with registers presenting their current state, then latch.
+    /// Returns the node values of the sweep (the *pre-edge* view: a
+    /// register's own word is the state it held during this cycle).
+    pub fn step(&mut self, input_words: &[u64]) -> &[u64] {
+        assert_eq!(input_words.len(), self.n_inputs, "input word count");
+        let n = self.ops.len();
+        for i in 0..n {
+            let [f0, f1, f2] = self.fanin[i];
+            let v = match self.ops[i] {
+                0 => self.words[f0 as usize],
+                1 => !self.words[f0 as usize],
+                2 => self.words[f0 as usize] & self.words[f1 as usize],
+                3 => self.words[f0 as usize] | self.words[f1 as usize],
+                4 => !(self.words[f0 as usize] & self.words[f1 as usize]),
+                5 => !(self.words[f0 as usize] | self.words[f1 as usize]),
+                6 => self.words[f0 as usize] ^ self.words[f1 as usize],
+                7 => !(self.words[f0 as usize] ^ self.words[f1 as usize]),
+                8 => !((self.words[f0 as usize] & self.words[f1 as usize])
+                    | self.words[f2 as usize]),
+                9 => !((self.words[f0 as usize] | self.words[f1 as usize])
+                    & self.words[f2 as usize]),
+                10 => {
+                    let (a, b, c) = (
+                        self.words[f0 as usize],
+                        self.words[f1 as usize],
+                        self.words[f2 as usize],
+                    );
+                    (a & b) | (a & c) | (b & c)
+                }
+                OP_CONST0 => 0,
+                OP_CONST1 => !0,
+                OP_INPUT => input_words[f0 as usize],
+                OP_REG => self.state[self.state_ix[i] as usize],
+                other => panic!("unknown opcode {other} at node {i}"),
+            };
+            self.words[i] = v;
+        }
+        // Latch phase: d/en/clr are read from the completed sweep, so a
+        // feedback d (later node id) sees this cycle's settled value.
+        for i in 0..n {
+            if self.ops[i] != OP_REG {
+                continue;
+            }
+            let [d, en, clr] = self.fanin[i];
+            let six = self.state_ix[i] as usize;
+            let (dv, env, clrv) =
+                (self.words[d as usize], self.words[en as usize], self.words[clr as usize]);
+            let q = self.state[six];
+            let iw = self.init_words[six];
+            self.state[six] = (clrv & iw) | (!clrv & ((env & dv) | (!env & q)));
+        }
+        self.cycles += 1;
+        &self.words
+    }
+
+    /// Node values of the most recent sweep (index with [`NodeId::index`]).
+    #[inline]
+    pub fn values(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Packed word for one node after the most recent sweep.
+    #[inline]
+    pub fn word(&self, id: NodeId) -> u64 {
+        self.words[id.index()]
+    }
+
+    /// Clock edges applied since construction or the last reset.
+    #[inline]
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Number of primary inputs each step samples.
+    #[inline]
+    pub fn num_inputs(&self) -> usize {
+        self.n_inputs
     }
 }
 
@@ -283,6 +447,106 @@ mod tests {
         assert_eq!(comp.num_inputs(), nl.num_inputs());
         assert!(std::ptr::eq(comp.ops.as_ptr(), nl.ops().as_ptr()));
         assert!(std::ptr::eq(comp.fanin.as_ptr(), nl.fanin_records().as_ptr()));
+    }
+
+    /// Toggle flip-flop: q feeds back through an inverter into its own d.
+    /// Built with the sanctioned feedback recipe (`reg_raw` seed +
+    /// `set_reg_data` patch).
+    fn toggle_ff() -> (Netlist, NodeId, NodeId, NodeId) {
+        let mut nl = Netlist::new("tff");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        let q = nl.reg_raw(0, en.0, clr.0, false);
+        let nq = nl.inv(q);
+        nl.set_reg_data(q, nq);
+        nl.output("q", q);
+        nl.validate().unwrap();
+        (nl, q, en, clr)
+    }
+
+    #[test]
+    fn clocked_toggle_ff_counts_edges() {
+        let (nl, q, _, _) = toggle_ff();
+        let mut sim = ClockedSim::new(&nl);
+        // en=1, clr=0 on every lane: q alternates 0,1,0,1,... Each step
+        // returns the *pre-edge* view, so sweep k shows the state after
+        // k-1 edges: (k-1) mod 2.
+        for sweep in 1..=6u64 {
+            let view = sim.step(&[!0, 0]);
+            let expect = if (sweep - 1) % 2 == 0 { 0u64 } else { !0 };
+            assert_eq!(view[q.index()], expect, "sweep {sweep}");
+            assert_eq!(sim.cycles(), sweep);
+        }
+    }
+
+    #[test]
+    fn clocked_en_stalls_and_clr_clears() {
+        let (nl, q, _, _) = toggle_ff();
+        let mut sim = ClockedSim::new(&nl);
+        sim.step(&[!0, 0]); // edge 1: q becomes 1
+        sim.step(&[0, 0]); // en=0: hold
+        sim.step(&[0, 0]); // still holding
+        let view = sim.step(&[0, 0]);
+        assert_eq!(view[q.index()], !0, "held the toggled value across stalls");
+        // clr wins over en: q returns to init (0) even with en=1.
+        sim.step(&[!0, !0]);
+        let view = sim.step(&[0, 0]);
+        assert_eq!(view[q.index()], 0, "clr returns to init");
+    }
+
+    #[test]
+    fn clocked_reset_restores_init_state() {
+        let (nl, q, _, _) = toggle_ff();
+        let mut sim = ClockedSim::new(&nl);
+        sim.step(&[!0, 0]);
+        sim.step(&[0, 0]);
+        assert_eq!(sim.word(q), !0);
+        sim.reset();
+        assert_eq!(sim.cycles(), 0);
+        let view = sim.step(&[0, 0]);
+        assert_eq!(view[q.index()], 0, "init state after reset");
+    }
+
+    #[test]
+    fn clocked_two_rank_pipeline_has_two_cycle_latency() {
+        // x → reg → reg: the input value appears at the second rank's
+        // output exactly two edges later.
+        let mut nl = Netlist::new("pipe2");
+        let x = nl.input("x");
+        let en = nl.constant(true);
+        let clr = nl.constant(false);
+        let r1 = nl.reg(x, en, clr, false);
+        let r2 = nl.reg(r1, en, clr, false);
+        nl.output("y", r2);
+        let mut sim = ClockedSim::new(&nl);
+        let pattern = 0xDEAD_BEEF_0BAD_F00Du64;
+        sim.step(&[pattern]); // edge 1: r1 captures pattern
+        sim.step(&[0]); // edge 2: r2 captures pattern
+        let view = sim.step(&[0]); // sweep 3 shows r2 = pattern
+        assert_eq!(view[r2.index()], pattern);
+        assert_eq!(view[r1.index()], 0, "rank 1 moved on");
+    }
+
+    #[test]
+    fn clocked_matches_combinational_on_register_free_netlists() {
+        let (nl, bits) = adder2();
+        let assigns: Vec<Vec<bool>> = (0..16u32)
+            .map(|v| vec![v & 1 != 0, v >> 1 & 1 != 0, v >> 2 & 1 != 0, v >> 3 & 1 != 0])
+            .collect();
+        let words = pack_lanes(&assigns);
+        let mut clocked = ClockedSim::new(&nl);
+        let cw = clocked.step(&words).to_vec();
+        let mut sim = Simulator::new();
+        let sw = sim.run(&nl, &words).to_vec();
+        assert_eq!(cw, sw);
+        let _ = bits;
+    }
+
+    #[test]
+    #[should_panic(expected = "combinational")]
+    fn combinational_compile_rejects_sequential() {
+        let (nl, _, _, _) = toggle_ff();
+        let _ = CompiledNetlist::compile(&nl);
     }
 
     #[test]

@@ -34,7 +34,8 @@ use std::sync::Arc;
 /// Timing/area/power report for one netlist.
 #[derive(Debug, Clone)]
 pub struct StaReport {
-    /// Worst arrival time over primary outputs, ns.
+    /// Worst arrival time over timing endpoints — primary outputs and
+    /// register data pins (registers cut paths at the clock edge), ns.
     pub critical_delay_ns: f64,
     /// Total standard-cell area, µm².
     pub area_um2: f64,
@@ -91,6 +92,9 @@ pub fn node_arrival_ns(lib: &CellLib, node: Node<'_>, at: &[f64], load: f64) -> 
             let worst = fanin.iter().map(|f| at[f.index()]).fold(f64::MIN, f64::max);
             worst + lib.delay_ns(kind, load)
         }
+        // A register's Q pin launches a fresh timing path at the clock
+        // edge: registers are cut points, not combinational delay.
+        Node::Reg { .. } => 0.0,
     }
 }
 
@@ -126,6 +130,9 @@ fn arrival_flat(
     } else if op == OP_INPUT {
         arr[fan[i][0] as usize]
     } else {
+        // Constants (time-invariant) and registers (OP_REG: the Q pin
+        // launches a fresh path at the clock edge — a timing cut point)
+        // both start new paths at t = 0, matching the `Node`-view formula.
         0.0
     }
 }
@@ -158,8 +165,15 @@ impl Sta {
         let at = self.arrivals_ns(nl);
         let output_arrivals_ns: Vec<f64> =
             nl.outputs().map(|(_, id)| at[id.index()]).collect();
-        let critical_delay_ns =
+        let mut critical_delay_ns =
             output_arrivals_ns.iter().copied().fold(0.0f64, f64::max);
+        // Sequential endpoints: each register's d pin ends a timing path at
+        // the clock edge, so the deepest combinational *segment* — not the
+        // (cut) end-to-end path — governs the achievable clock period.
+        let fan = nl.fanin_records();
+        for &(r, _) in nl.registers() {
+            critical_delay_ns = critical_delay_ns.max(at[fan[r as usize][0] as usize]);
+        }
         let area_um2 = nl.area_um2(&self.lib);
         let power_mw = self.dynamic_power_mw(nl);
         StaReport {
@@ -173,8 +187,17 @@ impl Sta {
     }
 
     /// Dynamic power: `P = Σ_g activity_g · E_g · f_clk`.
+    ///
+    /// Toggle extraction runs the combinational bit-parallel simulator, so
+    /// sequential netlists fall back to the constant-activity model (a
+    /// clocked activity sweep would need a multi-cycle stimulus protocol;
+    /// the pipeline registers do not change which gates exist, so the
+    /// constant-activity estimate stays comparable across pipeline depths).
     pub fn dynamic_power_mw(&self, nl: &Netlist) -> f64 {
-        let activities: Vec<f64> = if self.activity_rounds > 0 && nl.num_inputs() > 0 {
+        let activities: Vec<f64> = if self.activity_rounds > 0
+            && nl.num_inputs() > 0
+            && !nl.is_sequential()
+        {
             crate::sim::toggle_activity(nl, self.activity_rounds, 0x5eed)
         } else {
             vec![self.default_activity; nl.len()]
@@ -510,6 +533,66 @@ mod tests {
             at[i] = node_arrival_ns(&sta.lib, nl.node(NodeId(i as u32)), &at, loads[i]);
         }
         assert_eq!(at, flat);
+    }
+
+    #[test]
+    fn registers_cut_timing_paths() {
+        // Two 8-deep XOR chains in series, registered at the midpoint: the
+        // critical delay is the worst *segment*, roughly half the uncut
+        // end-to-end delay, and the register's d pin is a real endpoint.
+        let build = |cut: bool| {
+            let mut nl = Netlist::new("seg");
+            let mut prev = nl.input("i0");
+            for k in 1..=8 {
+                let i = nl.input(format!("i{k}"));
+                prev = nl.xor2(prev, i);
+            }
+            if cut {
+                let en = nl.constant(true);
+                let clr = nl.constant(false);
+                prev = nl.reg(prev, en, clr, false);
+            }
+            for k in 9..=16 {
+                let i = nl.input(format!("i{k}"));
+                prev = nl.xor2(prev, i);
+            }
+            nl.output("o", prev);
+            nl
+        };
+        let sta = Sta::default();
+        let uncut = sta.analyze(&build(false));
+        let cut = sta.analyze(&build(true));
+        assert!(
+            cut.critical_delay_ns < uncut.critical_delay_ns * 0.7,
+            "cut={} uncut={}",
+            cut.critical_delay_ns,
+            uncut.critical_delay_ns
+        );
+        assert!(cut.critical_delay_ns > 0.0);
+        // Power falls back to the constant-activity model without panicking.
+        assert!(sta.dynamic_power_mw(&build(true)) > 0.0);
+    }
+
+    #[test]
+    fn register_endpoint_governs_critical_delay() {
+        // Deep logic feeding ONLY a register d pin (output is the shallow
+        // register itself): the endpoint sweep must still see the deep
+        // segment.
+        let mut nl = Netlist::new("endpoint");
+        let mut prev = nl.input("i0");
+        for k in 1..=8 {
+            let i = nl.input(format!("i{k}"));
+            prev = nl.xor2(prev, i);
+        }
+        let en = nl.constant(true);
+        let clr = nl.constant(false);
+        let q = nl.reg(prev, en, clr, false);
+        nl.output("q", q);
+        let sta = Sta::default();
+        let rep = sta.analyze(&nl);
+        let at = sta.arrivals_ns(&nl);
+        assert_eq!(rep.critical_delay_ns, at[prev.index()]);
+        assert_eq!(at[q.index()], 0.0, "Q launches a fresh path");
     }
 
     #[test]

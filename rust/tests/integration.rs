@@ -363,6 +363,7 @@ fn failure_injection_detected() {
                     };
                     nl.gate(k, fanin);
                 }
+                Node::Reg { .. } => unreachable!("tier-1 families are combinational"),
             }
         }
         for (name, id) in d.netlist.outputs() {

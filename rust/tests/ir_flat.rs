@@ -114,6 +114,7 @@ fn flat_simulation_matches_view_interpreter() {
                         let c = fanin.get(2).map_or(0, |f| view_vals[f.index()]);
                         kind.eval(a, b, c)
                     }
+                    Node::Reg { .. } => unreachable!("tier-1 families are combinational"),
                 };
             }
             let comp = CompiledNetlist::compile(nl);
@@ -144,6 +145,7 @@ fn verilog_is_identical_after_view_roundtrip() {
                 Node::Gate { kind, fanin } => {
                     rebuilt.gate(kind, fanin);
                 }
+                Node::Reg { .. } => unreachable!("tier-1 families are combinational"),
             }
         }
         for (name, id) in nl.outputs() {

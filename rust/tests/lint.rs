@@ -8,7 +8,7 @@ use ufo_mac::api::{tier1_requests, DesignRequest, EngineConfig, SynthEngine};
 use ufo_mac::cpa::{PrefixGraph, NONE};
 use ufo_mac::ct::StagePlan;
 use ufo_mac::ir::{CellKind, Netlist};
-use ufo_mac::lint::{check_plan, check_prefix, lint_netlist, LintOptions, Locus};
+use ufo_mac::lint::{check_plan, check_prefix, lint_netlist, LintOptions, Locus, Severity};
 use ufo_mac::multiplier::MultiplierSpec;
 
 fn codes(diags: &[ufo_mac::lint::Diagnostic]) -> Vec<&'static str> {
@@ -86,6 +86,89 @@ fn tier1_families_and_formats_lint_clean() {
         assert!(report.is_clean(), "{req:?}: {report}");
         assert!(art.lint.as_ref().unwrap().is_clean());
     }
+}
+
+#[test]
+fn forward_register_control_is_ufo302() {
+    let mut nl = Netlist::new("seq_loop");
+    let a = nl.input("a");
+    let clr = nl.input("clr");
+    // Enable pin names the register itself: the edge's own update would
+    // gate the edge — a combinational loop through the control path.
+    let q = nl.reg_raw(a.0, 2, clr.0, false);
+    nl.output("q", q);
+    let diags = lint_netlist(&nl, &LintOptions::default());
+    assert_eq!(codes(&diags), vec!["UFO302"], "{diags:?}");
+    assert_eq!(diags[0].locus, Locus::Node(q.0));
+}
+
+#[test]
+fn unclocked_const0_enable_is_ufo301() {
+    let mut nl = Netlist::new("seq_unclocked");
+    let a = nl.input("a");
+    let zero = nl.constant(false);
+    let clr = nl.input("clr");
+    let q = nl.reg(a, zero, clr, true);
+    nl.output("q", q);
+    let diags = lint_netlist(&nl, &LintOptions::default());
+    assert_eq!(codes(&diags), vec!["UFO301"], "{diags:?}");
+}
+
+#[test]
+fn dangling_register_pins_are_ufo002_per_pin() {
+    let mut nl = Netlist::new("seq_dangle");
+    let _clr = nl.input("clr");
+    // d and en both point past the end of the netlist; clr is the input.
+    let q = nl.reg_raw(7, 9, 0, false);
+    nl.output("q", q);
+    let diags = lint_netlist(&nl, &LintOptions::default());
+    assert_eq!(codes(&diags), vec!["UFO002", "UFO002"], "{diags:?}");
+}
+
+#[test]
+fn imbalanced_stage_cut_is_ufo303_pedantic_info() {
+    let mut nl = Netlist::new("seq_imbalance");
+    let a = nl.input("a");
+    let b = nl.input("b");
+    let en = nl.input("en");
+    let clr = nl.input("clr");
+    // One register closes a 6-deep XOR chain, the other a single gate:
+    // the clock period is set by the deep segment while the shallow
+    // rank's slack idles.
+    let mut deep = a;
+    for _ in 0..6 {
+        deep = nl.xor2(deep, b);
+    }
+    let q_deep = nl.reg(deep, en, clr, false);
+    let shallow = nl.and2(a, b);
+    let q_shallow = nl.reg(shallow, en, clr, false);
+    let y = nl.or2(q_deep, q_shallow);
+    nl.output("y", y);
+    nl.validate().unwrap();
+    let clean = lint_netlist(&nl, &LintOptions::default());
+    assert!(clean.is_empty(), "stage balance is pedantic-only: {clean:?}");
+    let diags = lint_netlist(&nl, &LintOptions { pedantic: true });
+    let seq: Vec<_> = diags.iter().filter(|d| d.code == "UFO303").collect();
+    assert_eq!(seq.len(), 1, "{diags:?}");
+    assert_eq!(seq[0].locus, Locus::Node(q_shallow.0));
+    assert_eq!(seq[0].severity, Severity::Info);
+}
+
+#[test]
+fn tier1_sweep_carries_pipelined_variants() {
+    // The clean-sweep test above runs these through the engine's lint
+    // path; this pins that the sweep actually contains the sequential
+    // coverage (a 1-stage multiplier + 2-stage fused MACs, both
+    // signednesses) so a regression cannot silently drop it.
+    let reqs = tier1_requests(8);
+    let staged: Vec<usize> = reqs
+        .iter()
+        .filter_map(|r| match r {
+            DesignRequest::Multiplier(m) if m.pipeline_stages > 0 => Some(m.pipeline_stages),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(staged, [1, 2, 2], "tier-1 pipelined variants");
 }
 
 #[test]

@@ -1,0 +1,397 @@
+//! Cycle-accurate tests of the sequential IR: pipelined designs driven
+//! through [`ufo_mac::sim::ClockedSim`] against the combinational golden
+//! model, reset / enable-stall / synchronous-clear semantics, worker-count
+//! independence of the bounded sequential equivalence sweep, and the
+//! end-to-end acceptance path (build → verify → disk cache → Verilog) for
+//! a 16×16 two-stage fused MAC.
+//!
+//! Every randomized test derives its RNG from an explicit per-trial seed
+//! and includes that seed in the panic message, so a failure is
+//! reproducible by pinning the printed value.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use ufo_mac::api::{CompileSource, DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::equiv::{check_multiplier, check_pipelined, check_pipelined_with, EquivOptions};
+use ufo_mac::multiplier::{Design, MultiplierSpec, OperandFormat};
+use ufo_mac::ppg::PpgKind;
+use ufo_mac::sim::{lane_value, ClockedSim, CompiledNetlist};
+use ufo_mac::util::Rng;
+
+/// Unique scratch directory per test (no tempfile crate in the image).
+fn scratch(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "ufo_sequential_{tag}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Pack a ≤64-lane batch of `(a, b, c)` operand triples into input words
+/// using the design's input-ordinal layout (`a` bits, `b` bits, `c` bits),
+/// then append the `pipe_en` / `pipe_clr` lane masks. The same layout as
+/// the equivalence sweep's internal packer, reproduced here so the tests
+/// cross-check it rather than reuse it.
+fn pack(design: &Design, batch: &[(u128, u128, u128)], en: u64, clr: u64) -> Vec<u64> {
+    let (aw, bw, cw) = (design.a.len(), design.b.len(), design.c.len());
+    let mut words = vec![0u64; aw + bw + cw + 2];
+    for (lane, &(a, b, c)) in batch.iter().enumerate() {
+        let bit = 1u64 << lane;
+        for k in 0..aw {
+            if a >> k & 1 == 1 {
+                words[k] |= bit;
+            }
+        }
+        for k in 0..bw {
+            if b >> k & 1 == 1 {
+                words[aw + k] |= bit;
+            }
+        }
+        for k in 0..cw {
+            if c >> k & 1 == 1 {
+                words[aw + bw + k] |= bit;
+            }
+        }
+    }
+    words[aw + bw + cw] = en;
+    words[aw + bw + cw + 1] = clr;
+    words
+}
+
+// ---------------------------------------------------------------------
+// Property: every pipelined spec in a randomized config space matches
+// the combinational golden model through the clocked sweep.
+// ---------------------------------------------------------------------
+#[test]
+fn property_random_pipelined_specs_match_the_golden_model() {
+    for trial in 0..18u64 {
+        let seed = 0x5E9_0000 + trial;
+        let mut rng = Rng::seed_from_u64(seed);
+        let ppg = if rng.bool() { PpgKind::Booth4 } else { PpgKind::AndArray };
+        let signed = rng.bool();
+        // 0 = plain multiplier, 1 = fused MAC, 2 = separate MAC. MAC modes
+        // stay at n ≤ 4 so the auto-exhaustive sweep (operand space at most
+        // 2^20) remains cheap in debug builds.
+        let mode = rng.index(3);
+        let n = if mode == 0 { [3, 4, 5][rng.index(3)] } else { [3, 4][rng.index(2)] };
+        let stages = 1 + rng.index(3);
+        let fmt = if signed { OperandFormat::signed(n) } else { OperandFormat::unsigned(n) };
+        let spec = MultiplierSpec::new_fmt(fmt)
+            .ppg(ppg)
+            .fused_mac(mode == 1)
+            .separate_mac(mode == 2)
+            .pipeline_stages(stages);
+        let design = spec.build().unwrap_or_else(|e| panic!("seed {seed:#x}: build: {e}"));
+        let info =
+            design.pipeline.as_ref().unwrap_or_else(|| panic!("seed {seed:#x}: no pipeline"));
+        assert_eq!(info.stages, stages, "seed {seed:#x}");
+        assert_eq!(info.latency(), stages, "seed {seed:#x}");
+        // Every product bit is registered at the final rank (deeper
+        // drivers may enter the pipeline at a later slice, so the total
+        // is at least one register per output, not `stages` per output).
+        assert!(
+            design.netlist.num_regs() >= design.product.len(),
+            "seed {seed:#x}: {} regs for {} stages over {} product bits",
+            design.netlist.num_regs(),
+            stages,
+            design.product.len()
+        );
+        let rep = check_pipelined_with(&design, 1 << 8)
+            .unwrap_or_else(|e| panic!("seed {seed:#x}: equiv: {e}"));
+        assert!(
+            rep.passed,
+            "seed {seed:#x}: ppg={ppg:?} signed={signed} mode={mode} n={n} stages={stages} \
+             cex={:?}",
+            rep.counterexample
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: a pipeline is a pure delay — lane-for-lane identical to the
+// combinational twin built from the same spec, `latency` cycles later.
+// ---------------------------------------------------------------------
+#[test]
+fn pipeline_is_a_pure_delay_of_the_combinational_twin() {
+    for &(n, stages, seed) in &[(4usize, 1usize, 0xDE1A_1u64), (5, 2, 0xDE1A_2), (4, 3, 0xDE1A_3)]
+    {
+        let mut rng = Rng::seed_from_u64(seed);
+        let comb = MultiplierSpec::new(n).build().unwrap();
+        let pipe = MultiplierSpec::new(n).pipeline_stages(stages).build().unwrap();
+        let batch: Vec<(u128, u128, u128)> = (0..64)
+            .map(|_| (u128::from(rng.below(1 << n)), u128::from(rng.below(1 << n)), 0))
+            .collect();
+
+        let comp = CompiledNetlist::compile(&comb.netlist);
+        let mut buf = Vec::new();
+        let words = pack(&comb, &batch, 0, 0);
+        comp.run_into(&mut buf, &words[..words.len() - 2]);
+
+        let mut sim = ClockedSim::new(&pipe.netlist);
+        sim.reset();
+        let words = pack(&pipe, &batch, !0, 0);
+        for _ in 0..stages {
+            sim.step(&words);
+        }
+        let view = sim.step(&words);
+        for (lane, &(a, b, _)) in batch.iter().enumerate() {
+            let golden = lane_value(&buf, &comb.product, lane as u32);
+            let clocked = lane_value(view, &pipe.product, lane as u32);
+            assert_eq!(
+                clocked, golden,
+                "seed {seed:#x}: n={n} stages={stages} lane {lane} a={a} b={b}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming: initiation interval 1 — a new operand pair every cycle, one
+// result per cycle once the pipeline has filled.
+// ---------------------------------------------------------------------
+#[test]
+fn streaming_produces_one_result_per_cycle_after_fill() {
+    let design = MultiplierSpec::new(4).pipeline_stages(3).build().unwrap();
+    let lat = design.pipeline.as_ref().unwrap().latency();
+    let seed = 0x57AB_u64;
+    let mut rng = Rng::seed_from_u64(seed);
+    let stream: Vec<(u128, u128, u128)> =
+        (0..20).map(|_| (u128::from(rng.below(16)), u128::from(rng.below(16)), 0)).collect();
+    let mut sim = ClockedSim::new(&design.netlist);
+    sim.reset();
+    for (t, &(a, b, c)) in stream.iter().enumerate() {
+        let view = sim.step(&pack(&design, &[(a, b, c)], !0, 0));
+        if t >= lat {
+            let (ea, eb, ec) = stream[t - lat];
+            assert_eq!(
+                lane_value(view, &design.product, 0),
+                design.expected(ea, eb, ec),
+                "seed {seed:#x}: cycle {t} must expose the result issued {lat} cycles earlier"
+            );
+        } else {
+            assert_eq!(
+                lane_value(view, &design.product, 0),
+                0,
+                "seed {seed:#x}: cycle {t} is still inside the fill latency"
+            );
+        }
+    }
+    assert_eq!(sim.cycles(), stream.len() as u64);
+}
+
+// ---------------------------------------------------------------------
+// Reset, enable-stall, and synchronous-clear semantics.
+// ---------------------------------------------------------------------
+#[test]
+fn reset_stall_and_clear_semantics() {
+    let design = MultiplierSpec::new(4).pipeline_stages(2).build().unwrap();
+    let mut sim = ClockedSim::new(&design.netlist);
+    sim.reset();
+    assert_eq!(sim.cycles(), 0);
+
+    // Cold pipeline: the first pre-edge view is the all-init reset state.
+    let va = pack(&design, &[(11, 13, 0)], !0, 0);
+    let view = sim.step(&va);
+    assert_eq!(lane_value(view, &design.product, 0), 0, "product registers reset to init");
+
+    // Fill: the result is visible after `latency` edges.
+    sim.step(&va);
+    let view = sim.step(&va);
+    let want_a = design.expected(11, 13, 0);
+    assert_eq!(lane_value(view, &design.product, 0), want_a);
+
+    // Stall: with pipe_en low every rank holds, whatever the data inputs do.
+    let garbage = pack(&design, &[(5, 7, 0)], 0, 0);
+    for k in 0..3 {
+        let view = sim.step(&garbage);
+        assert_eq!(
+            lane_value(view, &design.product, 0),
+            want_a,
+            "stalled pipeline must hold its output (stall cycle {k})"
+        );
+    }
+
+    // Resume: in-flight ranks drain first, the new result lands
+    // `latency` edges after re-enable.
+    let vb = pack(&design, &[(9, 3, 0)], !0, 0);
+    sim.step(&vb);
+    let view = sim.step(&vb);
+    assert_eq!(lane_value(view, &design.product, 0), want_a, "old result drains out first");
+    let view = sim.step(&vb);
+    assert_eq!(lane_value(view, &design.product, 0), design.expected(9, 3, 0));
+
+    // Clear: one pipe_clr pulse reloads every init, overriding pipe_en.
+    let clr = pack(&design, &[(9, 3, 0)], !0, !0);
+    sim.step(&clr);
+    let view = sim.step(&vb);
+    assert_eq!(lane_value(view, &design.product, 0), 0, "clr overrides en and data");
+}
+
+// ---------------------------------------------------------------------
+// The en / clr controls are lane masks, not globals: each of the 64
+// simulated lanes carries its own control bit.
+// ---------------------------------------------------------------------
+#[test]
+fn enable_and_clear_are_per_lane() {
+    let design = MultiplierSpec::new(3).pipeline_stages(1).build().unwrap();
+    let mut sim = ClockedSim::new(&design.netlist);
+    sim.reset();
+
+    // Lane 0 runs, lane 1 stays stalled in the reset state.
+    let w = pack(&design, &[(5, 6, 0), (7, 7, 0)], 0b01, 0);
+    sim.step(&w);
+    let view = sim.step(&w);
+    assert_eq!(lane_value(view, &design.product, 0), design.expected(5, 6, 0));
+    assert_eq!(lane_value(view, &design.product, 1), 0, "lane 1 is disabled");
+
+    // Now clear lane 0 only while enabling lane 1.
+    let w2 = pack(&design, &[(5, 6, 0), (7, 7, 0)], 0b10, 0b01);
+    sim.step(&w2);
+    let view = sim.step(&w2);
+    assert_eq!(lane_value(view, &design.product, 0), 0, "lane 0 cleared back to init");
+    assert_eq!(lane_value(view, &design.product, 1), design.expected(7, 7, 0));
+}
+
+// ---------------------------------------------------------------------
+// Worker-count independence of the clocked sweep (passing design).
+// ---------------------------------------------------------------------
+#[test]
+fn worker_count_never_changes_the_report() {
+    let design = MultiplierSpec::new(4).fused_mac(true).pipeline_stages(2).build().unwrap();
+    let reports: Vec<_> = [1usize, 2, 4, 7]
+        .iter()
+        .map(|&t| {
+            check_pipelined(&design, &EquivOptions { budget: 1 << 8, threads: t }).unwrap()
+        })
+        .collect();
+    assert!(reports[0].passed && reports[0].exhaustive);
+    assert_eq!(reports[0].vectors, 1 << 16, "4+4+8 operand bits sweep exhaustively");
+    for (k, r) in reports.iter().enumerate().skip(1) {
+        assert_eq!(r.passed, reports[0].passed, "threads run {k}");
+        assert_eq!(r.vectors, reports[0].vectors, "threads run {k}");
+        assert_eq!(r.exhaustive, reports[0].exhaustive, "threads run {k}");
+        assert_eq!(r.counterexample, reports[0].counterexample, "threads run {k}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker-count independence of the counterexample: an injected fault in
+// a pipelined netlist reports the identical first failure for every
+// thread count (the deterministic minimum-failing-batch rule).
+// ---------------------------------------------------------------------
+#[test]
+fn injected_fault_counterexample_is_worker_count_independent() {
+    use ufo_mac::ir::{CellKind, Netlist, Node};
+    // 6×6 plain (12 operand bits → 64 exhaustive batches, enough for the
+    // parallel sweep path; fewer than 8 batches falls back to one worker).
+    let mut design = MultiplierSpec::new(6).pipeline_stages(2).build().unwrap();
+    let pick = design
+        .netlist
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| matches!(n, Node::Gate { kind: CellKind::Xor2, .. }))
+        .map(|(i, _)| i)
+        .last()
+        .expect("a 6x6 multiplier CPA has XOR cells");
+    let mut nl = Netlist::new(design.netlist.name.clone());
+    for (i, node) in design.netlist.iter().enumerate() {
+        match node {
+            Node::Input { name, arrival_ns } => {
+                nl.input_at(name, arrival_ns);
+            }
+            Node::Const(v) => {
+                nl.constant(v);
+            }
+            Node::Gate { kind, fanin } => {
+                let k = if i == pick { CellKind::Xnor2 } else { kind };
+                nl.gate(k, fanin);
+            }
+            Node::Reg { d, en, clr, init } => {
+                nl.reg_raw(d.0, en.0, clr.0, init);
+            }
+        }
+    }
+    for (name, id) in design.netlist.outputs() {
+        nl.output(name, id);
+    }
+    design.netlist = nl;
+    design.netlist.validate().unwrap();
+
+    let reports: Vec<_> = [1usize, 2, 4, 7]
+        .iter()
+        .map(|&t| {
+            check_pipelined(&design, &EquivOptions { budget: 1 << 8, threads: t }).unwrap()
+        })
+        .collect();
+    assert!(!reports[0].passed, "an inverted CPA xor must be caught");
+    let cex = reports[0].counterexample.expect("failing run reports a counterexample");
+    for (k, r) in reports.iter().enumerate().skip(1) {
+        assert_eq!(
+            (r.passed, r.vectors, r.counterexample),
+            (false, reports[0].vectors, Some(cex)),
+            "threads run {k} must report the identical first failure"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: a 16×16 two-stage pipelined fused MAC builds, verifies
+// through the engine's clocked sweep, round-trips the disk cache, passes
+// bounded sequential equivalence on the restored design, and emits
+// clocked Verilog. Small pipelines cross the auto-exhaustive threshold.
+// ---------------------------------------------------------------------
+#[test]
+fn acceptance_16x16_two_stage_fused_mac() {
+    let dir = scratch("accept");
+    let req = DesignRequest::from_spec(
+        &MultiplierSpec::new(16).fused_mac(true).pipeline_stages(2),
+    );
+    let fp = {
+        let eng = SynthEngine::new(EngineConfig {
+            cache_dir: Some(dir.clone()),
+            verify_vectors: 256,
+            ..EngineConfig::default()
+        });
+        let (art, src) = eng.compile_traced(&req).unwrap();
+        assert_eq!(src, CompileSource::Compiled);
+        assert_eq!(art.verified, Some(true), "engine verifies through the clocked sweep");
+        let p = art.pipeline().expect("pipelined artifact");
+        assert_eq!((p.stages, p.latency()), (2, 2));
+        art.fingerprint
+    }; // engine dropped — only the disk entry survives
+
+    let eng = SynthEngine::new(EngineConfig {
+        cache_dir: Some(dir.clone()),
+        ..EngineConfig::default()
+    });
+    let (art, src) = eng.compile_traced(&req).unwrap();
+    assert_eq!(src, CompileSource::Disk, "fresh engine must hit the disk tier");
+    assert_eq!(art.fingerprint, fp);
+    let design = art.design().expect("multiplier artifact carries its design");
+    let info = design.pipeline.as_ref().expect("restored design keeps its pipeline");
+    assert_eq!(info.stages, 2);
+    assert!(design.netlist.is_sequential());
+
+    // Bounded sequential equivalence on the restored (disk-tier) design.
+    let rep = check_pipelined_with(design, 1 << 10).unwrap();
+    assert!(rep.passed, "cex={:?}", rep.counterexample);
+    assert!(!rep.exhaustive, "16+16+32 operand bits is beyond the 2^20 exhaustive bound");
+
+    // The auto-routed checker covers small pipelines exhaustively.
+    let small = MultiplierSpec::new(4).fused_mac(true).pipeline_stages(2).build().unwrap();
+    let rep = check_multiplier(&small).unwrap();
+    assert!(rep.passed && rep.exhaustive);
+    assert_eq!(rep.vectors, 1 << 16);
+
+    // Clocked Verilog with the sequential ports and one always_ff block.
+    let v = ufo_mac::synth::verilog::emit_design(design);
+    assert!(v.contains("always_ff @(posedge clk or negedge rst_n)"), "{v:.400}");
+    assert!(v.contains("input  wire clk"), "{v:.400}");
+    assert!(v.contains("input  wire rst_n"), "{v:.400}");
+    assert_eq!(v.matches("always_ff").count(), 1, "one shared (en, clr) register group");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -64,6 +64,34 @@ fn serve_loop_compile_hit_stats() {
 }
 
 // ---------------------------------------------------------------------
+// Pipelined requests over the wire: the compile summary carries the
+// pipeline object (stages / latency / registers); combinational
+// responses carry an explicit null.
+// ---------------------------------------------------------------------
+#[test]
+fn pipelined_compile_reports_pipeline_metadata() {
+    use ufo_mac::multiplier::MultiplierSpec;
+    let srv = server();
+    let req = DesignRequest::from_spec(
+        &MultiplierSpec::new(6).fused_mac(true).pipeline_stages(2),
+    );
+    let resp = Json::parse(&srv.handle_line(&compile_line(1, &req))).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    let pipe = resp.get("result").unwrap().get("pipeline").unwrap();
+    assert_eq!(pipe.get("stages").unwrap().as_f64(), Some(2.0), "{resp:?}");
+    assert_eq!(pipe.get("latency").unwrap().as_f64(), Some(2.0), "{resp:?}");
+    // The final rank alone registers every product bit (12 for 6×6 MAC).
+    assert!(pipe.get("registers").unwrap().as_f64().unwrap() >= 12.0, "{resp:?}");
+
+    let comb = Json::parse(&srv.handle_line(&compile_line(2, &DesignRequest::multiplier(6))))
+        .unwrap();
+    assert!(
+        matches!(comb.get("result").unwrap().get("pipeline"), Some(Json::Null)),
+        "combinational artifacts report pipeline: null, got {comb:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
 // Coalescing: N simultaneous identical requests, exactly one synthesis.
 // ---------------------------------------------------------------------
 #[test]

@@ -1,0 +1,91 @@
+//! Golden-file snapshot tests for the Verilog backend.
+//!
+//! Each test renders a design to SystemVerilog and compares the text
+//! byte-for-byte against a committed snapshot under `tests/golden/`. A
+//! missing snapshot is **blessed**: the rendered text is written to the
+//! golden path and the test passes, so the first run on a machine with a
+//! toolchain creates the files to commit (see `tests/golden/README.md`).
+//! Set `UFO_UPDATE_GOLDEN=1` to re-bless after an intentional backend
+//! change; the diff then shows up in review as a change to the `.sv`
+//! files themselves.
+//!
+//! Structural invariants (ports, `always_ff` count, combinational purity)
+//! are asserted unconditionally — they hold even on a blessing run, so a
+//! backend regression cannot silently bless itself in.
+
+use std::path::PathBuf;
+use ufo_mac::multiplier::MultiplierSpec;
+use ufo_mac::synth::verilog;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden"))
+}
+
+/// Compare `rendered` against the snapshot `name`, blessing it when the
+/// file is absent or `UFO_UPDATE_GOLDEN=1` is set.
+fn assert_matches_golden(name: &str, rendered: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var_os("UFO_UPDATE_GOLDEN").is_some_and(|v| v == "1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, rendered).unwrap();
+        eprintln!("blessed golden snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if rendered != want {
+        // Locate the first diverging line for a readable failure.
+        let mut line = 1usize;
+        for (g, w) in rendered.lines().zip(want.lines()) {
+            if g != w {
+                panic!(
+                    "golden mismatch {} at line {line}:\n  got:  {g}\n  want: {w}\n\
+                     re-bless with UFO_UPDATE_GOLDEN=1 if the change is intentional",
+                    path.display()
+                );
+            }
+            line += 1;
+        }
+        panic!(
+            "golden mismatch {}: lengths differ ({} vs {} bytes); \
+             re-bless with UFO_UPDATE_GOLDEN=1 if the change is intentional",
+            path.display(),
+            rendered.len(),
+            want.len()
+        );
+    }
+}
+
+#[test]
+fn golden_pipelined_mac_16x16() {
+    let design = MultiplierSpec::new(16).fused_mac(true).pipeline_stages(2).build().unwrap();
+    let v = verilog::emit_design(&design);
+
+    // Unconditional structural invariants.
+    assert!(v.contains("// pipeline: 2 stage(s)"), "{v:.200}");
+    assert!(v.contains("input  wire clk"), "{v:.200}");
+    assert!(v.contains("input  wire rst_n"), "{v:.200}");
+    assert_eq!(
+        v.matches("always_ff @(posedge clk or negedge rst_n)").count(),
+        1,
+        "all pipeline registers share one (en, clr) group"
+    );
+    assert!(v.contains("if (!rst_n) begin"), "async reset branch comes first");
+    assert_eq!(v.matches("endmodule").count(), 1);
+
+    assert_matches_golden("mac16x16_p2.sv", &v);
+}
+
+#[test]
+fn golden_combinational_multiplier_8x8() {
+    let design = MultiplierSpec::new(8).build().unwrap();
+    let v = verilog::emit_design(&design);
+
+    // A combinational design must stay free of any sequential artifacts.
+    assert!(!v.contains("clk"), "{v:.200}");
+    assert!(!v.contains("always_ff"), "{v:.200}");
+    assert!(!v.contains(" reg "), "{v:.200}");
+    assert_eq!(v.matches("endmodule").count(), 1);
+
+    assert_matches_golden("mul8x8_comb.sv", &v);
+}
