@@ -208,6 +208,20 @@ fn main() {
         .len()
     });
 
+    // Full abstract-interpretation sweep on the same 32×32 design: all
+    // three domains (ternary fixpoint, windowed probability propagation,
+    // output-group intervals) plus report assembly — the per-compile cost
+    // the engine's analysis pass adds on top of lint.
+    bench.bench("analyze_full_32x32", || {
+        ufo_mac::analysis::analyze_design(
+            &d32,
+            &ufo_mac::analysis::AnalysisOptions::default(),
+        )
+        .report
+        .diagnostics
+        .len()
+    });
+
     // Sampled equivalence at 32×32: one worker vs all cores over the same
     // deterministic batch plan (identical counterexamples by design).
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);

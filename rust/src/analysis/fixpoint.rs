@@ -1,0 +1,227 @@
+//! Generic forward dataflow / fixpoint engine over the flat SoA netlist.
+//!
+//! One engine, three instantiations ([`crate::analysis::ternary`],
+//! [`crate::analysis::prob`], and — derived from ternary —
+//! [`crate::analysis::interval`]). The engine exploits two structural
+//! facts the IR already maintains:
+//!
+//! - **Level schedule.** [`crate::ir::Topology::depths`] assigns every
+//!   gate `1 + max(fanin depths)` and every input/constant/register depth
+//!   0, so a node at level `d` reads only nodes at levels `< d`. A sweep
+//!   therefore evaluates one level at a time, and *within* a level every
+//!   transfer is independent — which is what lets big levels fan out over
+//!   [`crate::coordinator::pool::scoped_workers`] with each worker
+//!   producing values for a disjoint index range. The value of a node is
+//!   a pure function of strictly-lower-level values, so the sweep result
+//!   is byte-identical for any worker count (the same invariant the
+//!   parallel equivalence sweep upholds).
+//! - **Register outer fixpoint.** Registers are depth-0 cut points: a
+//!   sweep reads each `OP_REG` node's *current* abstract state exactly as
+//!   [`crate::sim::ClockedSim`] reads its latched word. After a sweep the
+//!   engine applies the abstract latch transfer
+//!   `q' = clr ? init : (en ? d : q)` per register, folds it into the
+//!   accumulated state with [`Domain::widen`], and re-sweeps until no
+//!   register moves (or `max_sweeps` is hit). Starting from `reg_inits`
+//!   and widening monotonically makes the final state cover the initial
+//!   state *and* every state reachable from it — the standard collecting
+//!   semantics argument that makes the results sound for all cycles.
+//!
+//! Invalidation mirrors the topology cache: analysis results are derived
+//! from a netlist snapshot and are recomputed from scratch after any
+//! structural edit (the engine holds no incremental state).
+
+use crate::coordinator::pool;
+use crate::ir::Netlist;
+use std::sync::Mutex;
+
+/// An abstract lattice domain the fixpoint engine can run. Implementors
+/// provide the per-opcode transfer functions; the engine owns scheduling,
+/// parallelism and the register fixpoint.
+pub trait Domain: Sync {
+    /// Abstract value carried by every node.
+    type Value: Copy + PartialEq + Send + Sync;
+
+    /// Value of a primary input (`ordinal` is the input creation order).
+    fn input(&self, ordinal: usize) -> Self::Value;
+
+    /// Value of a constant node.
+    fn constant(&self, one: bool) -> Self::Value;
+
+    /// Starting register state, from the register's init bit (the state
+    /// every lane holds after [`crate::sim::ClockedSim::reset`]).
+    fn reg_start(&self, init: bool) -> Self::Value;
+
+    /// Transfer of gate node `i` (opcode ≤ 10): read fanins from `vals`;
+    /// the level schedule guarantees they are final for the current sweep.
+    fn transfer(&self, nl: &Netlist, vals: &[Self::Value], i: usize) -> Self::Value;
+
+    /// Abstract synchronous latch `q' = clr ? init : (en ? d : q)` — the
+    /// per-lane update [`crate::sim::ClockedSim::step`] applies concretely.
+    fn latch(
+        &self,
+        d: Self::Value,
+        en: Self::Value,
+        clr: Self::Value,
+        q: Self::Value,
+        init: bool,
+    ) -> Self::Value;
+
+    /// Fold the latch result into the accumulated register state. Lattice
+    /// domains join (so the state covers every reachable cycle); numeric
+    /// estimate domains may simply replace.
+    fn widen(&self, old: Self::Value, next: Self::Value) -> Self::Value;
+
+    /// Whether the accumulated register state stopped moving.
+    fn converged(&self, old: Self::Value, new: Self::Value) -> bool;
+}
+
+/// Result of [`run`]: per-node abstract values plus the number of full
+/// level-ordered sweeps the register fixpoint needed (1 for combinational
+/// netlists).
+#[derive(Debug, Clone)]
+pub struct FixpointRun<V> {
+    /// Abstract value per node (index with [`crate::ir::NodeId::index`]).
+    pub values: Vec<V>,
+    /// Full sweeps performed before the register state converged (or the
+    /// sweep cap was reached).
+    pub sweeps: usize,
+}
+
+/// Minimum gates in one level before the sweep fans out over the worker
+/// team — below this the spawn cost dominates the transfer work. Serial
+/// and parallel evaluation compute identical values, so the threshold
+/// never changes results.
+const PAR_LEVEL_MIN: usize = 256;
+
+/// Gate node ids grouped by topological level (ascending id within each
+/// level), from the netlist's cached topology. Level 0 (inputs, constants,
+/// registers) is dropped: those nodes are initialized once, not swept.
+fn gate_levels(nl: &Netlist) -> Vec<Vec<u32>> {
+    let topo = nl.topology();
+    let ops = nl.ops();
+    topo.levels()
+        .into_iter()
+        .skip(1)
+        .map(|level| level.into_iter().filter(|&i| ops[i as usize] <= 10).collect())
+        .collect()
+}
+
+/// One level-ordered sweep: evaluate every gate level in depth order,
+/// fanning large levels out over `workers` scoped threads.
+fn sweep<D: Domain>(
+    nl: &Netlist,
+    dom: &D,
+    levels: &[Vec<u32>],
+    vals: &mut [D::Value],
+    workers: usize,
+) {
+    for level in levels {
+        if level.is_empty() {
+            continue;
+        }
+        if workers <= 1 || level.len() < PAR_LEVEL_MIN {
+            for &i in level {
+                let v = dom.transfer(nl, vals, i as usize);
+                vals[i as usize] = v;
+            }
+            continue;
+        }
+        // Parallel level: worker `w` computes values for the contiguous
+        // chunk `[w·chunk, (w+1)·chunk)` of the level into its own slot;
+        // the write-back below is serial, so no two threads ever alias a
+        // value cell. Per-node values do not depend on the chunking, so
+        // any worker count produces byte-identical sweeps.
+        let chunk = level.len().div_ceil(workers);
+        let slots: Vec<Mutex<Vec<D::Value>>> =
+            (0..workers).map(|_| Mutex::new(Vec::new())).collect();
+        {
+            let read: &[D::Value] = vals;
+            pool::scoped_workers(workers, |w| {
+                let lo = (w * chunk).min(level.len());
+                let hi = ((w + 1) * chunk).min(level.len());
+                let mut out = Vec::with_capacity(hi - lo);
+                for &i in &level[lo..hi] {
+                    out.push(dom.transfer(nl, read, i as usize));
+                }
+                *slots[w].lock().unwrap() = out;
+            });
+        }
+        for (w, slot) in slots.iter().enumerate() {
+            let out = std::mem::take(&mut *slot.lock().unwrap());
+            let lo = (w * chunk).min(level.len());
+            for (k, v) in out.into_iter().enumerate() {
+                vals[level[lo + k] as usize] = v;
+            }
+        }
+    }
+}
+
+/// Run `dom` to fixpoint over `nl`.
+///
+/// Combinational netlists take exactly one sweep. Sequential netlists
+/// iterate: sweep, apply the abstract latch per register (reading the
+/// settled sweep, so feedback data pins see this sweep's value — the same
+/// two-phase discipline as [`crate::sim::ClockedSim::step`]), widen, and
+/// re-sweep until every register converges or `max_sweeps` is reached.
+/// For a finite-height lattice with a joining [`Domain::widen`] the cap
+/// is never the binding constraint; numeric domains use it as an
+/// iteration budget.
+pub fn run<D: Domain>(
+    nl: &Netlist,
+    dom: &D,
+    workers: usize,
+    max_sweeps: usize,
+) -> FixpointRun<D::Value> {
+    use crate::ir::netlist::{OP_CONST0, OP_CONST1, OP_INPUT, OP_REG};
+    let ops = nl.ops();
+    let fanin = nl.fanin_records();
+    let mut vals: Vec<D::Value> = Vec::with_capacity(ops.len());
+    for i in 0..ops.len() {
+        vals.push(match ops[i] {
+            OP_CONST0 => dom.constant(false),
+            OP_CONST1 => dom.constant(true),
+            OP_INPUT => dom.input(fanin[i][0] as usize),
+            OP_REG => dom.reg_start(nl.reg_init(crate::ir::NodeId(i as u32))),
+            // Gates are overwritten by the first sweep before any
+            // same-or-higher-level node reads them.
+            _ => dom.constant(false),
+        });
+    }
+    let levels = gate_levels(nl);
+    let regs = nl.registers();
+    let mut sweeps = 0usize;
+    loop {
+        sweep(nl, dom, &levels, &mut vals, workers.max(1));
+        sweeps += 1;
+        if regs.is_empty() || sweeps >= max_sweeps.max(1) {
+            break;
+        }
+        // Latch phase: read every d/en/clr from the settled sweep first,
+        // then fold — mirroring the simulator's read-then-latch split.
+        let nexts: Vec<D::Value> = regs
+            .iter()
+            .map(|&(r, init)| {
+                let [d, en, clr] = fanin[r as usize];
+                dom.latch(
+                    vals[d as usize],
+                    vals[en as usize],
+                    vals[clr as usize],
+                    vals[r as usize],
+                    init,
+                )
+            })
+            .collect();
+        let mut changed = false;
+        for (k, &(r, _)) in regs.iter().enumerate() {
+            let widened = dom.widen(vals[r as usize], nexts[k]);
+            if !dom.converged(vals[r as usize], widened) {
+                vals[r as usize] = widened;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    FixpointRun { values: vals, sweeps }
+}

@@ -1,0 +1,154 @@
+//! Word-level interval analysis over output weight groups.
+//!
+//! Primary outputs registered as `name0, name1, …` (the builders'
+//! LSB-first convention — product bits are `p0..p{2n-1}`) are grouped by
+//! their digit-stripped prefix, and each group is read as a little-endian
+//! word: bit `k` of the group is the k-th output registered under that
+//! prefix. The proven word interval follows directly from the ternary
+//! domain:
+//!
+//! - `lo` — every bit proven 1 contributes `2^k`;
+//! - `hi` — `lo` plus `2^k` for every bit *not* proven 0.
+//!
+//! Bitwise intervals are sound by construction (each sampled word sets a
+//! subset of the non-proven-0 bits and a superset of the proven-1 bits),
+//! which is exactly the containment property `rust/tests/analysis.rs`
+//! asserts against 64-lane simulation. On top of the raw intervals the
+//! analysis derives:
+//!
+//! - **unreachable carries** — a run of proven-0 bits at the MSB end of a
+//!   group means no operand combination ever carries into those columns
+//!   (UFO404);
+//! - **weight-conservation cross-checks** — for unsigned designs the
+//!   product group's interval must contain the operand-implied range
+//!   `[0, maxA·maxB + maxC]`; a violation means some compressor-tree
+//!   stage lost or invented bit weight (UFO405). Groups wider than 128
+//!   bits are skipped (no `u128` headroom), which no generated design
+//!   approaches.
+
+use super::ternary::Tern;
+use crate::ir::Netlist;
+
+/// One output weight group: consecutive bits of a little-endian word.
+#[derive(Debug, Clone)]
+pub struct OutputGroup {
+    /// Digit-stripped output-name prefix (`p` for `p0..p15`).
+    pub name: String,
+    /// Output registration ordinal of each bit, LSB first.
+    pub ordinals: Vec<usize>,
+    /// Driving node of each bit, LSB first.
+    pub bits: Vec<u32>,
+}
+
+/// Group primary outputs by digit-stripped name prefix, in first-seen
+/// registration order; bits stay in registration order within a group.
+pub fn output_groups(nl: &Netlist) -> Vec<OutputGroup> {
+    let mut groups: Vec<OutputGroup> = Vec::new();
+    for (ordinal, (name, id)) in nl.outputs().enumerate() {
+        let stem = name.trim_end_matches(|c: char| c.is_ascii_digit());
+        let key = if stem.is_empty() { name } else { stem };
+        match groups.iter_mut().find(|g| g.name == key) {
+            Some(g) => {
+                g.ordinals.push(ordinal);
+                g.bits.push(id.0);
+            }
+            None => groups.push(OutputGroup {
+                name: key.to_string(),
+                ordinals: vec![ordinal],
+                bits: vec![id.0],
+            }),
+        }
+    }
+    groups
+}
+
+/// Proven word interval of a group under a ternary valuation, or `None`
+/// for groups too wide for `u128`.
+pub fn group_interval(group: &OutputGroup, tern: &[Tern]) -> Option<(u128, u128)> {
+    if group.bits.len() > 128 {
+        return None;
+    }
+    let (mut lo, mut hi) = (0u128, 0u128);
+    for (k, &b) in group.bits.iter().enumerate() {
+        match tern[b as usize] {
+            Tern::One => {
+                lo |= 1u128 << k;
+                hi |= 1u128 << k;
+            }
+            Tern::Unknown => hi |= 1u128 << k,
+            Tern::Zero => {}
+        }
+    }
+    Some((lo, hi))
+}
+
+/// Length of the proven-0 run at the MSB end of a group (the unreachable
+/// carry columns), and the registration ordinal of the run's lowest bit.
+pub fn unreachable_carry_run(group: &OutputGroup, tern: &[Tern]) -> Option<(usize, usize)> {
+    let mut run = 0usize;
+    for &b in group.bits.iter().rev() {
+        if tern[b as usize] == Tern::Zero {
+            run += 1;
+        } else {
+            break;
+        }
+    }
+    if run == 0 || run == group.bits.len() {
+        // A fully proven-constant group is a proven-constant *output*
+        // story (UFO401), not a carry-reachability one.
+        return None;
+    }
+    Some((run, group.ordinals[group.bits.len() - run]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{fixpoint, ternary::TernaryDomain};
+    use crate::ir::Netlist;
+
+    /// 2-bit adder with both MSB operand bits tied to constant 0: the top
+    /// carry is structurally present but provably never asserted.
+    fn capped_adder() -> (Netlist, Vec<crate::ir::NodeId>) {
+        let mut nl = Netlist::new("capped");
+        let a0 = nl.input("a0");
+        let b0 = nl.input("b0");
+        let a1 = nl.constant(false);
+        let b1 = nl.constant(false);
+        let s0 = nl.xor2(a0, b0);
+        let c0 = nl.and2(a0, b0);
+        let x1 = nl.xor2(a1, b1);
+        let s1 = nl.xor2(x1, c0);
+        let g1 = nl.and2(a1, b1);
+        let p1 = nl.and2(x1, c0);
+        let c1 = nl.or2(g1, p1);
+        nl.output("s0", s0);
+        nl.output("s1", s1);
+        nl.output("s2", c1);
+        (nl, vec![s0, s1, c1])
+    }
+
+    #[test]
+    fn groups_strip_trailing_digits_in_registration_order() {
+        let (nl, _) = capped_adder();
+        let groups = output_groups(&nl);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].name, "s");
+        assert_eq!(groups[0].ordinals, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn interval_and_carry_run_from_proven_bits() {
+        let (nl, _) = capped_adder();
+        let run = fixpoint::run(&nl, &TernaryDomain, 1, 4);
+        let groups = output_groups(&nl);
+        // a1 = b1 = 0 ⇒ s2 proven 0 while s0/s1 stay unknown, so the
+        // bitwise interval is [0, 3] and the top carry column is dead.
+        let (lo, hi) = group_interval(&groups[0], &run.values).unwrap();
+        assert_eq!(lo, 0);
+        assert_eq!(hi, 3);
+        let (carry_run, ordinal) = unreachable_carry_run(&groups[0], &run.values).unwrap();
+        assert_eq!(carry_run, 1);
+        assert_eq!(ordinal, 2);
+    }
+}

@@ -1,0 +1,305 @@
+//! Bit-level abstract interpretation over the SoA netlist.
+//!
+//! Where [`crate::lint`] checks *structure* (and the build's own trace
+//! evidence), this subsystem proves facts about *values*: a generic
+//! forward dataflow engine ([`fixpoint`]) runs level-ordered sweeps over
+//! the cached CSR topology — parallelized per topological level, with a
+//! register-aware outer fixpoint — instantiated with three domains:
+//!
+//! 1. **Ternary constant propagation** ([`ternary`]) — proves nodes
+//!    constant 0/1 through [`crate::ir::CellKind::eval`] itself, turning
+//!    the heuristic const-foldable/dead-gate Info lints into
+//!    proof-backed **UFO4xx** diagnostics (proven-constant output
+//!    `UFO401`, dead register `UFO402`, stuck enable `UFO403`).
+//! 2. **Signal probability / switching activity** ([`prob`]) —
+//!    Parker–McCluskey-style propagation with a correlation-depth cap;
+//!    replaces the constant-activity fallback in the dynamic-power
+//!    report ([`crate::sta::Sta::dynamic_power_mw`]) for combinational
+//!    *and* pipelined netlists.
+//! 3. **Word-level intervals** ([`interval`]) — proven value ranges per
+//!    output weight group, unreachable-carry detection (`UFO404`) and
+//!    the operand weight-conservation cross-check (`UFO405`).
+//!
+//! The cheap-but-sound scoring signal matters beyond diagnostics:
+//! ranking thousands of candidate compressor trees (the DOMAC /
+//! AC-Refiner style searches the ROADMAP targets) needs power and range
+//! estimates that don't cost a Monte-Carlo simulation per candidate.
+//!
+//! Integration mirrors lint end-to-end: [`crate::api::SynthEngine`] runs
+//! [`analyze_design`] on fresh designs and persists the
+//! [`AnalysisReport`] on the artifact, `ufo-mac analyze` sweeps the
+//! tier-1 families from the CLI, and the server answers an `analyze`
+//! command (PROTOCOL.md). `rust/tests/analysis.rs` is the soundness
+//! harness: concrete 64-lane simulation values (and clocked traces for
+//! pipelined variants) must lie inside the abstract results on every
+//! tier-1 design family, for any worker count.
+
+pub mod fixpoint;
+pub mod interval;
+pub mod prob;
+pub mod report;
+pub mod ternary;
+
+pub use fixpoint::{Domain, FixpointRun};
+pub use interval::{group_interval, output_groups, unreachable_carry_run, OutputGroup};
+pub use prob::{switching_activity, ProbDomain};
+pub use report::{AnalysisReport, GroupSummary};
+pub use ternary::{Tern, TernaryDomain};
+
+use crate::ir::netlist::OP_REG;
+use crate::ir::Netlist;
+use crate::lint::{Diagnostic, Locus, UFO401, UFO402, UFO403, UFO404, UFO405};
+use crate::multiplier::Design;
+
+/// Knobs of an analysis run. The defaults are what the engine and CLI
+/// use; every setting is output-deterministic (worker count included —
+/// the level schedule writes disjoint indices).
+#[derive(Debug, Clone, Copy)]
+pub struct AnalysisOptions {
+    /// Worker threads for the per-level parallel sweeps.
+    pub workers: usize,
+    /// Correlation-depth cap of the probability domain (`1` =
+    /// independence over direct fanins).
+    pub correlation_depth: usize,
+    /// Frontier cap of the probability enumeration window.
+    pub correlation_sources: usize,
+    /// Iteration budget for the probability register fixpoint (the
+    /// ternary fixpoint needs no budget: it converges in ≤ registers + 1
+    /// sweeps).
+    pub max_prob_sweeps: usize,
+}
+
+impl Default for AnalysisOptions {
+    fn default() -> Self {
+        AnalysisOptions {
+            workers: 1,
+            correlation_depth: 2,
+            correlation_sources: 8,
+            max_prob_sweeps: 64,
+        }
+    }
+}
+
+impl AnalysisOptions {
+    /// The allocation-free configuration the STA power fallback uses:
+    /// depth-1 independence propagation, serial, with a small iteration
+    /// budget — strictly cheaper than even one round of toggle
+    /// simulation.
+    pub fn fast() -> Self {
+        AnalysisOptions { correlation_depth: 1, max_prob_sweeps: 16, ..Default::default() }
+    }
+}
+
+/// Full in-memory result of one analysis run: the per-node abstract
+/// vectors of every domain plus the persistable [`AnalysisReport`]
+/// summary.
+#[derive(Debug, Clone)]
+pub struct AnalysisOutcome {
+    /// Ternary value per node.
+    pub ternary: Vec<Tern>,
+    /// `P(node = 1)` per node.
+    pub prob: Vec<f64>,
+    /// Static per-cycle switching activity per node.
+    pub activity: Vec<f64>,
+    /// Output weight groups the intervals were computed over.
+    pub groups: Vec<OutputGroup>,
+    /// The persistable summary.
+    pub report: AnalysisReport,
+}
+
+/// Static switching-activity estimate per node — the probability domain
+/// alone, for callers (the STA power model) that need activities without
+/// proofs or intervals.
+pub fn static_activity(nl: &Netlist, opts: &AnalysisOptions) -> Vec<f64> {
+    let dom = ProbDomain { depth: opts.correlation_depth, sources: opts.correlation_sources };
+    let run = fixpoint::run(nl, &dom, opts.workers, opts.max_prob_sweeps);
+    switching_activity(&run.values)
+}
+
+/// Analyze a bare netlist: run all three domains and assemble the report
+/// with the UFO4xx diagnostics (in code order: 401 per output, 402/403
+/// per register, 404 per group — each in ascending id order).
+pub fn analyze_netlist(nl: &Netlist, opts: &AnalysisOptions) -> AnalysisOutcome {
+    let tern_run = fixpoint::run(nl, &TernaryDomain, opts.workers, nl.num_regs() + 2);
+    let dom = ProbDomain { depth: opts.correlation_depth, sources: opts.correlation_sources };
+    let prob_run = fixpoint::run(nl, &dom, opts.workers, opts.max_prob_sweeps);
+    let activity = switching_activity(&prob_run.values);
+    let tern = tern_run.values;
+    let ops = nl.ops();
+
+    let (mut proven_zero, mut proven_one) = (0usize, 0usize);
+    let (mut act_sum, mut act_n) = (0.0f64, 0usize);
+    for i in 0..ops.len() {
+        if ops[i] <= 10 || ops[i] == OP_REG {
+            match tern[i] {
+                Tern::Zero => proven_zero += 1,
+                Tern::One => proven_one += 1,
+                Tern::Unknown => {}
+            }
+        }
+        if ops[i] <= 10 {
+            act_sum += activity[i];
+            act_n += 1;
+        }
+    }
+
+    let mut diagnostics = Vec::new();
+    // UFO401 — proven-constant primary output. Only gate-driven outputs:
+    // an output wired straight to a constant node is an intentional tie,
+    // and register-driven constants are the UFO402 story.
+    for (ordinal, (name, id)) in nl.outputs().enumerate() {
+        if ops[id.index()] <= 10 {
+            if let Some(v) = tern[id.index()].known() {
+                diagnostics.push(Diagnostic::new(
+                    UFO401,
+                    Locus::Output(ordinal),
+                    format!("output '{name}' proven constant {}", u8::from(v)),
+                ));
+            }
+        }
+    }
+    // UFO402 — dead register: the state can never leave one proven value.
+    for &(r, init) in nl.registers() {
+        if let Some(v) = tern[r as usize].known() {
+            diagnostics.push(Diagnostic::new(
+                UFO402,
+                Locus::Node(r),
+                format!(
+                    "dead register: state proven constant {} (init {})",
+                    u8::from(v),
+                    u8::from(init)
+                ),
+            ));
+        }
+    }
+    // UFO403 — enable provably stuck at 0 (the proof-backed upgrade of
+    // the structural UFO301, which only sees a *directly* tied constant).
+    for &(r, _) in nl.registers() {
+        let en = nl.fanin_records()[r as usize][1];
+        if tern[en as usize] == Tern::Zero {
+            diagnostics.push(Diagnostic::new(
+                UFO403,
+                Locus::Node(r),
+                format!("register enable (node {en}) proven stuck at 0: can never capture data"),
+            ));
+        }
+    }
+    // UFO404 — unreachable carry columns at the MSB end of a group.
+    let groups = output_groups(nl);
+    let mut summaries = Vec::with_capacity(groups.len());
+    for g in &groups {
+        if let Some((run, ordinal)) = unreachable_carry_run(g, &tern) {
+            diagnostics.push(Diagnostic::new(
+                UFO404,
+                Locus::Output(ordinal),
+                format!(
+                    "unreachable carry: top {run} bit(s) of output group '{}' proven constant 0",
+                    g.name
+                ),
+            ));
+        }
+        if let Some((lo, hi)) = group_interval(g, &tern) {
+            summaries.push(GroupSummary {
+                name: g.name.clone(),
+                output: g.ordinals[0],
+                bits: g.bits.len(),
+                lo,
+                hi,
+            });
+        }
+    }
+
+    let report = AnalysisReport {
+        nodes: nl.len(),
+        proven_zero,
+        proven_one,
+        tern_sweeps: tern_run.sweeps,
+        prob_sweeps: prob_run.sweeps,
+        correlation_depth: opts.correlation_depth,
+        mean_activity: if act_n == 0 { 0.0 } else { act_sum / act_n as f64 },
+        groups: summaries,
+        diagnostics,
+    };
+    AnalysisOutcome { ternary: tern, prob: prob_run.values, activity, groups, report }
+}
+
+/// Analyze a built [`Design`]: [`analyze_netlist`] plus the word-level
+/// weight-conservation cross-check. For unsigned formats the product
+/// bits, read as a little-endian word, must be able to cover the
+/// operand-implied range `[0, maxA·maxB + maxC]`; a proven interval that
+/// *cannot* contain it means a compressor-tree stage lost or invented
+/// bit weight (`UFO405`). Signed formats are skipped (two's-complement
+/// bit patterns span the full unsigned range by design), as are operand
+/// widths beyond `u128` headroom.
+pub fn analyze_design(design: &Design, opts: &AnalysisOptions) -> AnalysisOutcome {
+    let mut out = analyze_netlist(&design.netlist, opts);
+    let (na, nb, nc) = (design.a.len(), design.b.len(), design.c.len());
+    if !design.format.is_signed() && na + nb <= 120 && nc <= 120 {
+        let group = OutputGroup {
+            name: "product".to_string(),
+            ordinals: vec![0],
+            bits: design.product.iter().map(|id| id.0).collect(),
+        };
+        if let Some((lo, hi)) = group_interval(&group, &out.ternary) {
+            let max = ((1u128 << na) - 1) * ((1u128 << nb) - 1)
+                + if nc == 0 { 0 } else { (1u128 << nc) - 1 };
+            if lo > 0 || hi < max {
+                out.report.diagnostics.push(Diagnostic::new(
+                    UFO405,
+                    Locus::Design,
+                    format!(
+                        "product interval [{lo}, {hi}] cannot contain the operand-implied \
+                         range [0, {max}]"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::Severity;
+
+    #[test]
+    fn clean_combinational_netlist_analyzes_in_one_sweep() {
+        let mut nl = Netlist::new("mini");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let s = nl.xor2(a, b);
+        let c = nl.and2(a, b);
+        nl.output("s0", s);
+        nl.output("s1", c);
+        let out = analyze_netlist(&nl, &AnalysisOptions::default());
+        assert!(out.report.is_clean());
+        assert_eq!(out.report.tern_sweeps, 1);
+        assert_eq!(out.report.prob_sweeps, 1);
+        assert_eq!(out.report.nodes, nl.len());
+        assert_eq!(out.report.groups.len(), 1);
+        assert_eq!(out.report.groups[0].bits, 2);
+        assert_eq!(out.report.groups[0].lo, 0);
+        assert_eq!(out.report.groups[0].hi, 3);
+        assert!(out.report.mean_activity > 0.0);
+    }
+
+    #[test]
+    fn stuck_enable_chain_raises_the_semantic_family() {
+        // en = and2(const0, x): UFO403 (stuck enable) + UFO402 (dead
+        // register) — and the proven-constant output over it gets UFO401.
+        let mut nl = Netlist::new("stuck");
+        let x = nl.input("x");
+        let d = nl.input("d");
+        let zero = nl.constant(false);
+        let en = nl.and2(zero, x);
+        let q = nl.reg(d, en, zero, false);
+        let y = nl.or2(q, zero);
+        nl.output("y", y);
+        let out = analyze_netlist(&nl, &AnalysisOptions::default());
+        let codes: Vec<&str> = out.report.diagnostics.iter().map(|d| d.code).collect();
+        assert_eq!(codes, vec!["UFO401", "UFO402", "UFO403"]);
+        assert_eq!(out.report.max_severity(), Some(Severity::Error));
+        assert!(out.report.denies(Severity::Error));
+    }
+}

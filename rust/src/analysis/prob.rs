@@ -1,0 +1,310 @@
+//! Static signal-probability and switching-activity propagation.
+//!
+//! Each node carries `P(node = 1)` under the uniform stimulus model the
+//! measured path also uses: every primary input is an independent fair
+//! coin redrawn each cycle ([`crate::sim::toggle_activity`] drives fresh
+//! xorshift words per round/cycle). Propagation is Parker–McCluskey
+//! style: for each gate the engine enumerates the concrete truth table of
+//! a *window* of logic feeding it — every reconvergent path inside the
+//! window is handled exactly, only the window frontier is assumed
+//! independent. [`ProbDomain::depth`] caps how far below the gate the
+//! window reaches (the correlation-depth cap) and
+//! [`ProbDomain::sources`] caps the frontier width; a window that would
+//! exceed the source cap falls back to `depth = 1`, i.e. the classic
+//! independence assumption over the gate's (deduplicated) direct fanins.
+//!
+//! `depth = 1` never allocates, which is what makes the static estimate
+//! cheap enough to replace the old constant-activity fallback on the
+//! `activity_rounds == 0` fast path of [`crate::sta::Sta`].
+//!
+//! Registers iterate through the outer fixpoint: the abstract latch
+//! `P(q') = P(clr)·init + (1−P(clr))·(P(en)·P(d) + (1−P(en))·P(q))` is a
+//! convex combination, so probabilities stay in `[0,1]` whether or not
+//! the iteration budget suffices for full convergence. The per-cycle
+//! toggle estimate is [`switching_activity`]: `2·p·(1−p)`, the transition
+//! probability of a signal resampled independently each cycle — exact for
+//! combinational logic under the stimulus model above, an estimate for
+//! state-correlated register cones.
+
+use super::fixpoint::Domain;
+use crate::ir::{CellKind, Netlist};
+
+/// Signal-probability domain with a correlation window.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbDomain {
+    /// Correlation-depth cap: how many gate levels below a node the exact
+    /// enumeration window extends. `1` = independence over direct fanins.
+    pub depth: usize,
+    /// Maximum window frontier width (enumeration is `2^sources` rows).
+    pub sources: usize,
+}
+
+impl Default for ProbDomain {
+    fn default() -> Self {
+        ProbDomain { depth: 2, sources: 8 }
+    }
+}
+
+/// Absolute register-probability change below which the outer fixpoint is
+/// considered converged.
+pub const PROB_EPSILON: f64 = 1e-12;
+
+/// Per-cycle switching activity of a signal with 1-probability `p` under
+/// independently resampled cycles: `2·p·(1−p)`.
+pub fn switching_activity(prob: &[f64]) -> Vec<f64> {
+    prob.iter().map(|&p| 2.0 * p * (1.0 - p)).collect()
+}
+
+/// Exact enumeration over the ≤3 *deduplicated* direct fanins of gate
+/// `i`, treating them as independent. Allocation-free; also the fallback
+/// when the deep window overflows its source cap. Deduplication makes
+/// same-signal fanins exact (`xor2(x, x)` is 0, not `2p(1−p)`).
+fn direct_prob(kind: CellKind, rec: [u32; 3], vals: &[f64]) -> f64 {
+    let arity = kind.arity();
+    // Dedup fanin ids into ≤3 sources; src_of[k] maps slot → source.
+    let mut srcs = [0u32; 3];
+    let mut n_src = 0usize;
+    let mut src_of = [0usize; 3];
+    for k in 0..arity {
+        match srcs[..n_src].iter().position(|&s| s == rec[k]) {
+            Some(j) => src_of[k] = j,
+            None => {
+                srcs[n_src] = rec[k];
+                src_of[k] = n_src;
+                n_src += 1;
+            }
+        }
+    }
+    let mut p1 = 0.0f64;
+    for mask in 0..(1u32 << n_src) {
+        let mut w = 1.0f64;
+        for (j, &s) in srcs.iter().enumerate().take(n_src) {
+            let p = vals[s as usize];
+            w *= if (mask >> j) & 1 == 1 { p } else { 1.0 - p };
+        }
+        if w == 0.0 {
+            continue;
+        }
+        let mut bits = [0u64; 3];
+        for k in 0..arity {
+            bits[k] = u64::from((mask >> src_of[k]) & 1);
+        }
+        if kind.eval(bits[0], bits[1], bits[2]) & 1 == 1 {
+            p1 += w;
+        }
+    }
+    p1.clamp(0.0, 1.0)
+}
+
+/// A collected enumeration window rooted at one gate: `cone` lists every
+/// member ascending by node id (= topological order), `frontier[j]` is
+/// the cone position of the j-th independent source, and `evals` replays
+/// the interior gates in order.
+struct Window {
+    cone: Vec<u32>,
+    frontier: Vec<usize>,
+    evals: Vec<(usize, CellKind, [usize; 3])>,
+    root: usize,
+}
+
+/// Collect the exact-enumeration window for gate `i`: expand gates
+/// breadth-first up to `depth` levels below the root; everything else
+/// reached (non-gates, or gates at the depth horizon) becomes frontier.
+/// Returns `None` when the frontier would exceed `sources`.
+fn window(nl: &Netlist, i: usize, depth: usize, sources: usize) -> Option<Window> {
+    use std::collections::BTreeSet;
+    let ops = nl.ops();
+    let fan = nl.fanin_records();
+    let mut interior: BTreeSet<u32> = BTreeSet::new();
+    let mut frontier: BTreeSet<u32> = BTreeSet::new();
+    interior.insert(i as u32);
+    let mut ring = vec![i as u32];
+    for d in 0..depth {
+        let mut next = Vec::new();
+        for &g in &ring {
+            let kind = CellKind::ALL[ops[g as usize] as usize];
+            for slot in 0..kind.arity() {
+                let f = fan[g as usize][slot];
+                if interior.contains(&f) || frontier.contains(&f) {
+                    continue;
+                }
+                if ops[f as usize] <= 10 && d + 1 < depth {
+                    interior.insert(f);
+                    next.push(f);
+                } else {
+                    frontier.insert(f);
+                    if frontier.len() > sources {
+                        return None;
+                    }
+                }
+            }
+        }
+        ring = next;
+    }
+    // Cone in ascending id order; ids are topological, so interior gates
+    // replay correctly in this order.
+    let cone: Vec<u32> = interior.iter().chain(frontier.iter()).copied().collect();
+    let mut cone = cone;
+    cone.sort_unstable();
+    let pos = |id: u32| cone.binary_search(&id).expect("cone member");
+    let frontier: Vec<usize> = frontier.iter().map(|&f| pos(f)).collect();
+    let mut evals: Vec<(usize, CellKind, [usize; 3])> = Vec::with_capacity(interior.len());
+    for &g in &interior {
+        let kind = CellKind::ALL[ops[g as usize] as usize];
+        let mut ops3 = [0usize; 3];
+        for (slot, o) in ops3.iter_mut().enumerate().take(kind.arity()) {
+            *o = pos(fan[g as usize][slot]);
+        }
+        evals.push((pos(g), kind, ops3));
+    }
+    evals.sort_unstable_by_key(|&(p, _, _)| p);
+    Some(Window { frontier, evals, root: pos(i as u32), cone })
+}
+
+impl Domain for ProbDomain {
+    type Value = f64;
+
+    fn input(&self, _ordinal: usize) -> f64 {
+        0.5
+    }
+
+    fn constant(&self, one: bool) -> f64 {
+        if one {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn reg_start(&self, init: bool) -> f64 {
+        if init {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn transfer(&self, nl: &Netlist, vals: &[f64], i: usize) -> f64 {
+        let kind = CellKind::ALL[nl.ops()[i] as usize];
+        let rec = nl.fanin_records()[i];
+        if self.depth <= 1 {
+            return direct_prob(kind, rec, vals);
+        }
+        let Some(win) = window(nl, i, self.depth, self.sources) else {
+            return direct_prob(kind, rec, vals);
+        };
+        let s = win.frontier.len();
+        let probs: Vec<f64> = win.frontier.iter().map(|&p| vals[win.cone[p] as usize]).collect();
+        let mut bits = vec![0u8; win.cone.len()];
+        let mut p1 = 0.0f64;
+        for mask in 0..(1u64 << s) {
+            let mut w = 1.0f64;
+            for (j, &fp) in win.frontier.iter().enumerate() {
+                let b = (mask >> j) & 1;
+                w *= if b == 1 { probs[j] } else { 1.0 - probs[j] };
+                bits[fp] = b as u8;
+            }
+            if w == 0.0 {
+                continue;
+            }
+            for &(p, k, o) in &win.evals {
+                bits[p] = (k.eval(
+                    u64::from(bits[o[0]]),
+                    u64::from(bits[o[1]]),
+                    u64::from(bits[o[2]]),
+                ) & 1) as u8;
+            }
+            if bits[win.root] == 1 {
+                p1 += w;
+            }
+        }
+        p1.clamp(0.0, 1.0)
+    }
+
+    fn latch(&self, d: f64, en: f64, clr: f64, q: f64, init: bool) -> f64 {
+        let pi = if init { 1.0 } else { 0.0 };
+        (clr * pi + (1.0 - clr) * (en * d + (1.0 - en) * q)).clamp(0.0, 1.0)
+    }
+
+    fn widen(&self, _old: f64, next: f64) -> f64 {
+        next
+    }
+
+    fn converged(&self, old: f64, new: f64) -> bool {
+        (old - new).abs() <= PROB_EPSILON
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fixpoint;
+    use crate::ir::Netlist;
+
+    #[test]
+    fn direct_probabilities_are_exact_for_independent_fanins() {
+        let mut nl = Netlist::new("p");
+        let x = nl.input("x");
+        let y = nl.input("y");
+        let a = nl.and2(x, y);
+        let o = nl.or2(x, y);
+        let xo = nl.xor2(x, y);
+        nl.output("a", a);
+        nl.output("o", o);
+        nl.output("x", xo);
+        let run = fixpoint::run(&nl, &ProbDomain { depth: 1, sources: 8 }, 1, 8);
+        assert_eq!(run.values[x.index()], 0.5);
+        assert!((run.values[a.index()] - 0.25).abs() < 1e-15);
+        assert!((run.values[o.index()] - 0.75).abs() < 1e-15);
+        assert!((run.values[xo.index()] - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn reconvergence_is_exact_inside_the_window() {
+        // y = and2(x, inv(x)) ≡ 0. Independence (depth 1 at the and2 sees
+        // two *distinct* fanins) predicts 0.25; a depth-2 window catches
+        // the reconvergence and proves probability 0.
+        let mut nl = Netlist::new("reconv");
+        let x = nl.input("x");
+        let nx = nl.inv(x);
+        let y = nl.and2(x, nx);
+        nl.output("y", y);
+        let shallow = fixpoint::run(&nl, &ProbDomain { depth: 1, sources: 8 }, 1, 8);
+        assert!((shallow.values[y.index()] - 0.25).abs() < 1e-15);
+        let deep = fixpoint::run(&nl, &ProbDomain { depth: 2, sources: 8 }, 1, 8);
+        assert_eq!(deep.values[y.index()], 0.0);
+    }
+
+    #[test]
+    fn duplicate_fanins_are_exact_even_at_depth_one() {
+        let mut nl = Netlist::new("dup");
+        let x = nl.input("x");
+        let y = nl.xor2(x, x); // ≡ 0
+        let z = nl.and2(x, x); // ≡ x
+        nl.output("y", y);
+        nl.output("z", z);
+        let run = fixpoint::run(&nl, &ProbDomain { depth: 1, sources: 8 }, 1, 8);
+        assert_eq!(run.values[y.index()], 0.0);
+        assert_eq!(run.values[z.index()], 0.5);
+    }
+
+    #[test]
+    fn register_probability_stays_in_unit_interval() {
+        let mut nl = Netlist::new("tff");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        let q = nl.reg_raw(0, en.0, clr.0, false);
+        let nq = nl.inv(q);
+        nl.set_reg_data(q, nq);
+        nl.output("q", q);
+        let run = fixpoint::run(&nl, &ProbDomain::default(), 1, 64);
+        for (i, &p) in run.values.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&p), "node {i}: {p}");
+        }
+        assert!(run.sweeps > 1, "feedback register iterated");
+        let act = switching_activity(&run.values);
+        for a in &act {
+            assert!((0.0..=0.5 + 1e-12).contains(a));
+        }
+    }
+}

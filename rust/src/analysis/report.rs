@@ -1,0 +1,272 @@
+//! The [`AnalysisReport`] that travels on compile artifacts and over the
+//! wire — the abstract-interpretation counterpart of
+//! [`crate::lint::LintReport`].
+//!
+//! The report is the *summary* of an [`crate::analysis::AnalysisOutcome`]:
+//! proven-constant counts, fixpoint iteration counts, per-group word
+//! intervals and the UFO4xx diagnostics. The full per-node vectors stay
+//! in memory only — persisting them would bloat disk-cache entries by
+//! O(nodes) per design for data any reader can recompute
+//! deterministically. Rendering is a pure function of the analysis result
+//! (worker-count independent — `rust/tests/analysis.rs` pins 1/2/4/7
+//! workers to byte-identical JSON), and interval bounds serialize as
+//! decimal strings because `u128` exceeds JSON number precision.
+
+use crate::lint::{Diagnostic, Severity};
+use crate::util::Json;
+
+/// Summary of one output weight group's proven interval.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupSummary {
+    /// Digit-stripped output-name prefix.
+    pub name: String,
+    /// Output registration ordinal of the group's LSB.
+    pub output: usize,
+    /// Number of bits in the group.
+    pub bits: usize,
+    /// Proven lower bound of the little-endian word.
+    pub lo: u128,
+    /// Proven upper bound of the little-endian word.
+    pub hi: u128,
+}
+
+impl GroupSummary {
+    /// Wire/persistence form:
+    /// `{"bits":…,"hi":"…","lo":"…","name":…,"output":…}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits", Json::num(self.bits as f64)),
+            ("hi", Json::str(self.hi.to_string())),
+            ("lo", Json::str(self.lo.to_string())),
+            ("name", Json::str(&self.name)),
+            ("output", Json::num(self.output as f64)),
+        ])
+    }
+
+    /// Parse the [`GroupSummary::to_json`] form back.
+    pub fn from_json(j: &Json) -> Result<GroupSummary, String> {
+        let num = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("group: missing number field '{k}'"))
+        };
+        let word = |k: &str| -> Result<u128, String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("group: missing string field '{k}'"))?
+                .parse::<u128>()
+                .map_err(|e| format!("group: bad {k}: {e}"))
+        };
+        Ok(GroupSummary {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("group: missing string field 'name'")?
+                .to_string(),
+            output: num("output")?,
+            bits: num("bits")?,
+            lo: word("lo")?,
+            hi: word("hi")?,
+        })
+    }
+}
+
+/// The persisted outcome of one abstract-interpretation run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AnalysisReport {
+    /// Netlist nodes analyzed.
+    pub nodes: usize,
+    /// Gates and registers proven constant 0.
+    pub proven_zero: usize,
+    /// Gates and registers proven constant 1.
+    pub proven_one: usize,
+    /// Full sweeps the ternary register fixpoint needed.
+    pub tern_sweeps: usize,
+    /// Full sweeps the probability register fixpoint needed.
+    pub prob_sweeps: usize,
+    /// Correlation-depth cap the probability domain ran with.
+    pub correlation_depth: usize,
+    /// Mean static switching activity over gate nodes.
+    pub mean_activity: f64,
+    /// Proven word interval per output weight group.
+    pub groups: Vec<GroupSummary>,
+    /// UFO4xx findings, in emission order (401, 402, 403, 404, 405).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    /// Gates and registers proven constant (either polarity).
+    pub fn proven_const(&self) -> usize {
+        self.proven_zero + self.proven_one
+    }
+
+    /// No findings at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Worst severity present, or `None` when clean.
+    pub fn max_severity(&self) -> Option<Severity> {
+        self.diagnostics.iter().map(|d| d.severity).max()
+    }
+
+    /// Number of findings at exactly `sev`.
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    /// Whether any finding is at or above `deny`.
+    pub fn denies(&self, deny: Severity) -> bool {
+        self.max_severity().is_some_and(|m| m >= deny)
+    }
+
+    /// Wire/persistence form (all fields, sorted keys under
+    /// [`Json::render`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("correlation_depth", Json::num(self.correlation_depth as f64)),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+            ("groups", Json::Arr(self.groups.iter().map(GroupSummary::to_json).collect())),
+            ("mean_activity", Json::num(self.mean_activity)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("prob_sweeps", Json::num(self.prob_sweeps as f64)),
+            ("proven_one", Json::num(self.proven_one as f64)),
+            ("proven_zero", Json::num(self.proven_zero as f64)),
+            ("tern_sweeps", Json::num(self.tern_sweeps as f64)),
+        ])
+    }
+
+    /// Parse the [`AnalysisReport::to_json`] form back.
+    pub fn from_json(j: &Json) -> Result<AnalysisReport, String> {
+        let num = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("analysis report: missing number field '{k}'"))
+        };
+        let diagnostics = j
+            .get("diagnostics")
+            .and_then(|v| v.as_arr())
+            .ok_or("analysis report: missing 'diagnostics' array")?
+            .iter()
+            .map(Diagnostic::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let groups = j
+            .get("groups")
+            .and_then(|v| v.as_arr())
+            .ok_or("analysis report: missing 'groups' array")?
+            .iter()
+            .map(GroupSummary::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(AnalysisReport {
+            nodes: num("nodes")?,
+            proven_zero: num("proven_zero")?,
+            proven_one: num("proven_one")?,
+            tern_sweeps: num("tern_sweeps")?,
+            prob_sweeps: num("prob_sweeps")?,
+            correlation_depth: num("correlation_depth")?,
+            mean_activity: j
+                .get("mean_activity")
+                .and_then(|v| v.as_f64())
+                .ok_or("analysis report: missing number field 'mean_activity'")?,
+            groups,
+            diagnostics,
+        })
+    }
+
+    /// Wire summary used by the server's `analyze` command and the CLI's
+    /// `--json` mode:
+    /// `{"clean":…,"counts":{…},"diagnostics":[…],"groups":[…],
+    /// "mean_activity":…,"proven_const":…}`.
+    pub fn summary_json(&self) -> Json {
+        let counts = Json::obj(vec![
+            ("error", Json::num(self.count(Severity::Error) as f64)),
+            ("info", Json::num(self.count(Severity::Info) as f64)),
+            ("warning", Json::num(self.count(Severity::Warning) as f64)),
+        ]);
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            ("counts", counts),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+            ("groups", Json::Arr(self.groups.iter().map(GroupSummary::to_json).collect())),
+            ("mean_activity", Json::num(self.mean_activity)),
+            ("proven_const", Json::num(self.proven_const() as f64)),
+        ])
+    }
+}
+
+impl std::fmt::Display for AnalysisReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} nodes, {} proven constant ({} zero / {} one), mean activity {:.4}, \
+             sweeps tern {} / prob {}",
+            self.nodes,
+            self.proven_const(),
+            self.proven_zero,
+            self.proven_one,
+            self.mean_activity,
+            self.tern_sweeps,
+            self.prob_sweeps
+        )?;
+        for g in &self.groups {
+            write!(f, "\n  group {}[{}] in [{}, {}]", g.name, g.bits, g.lo, g.hi)?;
+        }
+        for d in &self.diagnostics {
+            write!(f, "\n  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{Locus, UFO401};
+
+    #[test]
+    fn report_roundtrips_bytewise() {
+        let rep = AnalysisReport {
+            nodes: 42,
+            proven_zero: 3,
+            proven_one: 1,
+            tern_sweeps: 2,
+            prob_sweeps: 5,
+            correlation_depth: 2,
+            mean_activity: 0.375,
+            groups: vec![GroupSummary {
+                name: "p".to_string(),
+                output: 0,
+                bits: 16,
+                lo: 1,
+                hi: (1u128 << 100) + 7,
+            }],
+            diagnostics: vec![Diagnostic::new(UFO401, Locus::Output(3), "proven 0")],
+        };
+        let back = AnalysisReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back, rep);
+        assert_eq!(back.to_json().render(), rep.to_json().render());
+        assert_eq!(rep.proven_const(), 4);
+        assert!(!rep.is_clean());
+        assert!(rep.denies(Severity::Warning));
+        assert!(!rep.denies(Severity::Error));
+        assert_eq!(rep.count(Severity::Warning), 1);
+    }
+
+    #[test]
+    fn clean_default_report() {
+        let rep = AnalysisReport::default();
+        assert!(rep.is_clean());
+        assert_eq!(rep.max_severity(), None);
+        assert!(!rep.denies(Severity::Info));
+        let back = AnalysisReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back, rep);
+    }
+}

@@ -1,0 +1,217 @@
+//! Ternary (0/1/X) constant propagation — the proof-bearing domain.
+//!
+//! Each node is abstracted to one of three values: proven constant 0,
+//! proven constant 1, or unknown (`X`, the lattice top). The gate
+//! transfer enumerates every concrete assignment of the unknown fanins
+//! through [`crate::ir::CellKind::eval`] — the crate's semantic ground
+//! truth — so a node is reported constant **iff the gate function forces
+//! it** given what is already proven about its fanins. That is what
+//! upgrades the heuristic structural lints (const-foldable / dead-gate
+//! UFO0xx, const-0 enable UFO301) into proofs: the UFO4xx diagnostics in
+//! [`crate::analysis`] cite a node the domain *proved* constant, not one
+//! that merely looks suspicious.
+//!
+//! Soundness invariant (pinned by `rust/tests/analysis.rs`): for every
+//! node proven `Zero`/`One`, every concrete simulation — combinational
+//! 64-lane sweeps and multi-cycle [`crate::sim::ClockedSim`] traces from
+//! any reachable register state — produces that bit on every lane.
+
+use super::fixpoint::Domain;
+use crate::ir::{CellKind, Netlist};
+
+/// One point of the ternary lattice: `Zero < Unknown`, `One < Unknown`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tern {
+    /// Proven constant 0 on every lane, every cycle.
+    Zero,
+    /// Proven constant 1 on every lane, every cycle.
+    One,
+    /// Not proven constant (the lattice top).
+    Unknown,
+}
+
+impl Tern {
+    /// The proven constant, or `None` for [`Tern::Unknown`].
+    pub fn known(self) -> Option<bool> {
+        match self {
+            Tern::Zero => Some(false),
+            Tern::One => Some(true),
+            Tern::Unknown => None,
+        }
+    }
+
+    /// Abstraction of a concrete bit.
+    pub fn from_bool(b: bool) -> Tern {
+        if b {
+            Tern::One
+        } else {
+            Tern::Zero
+        }
+    }
+
+    /// Lattice join (least upper bound).
+    pub fn join(self, other: Tern) -> Tern {
+        if self == other {
+            self
+        } else {
+            Tern::Unknown
+        }
+    }
+}
+
+/// The constant-propagation domain. Stateless: all knobs live in the
+/// engine call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TernaryDomain;
+
+/// Ternary multiplexer `s ? t : e` (join of both arms when the selector
+/// is unknown).
+fn mux(s: Tern, t: Tern, e: Tern) -> Tern {
+    match s {
+        Tern::One => t,
+        Tern::Zero => e,
+        Tern::Unknown => t.join(e),
+    }
+}
+
+impl Domain for TernaryDomain {
+    type Value = Tern;
+
+    fn input(&self, _ordinal: usize) -> Tern {
+        Tern::Unknown
+    }
+
+    fn constant(&self, one: bool) -> Tern {
+        Tern::from_bool(one)
+    }
+
+    fn reg_start(&self, init: bool) -> Tern {
+        Tern::from_bool(init)
+    }
+
+    fn transfer(&self, nl: &Netlist, vals: &[Tern], i: usize) -> Tern {
+        let kind = CellKind::ALL[nl.ops()[i] as usize];
+        let arity = kind.arity();
+        let rec = nl.fanin_records()[i];
+        let mut t = [Tern::Zero; 3];
+        for (k, slot) in t.iter_mut().enumerate().take(arity) {
+            *slot = vals[rec[k] as usize];
+        }
+        // Enumerate every fanin assignment consistent with what is proven
+        // (≤ 2^3 rows) through the concrete truth table. If all rows
+        // agree, the output is forced.
+        let (mut seen0, mut seen1) = (false, false);
+        for mask in 0..(1u32 << arity) {
+            let mut consistent = true;
+            let mut bits = [0u64; 3];
+            for (k, bit) in bits.iter_mut().enumerate().take(arity) {
+                let b = (mask >> k) & 1;
+                match t[k] {
+                    Tern::Zero if b == 1 => consistent = false,
+                    Tern::One if b == 0 => consistent = false,
+                    _ => {}
+                }
+                *bit = u64::from(b);
+            }
+            if !consistent {
+                continue;
+            }
+            if kind.eval(bits[0], bits[1], bits[2]) & 1 == 1 {
+                seen1 = true;
+            } else {
+                seen0 = true;
+            }
+            if seen0 && seen1 {
+                break;
+            }
+        }
+        match (seen0, seen1) {
+            (true, false) => Tern::Zero,
+            (false, true) => Tern::One,
+            _ => Tern::Unknown,
+        }
+    }
+
+    fn latch(&self, d: Tern, en: Tern, clr: Tern, q: Tern, init: bool) -> Tern {
+        mux(clr, Tern::from_bool(init), mux(en, d, q))
+    }
+
+    fn widen(&self, old: Tern, next: Tern) -> Tern {
+        old.join(next)
+    }
+
+    fn converged(&self, old: Tern, new: Tern) -> bool {
+        old == new
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fixpoint;
+    use crate::ir::Netlist;
+
+    #[test]
+    fn gate_transfer_matches_truth_tables() {
+        // and2(X, 0) = 0, or2(X, 1) = 1, xor2(X, 0) = X, inv(1) = 0,
+        // aoi21(X, X, 1) = 0.
+        let mut nl = Netlist::new("t");
+        let x = nl.input("x");
+        let y = nl.input("y");
+        let zero = nl.constant(false);
+        let one = nl.constant(true);
+        let a = nl.and2(x, zero);
+        let o = nl.or2(x, one);
+        let xo = nl.xor2(x, zero);
+        let inv = nl.inv(one);
+        let aoi = nl.gate(CellKind::Aoi21, &[x, y, one]);
+        nl.output("a", a);
+        nl.output("o", o);
+        nl.output("xo", xo);
+        nl.output("i", inv);
+        nl.output("g", aoi);
+        let run = fixpoint::run(&nl, &TernaryDomain, 1, 8);
+        assert_eq!(run.sweeps, 1);
+        assert_eq!(run.values[a.index()], Tern::Zero);
+        assert_eq!(run.values[o.index()], Tern::One);
+        assert_eq!(run.values[xo.index()], Tern::Unknown);
+        assert_eq!(run.values[inv.index()], Tern::Zero);
+        assert_eq!(run.values[aoi.index()], Tern::Zero);
+    }
+
+    #[test]
+    fn stuck_enable_register_is_proven_constant() {
+        // en = and2(const0, x): a const-0 *chain*, not a direct constant —
+        // the register can never load, so q is proven stuck at its init.
+        let mut nl = Netlist::new("stuck");
+        let x = nl.input("x");
+        let d = nl.input("d");
+        let zero = nl.constant(false);
+        let en = nl.and2(zero, x);
+        let q = nl.reg(d, en, zero, true);
+        let out = nl.inv(q);
+        nl.output("y", out);
+        let run = fixpoint::run(&nl, &TernaryDomain, 1, 8);
+        assert_eq!(run.values[en.index()], Tern::Zero);
+        assert_eq!(run.values[q.index()], Tern::One, "stuck at init = 1");
+        assert_eq!(run.values[out.index()], Tern::Zero);
+    }
+
+    #[test]
+    fn live_register_joins_to_unknown() {
+        // Feedback toggle FF with a real enable: the register state joins
+        // init (0) with the toggled value (1) and lands at Unknown — as do
+        // the nodes downstream of it.
+        let mut nl = Netlist::new("tff");
+        let en = nl.input("en");
+        let clr = nl.input("clr");
+        let q = nl.reg_raw(0, en.0, clr.0, false);
+        let nq = nl.inv(q);
+        nl.set_reg_data(q, nq);
+        nl.output("q", q);
+        let run = fixpoint::run(&nl, &TernaryDomain, 1, 8);
+        assert_eq!(run.values[q.index()], Tern::Unknown);
+        assert_eq!(run.values[nq.index()], Tern::Unknown);
+        assert!(run.sweeps >= 2, "register fixpoint iterated");
+    }
+}

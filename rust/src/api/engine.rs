@@ -11,6 +11,7 @@
 
 use super::cache::{CacheStats, CacheTier, DesignCache};
 use super::request::{DesignRequest, Fingerprint, MethodRequest, ModuleKind};
+use crate::analysis::{self, AnalysisOptions, AnalysisReport};
 use crate::baselines::{self, BaselineBudget};
 use crate::coordinator::pool;
 use crate::ir::{CellLib, Netlist, NodeId};
@@ -159,6 +160,11 @@ pub struct DesignArtifact {
     /// structural-only for module bodies. `None` for artifacts rehydrated
     /// from disk entries written before the lint subsystem existed.
     pub lint: Option<LintReport>,
+    /// Abstract-interpretation report ([`crate::analysis`]): proven
+    /// constants, static activity, word-level intervals and the UFO4xx
+    /// diagnostics. `None` for artifacts rehydrated from disk entries
+    /// written before the analysis subsystem existed.
+    pub analysis: Option<AnalysisReport>,
 }
 
 impl DesignArtifact {
@@ -441,6 +447,37 @@ impl SynthEngine {
         Ok((report, art, src))
     }
 
+    /// Compile (or fetch) a request and return its abstract-interpretation
+    /// report alongside the artifact and how it was obtained.
+    ///
+    /// Cached artifacts reuse the report stored at synthesis time;
+    /// artifacts rehydrated from pre-analysis disk entries fall back to a
+    /// fresh netlist-level sweep (the design-level cross-check needs the
+    /// operand structure, which module bodies lack anyway). The `ufo-mac
+    /// analyze` CLI and the server's `analyze` command are thin wrappers
+    /// over this.
+    pub fn analyze(
+        &self,
+        req: &DesignRequest,
+    ) -> Result<(AnalysisReport, Arc<DesignArtifact>, CompileSource)> {
+        let (art, src) = self.compile_traced(req)?;
+        let report = match &art.analysis {
+            Some(r) => r.clone(),
+            None => match art.design() {
+                Some(d) => analysis::analyze_design(d, &self.analysis_options()).report,
+                None => analysis::analyze_netlist(art.netlist(), &self.analysis_options()).report,
+            },
+        };
+        Ok((report, art, src))
+    }
+
+    /// The engine's analysis configuration: default lattice knobs, the
+    /// engine's worker budget for the per-level parallel sweeps (results
+    /// are worker-count independent; only wall time changes).
+    fn analysis_options(&self) -> AnalysisOptions {
+        AnalysisOptions { workers: self.cfg.workers, ..AnalysisOptions::default() }
+    }
+
     // ---------------------------------------------------------------
 
     fn build_artifact(&self, canon: &DesignRequest, fp: Fingerprint) -> Result<DesignArtifact> {
@@ -483,6 +520,10 @@ impl SynthEngine {
                             &LintOptions::default(),
                         ));
                         self.lint_gate(&lint_rep)?;
+                        // Module bodies are bare netlists: the semantic
+                        // sweep runs without the design-level cross-check.
+                        let analysis_rep =
+                            analysis::analyze_netlist(&netlist, &self.analysis_options()).report;
                         Ok(DesignArtifact {
                             request: canon.clone(),
                             fingerprint: fp,
@@ -492,6 +533,7 @@ impl SynthEngine {
                             verified: None,
                             pjrt_verified: None,
                             lint: Some(lint_rep),
+                            analysis: Some(analysis_rep),
                         })
                     }
                     ModuleKind::Systolic => {
@@ -500,9 +542,10 @@ impl SynthEngine {
                         timing.merge(&TimingStats::full_pass(design.netlist.len()));
                         let report = modules::systolic::report_from_pe(&rep, m.n, m.freq_hz);
                         // The PE *is* the inner design's netlist — its full
-                        // lint (run when the inner compile finished) carries
-                        // over unchanged.
+                        // lint and analysis (run when the inner compile
+                        // finished) carry over unchanged.
                         let lint_rep = inner_art.lint.clone();
+                        let analysis_rep = inner_art.analysis.clone();
                         Ok(DesignArtifact {
                             request: canon.clone(),
                             fingerprint: fp,
@@ -512,6 +555,7 @@ impl SynthEngine {
                             verified: inner_art.verified,
                             pjrt_verified: inner_art.pjrt_verified,
                             lint: lint_rep,
+                            analysis: analysis_rep,
                         })
                     }
                 }
@@ -566,6 +610,12 @@ impl SynthEngine {
         // for: a malformed candidate never reaches the equivalence sweep.
         let lint_rep = lint::lint_design(&design, trace, &self.lib, &LintOptions::default());
         self.lint_gate(&lint_rep)?;
+        // Semantic sweep: abstract interpretation over the final netlist
+        // plus the design-level weight-conservation cross-check. Findings
+        // are stored, not gated — `ufo-mac analyze --deny` is the policy
+        // point (legitimate designs prove constants, e.g. Booth/B-W
+        // injection bits, which must not fail compiles).
+        let analysis_rep = analysis::analyze_design(&design, &self.analysis_options()).report;
         let verified = if self.cfg.verify_vectors > 0 {
             // Single-threaded sweep: compiles already fan out across the
             // engine's worker pool (compile_batch, the server), so a
@@ -586,6 +636,7 @@ impl SynthEngine {
             verified,
             pjrt_verified,
             lint: Some(lint_rep),
+            analysis: Some(analysis_rep),
         })
     }
 
@@ -676,6 +727,25 @@ mod tests {
             // The lint entry point reuses the stored report.
             let (again, _, _) = eng.lint(&req).unwrap();
             assert!(again.is_clean());
+        }
+    }
+
+    #[test]
+    fn artifacts_carry_an_analysis_report() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        for req in [
+            DesignRequest::multiplier(4),
+            DesignRequest::fir(Method::UfoMac, 4, Strategy::TradeOff, 1e9),
+            DesignRequest::systolic(Method::UfoMac, 4, Strategy::TradeOff, 1e9),
+        ] {
+            let art = eng.compile(&req).unwrap();
+            let rep = art.analysis.as_ref().expect("fresh compiles store an analysis report");
+            assert_eq!(rep.nodes, art.netlist().len(), "{req:?}");
+            assert!(!rep.denies(Severity::Error), "{req:?}: {rep}");
+            assert!(rep.mean_activity > 0.0, "{req:?}");
+            // The analyze entry point reuses the stored report.
+            let (again, _, _) = eng.analyze(&req).unwrap();
+            assert_eq!(&again, rep);
         }
     }
 

@@ -31,6 +31,7 @@
 
 use super::engine::{ArtifactBody, DesignArtifact};
 use super::request::{DesignRequest, Fingerprint};
+use crate::analysis::AnalysisReport;
 use crate::ir::{CellKind, Netlist, Node, NodeId};
 use crate::lint::LintReport;
 use crate::modules::ModuleReport;
@@ -184,6 +185,13 @@ pub fn artifact_to_json(a: &DesignArtifact) -> Json {
                 Some(r) => r.to_json(),
             },
         ),
+        (
+            "analysis",
+            match &a.analysis {
+                None => Json::Null,
+                Some(r) => r.to_json(),
+            },
+        ),
     ])
 }
 
@@ -227,11 +235,17 @@ pub fn artifact_from_json(j: &Json) -> Result<DesignArtifact> {
         body,
         verified: opt_bool_from(j, "verified")?,
         pjrt_verified: opt_bool_from(j, "pjrt_verified")?,
-        // Tolerant: entries written before the lint subsystem carry no
-        // key; either spelling of absence reads back as None.
+        // Tolerant: entries written before the lint/analysis subsystems
+        // carry no key; either spelling of absence reads back as None.
         lint: match j.get("lint") {
             None | Some(Json::Null) => None,
             Some(l) => Some(LintReport::from_json(l)?),
+        },
+        analysis: match j.get("analysis") {
+            None | Some(Json::Null) => None,
+            Some(a) => {
+                Some(AnalysisReport::from_json(a).map_err(|e| anyhow!("analysis: {e}"))?)
+            }
         },
     })
 }
@@ -671,6 +685,26 @@ mod tests {
         obj.remove("lint");
         let old = artifact_from_json(&Json::Obj(obj)).unwrap();
         assert!(old.lint.is_none());
+    }
+
+    #[test]
+    fn analysis_roundtrips_and_pre_analysis_entries_read_as_none() {
+        let eng = SynthEngine::new(EngineConfig::default());
+        let art = eng.compile(&DesignRequest::multiplier(4)).unwrap();
+        let j = artifact_to_json(&art);
+        let back = artifact_from_json(&j).unwrap();
+        let rep = back.analysis.as_ref().expect("analysis persisted");
+        assert_eq!(Some(rep), art.analysis.as_ref());
+        assert_eq!(rep.nodes, art.netlist().len());
+        // An entry written before the analysis subsystem (no "analysis"
+        // key) must still deserialize — without a stored report.
+        let mut obj = match j {
+            Json::Obj(m) => m,
+            other => panic!("artifact payload must be an object, got {other:?}"),
+        };
+        obj.remove("analysis");
+        let old = artifact_from_json(&Json::Obj(obj)).unwrap();
+        assert!(old.analysis.is_none());
     }
 
     #[test]

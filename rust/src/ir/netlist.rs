@@ -190,6 +190,21 @@ impl Topology {
     pub fn depth(&self) -> u32 {
         self.depth
     }
+
+    /// All node ids grouped by logic depth, ascending id within each
+    /// level. Level 0 holds the inputs, constants and registers; every
+    /// gate sits strictly above all of its fanins, so evaluating level by
+    /// level is a valid forward schedule — and within one level every
+    /// node is independent, which is what the parallel dataflow sweeps in
+    /// [`crate::analysis`] exploit.
+    pub fn levels(&self) -> Vec<Vec<u32>> {
+        let maxd = self.depths.iter().copied().max().unwrap_or(0) as usize;
+        let mut levels = vec![Vec::new(); maxd + 1];
+        for (i, &d) in self.depths.iter().enumerate() {
+            levels[d as usize].push(i as u32);
+        }
+        levels
+    }
 }
 
 /// Gate-level netlist with named primary outputs, stored as flat

@@ -80,6 +80,7 @@
 // forbids unsafe outright.
 #![deny(unsafe_code)]
 
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod coordinator;

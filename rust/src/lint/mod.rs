@@ -19,6 +19,11 @@
 //!   integrity under the sequential rules (forward data is feedback, not
 //!   a cycle), unclocked-register detection, and (pedantic) pipeline
 //!   stage-balance analysis.
+//! - **`UFO4xx` semantic** (emitted by [`crate::analysis`], catalogued
+//!   here) — proof-backed findings from bit-level abstract
+//!   interpretation: proven-constant outputs, dead registers, stuck
+//!   enables, unreachable carries and word-level weight-conservation
+//!   violations.
 //!
 //! Entry points: [`lint_netlist`] for a bare netlist, [`lint_design`] for
 //! a built design plus its trace. The engine
@@ -38,7 +43,10 @@ pub use datapath::{
     check_counts, check_final_rows, check_mac_profile, check_plan, check_plan_counts,
     check_prefix, check_stage_profiles, ARRIVAL_EPS_NS,
 };
-pub use report::{code_info, CodeInfo, Diagnostic, LintOptions, LintReport, Locus, Severity, CODES};
+pub use report::{
+    code_info, CodeInfo, Diagnostic, LintOptions, LintReport, Locus, Severity, CODES, UFO401,
+    UFO402, UFO403, UFO404, UFO405,
+};
 pub use sequential::{pass_registers, pass_stage_balance};
 pub use structural::lint_netlist;
 

@@ -154,6 +154,22 @@ pub const UFO302: &str = "UFO302";
 /// Pipeline stage imbalance: one combinational segment between register
 /// ranks is much deeper than another.
 pub const UFO303: &str = "UFO303";
+/// Primary output proven constant by the ternary abstract domain
+/// (`crate::analysis`): every lane, every cycle produces the same bit.
+pub const UFO401: &str = "UFO401";
+/// Dead register: abstract interpretation proves the state never leaves
+/// one constant value from its init, so the flop is storage-free.
+pub const UFO402: &str = "UFO402";
+/// Register enable proven stuck at 0 through arbitrary logic — the
+/// proof-backed upgrade of the structural `UFO301` (which only sees a
+/// directly tied constant).
+pub const UFO403: &str = "UFO403";
+/// Unreachable carry: a proven-0 run at the MSB end of an output weight
+/// group — those carry columns can never be asserted.
+pub const UFO404: &str = "UFO404";
+/// Word-level weight-conservation violation: an unsigned design's proven
+/// product interval cannot contain the operand-implied value range.
+pub const UFO405: &str = "UFO405";
 
 /// The machine-readable diagnostic-code catalog (mirrors `LINTS.md`).
 pub const CODES: &[CodeInfo] = &[
@@ -258,6 +274,36 @@ pub const CODES: &[CodeInfo] = &[
         severity: Severity::Info,
         pedantic: true,
         summary: "pipeline stage imbalance (uneven combinational segments)",
+    },
+    CodeInfo {
+        code: UFO401,
+        severity: Severity::Warning,
+        pedantic: false,
+        summary: "primary output proven constant by abstract interpretation",
+    },
+    CodeInfo {
+        code: UFO402,
+        severity: Severity::Warning,
+        pedantic: false,
+        summary: "dead register (state proven constant from init)",
+    },
+    CodeInfo {
+        code: UFO403,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "register enable proven stuck at 0 (semantic UFO301)",
+    },
+    CodeInfo {
+        code: UFO404,
+        severity: Severity::Info,
+        pedantic: false,
+        summary: "unreachable carry columns at an output group's MSB end",
+    },
+    CodeInfo {
+        code: UFO405,
+        severity: Severity::Error,
+        pedantic: false,
+        summary: "product interval cannot contain the operand-implied range",
     },
 ];
 

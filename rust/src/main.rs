@@ -22,11 +22,17 @@
 //!   systolic  --width N --freq 1e9     Table-2 style systolic report.
 //!   verify    --width N [--mac]        Simulator + PJRT equivalence.
 //!   ablation  --width N                Per-ingredient ablation table.
-//!   lint      [--width N] [--request '<json>'] [--json]
+//!   lint      [--width N] [--request '<json>'] [--json] [--deny SEV]
 //!             Static analysis (LINTS.md codes). With no `--request`,
 //!             sweeps the tier-1 design families × operand formats at
 //!             `--width` (default 8). Exits nonzero when any design
-//!             carries an Error-severity diagnostic.
+//!             carries a diagnostic at or above `--deny` (error, warning
+//!             or info; default error) — `--deny warning` lets CI fail on
+//!             warnings too.
+//!   analyze   [--width N] [--request '<json>'] [--json] [--deny SEV]
+//!             Bit-level abstract interpretation (UFO4xx semantic codes):
+//!             proven constants, static switching activity, word-level
+//!             output intervals. Same sweep/flags as `lint`.
 //!   request   --json '<request>'       Compile a serialized DesignRequest.
 //!   serve     [--transport tcp|stdio] [--addr 127.0.0.1:7878]
 //!             [--cache-dir DIR|none] [--workers N] [--verify N]
@@ -311,8 +317,19 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Strict parse of the `--deny <severity>` flag shared by `lint` and
+/// `analyze`; absent means the historical gate, Error.
+fn parse_deny(args: &Args) -> Result<ufo_mac::lint::Severity> {
+    match args.get("deny") {
+        None => Ok(ufo_mac::lint::Severity::Error),
+        Some(v) => ufo_mac::lint::Severity::from_key(v)
+            .map_err(|e| anyhow::anyhow!("invalid --deny: {e}")),
+    }
+}
+
 fn cmd_lint(args: &Args) -> Result<()> {
     let n = args.get_usize("width", 8);
+    let deny = parse_deny(args)?;
     let reqs: Vec<DesignRequest> = match args.get("request") {
         Some(text) => vec![DesignRequest::parse(text)?],
         None => ufo_mac::api::tier1_requests(n),
@@ -324,12 +341,12 @@ fn cmd_lint(args: &Args) -> Result<()> {
         ..Default::default()
     });
     let as_json = args.has("json");
-    let mut designs_with_errors = 0usize;
+    let mut denied = 0usize;
     let mut rows: Vec<ufo_mac::util::Json> = Vec::new();
     for req in &reqs {
         let (report, art, _) = eng.lint(req)?;
-        if report.count(ufo_mac::lint::Severity::Error) > 0 {
-            designs_with_errors += 1;
+        if report.denies(deny) {
+            denied += 1;
         }
         if as_json {
             let ufo_mac::util::Json::Obj(mut m) = report.summary_json() else {
@@ -354,15 +371,82 @@ fn cmd_lint(args: &Args) -> Result<()> {
     }
     if as_json {
         let doc = ufo_mac::util::Json::obj(vec![
-            ("clean", ufo_mac::util::Json::Bool(designs_with_errors == 0)),
+            ("clean", ufo_mac::util::Json::Bool(denied == 0)),
             ("designs", ufo_mac::util::Json::Arr(rows)),
         ]);
         println!("{}", doc.render());
     } else {
-        println!("lint: {} design(s), {designs_with_errors} with errors", reqs.len());
+        println!(
+            "lint: {} design(s), {denied} at or above --deny {}",
+            reqs.len(),
+            deny.key()
+        );
     }
-    if designs_with_errors > 0 {
-        anyhow::bail!("lint found Error-severity diagnostics in {designs_with_errors} design(s)");
+    if denied > 0 {
+        anyhow::bail!(
+            "lint found {}-or-worse diagnostics in {denied} design(s)",
+            deny.key()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let n = args.get_usize("width", 8);
+    let deny = parse_deny(args)?;
+    let reqs: Vec<DesignRequest> = match args.get("request") {
+        Some(text) => vec![DesignRequest::parse(text)?],
+        None => ufo_mac::api::tier1_requests(n),
+    };
+    let eng = ufo_mac::api::SynthEngine::new(ufo_mac::api::EngineConfig {
+        lint_deny: None,
+        ..Default::default()
+    });
+    let as_json = args.has("json");
+    let mut denied = 0usize;
+    let mut rows: Vec<ufo_mac::util::Json> = Vec::new();
+    for req in &reqs {
+        let (report, art, _) = eng.analyze(req)?;
+        if report.denies(deny) {
+            denied += 1;
+        }
+        if as_json {
+            let ufo_mac::util::Json::Obj(mut m) = report.summary_json() else {
+                unreachable!("analysis summary must be an object");
+            };
+            m.insert("canonical".to_string(), art.request.to_json());
+            m.insert(
+                "fingerprint".to_string(),
+                ufo_mac::util::Json::str(art.fingerprint.to_string()),
+            );
+            rows.push(ufo_mac::util::Json::Obj(m));
+        } else {
+            println!(
+                "{} {}",
+                if report.is_clean() { "clean" } else { "FLAGGED" },
+                art.request.to_json_string()
+            );
+            println!("  {report}");
+        }
+    }
+    if as_json {
+        let doc = ufo_mac::util::Json::obj(vec![
+            ("clean", ufo_mac::util::Json::Bool(denied == 0)),
+            ("designs", ufo_mac::util::Json::Arr(rows)),
+        ]);
+        println!("{}", doc.render());
+    } else {
+        println!(
+            "analyze: {} design(s), {denied} at or above --deny {}",
+            reqs.len(),
+            deny.key()
+        );
+    }
+    if denied > 0 {
+        anyhow::bail!(
+            "analysis found {}-or-worse diagnostics in {denied} design(s)",
+            deny.key()
+        );
     }
     Ok(())
 }
@@ -585,16 +669,19 @@ fn main() {
         "verify" => cmd_verify(&args),
         "ablation" => cmd_ablation(&args),
         "lint" => cmd_lint(&args),
+        "analyze" => cmd_analyze(&args),
         "request" => cmd_request(&args),
         "serve" => cmd_serve(&args),
         "bench-check" => cmd_bench_check(&args),
         _ => {
             println!(
                 "ufo-mac — UFO-MAC multiplier/MAC optimization framework\n\
-                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|lint|request|serve|bench-check> [flags]\n\
+                 usage: ufo-mac <generate|sweep|profile|fir|systolic|verify|ablation|lint|analyze|request|serve|bench-check> [flags]\n\
                  methods: ufo, gomil, rlmul, commercial; strategies: area, timing, tradeoff\n\
                  generate: --pipeline K inserts K register ranks (clocked verify + always_ff RTL)\n\
-                 lint: --width N (tier-1 sweep), --request '<json>' (one design), --json\n\
+                 lint: --width N (tier-1 sweep), --request '<json>' (one design), --json,\n\
+                       --deny error|warning|info (exit-code gate, default error)\n\
+                 analyze: abstract interpretation (UFO4xx); same flags as lint\n\
                  serve: --transport tcp|stdio (default tcp), --addr HOST:PORT,\n\
                         --cache-dir DIR|none (default: workspace design_cache/),\n\
                         --workers N, --verify N — wire format in PROTOCOL.md\n\

@@ -2,7 +2,8 @@
 //!
 //! The server speaks newline-delimited JSON (`PROTOCOL.md` at the
 //! repository root is the normative wire description): each input line is
-//! one command (`compile`, `batch`, `lint`, `sweep`, `stats`, `shutdown`), each
+//! one command (`compile`, `batch`, `lint`, `analyze`, `sweep`, `stats`,
+//! `shutdown`), each
 //! output line one response envelope carrying the echoed request `id`.
 //! Commands are dispatched concurrently over
 //! [`crate::coordinator::pool::scoped_workers`], so a slow `sweep` does not
@@ -43,7 +44,7 @@ use crate::sta::TimingStats;
 use crate::util::Json;
 use crate::Result;
 use anyhow::anyhow;
-use protocol::{artifact_summary, envelope_err, envelope_ok, lint_summary};
+use protocol::{analysis_summary, artifact_summary, envelope_err, envelope_ok, lint_summary};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
@@ -150,6 +151,16 @@ impl Server {
                 .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))?;
                 self.timing.lock().unwrap().merge(&art.timing);
                 Ok(lint_summary(&report, &art, source))
+            }
+            Command::Analyze(req) => {
+                // Same panic containment as `lint`: analyzing an uncached
+                // request synthesizes it first.
+                let (report, art, source) = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| self.engine.analyze(&req)),
+                )
+                .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))?;
+                self.timing.lock().unwrap().merge(&art.timing);
+                Ok(analysis_summary(&report, &art, source))
             }
             Command::Sweep(cfg) => {
                 let points = coordinator::run_sweep_with(&self.engine, &cfg);
@@ -368,7 +379,7 @@ mod tests {
         let resp = server().handle_line(r#"{"cmd":"warp","id":9}"#);
         assert!(resp.contains(r#""ok":false"#), "{resp}");
         assert!(
-            resp.contains("valid: batch, compile, lint, shutdown, stats, sweep"),
+            resp.contains("valid: analyze, batch, compile, lint, shutdown, stats, sweep"),
             "{resp}"
         );
         assert!(resp.contains(r#""id":9"#), "{resp}");
@@ -405,6 +416,20 @@ mod tests {
         assert!(resp.contains(r#""source":"compiled""#), "{resp}");
         // A `compile` of the same request shares the cache entry, so the
         // second lint is a memory hit.
+        let again = srv.handle_line(line);
+        assert!(again.contains(r#""source":"memory""#), "{again}");
+    }
+
+    #[test]
+    fn analyze_reports_proven_constants_with_cache_provenance() {
+        let srv = server();
+        let line = r#"{"cmd":"analyze","id":5,"request":{"kind":"method","method":"ufo","n":4,"strategy":"tradeoff","mac":false}}"#;
+        let resp = srv.handle_line(line);
+        assert!(resp.contains(r#""ok":true"#), "{resp}");
+        assert!(resp.contains(r#""proven_const""#), "{resp}");
+        assert!(resp.contains(r#""mean_activity""#), "{resp}");
+        assert!(resp.contains(r#""source":"compiled""#), "{resp}");
+        // A repeat shares the cache entry (and its stored report).
         let again = srv.handle_line(line);
         assert!(again.contains(r#""source":"memory""#), "{again}");
     }

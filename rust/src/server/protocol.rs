@@ -3,6 +3,7 @@
 //! normative description; every JSON example there is replayed verbatim by
 //! `rust/tests/server.rs`.
 
+use crate::analysis::AnalysisReport;
 use crate::api::{persist, CompileSource, DesignArtifact, DesignRequest};
 use crate::coordinator::SweepConfig;
 use crate::lint::LintReport;
@@ -21,6 +22,10 @@ pub enum Command {
     /// Compile (or fetch) a request and return its static-analysis report
     /// ([`crate::lint`]) instead of the STA summary.
     Lint(DesignRequest),
+    /// Compile (or fetch) a request and return its abstract-interpretation
+    /// report ([`crate::analysis`]): proven constants, static activity,
+    /// word-level intervals and the UFO4xx diagnostics.
+    Analyze(DesignRequest),
     /// Run a (method × width × strategy × signedness) DSE sweep through
     /// the server's engine and cache.
     Sweep(Box<SweepConfig>),
@@ -69,11 +74,18 @@ fn parse_command(doc: &Json) -> Result<Command> {
                 doc.get("request").ok_or_else(|| anyhow!("lint: missing field 'request'"))?;
             Ok(Command::Lint(DesignRequest::from_json(req)?))
         }
+        "analyze" => {
+            let req =
+                doc.get("request").ok_or_else(|| anyhow!("analyze: missing field 'request'"))?;
+            Ok(Command::Analyze(DesignRequest::from_json(req)?))
+        }
         "sweep" => Ok(Command::Sweep(Box::new(sweep_config(doc)?))),
         "stats" => Ok(Command::Stats),
         "shutdown" => Ok(Command::Shutdown),
         other => {
-            bail!("unknown cmd '{other}' (valid: batch, compile, lint, shutdown, stats, sweep)")
+            bail!(
+                "unknown cmd '{other}' (valid: analyze, batch, compile, lint, shutdown, stats, sweep)"
+            )
         }
     }
 }
@@ -200,6 +212,23 @@ pub fn artifact_summary(art: &DesignArtifact, source: CompileSource) -> Json {
 pub fn lint_summary(report: &LintReport, art: &DesignArtifact, source: CompileSource) -> Json {
     let Json::Obj(mut m) = report.summary_json() else {
         unreachable!("lint summary must be an object");
+    };
+    m.insert("fingerprint".to_string(), Json::str(art.fingerprint.to_string()));
+    m.insert("source".to_string(), Json::str(source.key()));
+    Json::Obj(m)
+}
+
+/// `analyze`-command result: the abstract-interpretation summary (clean
+/// flag, per-severity counts, proven-constant tally, mean activity, output
+/// group intervals, the diagnostics themselves) plus the fingerprint and
+/// cache provenance of the artifact it describes.
+pub fn analysis_summary(
+    report: &AnalysisReport,
+    art: &DesignArtifact,
+    source: CompileSource,
+) -> Json {
+    let Json::Obj(mut m) = report.summary_json() else {
+        unreachable!("analysis summary must be an object");
     };
     m.insert("fingerprint".to_string(), Json::str(art.fingerprint.to_string()));
     m.insert("source".to_string(), Json::str(source.key()));

@@ -328,12 +328,20 @@ pub fn pack_lanes(assignments: &[Vec<bool>]) -> Vec<u64> {
 /// Count output toggles between consecutive random vectors for every node —
 /// the activity factor feeding the dynamic-power report.
 ///
-/// Runs `rounds`×64 random vectors (xorshift-seeded, deterministic) and
-/// returns per-node toggle probability in [0,1]. All buffers (current and
+/// Combinational netlists run `rounds`×64 random vectors (xorshift-seeded,
+/// deterministic) through the compiled evaluator; netlists with registers
+/// are routed through [`clocked_toggle_activity`] instead — `rounds`
+/// clocked cycles of fresh random stimulus from the same seed, so measured
+/// activity is cycle-accurate (registers toggle on actual state
+/// transitions, not on a combinational re-evaluation that ignores state).
+/// Returns per-node toggle probability in [0,1]. All buffers (current and
 /// previous node words, input words) are allocated once and reused across
 /// rounds — the seed implementation cloned the first round's buffer and
 /// allocated a fresh input-word `Vec` per round (EXPERIMENTS.md §Perf).
 pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
+    if nl.is_sequential() {
+        return clocked_toggle_activity(nl, rounds, seed);
+    }
     let comp = CompiledNetlist::compile(nl);
     let mut state = seed | 1;
     let mut rng = move || {
@@ -361,6 +369,45 @@ pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
             total_pairs += 64;
         }
         std::mem::swap(&mut cur, &mut prev);
+    }
+    toggles
+        .iter()
+        .map(|&t| if total_pairs == 0 { 0.0 } else { t as f64 / total_pairs as f64 })
+        .collect()
+}
+
+/// Cycle-accurate toggle counting for sequential netlists: drive a
+/// [`ClockedSim`] from reset for `rounds` cycles of fresh 64-lane random
+/// stimulus (same xorshift discipline and seed interpretation as the
+/// combinational path) and count per-node toggles between consecutive
+/// pre-edge value views. Register nodes therefore toggle exactly when
+/// their latched state changes between cycles.
+pub fn clocked_toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
+    let mut sim = ClockedSim::new(nl);
+    let mut state = seed | 1;
+    let mut rng = move || {
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    };
+    let mut toggles = vec![0u64; nl.len()];
+    let mut total_pairs = 0u64;
+    let mut prev: Vec<u64> = Vec::new();
+    let mut words = vec![0u64; sim.num_inputs()];
+    for cycle in 0..rounds {
+        for w in words.iter_mut() {
+            *w = rng();
+        }
+        let cur = sim.step(&words);
+        if cycle > 0 {
+            for (i, &c) in cur.iter().enumerate() {
+                toggles[i] += (c ^ prev[i]).count_ones() as u64;
+            }
+            total_pairs += 64;
+        }
+        prev.clear();
+        prev.extend_from_slice(cur);
     }
     toggles
         .iter()

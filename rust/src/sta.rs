@@ -64,10 +64,14 @@ pub struct Sta {
     pub lib: CellLib,
     /// Clock used to convert switching energy to power, GHz.
     pub clock_ghz: f64,
-    /// Rounds of 64 random vectors for toggle-rate extraction. `0` selects a
-    /// constant-activity fallback (fast path for huge module-level runs).
+    /// Rounds of 64 random vectors (combinational) or clocked cycles
+    /// (sequential) for toggle-rate extraction. `0` selects the static
+    /// signal-probability estimate (fast path for huge module-level runs
+    /// and candidate scoring).
     pub activity_rounds: usize,
-    /// Activity factor used when `activity_rounds == 0`.
+    /// Legacy flat activity factor. Retained for configuration
+    /// compatibility; since the static signal-probability fallback landed
+    /// it no longer feeds [`Sta::dynamic_power_mw`].
     pub default_activity: f64,
 }
 
@@ -188,19 +192,21 @@ impl Sta {
 
     /// Dynamic power: `P = Σ_g activity_g · E_g · f_clk`.
     ///
-    /// Toggle extraction runs the combinational bit-parallel simulator, so
-    /// sequential netlists fall back to the constant-activity model (a
-    /// clocked activity sweep would need a multi-cycle stimulus protocol;
-    /// the pipeline registers do not change which gates exist, so the
-    /// constant-activity estimate stays comparable across pipeline depths).
+    /// Activity comes from toggle measurement when `activity_rounds > 0`:
+    /// combinational netlists sweep the bit-parallel simulator, sequential
+    /// ones run a cycle-accurate [`crate::sim::clocked_toggle_activity`]
+    /// stimulus (both behind [`crate::sim::toggle_activity`]). With
+    /// `activity_rounds == 0` — the hot candidate-scoring configuration —
+    /// the estimate is the *static* switching activity from the
+    /// signal-probability domain ([`crate::analysis::static_activity`]
+    /// with the allocation-free depth-1 window), which replaces the old
+    /// flat `default_activity` constant with a per-gate value while
+    /// staying simulation-free.
     pub fn dynamic_power_mw(&self, nl: &Netlist) -> f64 {
-        let activities: Vec<f64> = if self.activity_rounds > 0
-            && nl.num_inputs() > 0
-            && !nl.is_sequential()
-        {
+        let activities: Vec<f64> = if self.activity_rounds > 0 && nl.num_inputs() > 0 {
             crate::sim::toggle_activity(nl, self.activity_rounds, 0x5eed)
         } else {
-            vec![self.default_activity; nl.len()]
+            crate::analysis::static_activity(nl, &crate::analysis::AnalysisOptions::fast())
         };
         let mut energy_fj_per_cycle = 0.0;
         for (i, &op) in nl.ops().iter().enumerate() {
@@ -569,7 +575,7 @@ mod tests {
             uncut.critical_delay_ns
         );
         assert!(cut.critical_delay_ns > 0.0);
-        // Power falls back to the constant-activity model without panicking.
+        // Sequential power runs the cycle-accurate clocked toggle sweep.
         assert!(sta.dynamic_power_mw(&build(true)) > 0.0);
     }
 
