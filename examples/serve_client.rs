@@ -7,11 +7,14 @@
 //! cargo run --release --example serve_client -- 127.0.0.1:7878
 //! ```
 //!
-//! It sends the same compile twice plus a `stats` probe, prints the three
+//! It sends the same compile twice plus a `stats` probe, prints the
 //! response lines, and demonstrates the cache doing its job: the second
 //! compile answers with `"source":"memory"` (or `"disk"` when the server
-//! was restarted over a persistent `--cache-dir`). The wire format is
-//! documented in `PROTOCOL.md`.
+//! was restarted over a persistent `--cache-dir`). It then runs a
+//! streamed sweep — progress frames (`"event":"progress"`, one per design
+//! point) arrive before the final envelope — and finishes with a
+//! `metrics` probe showing the scheduler's queue/latency counters. The
+//! wire format is documented in `PROTOCOL.md`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -19,6 +22,12 @@ use std::net::TcpStream;
 fn main() -> std::io::Result<()> {
     let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:7878".to_string());
     let mut stream = TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    let next_line = |reader: &mut BufReader<TcpStream>, line: &mut String| {
+        line.clear();
+        reader.read_line(line).map(|_| ())
+    };
 
     let compile = |id: u32| {
         format!(
@@ -27,15 +36,38 @@ fn main() -> std::io::Result<()> {
         )
     };
     let requests = [compile(1), compile(2), "{\"cmd\":\"stats\",\"id\":3}".to_string()];
-    for line in &requests {
-        writeln!(stream, "{line}")?;
+    for req in &requests {
+        writeln!(stream, "{req}")?;
     }
     stream.flush()?;
-
     // Responses arrive in completion order; correlate by "id".
-    let reader = BufReader::new(stream.try_clone()?);
-    for response in reader.lines().take(requests.len()) {
-        println!("{}", response?);
+    for _ in 0..requests.len() {
+        next_line(&mut reader, &mut line)?;
+        print!("{line}");
     }
+
+    // A streamed sweep: per-point progress frames (no "ok" key), then the
+    // final envelope carrying the whole point list.
+    writeln!(
+        stream,
+        "{}",
+        "{\"cmd\":\"sweep\",\"id\":4,\"widths\":[8],\"methods\":[\"ufo\",\"gomil\"],\
+         \"strategies\":[\"tradeoff\"],\"stream\":true}"
+    )?;
+    stream.flush()?;
+    loop {
+        next_line(&mut reader, &mut line)?;
+        print!("{line}");
+        if line.contains("\"ok\"") {
+            break; // frames carry "event":"progress"; the envelope has "ok"
+        }
+    }
+
+    // The observability snapshot: queue depths per priority class, cache
+    // tiers, per-command latency histograms, jobs completed.
+    writeln!(stream, "{}", "{\"cmd\":\"metrics\",\"id\":5}")?;
+    stream.flush()?;
+    next_line(&mut reader, &mut line)?;
+    print!("{line}");
     Ok(())
 }

@@ -144,6 +144,22 @@ impl DesignCache {
         self.shard(fp).lock().unwrap().get(&fp.0).cloned()
     }
 
+    /// Whether `fp` is resident in the memory tier or has a disk-tier
+    /// entry file — without touching counters, deserializing, or
+    /// promoting anything. The server's scheduling probe: a resident
+    /// design answers in near-constant time, so its compile is classified
+    /// urgent. A stat on a corrupt entry file can report `true` for a
+    /// lookup that will later miss; that skews priority, never results.
+    pub(crate) fn contains(&self, fp: Fingerprint) -> bool {
+        if self.shard(fp).lock().unwrap().contains_key(&fp.0) {
+            return true;
+        }
+        match &self.disk_dir {
+            Some(dir) => persist::entry_path(dir, fp).is_file(),
+            None => false,
+        }
+    }
+
     /// Reclassify the caller's just-recorded miss after in-flight
     /// coalescing deduplicated it: the compile rode a concurrent
     /// synthesis, so no *fresh* synthesis was required and `misses` must

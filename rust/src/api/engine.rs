@@ -276,6 +276,17 @@ impl SynthEngine {
         self.cache.clear();
     }
 
+    /// Whether `req` would be served from a cache tier (memory-resident
+    /// artifact or disk entry file) rather than freshly synthesized. A
+    /// pure probe: no counters move, nothing is deserialized or promoted.
+    /// The server uses this to classify incoming compiles for scheduling
+    /// (cached ⇒ urgent — see [`crate::server::sched`]); it is a
+    /// heuristic, so a racing insert between probe and compile only
+    /// affects priority, never the compiled result.
+    pub fn is_cached(&self, req: &DesignRequest) -> bool {
+        self.cache.contains(req.fingerprint())
+    }
+
     /// Compile a request, serving identical requests from the cache.
     ///
     /// The request is canonicalized first, so every spelling of the same

@@ -228,6 +228,56 @@ pub fn run_sweep_with(engine: &SynthEngine, cfg: &SweepConfig) -> Vec<DesignPoin
     out
 }
 
+/// Compile one grid request through `engine` and project the artifact
+/// onto a sweep row. This is the single-point unit of work behind
+/// [`run_sweep_with_progress`] and the server's yielding `sweep` jobs
+/// (which compile one point per scheduler slot so urgent requests can
+/// preempt between points).
+pub fn compile_point(engine: &SynthEngine, req: &DesignRequest) -> Result<DesignPoint> {
+    let DesignRequest::Method(mr) = req else {
+        anyhow::bail!("sweep grids contain method requests only");
+    };
+    let art = engine.compile(req)?;
+    Ok(point_from_artifact(
+        mr.method,
+        mr.n,
+        mr.strategy,
+        mr.mac,
+        mr.signedness == Signedness::Signed,
+        &art,
+    ))
+}
+
+/// [`run_sweep_with`], one point at a time, reporting per-point progress:
+/// `progress(done, total, point)` fires after each grid request, in grid
+/// order, with `point: None` for a failed compile (the row is dropped
+/// from the result, as in [`run_sweep_with`]). This is the callback
+/// surface behind the server's streamed `sweep` (`stream: true` in
+/// `PROTOCOL.md`), where each completed point becomes one
+/// `{"event":"progress",…}` frame.
+pub fn run_sweep_with_progress<F>(
+    engine: &SynthEngine,
+    cfg: &SweepConfig,
+    mut progress: F,
+) -> Vec<DesignPoint>
+where
+    F: FnMut(usize, usize, Option<&DesignPoint>),
+{
+    let reqs = sweep_requests(cfg);
+    let total = reqs.len();
+    let mut out = Vec::with_capacity(total);
+    for (i, req) in reqs.iter().enumerate() {
+        match compile_point(engine, req) {
+            Ok(p) => {
+                progress(i + 1, total, Some(&p));
+                out.push(p);
+            }
+            Err(_) => progress(i + 1, total, None),
+        }
+    }
+    out
+}
+
 /// Run a full sweep in parallel on a fresh engine configured from `cfg`
 /// (verification budget, PJRT cross-check, workers).
 pub fn run_sweep(cfg: &SweepConfig) -> Vec<DesignPoint> {
@@ -268,35 +318,34 @@ pub fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
         && (a.delay_ns < b.delay_ns - 1e-12 || a.area_um2 < b.area_um2 - 1e-9)
 }
 
+/// Serialize one design point (also the `point` payload of streamed
+/// sweep progress frames).
+pub fn point_json(p: &DesignPoint) -> Json {
+    Json::obj(vec![
+        ("method", Json::str(p.method.name())),
+        ("n", Json::num(p.n as f64)),
+        ("strategy", Json::str(format!("{:?}", p.strategy))),
+        ("mac", Json::Bool(p.mac)),
+        ("signed", Json::Bool(p.signed)),
+        ("delay_ns", Json::num(p.delay_ns)),
+        ("area_um2", Json::num(p.area_um2)),
+        ("power_mw", Json::num(p.power_mw)),
+        ("num_gates", Json::num(p.num_gates as f64)),
+        ("ct_stages", Json::num(p.ct_stages as f64)),
+        ("verified", Json::Bool(p.verified)),
+        (
+            "pjrt_verified",
+            match p.pjrt_verified {
+                Some(v) => Json::Bool(v),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
 /// Serialize points as a JSON report.
 pub fn points_json(points: &[DesignPoint]) -> Json {
-    Json::arr(
-        points
-            .iter()
-            .map(|p| {
-                Json::obj(vec![
-                    ("method", Json::str(p.method.name())),
-                    ("n", Json::num(p.n as f64)),
-                    ("strategy", Json::str(format!("{:?}", p.strategy))),
-                    ("mac", Json::Bool(p.mac)),
-                    ("signed", Json::Bool(p.signed)),
-                    ("delay_ns", Json::num(p.delay_ns)),
-                    ("area_um2", Json::num(p.area_um2)),
-                    ("power_mw", Json::num(p.power_mw)),
-                    ("num_gates", Json::num(p.num_gates as f64)),
-                    ("ct_stages", Json::num(p.ct_stages as f64)),
-                    ("verified", Json::Bool(p.verified)),
-                    (
-                        "pjrt_verified",
-                        match p.pjrt_verified {
-                            Some(v) => Json::Bool(v),
-                            None => Json::Null,
-                        },
-                    ),
-                ])
-            })
-            .collect(),
-    )
+    Json::arr(points.iter().map(point_json).collect())
 }
 
 /// Persist a JSON report under `dir`.
@@ -343,6 +392,31 @@ mod tests {
         let points = run_sweep(&cfg);
         assert_eq!(points.len(), 2);
         assert!(points.iter().all(|p| p.verified));
+    }
+
+    #[test]
+    fn progress_sweep_reports_monotone_points_and_matches_batch_sweep() {
+        let cfg = SweepConfig {
+            widths: vec![4],
+            methods: vec![Method::UfoMac, Method::Gomil],
+            strategies: vec![Strategy::TradeOff],
+            budget: BaselineBudget { rlmul_iters: 2, seed: 1 },
+            verify_vectors: 256,
+            ..Default::default()
+        };
+        let engine = SynthEngine::new(EngineConfig {
+            verify_vectors: cfg.verify_vectors,
+            ..EngineConfig::default()
+        });
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let streamed = run_sweep_with_progress(&engine, &cfg, |done, total, point| {
+            assert!(point.is_some());
+            seen.push((done, total));
+        });
+        assert_eq!(seen, vec![(1, 2), (2, 2)]);
+        // Same rows (and the same serialized report) as the batch fan-out.
+        let batch = run_sweep_with(&engine, &cfg);
+        assert_eq!(points_json(&streamed).render(), points_json(&batch).render());
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //!   shared best-bound queue rather than from a pre-split job list, and
 //!   for the compile service's request loop
 //!   ([`crate::server::Server::serve`]), where worker 0 reads
-//!   newline-delimited JSON and workers 1..=N answer commands from a
-//!   shared queue.
+//!   newline-delimited JSON and workers 1..=N run jobs popped from a
+//!   shared priority scheduler ([`crate::server::sched`]).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

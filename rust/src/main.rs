@@ -36,9 +36,15 @@
 //!   request   --json '<request>'       Compile a serialized DesignRequest.
 //!   serve     [--transport tcp|stdio] [--addr 127.0.0.1:7878]
 //!             [--cache-dir DIR|none] [--workers N] [--verify N]
+//!             [--metrics]
 //!             Long-lived compile service over newline-delimited JSON
 //!             (PROTOCOL.md); artifacts persist in the on-disk cache and
-//!             survive restarts.
+//!             survive restarts. Requests are priority-scheduled (cache
+//!             hits preempt in-flight sweeps) and `"stream": true`
+//!             requests get per-design-point progress frames. `--metrics`
+//!             prints the observability snapshot (queue depths, cache
+//!             tiers, latency histograms) to stderr every 30 s — the same
+//!             JSON the `metrics` wire command returns.
 //!   bench-check [--baseline FILE] [--current FILE] [--max-ratio 2.0]
 //!             [--update]
 //!             Compare a `BENCH_*.json` run against the committed baseline
@@ -508,7 +514,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache_dir: cache_dir.clone(),
         ..Default::default()
     }));
-    let server = ufo_mac::server::Server::new(engine);
+    let server = std::sync::Arc::new(ufo_mac::server::Server::new(engine));
+    // `--metrics`: a detached reporter prints the observability snapshot
+    // (the same JSON the `metrics` wire command returns) to stderr every
+    // 30 s. Stderr, so stdio-transport stdout stays pure NDJSON.
+    if args.has("metrics") {
+        let reporter = std::sync::Arc::clone(&server);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(30));
+            eprintln!("ufo-mac serve: metrics {}", reporter.metrics_json().render());
+        });
+    }
     match args.get("transport").unwrap_or("tcp") {
         "tcp" => {
             let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
@@ -525,7 +541,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 None => eprintln!("ufo-mac serve: in-memory cache only (--cache-dir none)"),
             }
             let stdin = std::io::BufReader::new(std::io::stdin());
-            server.serve(stdin, std::io::stdout(), workers)
+            let out = server.serve(stdin, std::io::stdout(), workers);
+            if args.has("metrics") {
+                // Final snapshot so short-lived piped sessions still get
+                // one report even when they finish inside the first tick.
+                eprintln!("ufo-mac serve: metrics {}", server.metrics_json().render());
+            }
+            out
         }
         other => anyhow::bail!("unknown transport '{other}' (valid: stdio, tcp)"),
     }
@@ -684,7 +706,8 @@ fn main() {
                  analyze: abstract interpretation (UFO4xx); same flags as lint\n\
                  serve: --transport tcp|stdio (default tcp), --addr HOST:PORT,\n\
                         --cache-dir DIR|none (default: workspace design_cache/),\n\
-                        --workers N, --verify N — wire format in PROTOCOL.md\n\
+                        --workers N, --verify N, --metrics (30s stderr snapshots)\n\
+                        — wire format and streaming in PROTOCOL.md\n\
                  bench-check: --baseline FILE --current FILE --max-ratio X --update\n\
                  see rust/src/main.rs header for all flags"
             );

@@ -1,0 +1,230 @@
+//! Server observability counters: per-command latency histograms,
+//! per-priority-class queue gauges, and lifetime totals.
+//!
+//! Everything on the request path is lock-free atomics — recording a
+//! latency sample is one `leading_zeros` plus one `fetch_add`, with no
+//! allocation — so the observability layer costs nothing measurable per
+//! command. Rendering ([`Metrics`] accessors plus the server's
+//! `metrics_json`) allocates, but only when a `metrics` command (or
+//! `ufo-mac serve --metrics` reporter) asks for a snapshot.
+
+use super::sched::Priority;
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Number of log-2 latency buckets: bucket `i` counts samples whose
+/// latency in microseconds satisfies `floor(log2(max(us, 1))) == i`, i.e.
+/// `us` in `[2^i, 2^(i+1))` (bucket 0 also absorbs sub-microsecond
+/// samples). 24 buckets span 1 µs to ~16.8 s, past any plausible sweep.
+pub const BUCKETS: usize = 24;
+
+/// Wire-command keys, one latency histogram each, in the (alphabetical)
+/// order they render in the `metrics` response.
+pub const COMMANDS: [&str; 8] =
+    ["analyze", "batch", "compile", "lint", "metrics", "shutdown", "stats", "sweep"];
+
+/// Fixed-size log-bucketed latency histogram over atomic counters.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one sample. Allocation-free: bucket index is
+    /// `floor(log2(µs))` via `leading_zeros`, clamped to the last bucket.
+    pub fn record(&self, latency: Duration) {
+        let us = u64::try_from(latency.as_micros()).unwrap_or(u64::MAX);
+        let idx = (63 - u64::leading_zeros(us | 1)) as usize;
+        self.buckets[idx.min(BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Snapshot as `{"buckets":[…],"count":N}`. The buckets array is
+    /// trimmed after the last non-empty bucket (an idle command renders
+    /// `[]`), so entry `i` — when present — is the count for the
+    /// `[2^i, 2^(i+1))` µs band.
+    pub fn to_json(&self) -> Json {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let used = counts.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        let total: u64 = counts.iter().sum();
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::arr(counts[..used].iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("count", Json::num(total as f64)),
+        ])
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+/// Aggregate server metrics: uptime, jobs completed, progress frames
+/// emitted, admitted-but-unanswered queue depth per priority class, and
+/// one [`LatencyHistogram`] per wire command (admission → final
+/// envelope, so queueing delay is included).
+pub struct Metrics {
+    start: Instant,
+    jobs_completed: AtomicU64,
+    progress_frames: AtomicU64,
+    depths: [AtomicUsize; 3],
+    hists: [LatencyHistogram; COMMANDS.len()],
+}
+
+impl Metrics {
+    /// Fresh metrics; uptime starts now.
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            jobs_completed: AtomicU64::new(0),
+            progress_frames: AtomicU64::new(0),
+            depths: std::array::from_fn(|_| AtomicUsize::new(0)),
+            hists: std::array::from_fn(|_| LatencyHistogram::new()),
+        }
+    }
+
+    /// A job entered class `class` (admission).
+    pub fn job_admitted(&self, class: Priority) {
+        self.depths[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job left class `class` (answered, or dropped because its
+    /// connection died).
+    pub fn job_settled(&self, class: Priority) {
+        self.depths[class.index()].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A final envelope was written. `cmd` is the wire-command key for
+    /// the latency histogram (`None` for protocol errors, which have no
+    /// command class but still count as completed jobs).
+    pub fn job_completed(&self, cmd: Option<&str>, latency: Duration) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        if let Some(key) = cmd {
+            if let Some(i) = COMMANDS.iter().position(|&c| c == key) {
+                self.hists[i].record(latency);
+            }
+        }
+    }
+
+    /// One `{"event":"progress",…}` frame was written.
+    pub fn frame_emitted(&self) {
+        self.progress_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Final envelopes written over the server's lifetime.
+    pub fn jobs_completed(&self) -> u64 {
+        self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// Progress frames written over the server's lifetime.
+    pub fn progress_frames(&self) -> u64 {
+        self.progress_frames.load(Ordering::Relaxed)
+    }
+
+    /// Admitted-but-unanswered jobs summed over all classes (the `stats`
+    /// command's `queue_depth`).
+    pub fn queue_depth_total(&self) -> usize {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Time since construction.
+    pub fn uptime(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Per-class queue depths as `{"bulk":…,"interactive":…,"urgent":…}`.
+    pub fn queue_json(&self) -> Json {
+        Json::obj(
+            Priority::ALL
+                .iter()
+                .map(|&p| {
+                    (p.key(), Json::num(self.depths[p.index()].load(Ordering::Relaxed) as f64))
+                })
+                .collect(),
+        )
+    }
+
+    /// Per-command latency histograms keyed by wire command — every key
+    /// in [`COMMANDS`] is always present, so the response shape is
+    /// stable whether or not a command has run yet.
+    pub fn latency_json(&self) -> Json {
+        Json::obj(
+            COMMANDS.iter().zip(&self.hists).map(|(&key, h)| (key, h.to_json())).collect(),
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_log2_microseconds() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(0)); // bucket 0
+        h.record(Duration::from_micros(1)); // bucket 0
+        h.record(Duration::from_micros(3)); // bucket 1
+        h.record(Duration::from_micros(1024)); // bucket 10
+        h.record(Duration::from_secs(3600)); // clamped to the last bucket
+        assert_eq!(h.count(), 5);
+        let j = h.to_json();
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), BUCKETS); // clamp filled the last bucket
+        assert_eq!(buckets[0].as_f64().unwrap(), 2.0);
+        assert_eq!(buckets[1].as_f64().unwrap(), 1.0);
+        assert_eq!(buckets[10].as_f64().unwrap(), 1.0);
+        assert_eq!(buckets[BUCKETS - 1].as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("count").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn idle_histogram_renders_empty_buckets() {
+        let j = LatencyHistogram::new().to_json();
+        assert!(j.get("buckets").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(j.get("count").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn gauges_and_totals_round_trip() {
+        let m = Metrics::new();
+        m.job_admitted(Priority::Bulk);
+        m.job_admitted(Priority::Urgent);
+        assert_eq!(m.queue_depth_total(), 2);
+        let q = m.queue_json();
+        assert_eq!(q.get("urgent").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(q.get("bulk").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(q.get("interactive").unwrap().as_f64().unwrap(), 0.0);
+        m.job_settled(Priority::Bulk);
+        m.job_completed(Some("sweep"), Duration::from_millis(12));
+        m.job_completed(None, Duration::from_micros(5));
+        m.frame_emitted();
+        assert_eq!(m.queue_depth_total(), 1);
+        assert_eq!(m.jobs_completed(), 2);
+        assert_eq!(m.progress_frames(), 1);
+        let lat = m.latency_json();
+        for key in COMMANDS {
+            assert!(lat.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(lat.get("sweep").unwrap().get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(lat.get("compile").unwrap().get("count").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

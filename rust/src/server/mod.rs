@@ -3,12 +3,23 @@
 //! The server speaks newline-delimited JSON (`PROTOCOL.md` at the
 //! repository root is the normative wire description): each input line is
 //! one command (`compile`, `batch`, `lint`, `analyze`, `sweep`, `stats`,
-//! `shutdown`), each
-//! output line one response envelope carrying the echoed request `id`.
-//! Commands are dispatched concurrently over
-//! [`crate::coordinator::pool::scoped_workers`], so a slow `sweep` does not
-//! block a `stats` probe; responses therefore arrive in *completion* order
-//! and clients correlate them by `id`.
+//! `metrics`, `shutdown`), each output line one response envelope carrying
+//! the echoed request `id` — plus, for commands sent with `"stream":
+//! true`, `{"event":"progress",…}` frames reporting per-design-point
+//! completion before the final envelope.
+//!
+//! Commands are scheduled, not merely parallelized: every admitted line
+//! becomes a job in a three-class priority queue ([`sched`]), a fixed
+//! handler pool pops urgent work (cache hits, `stats`/`metrics`,
+//! protocol errors) ahead of fresh syntheses, and multi-point jobs
+//! (`sweep`, `batch`) *yield* between design points, so a 1 ms cache-hit
+//! `compile` is answered while a multi-minute sweep is in flight — even
+//! with one handler. Responses therefore arrive in *completion* order and
+//! clients correlate them by `id`. Per-connection framed writers
+//! ([`ConnWriter`]) write one complete line per lock acquisition, so
+//! interleaved responses stay well-formed, and the [`metrics`] layer
+//! keeps allocation-free latency histograms and queue gauges for the
+//! `metrics` command / `ufo-mac serve --metrics`.
 //!
 //! Three properties make the service cheap to hit repeatedly:
 //!
@@ -34,34 +45,186 @@
 //! assert!(resp.contains(r#""ok":true"#) && resp.contains(r#""source":"compiled""#));
 //! ```
 
+pub mod metrics;
 mod protocol;
+pub mod sched;
 
 pub use protocol::Command;
 
 use crate::api::{DesignRequest, SynthEngine};
-use crate::coordinator::{self, pool};
+use crate::coordinator::{self, pool, DesignPoint};
 use crate::sta::TimingStats;
 use crate::util::Json;
 use crate::Result;
 use anyhow::anyhow;
-use protocol::{analysis_summary, artifact_summary, envelope_err, envelope_ok, lint_summary};
-use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpListener;
+use metrics::Metrics;
+use protocol::{
+    analysis_summary, artifact_summary, envelope_err, envelope_ok, lint_summary, progress_frame,
+    Request,
+};
+use sched::{Priority, Scheduler};
+use std::io::{BufRead, Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Hard cap on one request line. A connection that exceeds it without a
+/// newline gets one error envelope and is dropped — it cannot grow the
+/// read buffer without bound or wedge the multiplexer.
+const MAX_LINE: usize = 1 << 20;
+
+/// Write timeout on TCP connections: a reader slow enough to stall a
+/// write this long only loses its *own* connection (the write fails, the
+/// connection is marked dead, its remaining jobs are dropped).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Multiplexer sleep when no connection made progress (std has no epoll;
+/// this bounds the poll rate instead).
+const POLL_IDLE: Duration = Duration::from_millis(2);
+
+/// Per-connection framed writer: one complete NDJSON line per lock
+/// acquisition, so progress frames and envelopes from concurrent handler
+/// threads never interleave mid-line. A failed write marks the
+/// connection dead; jobs for a dead connection are dropped instead of
+/// poisoning the handler pool. The pending/closing pair implements
+/// close-after-drain: `shutdown` (or reader EOF) stops admissions and
+/// the connection closes once every already-admitted job has settled.
+struct ConnWriter<W: Write> {
+    w: Mutex<W>,
+    /// Cleared on write failure, explicit kill, or drain completion.
+    alive: AtomicBool,
+    /// Admitted-but-unsettled jobs on this connection.
+    pending: AtomicUsize,
+    /// Set by `shutdown`/EOF: close once `pending` drains to zero.
+    closing: AtomicBool,
+}
+
+impl<W: Write> ConnWriter<W> {
+    fn new(w: W) -> ConnWriter<W> {
+        ConnWriter {
+            w: Mutex::new(w),
+            alive: AtomicBool::new(true),
+            pending: AtomicUsize::new(0),
+            closing: AtomicBool::new(false),
+        }
+    }
+
+    /// Write one complete line (plus newline) and flush. Returns whether
+    /// the write succeeded; failure marks the connection dead.
+    fn send(&self, line: &str) -> bool {
+        if !self.alive.load(Ordering::Acquire) {
+            return false;
+        }
+        let ok = {
+            let mut w = self.w.lock().unwrap();
+            writeln!(w, "{line}").and_then(|()| w.flush()).is_ok()
+        };
+        if !ok {
+            self.alive.store(false, Ordering::Release);
+        }
+        ok
+    }
+
+    fn alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    fn kill(&self) {
+        self.alive.store(false, Ordering::Release);
+    }
+
+    /// One more job admitted for this connection.
+    fn begin(&self) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// One admitted job settled (answered or dropped); completes a
+    /// requested close-after-drain when it was the last.
+    fn settle(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 && self.closing.load(Ordering::Acquire)
+        {
+            self.alive.store(false, Ordering::Release);
+        }
+    }
+
+    /// Stop admitting and close once all pending jobs settle.
+    fn close_after_drain(&self) {
+        self.closing.store(true, Ordering::Release);
+        if self.pending.load(Ordering::Acquire) == 0 {
+            self.alive.store(false, Ordering::Release);
+        }
+    }
+
+    fn closing(&self) -> bool {
+        self.closing.load(Ordering::Acquire)
+    }
+}
+
+impl ConnWriter<Vec<u8>> {
+    /// Drain the buffered output lines (the in-process transport behind
+    /// [`Server::handle_line_all`]).
+    fn take_lines(&self) -> Vec<String> {
+        let buf = std::mem::take(&mut *self.w.lock().unwrap());
+        String::from_utf8_lossy(&buf).lines().map(str::to_string).collect()
+    }
+}
+
+/// One schedulable unit of work: a whole command, or one *step* of a
+/// yielding command (`sweep`/`batch`), which re-enqueues its own tail.
+struct Job<W: Write> {
+    conn: Arc<ConnWriter<W>>,
+    id: Json,
+    class: Priority,
+    /// Admission time — latency histograms measure admission → final
+    /// envelope, so queueing delay is part of the observed latency.
+    t0: Instant,
+    kind: JobKind,
+}
+
+enum JobKind {
+    /// Answer a non-yielding command in one step.
+    Respond(Command, bool),
+    /// Answer a protocol error (unparseable line or unknown command).
+    Fail(String),
+    /// A yielding sweep: one design point per handler slot.
+    Sweep(SweepJob),
+    /// A yielding batch: one request per handler slot.
+    Batch(BatchJob),
+}
+
+struct SweepJob {
+    reqs: Vec<DesignRequest>,
+    points: Vec<DesignPoint>,
+    next: usize,
+    stream: bool,
+}
+
+struct BatchJob {
+    reqs: Vec<DesignRequest>,
+    rows: Vec<Json>,
+    next: usize,
+    stream: bool,
+}
+
+/// A TCP connection as the multiplexer sees it: the nonblocking read
+/// half, its partial-line buffer, and the shared framed writer.
+struct TcpConn {
+    rd: TcpStream,
+    buf: Vec<u8>,
+    writer: Arc<ConnWriter<TcpStream>>,
+}
 
 /// The design-compilation server (see module docs).
 pub struct Server {
     engine: Arc<SynthEngine>,
-    /// Requests admitted to the queue but not yet answered.
-    queue_depth: AtomicUsize,
     /// Responses written over the server's lifetime.
     served: AtomicU64,
     /// Aggregate timing-evaluation work behind the artifacts this server
     /// compiled or served (`compile`/`batch` commands).
     timing: Mutex<TimingStats>,
+    /// Observability counters (queue gauges, latency histograms, totals).
+    metrics: Metrics,
 }
 
 impl Server {
@@ -71,9 +234,9 @@ impl Server {
     pub fn new(engine: Arc<SynthEngine>) -> Server {
         Server {
             engine,
-            queue_depth: AtomicUsize::new(0),
             served: AtomicU64::new(0),
             timing: Mutex::new(TimingStats::default()),
+            metrics: Metrics::new(),
         }
     }
 
@@ -82,48 +245,165 @@ impl Server {
         &self.engine
     }
 
-    /// Process one request line and return the response line (no trailing
-    /// newline). This is the whole protocol for one command; the loops in
-    /// [`Server::serve`]/[`Server::serve_tcp`] are plumbing around it.
+    /// Process one request line and return the final response line (no
+    /// trailing newline). Progress frames of `"stream": true` commands
+    /// are dropped; [`Server::handle_line_all`] returns them too.
     pub fn handle_line(&self, line: &str) -> String {
-        self.respond(line).0
+        self.handle_line_all(line).pop().unwrap_or_default()
     }
 
-    /// Handle one line; the flag reports whether the command asks the
-    /// serving loop to stop (`shutdown`).
-    fn respond(&self, line: &str) -> (String, bool) {
-        let (id, cmd) = protocol::parse_line(line);
-        let cmd = match cmd {
-            Ok(cmd) => cmd,
-            Err(e) => return (envelope_err(&id, &format!("{e:#}")).render(), false),
-        };
-        let shutdown = matches!(cmd, Command::Shutdown);
-        let result = self.dispatch(cmd);
-        let envelope = match result {
-            Ok(result) => envelope_ok(&id, result),
-            Err(e) => envelope_err(&id, &format!("{e:#}")),
-        };
-        (envelope.render(), shutdown)
+    /// Process one request line and return *every* output line it
+    /// produces, in order: progress frames first (for `"stream": true`
+    /// commands), the final envelope last. The serving loops emit the
+    /// same lines over their transport as they are produced; this is the
+    /// in-process equivalent, and what `rust/tests/server.rs` uses to
+    /// replay the `PROTOCOL.md` streaming examples.
+    pub fn handle_line_all(&self, line: &str) -> Vec<String> {
+        let sched: Scheduler<Job<Vec<u8>>> = Scheduler::new();
+        let conn = Arc::new(ConnWriter::new(Vec::new()));
+        self.admit(line, &conn, &sched);
+        sched.close();
+        while let Some(job) = sched.pop() {
+            self.run_job(job, &sched);
+        }
+        conn.take_lines()
     }
 
-    fn dispatch(&self, cmd: Command) -> Result<Json> {
-        match cmd {
-            Command::Compile(req) => {
-                // Contain synthesis panics to this command (as `batch`
-                // does per row): one poison request must produce an error
-                // envelope, not tear down the serving loop.
-                let (art, source) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || self.engine.compile_traced(&req),
-                ))
-                .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))?;
-                self.timing.lock().unwrap().merge(&art.timing);
-                Ok(artifact_summary(&art, source))
+    /// Parse one request line, classify it, and enqueue the resulting
+    /// job. Malformed lines become urgent [`JobKind::Fail`] jobs so the
+    /// error envelope is never stuck behind bulk work.
+    fn admit<W: Write>(&self, line: &str, conn: &Arc<ConnWriter<W>>, sched: &Scheduler<Job<W>>) {
+        let t0 = Instant::now();
+        let (id, req) = protocol::parse_line(line);
+        let (class, kind) = match req {
+            Ok(Request { cmd, stream }) => {
+                let class = self.classify(&cmd);
+                let kind = match cmd {
+                    Command::Sweep(cfg) => JobKind::Sweep(SweepJob {
+                        reqs: coordinator::sweep_requests(&cfg),
+                        points: Vec::new(),
+                        next: 0,
+                        stream,
+                    }),
+                    Command::Batch(reqs) => JobKind::Batch(BatchJob {
+                        rows: Vec::with_capacity(reqs.len()),
+                        reqs,
+                        next: 0,
+                        stream,
+                    }),
+                    cmd => JobKind::Respond(cmd, stream),
+                };
+                (class, kind)
             }
-            Command::Batch(reqs) => {
-                let rows = self.engine.compile_batch_traced(&reqs);
-                let mut out = Vec::with_capacity(rows.len());
-                for row in rows {
-                    out.push(match row {
+            Err(e) => (Priority::Urgent, JobKind::Fail(format!("{e:#}"))),
+        };
+        conn.begin();
+        self.metrics.job_admitted(class);
+        sched.push(Job { conn: Arc::clone(conn), id, class, t0, kind }, class);
+    }
+
+    /// Priority class of a parsed command: constant-time answers and
+    /// cache-resident compiles are urgent, a fresh synthesis is
+    /// interactive, multi-point work is bulk (and yields).
+    fn classify(&self, cmd: &Command) -> Priority {
+        match cmd {
+            Command::Stats | Command::Metrics | Command::Shutdown => Priority::Urgent,
+            Command::Compile(req) | Command::Lint(req) | Command::Analyze(req) => {
+                if self.engine.is_cached(req) {
+                    Priority::Urgent
+                } else {
+                    Priority::Interactive
+                }
+            }
+            Command::Batch(_) | Command::Sweep(_) => Priority::Bulk,
+        }
+    }
+
+    /// Run one scheduled job, or one step of a yielding job (which
+    /// re-enqueues its tail). Returns `true` when the job answered a
+    /// `shutdown` command.
+    fn run_job<W: Write>(&self, job: Job<W>, sched: &Scheduler<Job<W>>) -> bool {
+        let Job { conn, id, class, t0, kind } = job;
+        if !conn.alive() {
+            // Client gone: drop the job (and any remaining sweep/batch
+            // steps) without burning handler time on unsendable results.
+            self.metrics.job_settled(class);
+            conn.settle();
+            return false;
+        }
+        match kind {
+            JobKind::Fail(e) => {
+                self.finish(&conn, class, t0, None, envelope_err(&id, &e));
+                false
+            }
+            JobKind::Respond(cmd, stream) => {
+                let key = cmd.key();
+                let shutdown = matches!(cmd, Command::Shutdown);
+                let envelope = match self.dispatch(cmd) {
+                    Ok(result) => {
+                        if stream {
+                            // One-point stream: a single completion frame
+                            // before the final envelope keeps client
+                            // parsers uniform across compile and
+                            // sweep/batch.
+                            let src = result.get("source").cloned().unwrap_or(Json::Null);
+                            self.emit_frame(&conn, &id, 1, 1, ("source", src));
+                        }
+                        envelope_ok(&id, result)
+                    }
+                    Err(e) => envelope_err(&id, &format!("{e:#}")),
+                };
+                self.finish(&conn, class, t0, Some(key), envelope);
+                if shutdown {
+                    conn.close_after_drain();
+                }
+                shutdown
+            }
+            JobKind::Sweep(mut sj) => {
+                let total = sj.reqs.len();
+                if sj.next < total {
+                    let req = &sj.reqs[sj.next];
+                    let point = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        coordinator::compile_point(&self.engine, req)
+                    }))
+                    .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")));
+                    sj.next += 1;
+                    if sj.stream {
+                        let payload = match &point {
+                            Ok(p) => coordinator::point_json(p),
+                            Err(_) => Json::Null,
+                        };
+                        self.emit_frame(&conn, &id, sj.next, total, ("point", payload));
+                    }
+                    if let Ok(p) = point {
+                        sj.points.push(p);
+                    }
+                    if sj.next < total {
+                        // Yield: re-enqueue the tail so urgent and
+                        // interactive work runs between design points.
+                        sched.push(Job { conn, id, class, t0, kind: JobKind::Sweep(sj) }, class);
+                        return false;
+                    }
+                }
+                let result = Json::obj(vec![
+                    ("count", Json::num(sj.points.len() as f64)),
+                    ("points", coordinator::points_json(&sj.points)),
+                ]);
+                self.finish(&conn, class, t0, Some("sweep"), envelope_ok(&id, result));
+                false
+            }
+            JobKind::Batch(mut bj) => {
+                let total = bj.reqs.len();
+                if bj.next < total {
+                    let req = &bj.reqs[bj.next];
+                    // Contain synthesis panics to this row, as the old
+                    // batch fan-out did.
+                    let row = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.engine.compile_traced(req)
+                    }))
+                    .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")));
+                    bj.next += 1;
+                    let row = match row {
                         Ok((art, source)) => {
                             self.timing.lock().unwrap().merge(&art.timing);
                             Json::obj(vec![
@@ -135,12 +415,74 @@ impl Server {
                             ("ok", Json::Bool(false)),
                             ("error", Json::str(format!("{e:#}"))),
                         ]),
-                    });
+                    };
+                    if bj.stream {
+                        self.emit_frame(&conn, &id, bj.next, total, ("row", row.clone()));
+                    }
+                    bj.rows.push(row);
+                    if bj.next < total {
+                        sched.push(Job { conn, id, class, t0, kind: JobKind::Batch(bj) }, class);
+                        return false;
+                    }
                 }
-                Ok(Json::obj(vec![
-                    ("count", Json::num(out.len() as f64)),
-                    ("results", Json::Arr(out)),
-                ]))
+                let result = Json::obj(vec![
+                    ("count", Json::num(bj.rows.len() as f64)),
+                    ("results", Json::Arr(bj.rows)),
+                ]);
+                self.finish(&conn, class, t0, Some("batch"), envelope_ok(&id, result));
+                false
+            }
+        }
+    }
+
+    /// Write one `{"event":"progress",…}` frame (frames never carry an
+    /// `ok` key, so clients can always tell them from envelopes).
+    fn emit_frame<W: Write>(
+        &self,
+        conn: &ConnWriter<W>,
+        id: &Json,
+        done: usize,
+        total: usize,
+        payload: (&str, Json),
+    ) {
+        if conn.send(&progress_frame(id, done, total, payload).render()) {
+            self.metrics.frame_emitted();
+        }
+    }
+
+    /// Write a final envelope and settle the job's accounting: queue
+    /// gauge, served counter, jobs-completed total, and the per-command
+    /// latency histogram (`cmd` is `None` for protocol errors, which have
+    /// no command class).
+    fn finish<W: Write>(
+        &self,
+        conn: &ConnWriter<W>,
+        class: Priority,
+        t0: Instant,
+        cmd: Option<&'static str>,
+        envelope: Json,
+    ) {
+        conn.send(&envelope.render());
+        self.metrics.job_settled(class);
+        self.metrics.job_completed(cmd, t0.elapsed());
+        self.served.fetch_add(1, Ordering::Relaxed);
+        conn.settle();
+    }
+
+    /// Answer a non-yielding command (`sweep`/`batch` run as yielding
+    /// jobs in [`Server::run_job`] instead).
+    fn dispatch(&self, cmd: Command) -> Result<Json> {
+        match cmd {
+            Command::Compile(req) => {
+                // Contain synthesis panics to this command: one poison
+                // request must produce an error envelope, not tear down
+                // the handler pool.
+                let (art, source) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || self.engine.compile_traced(&req),
+                ))
+                .unwrap_or_else(|_| Err(anyhow!("synthesis panicked for {req:?}")))?;
+                self.timing.lock().unwrap().merge(&art.timing);
+                Ok(artifact_summary(&art, source))
             }
             Command::Lint(req) => {
                 // Same panic containment as `compile`: linting an uncached
@@ -162,34 +504,33 @@ impl Server {
                 self.timing.lock().unwrap().merge(&art.timing);
                 Ok(analysis_summary(&report, &art, source))
             }
-            Command::Sweep(cfg) => {
-                let points = coordinator::run_sweep_with(&self.engine, &cfg);
-                Ok(Json::obj(vec![
-                    ("count", Json::num(points.len() as f64)),
-                    ("points", coordinator::points_json(&points)),
-                ]))
-            }
             Command::Stats => Ok(self.stats_json()),
+            Command::Metrics => Ok(self.metrics_json()),
             Command::Shutdown => Ok(Json::str("shutting down")),
+            Command::Batch(_) | Command::Sweep(_) => {
+                unreachable!("yielding commands are scheduled as jobs, not dispatched")
+            }
         }
+    }
+
+    /// Cache counters shared by `stats` and `metrics`.
+    fn cache_json(&self) -> Json {
+        let s = self.engine.cache_stats();
+        Json::obj(vec![
+            ("hits", Json::num(s.hits as f64)),
+            ("disk_hits", Json::num(s.disk_hits as f64)),
+            ("misses", Json::num(s.misses as f64)),
+            ("coalesced", Json::num(s.coalesced as f64)),
+            ("entries", Json::num(s.entries as f64)),
+            ("hit_rate", Json::num(s.hit_rate())),
+        ])
     }
 
     /// The `stats` response body.
     fn stats_json(&self) -> Json {
-        let s = self.engine.cache_stats();
         let t = *self.timing.lock().unwrap();
         Json::obj(vec![
-            (
-                "cache",
-                Json::obj(vec![
-                    ("hits", Json::num(s.hits as f64)),
-                    ("disk_hits", Json::num(s.disk_hits as f64)),
-                    ("misses", Json::num(s.misses as f64)),
-                    ("coalesced", Json::num(s.coalesced as f64)),
-                    ("entries", Json::num(s.entries as f64)),
-                    ("hit_rate", Json::num(s.hit_rate())),
-                ]),
-            ),
+            ("cache", self.cache_json()),
             (
                 "timing",
                 Json::obj(vec![
@@ -200,21 +541,37 @@ impl Server {
                     ("retime_fraction", Json::num(t.retime_fraction())),
                 ]),
             ),
-            ("queue_depth", Json::num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            ("queue_depth", Json::num(self.metrics.queue_depth_total() as f64)),
             ("served", Json::num(self.served.load(Ordering::Relaxed) as f64)),
             ("workers", Json::num(self.engine.config().workers as f64)),
         ])
     }
 
+    /// The `metrics` response body: cache tiers, per-class queue depths,
+    /// per-command latency histograms (log-2 µs buckets, admission →
+    /// final envelope), uptime, and lifetime totals. Also printed by
+    /// `ufo-mac serve --metrics`.
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("cache", self.cache_json()),
+            ("jobs_completed", Json::num(self.metrics.jobs_completed() as f64)),
+            ("latency_us", self.metrics.latency_json()),
+            ("progress_frames", Json::num(self.metrics.progress_frames() as f64)),
+            ("queue", self.metrics.queue_json()),
+            ("uptime_s", Json::num(self.metrics.uptime().as_secs_f64())),
+            ("workers", Json::num(self.engine.config().workers as f64)),
+        ])
+    }
+
     /// Serve newline-delimited JSON from `reader` to `writer` with
-    /// `workers` concurrent command handlers (plus one reader thread), all
-    /// on [`pool::scoped_workers`]. Returns when the input reaches EOF or
-    /// the stream errors. After a `shutdown` command has been answered the
-    /// queue is drained and the loop stops at the reader's *next* wakeup —
-    /// immediate for transports with a read timeout (the TCP listener sets
-    /// one), at the next line/EOF for a plain blocking reader such as
-    /// stdin. Piped stdio clients therefore need no explicit `shutdown`:
-    /// closing the pipe is enough.
+    /// `workers` concurrent job handlers (plus one reader thread), all on
+    /// [`pool::scoped_workers`] draining one priority [`Scheduler`].
+    /// Returns when the input reaches EOF or the stream errors. After a
+    /// `shutdown` command has been answered the queue is drained and the
+    /// loop stops at the reader's *next* wakeup — immediate for
+    /// transports with a read timeout, at the next line/EOF for a plain
+    /// blocking reader such as stdin. Piped stdio clients therefore need
+    /// no explicit `shutdown`: closing the pipe is enough.
     ///
     /// ```
     /// use std::sync::Arc;
@@ -234,19 +591,16 @@ impl Server {
         W: Write + Send,
     {
         let workers = workers.max(1);
-        let stop = AtomicBool::new(false);
-        let closed = AtomicBool::new(false);
-        let queue: Mutex<VecDeque<String>> = Mutex::new(VecDeque::new());
-        let ready = Condvar::new();
-        let writer = Mutex::new(writer);
+        let sched: Scheduler<Job<W>> = Scheduler::new();
+        let conn = Arc::new(ConnWriter::new(writer));
         let reader_cell = Mutex::new(Some(reader));
-        // Worker 0 is the reader; workers 1..=N handle commands.
+        // Worker 0 is the reader; workers 1..=N run scheduled jobs.
         pool::scoped_workers(workers + 1, |w| {
             if w == 0 {
                 let mut reader = reader_cell.lock().unwrap().take().expect("one reader");
                 let mut buf = String::new();
                 loop {
-                    if stop.load(Ordering::Relaxed) {
+                    if !conn.alive() || conn.closing() {
                         break;
                     }
                     match reader.read_line(&mut buf) {
@@ -254,15 +608,12 @@ impl Server {
                         Ok(_) => {
                             let line = buf.trim();
                             if !line.is_empty() {
-                                self.queue_depth.fetch_add(1, Ordering::Relaxed);
-                                queue.lock().unwrap().push_back(line.to_string());
-                                ready.notify_one();
+                                self.admit(line, &conn, &sched);
                             }
                             buf.clear();
                         }
-                        // Read timeouts (the TCP transport polls so a
-                        // shutdown can close the connection) keep any
-                        // partial line in `buf` and try again.
+                        // Read timeouts keep any partial line in `buf`
+                        // and try again.
                         Err(e)
                             if matches!(
                                 e.kind(),
@@ -273,34 +624,13 @@ impl Server {
                         Err(_) => break,
                     }
                 }
-                closed.store(true, Ordering::Relaxed);
-                ready.notify_all();
+                sched.close();
             } else {
-                loop {
-                    let line = {
-                        let mut q = queue.lock().unwrap();
-                        loop {
-                            if let Some(line) = q.pop_front() {
-                                break Some(line);
-                            }
-                            if closed.load(Ordering::Relaxed) || stop.load(Ordering::Relaxed) {
-                                break None;
-                            }
-                            q = ready.wait(q).unwrap();
-                        }
-                    };
-                    let Some(line) = line else { break };
-                    let (resp, shutdown) = self.respond(&line);
-                    {
-                        let mut w = writer.lock().unwrap();
-                        let _ = writeln!(w, "{resp}");
-                        let _ = w.flush();
-                    }
-                    self.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    self.served.fetch_add(1, Ordering::Relaxed);
-                    if shutdown {
-                        stop.store(true, Ordering::Relaxed);
-                        ready.notify_all();
+                while let Some(job) = sched.pop() {
+                    if self.run_job(job, &sched) {
+                        // `shutdown` answered: stop admitting, drain the
+                        // already-queued commands, then everyone exits.
+                        sched.close();
                     }
                 }
             }
@@ -308,25 +638,126 @@ impl Server {
         Ok(())
     }
 
-    /// Accept TCP connections forever, serving each connection with
-    /// [`Server::serve`] on its own thread (connections are concurrent and
-    /// share the engine's cache). A `shutdown` command ends its own
-    /// connection; the listener keeps accepting.
+    /// Accept TCP connections forever on a multiplexed readiness core:
+    /// one acceptor thread, one multiplexer thread polling every
+    /// connection for readable lines, and a fixed pool of
+    /// `engine.config().workers` handler threads — all connections share
+    /// the pool and one priority [`Scheduler`], so a cache-hit `compile`
+    /// on one connection preempts another connection's in-flight sweep.
+    /// A `shutdown` command drains and closes its own connection; the
+    /// listener keeps accepting.
     pub fn serve_listener(&self, listener: TcpListener) -> Result<()> {
+        let workers = self.engine.config().workers.max(1);
+        let sched: Scheduler<Job<TcpStream>> = Scheduler::new();
+        let fresh: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
         std::thread::scope(|s| {
-            for conn in listener.incoming() {
-                let Ok(stream) = conn else { continue };
-                s.spawn(move || {
-                    // Poll reads so a served `shutdown` actually closes the
-                    // connection instead of blocking on the next line.
-                    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-                    let Ok(rd) = stream.try_clone() else { return };
-                    let workers = self.engine.config().workers;
-                    let _ = self.serve(BufReader::new(rd), stream, workers);
+            s.spawn(|| {
+                for conn in listener.incoming() {
+                    let Ok(stream) = conn else { continue };
+                    fresh.lock().unwrap().push(stream);
+                }
+            });
+            for _ in 0..workers {
+                s.spawn(|| {
+                    while let Some(job) = sched.pop() {
+                        self.run_job(job, &sched);
+                    }
                 });
             }
+            // The multiplexer runs on the scope's own thread.
+            self.multiplex(&fresh, &sched);
         });
         Ok(())
+    }
+
+    /// Readiness-polling loop over all live connections: drain readable
+    /// bytes into per-connection buffers, admit complete lines, retire
+    /// dead or drained connections.
+    fn multiplex(&self, fresh: &Mutex<Vec<TcpStream>>, sched: &Scheduler<Job<TcpStream>>) {
+        let mut conns: Vec<TcpConn> = Vec::new();
+        loop {
+            for stream in fresh.lock().unwrap().drain(..) {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                let Ok(wr) = stream.try_clone() else { continue };
+                conns.push(TcpConn {
+                    rd: stream,
+                    buf: Vec::new(),
+                    writer: Arc::new(ConnWriter::new(wr)),
+                });
+            }
+            let mut progressed = false;
+            conns.retain_mut(|c| {
+                if !c.writer.alive() {
+                    return false; // dead or fully drained: drop the socket
+                }
+                if c.writer.closing() {
+                    return true; // draining after shutdown/EOF: stop reading
+                }
+                let mut chunk = [0u8; 4096];
+                loop {
+                    match c.rd.read(&mut chunk) {
+                        Ok(0) => {
+                            // EOF. A trailing unterminated line is still
+                            // a request (matching `BufRead::read_line`),
+                            // then close once pending work drains.
+                            let bytes = std::mem::take(&mut c.buf);
+                            let line = String::from_utf8_lossy(&bytes);
+                            let line = line.trim();
+                            if !line.is_empty() {
+                                self.admit(line, &c.writer, sched);
+                            }
+                            c.writer.close_after_drain();
+                            return c.writer.alive();
+                        }
+                        Ok(n) => {
+                            progressed = true;
+                            c.buf.extend_from_slice(&chunk[..n]);
+                            if !self.admit_buffered(c, sched) {
+                                return false;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            c.writer.kill();
+                            return false;
+                        }
+                    }
+                }
+                true
+            });
+            if !progressed {
+                std::thread::sleep(POLL_IDLE);
+            }
+        }
+    }
+
+    /// Split complete lines out of a connection's read buffer and admit
+    /// them. Returns `false` when the connection must be dropped: a
+    /// single line exceeded [`MAX_LINE`], in which case the client gets
+    /// one error envelope and only *this* connection closes.
+    fn admit_buffered(&self, c: &mut TcpConn, sched: &Scheduler<Job<TcpStream>>) -> bool {
+        while let Some(pos) = c.buf.iter().position(|&b| b == b'\n') {
+            let rest = c.buf.split_off(pos + 1);
+            let line_bytes = std::mem::replace(&mut c.buf, rest);
+            let line = String::from_utf8_lossy(&line_bytes);
+            let line = line.trim();
+            if !line.is_empty() {
+                self.admit(line, &c.writer, sched);
+            }
+        }
+        if c.buf.len() > MAX_LINE {
+            c.writer.send(
+                &envelope_err(&Json::Null, &format!("request line exceeds {MAX_LINE} bytes"))
+                    .render(),
+            );
+            c.writer.kill();
+            return false;
+        }
+        true
     }
 
     /// Bind `addr` and [`Server::serve_listener`] on it. Prints one
@@ -379,7 +810,7 @@ mod tests {
         let resp = server().handle_line(r#"{"cmd":"warp","id":9}"#);
         assert!(resp.contains(r#""ok":false"#), "{resp}");
         assert!(
-            resp.contains("valid: analyze, batch, compile, lint, shutdown, stats, sweep"),
+            resp.contains("valid: analyze, batch, compile, lint, metrics, shutdown, stats, sweep"),
             "{resp}"
         );
         assert!(resp.contains(r#""id":9"#), "{resp}");
@@ -390,6 +821,13 @@ mod tests {
         let resp = server().handle_line("not json at all");
         assert!(resp.contains(r#""ok":false"#), "{resp}");
         assert!(resp.contains(r#""id":null"#), "{resp}");
+    }
+
+    #[test]
+    fn stream_flag_must_be_a_bool() {
+        let resp = server().handle_line(r#"{"cmd":"stats","id":1,"stream":"yes"}"#);
+        assert!(resp.contains(r#""ok":false"#), "{resp}");
+        assert!(resp.contains("'stream' must be a bool"), "{resp}");
     }
 
     #[test]
@@ -404,6 +842,62 @@ mod tests {
         let doc = Json::parse(&stats).unwrap();
         let cache = doc.get("result").unwrap().get("cache").unwrap();
         assert!(cache.get("hits").unwrap().as_f64().unwrap() >= 1.0, "{stats}");
+    }
+
+    #[test]
+    fn streamed_compile_emits_one_frame_then_envelope() {
+        let srv = server();
+        let lines = srv.handle_line_all(
+            r#"{"cmd":"compile","id":7,"request":{"kind":"method","method":"ufo","n":4,"strategy":"tradeoff","mac":false},"stream":true}"#,
+        );
+        assert_eq!(lines.len(), 2, "{lines:?}");
+        assert!(lines[0].contains(r#""event":"progress""#), "{lines:?}");
+        assert!(lines[0].contains(r#""done":1"#) && lines[0].contains(r#""total":1"#), "{lines:?}");
+        assert!(lines[0].contains(r#""source":"compiled""#), "{lines:?}");
+        assert!(!lines[0].contains(r#""ok""#), "frames carry no ok key: {lines:?}");
+        assert!(lines[1].contains(r#""ok":true"#), "{lines:?}");
+        // Without the flag, the same request produces only the envelope.
+        let quiet = srv.handle_line_all(
+            r#"{"cmd":"compile","id":8,"request":{"kind":"method","method":"ufo","n":4,"strategy":"tradeoff","mac":false}}"#,
+        );
+        assert_eq!(quiet.len(), 1, "{quiet:?}");
+    }
+
+    #[test]
+    fn streamed_sweep_frames_are_monotone_then_final() {
+        let srv = server();
+        let lines = srv.handle_line_all(
+            r#"{"cmd":"sweep","id":6,"methods":["ufo","gomil"],"strategies":["tradeoff"],"stream":true,"widths":[4]}"#,
+        );
+        assert_eq!(lines.len(), 3, "{lines:?}");
+        for (i, frame) in lines[..2].iter().enumerate() {
+            let doc = Json::parse(frame).unwrap();
+            assert_eq!(doc.get("event").unwrap().as_str().unwrap(), "progress", "{frame}");
+            assert_eq!(doc.get("done").unwrap().as_f64().unwrap(), (i + 1) as f64, "{frame}");
+            assert_eq!(doc.get("total").unwrap().as_f64().unwrap(), 2.0, "{frame}");
+            assert!(doc.get("point").unwrap().get("delay_ns").is_some(), "{frame}");
+            assert!(doc.get("ok").is_none(), "{frame}");
+        }
+        let fin = Json::parse(&lines[2]).unwrap();
+        assert_eq!(fin.get("result").unwrap().get("count").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn metrics_reports_queue_latency_and_totals() {
+        let srv = server();
+        let _ = srv.handle_line(&compile_line(1, &DesignRequest::multiplier(4)));
+        let resp = srv.handle_line(r#"{"cmd":"metrics","id":2}"#);
+        let doc = Json::parse(&resp).unwrap();
+        let result = doc.get("result").unwrap();
+        assert!(result.get("jobs_completed").unwrap().as_f64().unwrap() >= 1.0, "{resp}");
+        let q = result.get("queue").unwrap();
+        for class in ["urgent", "interactive", "bulk"] {
+            assert_eq!(q.get(class).unwrap().as_f64().unwrap(), 0.0, "{resp}");
+        }
+        let lat = result.get("latency_us").unwrap().get("compile").unwrap();
+        assert!(lat.get("count").unwrap().as_f64().unwrap() >= 1.0, "{resp}");
+        assert!(result.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0, "{resp}");
+        assert!(result.get("cache").unwrap().get("misses").is_some(), "{resp}");
     }
 
     #[test]

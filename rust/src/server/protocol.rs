@@ -31,20 +31,60 @@ pub enum Command {
     Sweep(Box<SweepConfig>),
     /// Report cache / timing / queue statistics.
     Stats,
+    /// Report the observability snapshot ([`crate::server::metrics`]):
+    /// cache tiers, per-class queue depths, per-command latency
+    /// histograms, uptime and lifetime totals.
+    Metrics,
     /// Stop serving this connection after responding.
     Shutdown,
 }
 
+impl Command {
+    /// Stable wire key of the command (the `metrics` latency-histogram
+    /// keys).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Command::Compile(_) => "compile",
+            Command::Batch(_) => "batch",
+            Command::Lint(_) => "lint",
+            Command::Analyze(_) => "analyze",
+            Command::Sweep(_) => "sweep",
+            Command::Stats => "stats",
+            Command::Metrics => "metrics",
+            Command::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// One parsed request: the command plus its transport options (today just
+/// the opt-in `stream` flag for progress frames).
+#[derive(Debug)]
+pub struct Request {
+    /// The wire command.
+    pub cmd: Command,
+    /// `"stream": true` — emit `{"event":"progress",…}` frames before the
+    /// final envelope. Ignored by commands with nothing to stream.
+    pub stream: bool,
+}
+
 /// Parse one request line: returns the echoed `id` (JSON `null` when the
-/// line carries none or cannot be parsed) and the command or a protocol
+/// line carries none or cannot be parsed) and the request or a protocol
 /// error.
-pub fn parse_line(line: &str) -> (Json, Result<Command>) {
+pub fn parse_line(line: &str) -> (Json, Result<Request>) {
     let doc = match Json::parse(line) {
         Ok(doc) => doc,
         Err(e) => return (Json::Null, Err(anyhow!("request is not valid JSON: {e}"))),
     };
     let id = doc.get("id").cloned().unwrap_or(Json::Null);
-    (id, parse_command(&doc))
+    let req = parse_command(&doc).and_then(|cmd| {
+        let stream = match doc.get("stream") {
+            None => false,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => bail!("'stream' must be a bool"),
+        };
+        Ok(Request { cmd, stream })
+    });
+    (id, req)
 }
 
 fn parse_command(doc: &Json) -> Result<Command> {
@@ -81,10 +121,11 @@ fn parse_command(doc: &Json) -> Result<Command> {
         }
         "sweep" => Ok(Command::Sweep(Box::new(sweep_config(doc)?))),
         "stats" => Ok(Command::Stats),
+        "metrics" => Ok(Command::Metrics),
         "shutdown" => Ok(Command::Shutdown),
         other => {
             bail!(
-                "unknown cmd '{other}' (valid: analyze, batch, compile, lint, shutdown, stats, sweep)"
+                "unknown cmd '{other}' (valid: analyze, batch, compile, lint, metrics, shutdown, stats, sweep)"
             )
         }
     }
@@ -160,6 +201,23 @@ pub fn envelope_err(id: &Json, error: &str) -> Json {
         ("id", id.clone()),
         ("ok", Json::Bool(false)),
         ("error", Json::str(error)),
+    ])
+}
+
+/// Streamed progress frame:
+/// `{"done":k,"event":"progress","id":…,<payload>,"total":n}`.
+///
+/// Frames never carry an `ok` key, so clients can always distinguish a
+/// frame from the final envelope. The payload key is per command: `point`
+/// (a sweep design point, `null` for a failed compile), `row` (a batch
+/// row), or `source` (a streamed single compile).
+pub fn progress_frame(id: &Json, done: usize, total: usize, payload: (&str, Json)) -> Json {
+    Json::obj(vec![
+        ("done", Json::num(done as f64)),
+        ("event", Json::str("progress")),
+        ("id", id.clone()),
+        payload,
+        ("total", Json::num(total as f64)),
     ])
 }
 

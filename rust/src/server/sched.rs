@@ -1,0 +1,170 @@
+//! Priority job queue driving the compile service's handler pool.
+//!
+//! Every admitted request becomes a job in one of three priority classes
+//! ([`Priority`]): a fixed pool of handler threads pops the highest class
+//! first, FIFO within a class. Long-running commands (`sweep`, `batch`)
+//! are *yielding* jobs — the server processes one design point per pop and
+//! re-enqueues the remainder — so a cache-hit `compile` admitted while a
+//! multi-minute sweep is in flight is answered at the next yield point
+//! even with a single handler. `server/mod.rs` owns the job type and the
+//! yield protocol; this module is the queue itself.
+//!
+//! The queue is a plain `Mutex<[VecDeque; 3]>` + `Condvar`: pushes are one
+//! lock acquisition, a blocking [`Scheduler::pop`] sleeps on the condvar
+//! until work or [`Scheduler::close`]. Closing means "no more external
+//! admissions": handlers drain what remains (including re-enqueued tails
+//! of yielding jobs, which are always pushed by a still-live handler) and
+//! then `pop` returns `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Priority class of a scheduled job. Lower ordinal pops first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Answerable in ~constant time: `stats`, `metrics`, `shutdown`,
+    /// protocol errors, and `compile`/`lint`/`analyze` of designs already
+    /// resident in a cache tier.
+    Urgent = 0,
+    /// A single fresh synthesis (`compile`/`lint`/`analyze` of an uncached
+    /// design).
+    Interactive = 1,
+    /// Multi-point work (`sweep`, `batch`) that yields between design
+    /// points.
+    Bulk = 2,
+}
+
+impl Priority {
+    /// All classes, highest priority first.
+    pub const ALL: [Priority; 3] = [Priority::Urgent, Priority::Interactive, Priority::Bulk];
+
+    /// Stable wire key (the `metrics` response's `queue` object).
+    pub fn key(self) -> &'static str {
+        match self {
+            Priority::Urgent => "urgent",
+            Priority::Interactive => "interactive",
+            Priority::Bulk => "bulk",
+        }
+    }
+
+    /// Index into per-class arrays (`0` = highest priority).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+struct State<T> {
+    queues: [VecDeque<T>; 3],
+    closed: bool,
+}
+
+/// A closeable three-class priority queue (see module docs).
+pub struct Scheduler<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+}
+
+impl<T> Scheduler<T> {
+    /// Empty, open scheduler.
+    pub fn new() -> Scheduler<T> {
+        Scheduler {
+            state: Mutex::new(State {
+                queues: std::array::from_fn(|_| VecDeque::new()),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue `item` at the back of its class. Pushes are accepted even
+    /// after [`Scheduler::close`] — that is how yielding jobs re-enqueue
+    /// their tails while the queue drains.
+    pub fn push(&self, item: T, class: Priority) {
+        self.state.lock().unwrap().queues[class.index()].push_back(item);
+        self.ready.notify_one();
+    }
+
+    /// Pop the front of the highest non-empty class, blocking while the
+    /// queue is empty but still open. Returns `None` once the scheduler is
+    /// closed *and* drained — the handler-pool exit condition.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            for q in &mut st.queues {
+                if let Some(item) = q.pop_front() {
+                    return Some(item);
+                }
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Declare the end of external admissions and wake every blocked
+    /// popper. Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Queued (not yet popped) items per class, highest priority first.
+    /// A gauge for tests; the server's `metrics` command reports
+    /// admitted-but-unanswered depths instead, which also cover popped
+    /// jobs still being worked.
+    pub fn depths(&self) -> [usize; 3] {
+        let st = self.state.lock().unwrap();
+        std::array::from_fn(|i| st.queues[i].len())
+    }
+}
+
+impl<T> Default for Scheduler<T> {
+    fn default() -> Self {
+        Scheduler::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higher_class_pops_first_fifo_within_class() {
+        let s = Scheduler::new();
+        s.push("bulk-1", Priority::Bulk);
+        s.push("bulk-2", Priority::Bulk);
+        s.push("urgent-1", Priority::Urgent);
+        s.push("interactive-1", Priority::Interactive);
+        s.push("urgent-2", Priority::Urgent);
+        s.close();
+        let order: Vec<_> = std::iter::from_fn(|| s.pop()).collect();
+        assert_eq!(order, ["urgent-1", "urgent-2", "interactive-1", "bulk-1", "bulk-2"]);
+    }
+
+    #[test]
+    fn close_unblocks_and_drains() {
+        let s: Scheduler<u32> = Scheduler::new();
+        std::thread::scope(|scope| {
+            let popper = scope.spawn(|| s.pop());
+            s.push(7, Priority::Bulk);
+            assert_eq!(popper.join().unwrap(), Some(7));
+            s.close();
+            assert_eq!(s.pop(), None);
+            // Re-pushes after close are still served before None.
+            s.push(8, Priority::Urgent);
+            assert_eq!(s.pop(), Some(8));
+            assert_eq!(s.pop(), None);
+        });
+    }
+
+    #[test]
+    fn depths_track_classes() {
+        let s = Scheduler::new();
+        s.push((), Priority::Bulk);
+        s.push((), Priority::Bulk);
+        s.push((), Priority::Urgent);
+        assert_eq!(s.depths(), [1, 0, 2]);
+        assert_eq!(Priority::ALL.map(Priority::key), ["urgent", "interactive", "bulk"]);
+    }
+}

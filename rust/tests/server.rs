@@ -29,19 +29,17 @@ fn result_str<'a>(doc: &'a Json, key: &str) -> Option<&'a str> {
 }
 
 // ---------------------------------------------------------------------
-// The serve loop end-to-end: compile → identical compile → stats, single
-// worker so response order is deterministic.
+// The serve loop end-to-end: compile → identical compile through the
+// scheduled loop, then stats. Responses arrive in completion order and
+// are correlated by id (a `stats` sent alongside would be answered
+// *first* — it classifies urgent — so it is checked afterwards, where its
+// counters are deterministic).
 // ---------------------------------------------------------------------
 #[test]
 fn serve_loop_compile_hit_stats() {
     let srv = server();
     let req = DesignRequest::multiplier(6);
-    let input = format!(
-        "{}\n{}\n{}\n",
-        compile_line(1, &req),
-        compile_line(2, &req),
-        r#"{"cmd":"stats","id":3}"#
-    );
+    let input = format!("{}\n{}\n", compile_line(1, &req), compile_line(2, &req));
     let mut out = Vec::new();
     srv.serve(input.as_bytes(), &mut out, 1).unwrap();
     let lines: Vec<Json> = String::from_utf8(out)
@@ -49,18 +47,22 @@ fn serve_loop_compile_hit_stats() {
         .lines()
         .map(|l| Json::parse(l).unwrap())
         .collect();
-    assert_eq!(lines.len(), 3);
-    // One handler → FIFO responses.
+    assert_eq!(lines.len(), 2);
+    // The first admitted compile always synthesizes; the identical second
+    // one must hit the cache (same class → FIFO, so ids stay in order).
+    assert_eq!(lines[0].get("id").unwrap().as_f64(), Some(1.0));
     assert_eq!(result_str(&lines[0], "source"), Some("compiled"));
+    assert_eq!(lines[1].get("id").unwrap().as_f64(), Some(2.0));
     assert_eq!(
         result_str(&lines[1], "source"),
         Some("memory"),
         "the second identical request must be a cache hit"
     );
-    let cache = lines[2].get("result").unwrap().get("cache").unwrap();
+    let stats = Json::parse(&srv.handle_line(r#"{"cmd":"stats","id":3}"#)).unwrap();
+    let cache = stats.get("result").unwrap().get("cache").unwrap();
     assert!(cache.get("hits").unwrap().as_f64().unwrap() >= 1.0);
     assert_eq!(cache.get("misses").unwrap().as_f64().unwrap(), 1.0);
-    assert_eq!(lines[2].get("result").unwrap().get("served").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(stats.get("result").unwrap().get("served").unwrap().as_f64().unwrap(), 2.0);
 }
 
 // ---------------------------------------------------------------------
@@ -259,13 +261,16 @@ fn protocol_md_disk_entry_example_matches_real_entries() {
 fn protocol_md_examples_replay() {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../PROTOCOL.md");
     let text = std::fs::read_to_string(&path).unwrap();
-    // Collect (request, documented response) fence pairs, in order.
-    let mut pairs: Vec<(String, String)> = Vec::new();
-    let mut pending: Option<String> = None;
+    // Collect (request, documented frames, documented response) triples in
+    // document order. A ```json stream``` fence between a request and its
+    // response documents the progress frames of a `"stream": true`
+    // exchange, one NDJSON frame per line.
+    let mut triples: Vec<(String, Vec<String>, String)> = Vec::new();
+    let mut pending: Option<(String, Vec<String>)> = None;
     let mut lines = text.lines();
     while let Some(line) = lines.next() {
         let tag = line.trim();
-        if tag != "```json request" && tag != "```json response" {
+        if tag != "```json request" && tag != "```json stream" && tag != "```json response" {
             continue;
         }
         let mut body = String::new();
@@ -276,26 +281,74 @@ fn protocol_md_examples_replay() {
             body.push_str(l);
             body.push('\n');
         }
-        if tag == "```json request" {
-            assert!(pending.is_none(), "request block without a following response block");
-            pending = Some(body.trim().to_string());
-        } else {
-            let req = pending.take().expect("response block without a preceding request");
-            pairs.push((req, body));
+        match tag {
+            "```json request" => {
+                assert!(pending.is_none(), "request block without a following response block");
+                pending = Some((body.trim().to_string(), Vec::new()));
+            }
+            "```json stream" => {
+                let p = pending.as_mut().expect("stream block without a preceding request");
+                p.1.extend(body.trim().lines().map(str::to_string));
+            }
+            _ => {
+                let (req, frames) =
+                    pending.take().expect("response block without a preceding request");
+                triples.push((req, frames, body));
+            }
         }
     }
     assert!(pending.is_none(), "trailing request block without a response");
-    assert!(pairs.len() >= 9, "PROTOCOL.md should document ≥9 exchanges, found {}", pairs.len());
+    assert!(
+        triples.len() >= 12,
+        "PROTOCOL.md should document ≥12 exchanges, found {}",
+        triples.len()
+    );
+    assert!(
+        triples.iter().any(|(_, frames, _)| !frames.is_empty()),
+        "PROTOCOL.md should document at least one streamed exchange"
+    );
 
     // One server replays the whole document in order, so the cache-state
     // progression (compiled → memory) matches the narrative.
     let srv = server();
-    for (req, documented) in &pairs {
+    for (req, doc_frames, documented) in &triples {
         assert_eq!(req.lines().count(), 1, "wire requests are single NDJSON lines:\n{req}");
-        let actual = Json::parse(&srv.handle_line(req))
+        let mut output = srv.handle_line_all(req);
+        assert!(!output.is_empty(), "no output for {req}");
+        let actual = Json::parse(&output.pop().unwrap())
             .unwrap_or_else(|e| panic!("unparsable response for {req}: {e}"));
         let documented = Json::parse(documented)
             .unwrap_or_else(|e| panic!("unparsable documented response for {req}: {e}"));
+
+        // Progress frames: same count, same shape, never an envelope.
+        assert_eq!(
+            output.len(),
+            doc_frames.len(),
+            "frame count diverges for {req}: {output:?}"
+        );
+        for (af, df) in output.iter().zip(doc_frames) {
+            let af = Json::parse(af).unwrap_or_else(|e| panic!("unparsable frame for {req}: {e}"));
+            let df = Json::parse(df)
+                .unwrap_or_else(|e| panic!("unparsable documented frame for {req}: {e}"));
+            assert_eq!(obj_keys(&df), obj_keys(&af), "frame keys diverge for {req}");
+            assert!(af.get("ok").is_none(), "frames must not carry 'ok' for {req}: {af:?}");
+            assert_eq!(af.get("event").and_then(|e| e.as_str()), Some("progress"), "{req}");
+            for key in ["done", "total"] {
+                assert_eq!(
+                    df.get(key).and_then(|v| v.as_f64()),
+                    af.get(key).and_then(|v| v.as_f64()),
+                    "frame '{key}' diverges for {req}"
+                );
+            }
+            if let Some(ds) = df.get("source").and_then(|s| s.as_str()) {
+                assert_eq!(
+                    Some(ds),
+                    af.get("source").and_then(|s| s.as_str()),
+                    "frame source diverges for {req}"
+                );
+            }
+        }
+
         assert_eq!(
             documented.get("ok").and_then(|b| b.as_bool()),
             actual.get("ok").and_then(|b| b.as_bool()),

@@ -1,0 +1,205 @@
+//! Fault-injection harness for the TCP transport: truncated frames,
+//! garbage bytes, mid-stream disconnects, oversized request lines, and a
+//! stalled reader. Every fault must be absorbed as an error envelope or
+//! the loss of the *one* faulty connection — never a poisoned handler
+//! pool. Each test proves recovery by opening a fresh connection
+//! afterwards and compiling successfully.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::server::{compile_line, Server};
+use ufo_mac::util::Json;
+
+/// Start a 2-handler TCP server on an ephemeral port. The accept loop
+/// runs forever on a detached thread; it dies with the test binary.
+fn spawn_server() -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let engine = Arc::new(SynthEngine::new(EngineConfig {
+        workers: 2,
+        ..EngineConfig::default()
+    }));
+    let srv = Arc::new(Server::new(engine));
+    std::thread::spawn(move || {
+        let _ = srv.serve_listener(listener);
+    });
+    addr
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    stream
+}
+
+/// The recovery probe: a fresh connection must still compile.
+fn fresh_connection_compiles(addr: SocketAddr, width: usize) {
+    let mut stream = connect(addr);
+    writeln!(stream, "{}", compile_line(99, &DesignRequest::multiplier(width))).unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    let doc = Json::parse(&line).unwrap();
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "pool poisoned: {line}");
+}
+
+// ---------------------------------------------------------------------
+// A frame truncated by connection close (no trailing newline) is still
+// parsed — matching BufRead::read_line semantics — and answered with an
+// error envelope before the connection drains shut.
+// ---------------------------------------------------------------------
+#[test]
+fn truncated_frame_gets_error_envelope_then_eof() {
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    stream.write_all(br#"{"cmd":"compile","id":7"#).unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let doc = Json::parse(&line).unwrap();
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false), "{line}");
+    assert!(
+        doc.get("error").unwrap().as_str().unwrap().contains("not valid JSON"),
+        "{line}"
+    );
+    // Then EOF: the truncated connection closes after the one envelope.
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF, got {rest}");
+    fresh_connection_compiles(addr, 4);
+}
+
+// ---------------------------------------------------------------------
+// Garbage bytes (not even UTF-8) mid-stream cost one error envelope; the
+// *same* connection keeps working for the next well-formed line.
+// ---------------------------------------------------------------------
+#[test]
+fn garbage_bytes_then_valid_request_on_same_connection() {
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    stream.write_all(b"\x00\xff\xfegarbage\n").unwrap();
+    writeln!(stream, "{}", r#"{"cmd":"stats","id":42}"#).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // Two handlers race, so correlate by id rather than arrival order.
+    let (mut saw_err, mut saw_stats) = (false, false);
+    for _ in 0..2 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let doc = Json::parse(&line).unwrap();
+        match doc.get("id") {
+            Some(Json::Null) | None => {
+                assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false), "{line}");
+                saw_err = true;
+            }
+            Some(id) => {
+                assert_eq!(id.as_f64(), Some(42.0), "{line}");
+                assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{line}");
+                saw_stats = true;
+            }
+        }
+    }
+    assert!(saw_err && saw_stats);
+    fresh_connection_compiles(addr, 4);
+}
+
+// ---------------------------------------------------------------------
+// A client that disconnects mid-streamed-sweep loses only its own
+// results: remaining sweep steps are dropped (dead connection) and the
+// pool keeps serving fresh connections.
+// ---------------------------------------------------------------------
+#[test]
+fn client_disconnect_mid_sweep_does_not_poison_pool() {
+    let addr = spawn_server();
+    {
+        let mut stream = connect(addr);
+        writeln!(
+            stream,
+            "{}",
+            r#"{"cmd":"sweep","id":1,"methods":["ufo","gomil"],"strategies":["tradeoff"],"stream":true,"widths":[5,6]}"#
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        // Read exactly one progress frame, then hang up mid-stream.
+        let mut reader = BufReader::new(stream);
+        let mut frame = String::new();
+        reader.read_line(&mut frame).unwrap();
+        let doc = Json::parse(&frame).unwrap();
+        assert_eq!(doc.get("event").unwrap().as_str(), Some("progress"), "{frame}");
+    } // connection dropped here with 3 design points outstanding
+    fresh_connection_compiles(addr, 4);
+    // ...and uses the cache entries the aborted sweep still populated.
+    fresh_connection_compiles(addr, 5);
+}
+
+// ---------------------------------------------------------------------
+// An unterminated line beyond the 1 MiB cap costs that connection (with
+// a best-effort error envelope) — it cannot grow the read buffer without
+// bound or wedge the multiplexer.
+// ---------------------------------------------------------------------
+#[test]
+fn oversized_request_line_drops_only_that_connection() {
+    let addr = spawn_server();
+    let mut stream = connect(addr);
+    let chunk = vec![b'a'; 64 * 1024];
+    // Push well past the cap; the server may hang up mid-write, so write
+    // errors here are expected and ignored.
+    for _ in 0..20 {
+        if stream.write_all(&chunk).is_err() {
+            break;
+        }
+    }
+    let _ = stream.flush();
+    // Best-effort read of the error envelope (the server may have reset
+    // the connection first; either way it must not take the pool down).
+    let mut line = String::new();
+    if BufReader::new(stream).read_line(&mut line).is_ok() && !line.is_empty() {
+        assert!(line.contains("request line exceeds"), "{line}");
+    }
+    fresh_connection_compiles(addr, 4);
+}
+
+// ---------------------------------------------------------------------
+// A connection that streams a sweep but never reads must not stall
+// responses to other connections (per-connection writers, shared pool).
+// ---------------------------------------------------------------------
+#[test]
+fn stalled_reader_does_not_stall_other_connections() {
+    let addr = spawn_server();
+    let mut stalled = connect(addr);
+    writeln!(
+        stalled,
+        "{}",
+        r#"{"cmd":"sweep","id":1,"methods":["ufo","gomil"],"strategies":["area","timing","tradeoff"],"stream":true,"widths":[7]}"#
+    )
+    .unwrap();
+    stalled.flush().unwrap();
+    // Never read `stalled`; its frames sit in the socket buffer while a
+    // second connection gets served.
+    fresh_connection_compiles(addr, 4);
+    // The stalled connection is still alive and eventually delivers all
+    // six frames plus the final envelope.
+    let mut reader = BufReader::new(stalled);
+    let mut frames = 0;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let doc = Json::parse(&line).unwrap();
+        if doc.get("event").is_some() {
+            frames += 1;
+        } else {
+            assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{line}");
+            assert_eq!(
+                doc.get("result").unwrap().get("count").unwrap().as_f64(),
+                Some(6.0),
+                "{line}"
+            );
+            break;
+        }
+    }
+    assert_eq!(frames, 6);
+}

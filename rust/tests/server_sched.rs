@@ -1,0 +1,116 @@
+//! Scheduler behavior under load: cache-hit compiles must preempt an
+//! in-flight sweep (no starvation), streamed progress must be monotone,
+//! and sweep results must not depend on the handler count.
+
+use std::sync::Arc;
+use ufo_mac::api::{DesignRequest, EngineConfig, SynthEngine};
+use ufo_mac::server::{compile_line, Server};
+use ufo_mac::util::Json;
+
+fn server_with_workers(workers: usize) -> Server {
+    Server::new(Arc::new(SynthEngine::new(EngineConfig {
+        workers,
+        ..EngineConfig::default()
+    })))
+}
+
+const SWEEP: &str = r#"{"cmd":"sweep","id":100,"methods":["ufo","gomil"],"strategies":["tradeoff"],"stream":true,"widths":[6,7]}"#;
+
+// ---------------------------------------------------------------------
+// Starvation: a burst of cache-hit compiles admitted behind a long
+// streamed sweep must all be answered before the sweep's final envelope —
+// the sweep yields between design points and cache hits classify urgent.
+// ---------------------------------------------------------------------
+#[test]
+fn cached_compiles_preempt_an_in_flight_sweep() {
+    let srv = server_with_workers(2);
+    // Prewarm one design so the burst classifies as cache hits (urgent).
+    let warm = DesignRequest::multiplier(4);
+    let resp = srv.handle_line(&compile_line(1, &warm));
+    assert!(resp.contains(r#""source":"compiled""#), "{resp}");
+
+    let mut input = format!("{SWEEP}\n");
+    let burst = 8;
+    for i in 0..burst {
+        input.push_str(&compile_line(200 + i, &warm));
+        input.push('\n');
+    }
+    let mut out = Vec::new();
+    srv.serve(input.as_bytes(), &mut out, 2).unwrap();
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+
+    let sweep_final = lines
+        .iter()
+        .position(|l| {
+            l.get("event").is_none() && l.get("id").and_then(|i| i.as_f64()) == Some(100.0)
+        })
+        .expect("sweep final envelope present");
+    let compile_envelopes: Vec<usize> = lines
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.get("id").and_then(|i| i.as_f64()).unwrap_or(0.0) >= 200.0)
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(compile_envelopes.len() as u64, burst, "{lines:?}");
+    for &pos in &compile_envelopes {
+        assert!(
+            pos < sweep_final,
+            "cache-hit compile at line {pos} was starved past the sweep final at {sweep_final}"
+        );
+        assert_eq!(
+            lines[pos].get("result").unwrap().get("source").unwrap().as_str(),
+            Some("memory"),
+            "{:?}",
+            lines[pos]
+        );
+    }
+
+    // Progress frames of the sweep stay strictly monotone even while the
+    // burst preempts it between points.
+    let dones: Vec<f64> = lines
+        .iter()
+        .filter(|l| l.get("event").is_some())
+        .map(|l| l.get("done").unwrap().as_f64().unwrap())
+        .collect();
+    assert_eq!(dones, vec![1.0, 2.0, 3.0, 4.0], "{lines:?}");
+    // And the final envelope still carries every point.
+    assert_eq!(
+        lines[sweep_final].get("result").unwrap().get("count").unwrap().as_f64(),
+        Some(4.0)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Handler-count independence: the same streamed sweep through 1, 2 and 4
+// handlers yields byte-identical point lists and the same monotone frame
+// sequence — scheduling may change *when* things run, never the results.
+// ---------------------------------------------------------------------
+#[test]
+fn sweep_results_are_independent_of_worker_count() {
+    let mut rendered: Vec<String> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let srv = server_with_workers(workers);
+        let mut out = Vec::new();
+        srv.serve(format!("{SWEEP}\n").as_bytes(), &mut out, workers).unwrap();
+        let lines: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(lines.len(), 5, "4 frames + final with {workers} workers: {lines:?}");
+        for (i, frame) in lines[..4].iter().enumerate() {
+            assert_eq!(frame.get("event").unwrap().as_str(), Some("progress"));
+            assert_eq!(frame.get("done").unwrap().as_f64(), Some((i + 1) as f64));
+            assert_eq!(frame.get("total").unwrap().as_f64(), Some(4.0));
+        }
+        let result = lines[4].get("result").unwrap();
+        assert_eq!(result.get("count").unwrap().as_f64(), Some(4.0));
+        rendered.push(result.get("points").unwrap().render());
+    }
+    assert_eq!(rendered[0], rendered[1], "1 vs 2 workers");
+    assert_eq!(rendered[1], rendered[2], "2 vs 4 workers");
+}
