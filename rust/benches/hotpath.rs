@@ -17,7 +17,16 @@
 //!   delta — `sta_full_64x64` vs `sta_full_64x64_legacy_ir`,
 //!   `compiled_build_run_64x64` vs its `_legacy_ir` twin;
 //! - **serial vs parallel equivalence** at 32×32
-//!   (`equiv_sampled_32x32_parallel`, deterministic counterexamples).
+//!   (`equiv_sampled_32x32_parallel`, deterministic counterexamples);
+//! - **narrow vs wide lanes** (the PR-10 tentpole): the width-4 bit-slice
+//!   kernel swept against four width-1 runs over the same 256 vectors
+//!   (`sim_run_16bit_256lanes_w4` vs `_w1x4`), the equivalence sweep at
+//!   width 4, and the width-pinned toggle-activity extraction;
+//! - **end-to-end `designs_per_second`**: a small coordinator sweep
+//!   through a fresh engine (cold) and a warm content-addressed cache,
+//!   reported as a throughput *metric* so `ufo-mac bench-check` floors it
+//!   (a drop below baseline/ratio fails CI) — served throughput as a
+//!   headline number, not just micro-latency.
 //!
 //! Results land in `BENCH_hotpath.json` via `Bench::finish`; the CI
 //! bench-smoke gate (`ufo-mac bench-check`) compares them against
@@ -57,9 +66,40 @@ fn main() {
         sim.word(design.product[0])
     });
 
-    // Toggle-activity power extraction (16 rounds × 64 lanes).
+    // Wide-lane kernel: 256 vectors in one width-4 sweep vs four width-1
+    // sweeps over the same slabs. Results are bit-identical by
+    // construction; the delta is pure per-walk amortization.
+    let mut wrng = Rng::seed_from_u64(9);
+    let wide_slab: Vec<u64> = (0..nl.num_inputs() * 4).map(|_| wrng.next_u64()).collect();
+    let mut wide_buf: Vec<u64> = Vec::new();
+    let mut narrow_buf: Vec<u64> = Vec::new();
+    let comp16 = CompiledNetlist::compile(nl);
+    let wide4 = bench.bench("sim_run_16bit_256lanes_w4", || {
+        comp16.run_wide_into(4, &mut wide_buf, &wide_slab);
+        wide_buf[design.product[0].index() * 4]
+    });
+    let mut narrow_in = vec![0u64; nl.num_inputs()];
+    let narrow4 = bench.bench("sim_run_16bit_256lanes_w1x4", || {
+        let mut acc = 0u64;
+        for w in 0..4 {
+            for (k, word) in narrow_in.iter_mut().enumerate() {
+                *word = wide_slab[k * 4 + w];
+            }
+            comp16.run_into(&mut narrow_buf, &narrow_in);
+            acc ^= narrow_buf[design.product[0].index()];
+        }
+        acc
+    });
+    bench.metric("sim_wide_speedup_16bit_w4", narrow4.mean_ns / wide4.mean_ns.max(1.0), "x");
+
+    // Toggle-activity power extraction (16 rounds × 64 lanes), width-pinned
+    // so the entry is comparable across environments regardless of
+    // UFO_SIM_WIDTH; the w4 twin measures the wide production default.
     bench.bench("toggle_activity_16bit_16rounds", || {
-        ufo_mac::sim::toggle_activity(nl, 16, 7)
+        ufo_mac::sim::toggle_activity_wide(nl, 16, 7, 1)
+    });
+    bench.bench("toggle_activity_16bit_16rounds_w4", || {
+        ufo_mac::sim::toggle_activity_wide(nl, 16, 7, 4)
     });
 
     // Bottleneck assignment at CT-slice scale (m = 16 and 32).
@@ -223,13 +263,15 @@ fn main() {
     });
 
     // Sampled equivalence at 32×32: one worker vs all cores over the same
-    // deterministic batch plan (identical counterexamples by design).
+    // deterministic batch plan (identical counterexamples by design), then
+    // the width-4 wide-lane sweep on both thread counts — every variant
+    // reports byte-identical results; only the wall-clock moves.
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
     let eq_budget = 1usize << 14;
     let eq_ser = bench.bench("equiv_sampled_32x32_serial", || {
         ufo_mac::equiv::check_multiplier_opts(
             &d32,
-            &EquivOptions { budget: eq_budget, threads: 1 },
+            &EquivOptions { budget: eq_budget, threads: 1, width: 1 },
         )
         .unwrap()
         .vectors
@@ -237,7 +279,7 @@ fn main() {
     let eq_par = bench.bench("equiv_sampled_32x32_parallel", || {
         ufo_mac::equiv::check_multiplier_opts(
             &d32,
-            &EquivOptions { budget: eq_budget, threads },
+            &EquivOptions { budget: eq_budget, threads, width: 1 },
         )
         .unwrap()
         .vectors
@@ -245,6 +287,27 @@ fn main() {
     bench.metric(
         "equiv_parallel_speedup_32x32",
         eq_ser.mean_ns / eq_par.mean_ns.max(1.0),
+        "x",
+    );
+    let eq_wide = bench.bench("equiv_sampled_32x32_wide4_serial", || {
+        ufo_mac::equiv::check_multiplier_opts(
+            &d32,
+            &EquivOptions { budget: eq_budget, threads: 1, width: 4 },
+        )
+        .unwrap()
+        .vectors
+    });
+    bench.bench("equiv_sampled_32x32_wide4_parallel", || {
+        ufo_mac::equiv::check_multiplier_opts(
+            &d32,
+            &EquivOptions { budget: eq_budget, threads, width: 4 },
+        )
+        .unwrap()
+        .vectors
+    });
+    bench.metric(
+        "equiv_wide_speedup_32x32_w4",
+        eq_ser.mean_ns / eq_wide.mean_ns.max(1.0),
         "x",
     );
 
@@ -344,6 +407,63 @@ fn main() {
         ufo_mac::ct::assign_ilp(&counts, &ilp_opts(threads)).0.stages()
     });
     bench.metric("ilp_parallel_speedup", ser.mean_ns / par.mean_ns.max(1.0), "x");
+
+    // ---- End-to-end served throughput: designs per second ----
+    //
+    // A small but real coordinator sweep (method × strategy grid at one
+    // width, sampled verification on) through `run_sweep_with` — the exact
+    // code path the server's `sweep` command and the CLI's DSE drive. Two
+    // variants: a fresh engine per sample (cold — every point pays
+    // synthesis + verification) and one warm engine reused across samples
+    // (every point is a content-addressed cache hit — the steady state a
+    // long-running service converges to). Both are reported as *metrics*
+    // so `ufo-mac bench-check` floors them: a future PR that drops served
+    // throughput below baseline/ratio fails CI even if every
+    // microbenchmark above still passes.
+    let sweep_cfg = ufo_mac::coordinator::SweepConfig {
+        widths: vec![8],
+        // Closed-form methods only: RL-MUL's 60-iteration search would
+        // dominate the sample and measure the search loop, not the
+        // synthesize→analyze→verify pipeline this gate protects.
+        methods: vec![
+            ufo_mac::baselines::Method::UfoMac,
+            ufo_mac::baselines::Method::Gomil,
+            ufo_mac::baselines::Method::Commercial,
+        ],
+        strategies: vec![
+            ufo_mac::multiplier::Strategy::TradeOff,
+            ufo_mac::multiplier::Strategy::AreaDriven,
+        ],
+        signedness: vec![ufo_mac::ppg::Signedness::Unsigned],
+        workers: threads,
+        verify_vectors: 1 << 10,
+        use_pjrt: false,
+        ..Default::default()
+    };
+    let sweep_points = ufo_mac::coordinator::sweep_requests(&sweep_cfg).len() as f64;
+    let cold = bench.bench("coordinator_sweep_8bit_cold", || {
+        let eng = SynthEngine::new(EngineConfig {
+            verify_vectors: sweep_cfg.verify_vectors,
+            workers: sweep_cfg.workers,
+            ..EngineConfig::default()
+        });
+        ufo_mac::coordinator::run_sweep_with(&eng, &sweep_cfg).len()
+    });
+    let warm_eng = SynthEngine::new(EngineConfig {
+        verify_vectors: sweep_cfg.verify_vectors,
+        workers: sweep_cfg.workers,
+        ..EngineConfig::default()
+    });
+    ufo_mac::coordinator::run_sweep_with(&warm_eng, &sweep_cfg); // prime the cache
+    let warm = bench.bench("coordinator_sweep_8bit_warm", || {
+        ufo_mac::coordinator::run_sweep_with(&warm_eng, &sweep_cfg).len()
+    });
+    bench.metric("designs_per_second", sweep_points / (cold.min_ns / 1e9), "designs/s");
+    bench.metric(
+        "designs_per_second_warm",
+        sweep_points / (warm.min_ns / 1e9),
+        "designs/s",
+    );
 
     bench.finish().expect("write BENCH_hotpath.json");
 }

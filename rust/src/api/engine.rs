@@ -631,8 +631,13 @@ impl SynthEngine {
             // Single-threaded sweep: compiles already fan out across the
             // engine's worker pool (compile_batch, the server), so a
             // parallel inner verify would only oversubscribe the cores.
-            let opts =
-                crate::equiv::EquivOptions { budget: self.cfg.verify_vectors, threads: 1 };
+            // Lane width comes from the process-wide default (UFO_SIM_WIDTH)
+            // — reports are width-independent, so this is purely throughput.
+            let opts = crate::equiv::EquivOptions {
+                budget: self.cfg.verify_vectors,
+                threads: 1,
+                ..Default::default()
+            };
             Some(crate::equiv::check_multiplier_opts(&design, &opts)?.passed)
         } else {
             None

@@ -180,10 +180,12 @@ pub fn evaluate_point_fmt(
     let art = crate::api::engine().compile(&req)?;
     let design = art.design().expect("method artifact carries a design");
     // threads: 1 — sweep points already run on the coordinator's worker
-    // pool; a parallel inner verify would oversubscribe the cores.
+    // pool; a parallel inner verify would oversubscribe the cores. The
+    // lane width rides the process-wide default (wide sweeps are a pure
+    // throughput knob; reports are width-independent).
     let equiv = crate::equiv::check_multiplier_opts(
         design,
-        &crate::equiv::EquivOptions { budget: verify_vectors, threads: 1 },
+        &crate::equiv::EquivOptions { budget: verify_vectors, threads: 1, ..Default::default() },
     )?;
     let pjrt_verified = match rt {
         Some(rt) if rt.has_artifact("netlist_eval_small") => {

@@ -36,6 +36,15 @@ pub fn expand(nl: &mut Netlist, graph: &PrefixGraph, cols: &[CpaColumn]) -> CpaO
     let n = graph.n;
     assert_eq!(n, cols.len(), "CPA width mismatch");
     let blue = blue_mask(graph);
+    let live = graph.live_mask();
+
+    // The expansion's gate population is bounded by the graph shape: ≤ 2
+    // pg gates per column, ≤ 3 gates per live prefix node (black = 3,
+    // blue = 2), n − 1 sum XORs, and at most one shared constant. One
+    // up-front reservation keeps the whole CPA build from reallocating
+    // (EXPERIMENTS.md §Perf, `netlist_build_64x64`).
+    let live_prefix = live[n..].iter().filter(|&&l| l).count();
+    nl.reserve(2 * n + 3 * live_prefix + n);
 
     // pg generation per bit.
     let mut p = Vec::with_capacity(n);
@@ -62,7 +71,6 @@ pub fn expand(nl: &mut Netlist, graph: &PrefixGraph, cols: &[CpaColumn]) -> CpaO
         node_g[i] = g[i];
         node_p[i] = Some(p[i]);
     }
-    let live = graph.live_mask();
     for i in n..graph.nodes.len() {
         if !live[i] {
             continue;

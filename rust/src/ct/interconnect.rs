@@ -91,21 +91,42 @@ pub fn build_ct(
         OrderStrategy::Random(seed) => Some(Rng::seed_from_u64(seed)),
         _ => None,
     };
+    // The plan fixes the gate population exactly: 5 gates per 3:2 and 2 per
+    // 2:2 compressor. One up-front reservation keeps node insertion from
+    // reallocating mid-build (EXPERIMENTS.md §Perf, `netlist_build_64x64`).
+    let (total_fa, total_ha) = plan.compressor_totals();
+    nl.reserve(5 * total_fa + 2 * total_ha);
 
     let column_worst = |state: &[Vec<Sig>]| -> Vec<f64> {
         state.iter().map(|c| c.iter().map(|s| s.t).fold(0.0, f64::max)).collect()
     };
     let mut stage_profiles: Vec<Vec<f64>> = Vec::with_capacity(plan.stages());
 
+    // Per-slice scratch, hoisted out of the stage loop and reused so the
+    // steady state of the build is allocation-free: sources/sinks/cost
+    // rows/compressor-port tables all keep their high-water capacity.
+    let mut next: Vec<Vec<Sig>> = vec![Vec::new(); w];
+    let mut sources: Vec<Sig> = Vec::new();
+    let mut sinks: Vec<Sink> = Vec::new();
+    let mut cost: Vec<Vec<f64>> = Vec::new();
+    let mut perm: Vec<usize> = Vec::new();
+    let mut fa_in: Vec<[Option<Sig>; 3]> = Vec::new();
+    let mut ha_in: Vec<[Option<Sig>; 2]> = Vec::new();
+
     for i in 0..plan.stages() {
-        let mut next: Vec<Vec<Sig>> = vec![Vec::new(); w];
+        for col in next.iter_mut() {
+            col.clear();
+        }
         for j in 0..w {
             let (nf, nh) = if j < plan.width() {
                 (plan.f[i][j], plan.h[i][j])
             } else {
                 (0, 0)
             };
-            let sources = std::mem::take(&mut state[j]);
+            // Drain the column into the reusable source buffer; the column
+            // Vec keeps its capacity for the ping-ponged next stage.
+            sources.clear();
+            sources.append(&mut state[j]);
             let m = sources.len();
             assert!(
                 3 * nf + 2 * nh <= m,
@@ -113,7 +134,7 @@ pub fn build_ct(
             );
 
             // Sink list: FA ports, HA ports, then pass-throughs.
-            let mut sinks: Vec<Sink> = Vec::with_capacity(m);
+            sinks.clear();
             for c in 0..nf {
                 for p in 0..3 {
                     sinks.push(Sink::Fa { comp: c, port: p });
@@ -129,41 +150,45 @@ pub fn build_ct(
             }
 
             // Decide the bijection source→sink.
-            let perm: Vec<usize> = match strategy {
-                OrderStrategy::Naive => (0..m).collect(),
+            match strategy {
+                OrderStrategy::Naive => {
+                    perm.clear();
+                    perm.extend(0..m);
+                }
                 OrderStrategy::Random(_) => {
-                    let mut p: Vec<usize> = (0..m).collect();
-                    rng.as_mut().unwrap().shuffle(&mut p);
-                    p
+                    perm.clear();
+                    perm.extend(0..m);
+                    rng.as_mut().unwrap().shuffle(&mut perm);
                 }
                 OrderStrategy::Optimized => {
                     if m == 0 {
-                        vec![]
+                        perm.clear();
                     } else {
                         // cost[u][v] = arrival(u) + worst port→output delay(v)
-                        let cost: Vec<Vec<f64>> = sources
-                            .iter()
-                            .map(|s| {
-                                sinks
-                                    .iter()
-                                    .map(|snk| {
-                                        s.t + match snk {
-                                            Sink::Fa { port, .. } => tm.fa_port_worst(*port),
-                                            Sink::Ha { .. } => tm.ha_port_worst(),
-                                            Sink::Pass => 0.0,
-                                        }
-                                    })
-                                    .collect()
-                            })
-                            .collect();
-                        bottleneck_assignment(&cost).0
+                        while cost.len() < m {
+                            cost.push(Vec::new());
+                        }
+                        for (u, s) in sources.iter().enumerate() {
+                            let row = &mut cost[u];
+                            row.clear();
+                            row.extend(sinks.iter().map(|snk| {
+                                s.t + match snk {
+                                    Sink::Fa { port, .. } => tm.fa_port_worst(*port),
+                                    Sink::Ha { .. } => tm.ha_port_worst(),
+                                    Sink::Pass => 0.0,
+                                }
+                            }));
+                        }
+                        perm = bottleneck_assignment(&cost[..m]).0;
                     }
                 }
-            };
+            }
 
             // Gather per-compressor inputs.
-            let mut fa_in: Vec<[Option<Sig>; 3]> = vec![[None; 3]; nf];
-            let mut ha_in: Vec<[Option<Sig>; 2]> = vec![[None; 2]; nh];
+            fa_in.clear();
+            fa_in.resize(nf, [None; 3]);
+            ha_in.clear();
+            ha_in.resize(nh, [None; 2]);
             for (u, &v) in perm.iter().enumerate() {
                 match sinks[v] {
                     Sink::Fa { comp, port } => fa_in[comp][port] = Some(sources[u]),
@@ -173,14 +198,14 @@ pub fn build_ct(
             }
 
             // Instantiate.
-            for ins in fa_in {
+            for ins in &fa_in {
                 let out = full_adder(nl, tm, ins[0].unwrap(), ins[1].unwrap(), ins[2].unwrap());
                 next[j].push(out.sum);
                 if j + 1 < w {
                     next[j + 1].push(out.carry);
                 }
             }
-            for ins in ha_in {
+            for ins in &ha_in {
                 let out = half_adder(nl, tm, ins[0].unwrap(), ins[1].unwrap());
                 next[j].push(out.sum);
                 if j + 1 < w {
@@ -188,7 +213,7 @@ pub fn build_ct(
                 }
             }
         }
-        state = next;
+        std::mem::swap(&mut state, &mut next);
         stage_profiles.push(column_worst(&state));
     }
 

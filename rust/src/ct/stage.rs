@@ -75,6 +75,16 @@ impl StagePlan {
         self.f.first().map_or(0, |r| r.len())
     }
 
+    /// Total `(3:2, 2:2)` compressors over all stages and columns — the
+    /// exact gate population the plan will instantiate, used by
+    /// [`super::interconnect::build_ct`] to reserve netlist capacity once
+    /// up front instead of reallocating per gate.
+    pub fn compressor_totals(&self) -> (usize, usize) {
+        let fa = self.f.iter().map(|row| row.iter().sum::<usize>()).sum();
+        let ha = self.h.iter().map(|row| row.iter().sum::<usize>()).sum();
+        (fa, ha)
+    }
+
     /// Compute the per-stage arrival snapshot of this plan over the given
     /// initial column populations (all entering at t = 0 relative to the
     /// PPG outputs). See [`StagePlan::timing_with_arrivals`].
@@ -106,10 +116,20 @@ impl StagePlan {
         t_now.resize(w, 0.0);
         let mut snapshots = Vec::with_capacity(self.stages() + 1);
         snapshots.push(t_now.clone());
+        // Per-stage scratch reused across iterations (this runs once per
+        // *candidate plan* in the annealer loops, so steady-state
+        // allocation-freedom matters; only the snapshots themselves are
+        // fresh allocations, and those are the function's output).
+        let mut pop_next: Vec<usize> = Vec::with_capacity(w);
+        let mut t_next: Vec<f64> = Vec::with_capacity(w);
+        let mut carry_in: Vec<f64> = Vec::with_capacity(w);
         for i in 0..self.stages() {
-            let mut pop_next = pop.clone();
-            let mut t_next = vec![0.0f64; w];
-            let mut carry_in = vec![0.0f64; w];
+            pop_next.clear();
+            pop_next.extend_from_slice(&pop);
+            t_next.clear();
+            t_next.resize(w, 0.0);
+            carry_in.clear();
+            carry_in.resize(w, 0.0);
             for j in 0..w {
                 let (fij, hij) = if j < self.width() { (self.f[i][j], self.h[i][j]) } else { (0, 0) };
                 let consumed = 3 * fij + 2 * hij;
@@ -139,8 +159,8 @@ impl StagePlan {
             for j in 0..w {
                 t_next[j] = t_next[j].max(carry_in[j]);
             }
-            pop = pop_next;
-            t_now = t_next;
+            std::mem::swap(&mut pop, &mut pop_next);
+            std::mem::swap(&mut t_now, &mut t_next);
             snapshots.push(t_now.clone());
         }
         StageTiming { snapshots }

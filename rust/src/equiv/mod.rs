@@ -21,10 +21,23 @@
 //! lowest-index failing batch, so every worker count (including 1)
 //! reports the identical counterexample — pinned by
 //! `rust/tests/ir_flat.rs`.
+//!
+//! ## Wide lanes
+//!
+//! [`EquivOptions::width`] selects the simulator lane width `W`: each
+//! claimed unit of work is a **group of `W` consecutive plan batches**
+//! (`[g·W, g·W + W)`), packed into one stride-`W` slab and evaluated in a
+//! single wide sweep. The plan itself is untouched — batch `k`'s 64
+//! vectors are the same for every `W` — and groups are scanned slot-by-
+//! slot in plan order, with failures recorded under their *plan-batch*
+//! index. The reported counterexample and vector count are therefore
+//! byte-identical for every lane width and worker count (also pinned by
+//! `rust/tests/ir_flat.rs`); `W` only sets how many batches amortize one
+//! walk of the netlist.
 
 use crate::coordinator::pool;
 use crate::multiplier::Design;
-use crate::sim::{lane_value, ClockedSim, CompiledNetlist};
+use crate::sim::{self, wide_lane_value, ClockedSim, CompiledNetlist};
 use crate::Result;
 use anyhow::bail;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -54,11 +67,16 @@ pub struct EquivOptions {
     /// count are identical for every thread count; small runs (fewer than
     /// 8 batches) fall back to a single inline worker.
     pub threads: usize,
+    /// Simulator lane width (one of [`crate::sim::SUPPORTED_WIDTHS`]):
+    /// each worker evaluates `width` consecutive plan batches per wide
+    /// sweep. Reports are byte-identical for every width — this is purely
+    /// a throughput knob. Defaults to [`crate::sim::default_width`].
+    pub width: usize,
 }
 
 impl Default for EquivOptions {
     fn default() -> Self {
-        EquivOptions { budget: 1 << 14, threads: default_threads() }
+        EquivOptions { budget: 1 << 14, threads: default_threads(), width: sim::default_width() }
     }
 }
 
@@ -93,7 +111,7 @@ pub fn check_multiplier_opts(design: &Design, opts: &EquivOptions) -> Result<Equ
     } else {
         VectorPlan::sampled(design, opts.budget)
     };
-    Ok(run_plan(design, &plan, opts.threads))
+    Ok(run_plan(design, &plan, opts.threads, opts.width))
 }
 
 /// Bounded sequential equivalence for a pipelined design: unroll the
@@ -128,7 +146,7 @@ pub fn check_pipelined(design: &Design, opts: &EquivOptions) -> Result<EquivRepo
     } else {
         VectorPlan::sampled(design, opts.budget)
     };
-    Ok(run_plan_clocked(design, &plan, opts.threads, info.stages))
+    Ok(run_plan_clocked(design, &plan, opts.threads, opts.width, info.stages))
 }
 
 /// As [`check_pipelined`] with an explicit sampled-vector budget.
@@ -280,90 +298,106 @@ fn corner_list(bits: usize) -> Vec<u128> {
     corners
 }
 
-/// Pack one batch of `(a, b, c)` triples into per-input lane words.
-/// Inputs are created in a-then-b-then-c order by the generators, so
-/// operands pack straight into lane words. `extra` appends that many
-/// zeroed trailing words (the pipelined netlists' `pipe_en`/`pipe_clr`
-/// control ordinals, set by the caller).
-fn pack_operands(
+/// Pack one batch of `(a, b, c)` triples into slot `slot` of a
+/// stride-`width` input slab (zeroed by the caller). Inputs are created in
+/// a-then-b-then-c order by the generators, so operands pack straight into
+/// lane words; any trailing input words beyond the operand bits (the
+/// pipelined netlists' `pipe_en`/`pipe_clr` control ordinals) are left for
+/// the caller to set.
+fn pack_operands_wide(
     design: &Design,
-    words: &mut Vec<u64>,
+    slab: &mut [u64],
+    width: usize,
+    slot: usize,
     batch: &[(u128, u128, u128)],
-    extra: usize,
 ) {
     let a_bits = design.a.len();
     let b_bits = design.b.len();
     let c_bits = design.c.len();
-    words.clear();
-    words.resize(a_bits + b_bits + c_bits + extra, 0);
     for (lane, (a, b, c)) in batch.iter().enumerate() {
         let bit = 1u64 << lane;
         for k in 0..a_bits {
             if a >> k & 1 == 1 {
-                words[k] |= bit;
+                slab[k * width + slot] |= bit;
             }
         }
         for k in 0..b_bits {
             if b >> k & 1 == 1 {
-                words[a_bits + k] |= bit;
+                slab[(a_bits + k) * width + slot] |= bit;
             }
         }
         for k in 0..c_bits {
             if c >> k & 1 == 1 {
-                words[a_bits + b_bits + k] |= bit;
+                slab[(a_bits + b_bits + k) * width + slot] |= bit;
             }
         }
     }
 }
 
-/// Pack one batch into lane words, simulate, and compare lanes against the
-/// golden model. `buf`/`words` are reusable scratch buffers.
-fn run_batch(
+/// Scan a completed wide sweep slot-by-slot in plan order and report the
+/// first mismatching lane as `(plan_batch_offset, cex)` — the in-group
+/// counterpart of the global minimum-failing-batch selection.
+fn scan_group(
     design: &Design,
-    comp: &CompiledNetlist<'_>,
-    buf: &mut Vec<u64>,
-    words: &mut Vec<u64>,
-    batch: &[(u128, u128, u128)],
-) -> Option<(u128, u128, u128, u128, u128)> {
-    pack_operands(design, words, batch, 0);
-    comp.run_into(buf, words);
-    for (lane, (a, b, c)) in batch.iter().enumerate() {
-        let got = lane_value(buf, &design.product, lane as u32);
-        let want = design.expected(*a, *b, *c);
-        if got != want {
-            return Some((*a, *b, *c, got, want));
+    view: &[u64],
+    width: usize,
+    batches: &[Vec<(u128, u128, u128)>],
+) -> Option<(usize, (u128, u128, u128, u128, u128))> {
+    for (w, batch) in batches.iter().enumerate() {
+        for (lane, (a, b, c)) in batch.iter().enumerate() {
+            let got = wide_lane_value(view, width, w, &design.product, lane as u32);
+            let want = design.expected(*a, *b, *c);
+            if got != want {
+                return Some((w, (*a, *b, *c, got, want)));
+            }
         }
     }
     None
 }
 
-/// Execute a plan with `threads` workers claiming batch indices from an
-/// atomic cursor. Any worker that finds a failure records `(batch, cex)`
-/// and lowers the shared fail bound; workers stop claiming past it. The
-/// reported counterexample is the one from the minimum failing batch
-/// index, so the result is independent of the worker count.
-fn run_plan(design: &Design, plan: &VectorPlan, threads: usize) -> EquivReport {
+/// Execute a plan with `threads` workers claiming **groups** of `width`
+/// consecutive batch indices from an atomic cursor; each group is one wide
+/// sweep. Any worker that finds a failure records `(plan_batch, cex)` and
+/// lowers the shared fail bound; workers stop claiming groups past it. The
+/// reported counterexample is the one from the minimum failing plan-batch
+/// index, so the result is independent of both the worker count and the
+/// lane width.
+fn run_plan(design: &Design, plan: &VectorPlan, threads: usize, width: usize) -> EquivReport {
     let comp = CompiledNetlist::compile(&design.netlist);
     let threads = if plan.batches < 8 { 1 } else { threads.max(1).min(plan.batches) };
+    let n_in = design.netlist.num_inputs();
     let next = AtomicUsize::new(0);
     let first_fail = AtomicUsize::new(usize::MAX);
     let failures: Mutex<Vec<(usize, (u128, u128, u128, u128, u128))>> = Mutex::new(Vec::new());
     pool::scoped_workers(threads, |_worker| {
         let mut buf: Vec<u64> = Vec::new();
-        let mut words: Vec<u64> = Vec::new();
-        let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
+        let mut slab: Vec<u64> = Vec::new();
+        let mut batches: Vec<Vec<(u128, u128, u128)>> =
+            (0..width).map(|_| Vec::with_capacity(64)).collect();
         loop {
-            let k = next.fetch_add(1, Ordering::Relaxed);
-            // Claims are monotonic, so every index below a recorded failure
-            // has been claimed by some worker; skipping indices above the
+            let g = next.fetch_add(1, Ordering::Relaxed);
+            let base = g * width;
+            // Group claims are monotonic, so every group at or below the
+            // one holding a recorded failure has been claimed by some
+            // worker; skipping groups whose batches all lie above the
             // current bound can never drop the minimum failing batch.
-            if k >= plan.batches || k > first_fail.load(Ordering::Relaxed) {
+            if base >= plan.batches || base > first_fail.load(Ordering::Relaxed) {
                 break;
             }
-            plan.fill(k, &mut batch);
-            if let Some(cex) = run_batch(design, &comp, &mut buf, &mut words, &batch) {
-                first_fail.fetch_min(k, Ordering::Relaxed);
-                failures.lock().unwrap().push((k, cex));
+            let count = width.min(plan.batches - base);
+            slab.clear();
+            slab.resize(n_in * width, 0);
+            for (w, b) in batches.iter_mut().enumerate().take(count) {
+                plan.fill(base + w, b);
+                pack_operands_wide(design, &mut slab, width, w, b);
+            }
+            for b in batches.iter_mut().skip(count) {
+                b.clear();
+            }
+            comp.run_wide_into(width, &mut buf, &slab);
+            if let Some((w, cex)) = scan_group(design, &buf, width, &batches[..count]) {
+                first_fail.fetch_min(base + w, Ordering::Relaxed);
+                failures.lock().unwrap().push((base + w, cex));
             }
         }
     });
@@ -384,59 +418,57 @@ fn run_plan(design: &Design, plan: &VectorPlan, threads: usize) -> EquivReport {
     }
 }
 
-/// One clocked batch: drive the pipeline from reset with `en = 1,
-/// clr = 0`, hold the operands for `latency` edges, and compare the
-/// filled pipeline's product lanes against the golden model.
-fn run_batch_clocked(
-    design: &Design,
-    sim: &mut ClockedSim<'_>,
-    words: &mut Vec<u64>,
-    batch: &[(u128, u128, u128)],
-    latency: usize,
-) -> Option<(u128, u128, u128, u128, u128)> {
-    let total = design.a.len() + design.b.len() + design.c.len();
-    pack_operands(design, words, batch, 2);
-    words[total] = !0; // pipe_en: run every lane
-    words[total + 1] = 0; // pipe_clr: never clear
-    sim.reset();
-    for _ in 0..latency {
-        sim.step(words);
-    }
-    // The product was latched at edge `latency`; the next sweep's
-    // pre-edge view exposes it.
-    let view = sim.step(words);
-    for (lane, (a, b, c)) in batch.iter().enumerate() {
-        let got = lane_value(view, &design.product, lane as u32);
-        let want = design.expected(*a, *b, *c);
-        if got != want {
-            return Some((*a, *b, *c, got, want));
-        }
-    }
-    None
-}
-
-/// Clocked twin of [`run_plan`]: the same atomic batch cursor, shared
+/// Clocked twin of [`run_plan`]: the same atomic group cursor, shared
 /// fail bound and minimum-failing-batch selection, with each worker
-/// driving its own [`ClockedSim`] over the shared netlist. Deterministic
-/// for every worker count, exactly like the combinational sweep.
-fn run_plan_clocked(design: &Design, plan: &VectorPlan, threads: usize, latency: usize) -> EquivReport {
+/// driving its own wide [`ClockedSim`] over the shared netlist — one
+/// reset + `latency + 1` edges verifies `width` plan batches at once
+/// (every slot's lanes are independent). Deterministic for every worker
+/// count and lane width, exactly like the combinational sweep.
+fn run_plan_clocked(
+    design: &Design,
+    plan: &VectorPlan,
+    threads: usize,
+    width: usize,
+    latency: usize,
+) -> EquivReport {
     let threads = if plan.batches < 8 { 1 } else { threads.max(1).min(plan.batches) };
+    let total = design.a.len() + design.b.len() + design.c.len();
     let next = AtomicUsize::new(0);
     let first_fail = AtomicUsize::new(usize::MAX);
     let failures: Mutex<Vec<(usize, (u128, u128, u128, u128, u128))>> = Mutex::new(Vec::new());
     pool::scoped_workers(threads, |_worker| {
-        let mut sim = ClockedSim::new(&design.netlist);
-        let mut words: Vec<u64> = Vec::new();
-        let mut batch: Vec<(u128, u128, u128)> = Vec::with_capacity(64);
+        let mut sim = ClockedSim::new_wide(&design.netlist, width);
+        let mut slab: Vec<u64> = Vec::new();
+        let mut batches: Vec<Vec<(u128, u128, u128)>> =
+            (0..width).map(|_| Vec::with_capacity(64)).collect();
         loop {
-            let k = next.fetch_add(1, Ordering::Relaxed);
-            if k >= plan.batches || k > first_fail.load(Ordering::Relaxed) {
+            let g = next.fetch_add(1, Ordering::Relaxed);
+            let base = g * width;
+            if base >= plan.batches || base > first_fail.load(Ordering::Relaxed) {
                 break;
             }
-            plan.fill(k, &mut batch);
-            if let Some(cex) = run_batch_clocked(design, &mut sim, &mut words, &batch, latency) {
-                first_fail.fetch_min(k, Ordering::Relaxed);
-                failures.lock().unwrap().push((k, cex));
+            let count = width.min(plan.batches - base);
+            slab.clear();
+            slab.resize((total + 2) * width, 0);
+            for (w, b) in batches.iter_mut().enumerate().take(count) {
+                plan.fill(base + w, b);
+                pack_operands_wide(design, &mut slab, width, w, b);
+                slab[total * width + w] = !0; // pipe_en: run every lane
+                // pipe_clr stays 0: never clear
+            }
+            for b in batches.iter_mut().skip(count) {
+                b.clear();
+            }
+            sim.reset();
+            for _ in 0..latency {
+                sim.step(&slab);
+            }
+            // The product was latched at edge `latency`; the next sweep's
+            // pre-edge view exposes it.
+            sim.step(&slab);
+            if let Some((w, cex)) = scan_group(design, sim.values(), width, &batches[..count]) {
+                first_fail.fetch_min(base + w, Ordering::Relaxed);
+                failures.lock().unwrap().push((base + w, cex));
             }
         }
     });
@@ -595,6 +627,38 @@ mod tests {
         let tm = crate::synth::CompressorTiming::from_lib(&lib);
         let d = MultiplierSpec::new(4).build_with(&lib, &tm).unwrap();
         assert!(check_pipelined(&d, &EquivOptions::default()).is_err());
+    }
+
+    #[test]
+    fn fault_report_identical_across_widths() {
+        let mut d = MultiplierSpec::new(4).build().unwrap();
+        d.product[3] = d.product[4];
+        let base = check_multiplier_opts(&d, &EquivOptions { budget: 1 << 10, threads: 1, width: 1 })
+            .unwrap();
+        assert!(!base.passed);
+        for width in [2usize, 4, 8] {
+            let r =
+                check_multiplier_opts(&d, &EquivOptions { budget: 1 << 10, threads: 3, width })
+                    .unwrap();
+            assert_eq!(r.passed, base.passed, "width {width}");
+            assert_eq!(r.vectors, base.vectors, "width {width}");
+            assert_eq!(r.counterexample, base.counterexample, "width {width}");
+        }
+    }
+
+    #[test]
+    fn pipelined_fault_report_identical_across_widths() {
+        let mut d = build_pipelined(4, 2, false);
+        d.product[3] = d.product[4];
+        let base =
+            check_pipelined(&d, &EquivOptions { budget: 1 << 8, threads: 1, width: 1 }).unwrap();
+        assert!(!base.passed);
+        for width in [2usize, 4, 8] {
+            let r =
+                check_pipelined(&d, &EquivOptions { budget: 1 << 8, threads: 2, width }).unwrap();
+            assert_eq!(r.vectors, base.vectors, "width {width}");
+            assert_eq!(r.counterexample, base.counterexample, "width {width}");
+        }
     }
 
     #[test]

@@ -265,6 +265,25 @@ impl Netlist {
         Netlist { name: name.into(), ..Default::default() }
     }
 
+    /// Reserve capacity for at least `additional` more nodes in the
+    /// per-node arrays (`ops`/`fanin`). Builders that can bound their gate
+    /// count up front (the PPG → CT → CPA pipeline sizes itself from the
+    /// partial-product matrix and the [`crate::ct::StagePlan`] compressor
+    /// counts) call this once so node insertion never reallocates
+    /// mid-build — the dominant allocator cost in `netlist_build_64x64`
+    /// (EXPERIMENTS.md §Perf). Over-estimates only cost transient
+    /// capacity; the estimate does not need to be exact.
+    pub fn reserve(&mut self, additional: usize) {
+        self.ops.reserve(additional);
+        self.fanin.reserve(additional);
+    }
+
+    /// Current node capacity of the per-node arrays (for tests and
+    /// allocation diagnostics).
+    pub fn capacity(&self) -> usize {
+        self.ops.capacity().min(self.fanin.capacity())
+    }
+
     /// Reset the cached topology after a structural edit.
     fn invalidate(&mut self) {
         match self.topo.get_mut() {
@@ -888,6 +907,22 @@ mod tests {
         }
         nl.output("o", prev);
         nl
+    }
+
+    #[test]
+    fn reserve_prevents_growth_during_build() {
+        let mut nl = Netlist::new("reserved");
+        let a = nl.input("a");
+        let b = nl.input("b");
+        nl.reserve(100);
+        let cap = nl.capacity();
+        assert!(cap >= 102);
+        let mut prev = nl.and2(a, b);
+        for _ in 0..99 {
+            prev = nl.xor2(prev, a);
+        }
+        assert_eq!(nl.capacity(), cap, "no reallocation within the reserved budget");
+        assert_eq!(nl.len(), 102);
     }
 
     #[test]

@@ -221,6 +221,14 @@ impl MultiplierSpec {
             vec![]
         };
 
+        // Whole-datapath capacity estimate so the PPG → CT → CPA pipeline
+        // grows the node arrays at most once: ~n·m PPG terms, 5 gates per
+        // 3:2 compressor over ~n·m matrix bits, and ~6 gates per CPA
+        // column. The stage-exact reservations inside `build_ct` /
+        // `cpa::expand` refine this; an over-estimate only costs transient
+        // capacity (EXPERIMENTS.md §Perf, `netlist_build_64x64`).
+        nl.reserve(7 * na * nb + 8 * out_w + 64);
+
         // PPG. A fused MAC produces an (a+b+1)-bit result, so the modular
         // generators (Booth compaction, Baugh–Wooley sign correction) must
         // stay exact one column further.

@@ -173,7 +173,13 @@ pub fn and_array(nl: &mut Netlist, lib: &CellLib, a: &[NodeId], b: &[NodeId]) ->
     let m = b.len();
     assert!(n >= 1 && m >= 1, "and_array needs non-empty operands");
     let d_and = lib.delay_ns(crate::ir::CellKind::And2, 2.0);
-    let mut columns = vec![Vec::new(); n + m - 1];
+    // The array's shape is fully determined: n·m AND gates, column j
+    // holding the parallelogram height. Reserving both up front keeps the
+    // PPG allocation-free past this point (EXPERIMENTS.md §Perf).
+    nl.reserve(n * m);
+    let mut columns: Vec<Vec<Sig>> = (0..n + m - 1)
+        .map(|j| Vec::with_capacity(n.min(m).min(j + 1).min(n + m - 1 - j)))
+        .collect();
     for (i, &ai) in a.iter().enumerate() {
         for (j, &bj) in b.iter().enumerate() {
             let g = nl.and2(ai, bj);
@@ -209,7 +215,18 @@ pub fn and_array_signed(
     let d_nand = lib.delay_ns(crate::ir::CellKind::Nand2, 2.0);
     let modulus = 1u128 << out_cols;
     let mut c_const = 0u128;
-    let mut columns = vec![Vec::new(); out_cols];
+    // n·m product terms plus at most one folded constant node; +1 column
+    // capacity absorbs the Baugh–Wooley constant bits.
+    nl.reserve(n * m + 1);
+    let mut columns: Vec<Vec<Sig>> = (0..out_cols)
+        .map(|j| {
+            Vec::with_capacity(if j < n + m - 1 {
+                n.min(m).min(j + 1).min(n + m - 1 - j) + 1
+            } else {
+                1
+            })
+        })
+        .collect();
     for (i, &ai) in a.iter().enumerate() {
         for (j, &bj) in b.iter().enumerate() {
             let w = i + j;
@@ -301,6 +318,11 @@ pub fn booth4_fmt(
     // Booth digits over b: digit i looks at b[2i+1], b[2i], b[2i-1], with
     // zero extension (unsigned) or sign extension (signed) past the MSB.
     let n_rows = if signed { m.div_ceil(2) } else { m / 2 + 1 };
+    // Per row: 7 digit-decode gates, 4 selector gates per row bit
+    // (`0..=n`), and one sign-compaction inverter; plus the two shared
+    // constants. An upper bound is fine — reserve trades transient
+    // capacity for zero mid-build reallocation.
+    nl.reserve(n_rows * (7 + 4 * (n + 1) + 1) + 2);
     let bit = |idx: isize| -> NodeId {
         if idx < 0 {
             zero
@@ -365,7 +387,10 @@ pub fn booth4_fmt(
     // `−2^{base+n+1}` terms fold into one global constant C injected as
     // constant bits — the standard "(~s) + constant" trick, made exact mod
     // 2^out_cols.
-    let mut columns = vec![Vec::new(); out_cols];
+    // Column height is bounded by the row count plus the per-row
+    // correction and compaction bits that share a column.
+    let mut columns: Vec<Vec<Sig>> =
+        (0..out_cols).map(|_| Vec::with_capacity(n_rows + 2)).collect();
     for (r, row) in rows.iter().enumerate() {
         let base = 2 * r;
         for (k, s) in row.bits.iter().enumerate() {

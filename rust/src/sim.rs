@@ -1,11 +1,25 @@
 //! Bit-parallel netlist simulation.
 //!
-//! Simulates a [`Netlist`] on 64 input vectors at a time by packing one
-//! vector per bit lane of a `u64` word — the classic "parallel pattern"
+//! Simulates a [`Netlist`] on packed input vectors by assigning one vector
+//! per bit lane of a `u64` word — the classic "parallel pattern"
 //! simulation trick. This is the engine behind equivalence checking
 //! ([`crate::equiv`]) and the toggle-based dynamic-power estimate in
 //! [`crate::sta`]; the same levelized evaluation is what the Pallas
 //! `netlist_eval` kernel performs on the PJRT side with u32 lanes.
+//!
+//! ## Wide lanes (EXPERIMENTS.md §Perf)
+//!
+//! The kernel is lane-width-configurable: a node's value is a **block of
+//! `W` consecutive `u64` words** (`W ∈ {1, 2, 4, 8}`, i.e. up to 512
+//! vectors per sweep). All node values live in one contiguous slab with
+//! stride `W` — node `i` occupies `slab[i*W .. (i+1)*W]`, and likewise for
+//! the primary-input slab. The inner loop is monomorphized per width
+//! ([`CompiledNetlist::run_wide_into`] dispatches to a `const W` kernel),
+//! so each opcode's `W`-word sweep is a straight-line, SIMD-friendly loop
+//! over adjacent memory. `W = 1` is byte-identical to the classic 64-lane
+//! layout. Slot `w` of a wide run computes exactly what an independent
+//! 64-lane run over slot `w`'s input words would — widening never changes
+//! results, only how many vectors amortize one topological walk.
 //!
 //! Since the netlist IR itself stores nodes as flat opcode/fanin arrays,
 //! [`CompiledNetlist`] is a **zero-copy borrow** of those arrays — the
@@ -15,6 +29,36 @@
 
 use crate::ir::netlist::{OP_CONST0, OP_CONST1, OP_INPUT, OP_REG};
 use crate::ir::{Netlist, NodeId};
+
+/// Lane widths the monomorphized kernels support (words per node; `W`
+/// words = `64·W` vectors per sweep).
+pub const SUPPORTED_WIDTHS: [usize; 4] = [1, 2, 4, 8];
+
+/// Widest supported lane block (512 vectors per sweep).
+pub const MAX_WIDTH: usize = 8;
+
+/// The process-default lane width for width-agnostic callers (equivalence
+/// sweeps, toggle extraction). Reads `UFO_SIM_WIDTH` (must be one of
+/// [`SUPPORTED_WIDTHS`]); defaults to 4 — wide enough to amortize the
+/// netlist walk, narrow enough that per-worker slabs stay cache-resident.
+/// Every result is width-independent by construction, so this is purely a
+/// throughput knob.
+pub fn default_width() -> usize {
+    match std::env::var("UFO_SIM_WIDTH").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(w) if SUPPORTED_WIDTHS.contains(&w) => w,
+        _ => 4,
+    }
+}
+
+/// Smallest supported lane width whose `64·W` lanes cover `lanes` vectors.
+/// Panics above `64 ·` [`MAX_WIDTH`] (512) vectors.
+pub fn width_for_lanes(lanes: usize) -> usize {
+    let need = lanes.div_ceil(64);
+    *SUPPORTED_WIDTHS
+        .iter()
+        .find(|&&w| w >= need)
+        .unwrap_or_else(|| panic!("{lanes} lanes exceed the {}-lane slab maximum", 64 * MAX_WIDTH))
+}
 
 /// A netlist viewed as a flat instruction stream: one `(op, f0, f1, f2)`
 /// record per node, no per-gate heap indirection. This is a zero-copy
@@ -61,43 +105,125 @@ impl<'a> CompiledNetlist<'a> {
     }
 
     /// Evaluate into `buf` (resized as needed). `input_words[k]` feeds the
-    /// k-th primary input.
+    /// k-th primary input. Equivalent to [`CompiledNetlist::run_wide_into`]
+    /// at width 1.
     pub fn run_into(&self, buf: &mut Vec<u64>, input_words: &[u64]) {
-        assert_eq!(input_words.len(), self.n_inputs, "input word count");
-        if buf.len() != self.ops.len() {
-            buf.resize(self.ops.len(), 0);
+        self.run_wide_into(1, buf, input_words);
+    }
+
+    /// Evaluate `width` 64-lane blocks at once (`width` ∈
+    /// [`SUPPORTED_WIDTHS`]). `input_slab` holds `width` consecutive words
+    /// per primary input (input `k` occupies `input_slab[k*width ..
+    /// (k+1)*width]`); `buf` is resized to `len() * width` with the same
+    /// stride. Slot `w` of every node's block is exactly the value an
+    /// independent [`CompiledNetlist::run_into`] over slot `w`'s input
+    /// words would produce — width never changes results.
+    pub fn run_wide_into(&self, width: usize, buf: &mut Vec<u64>, input_slab: &[u64]) {
+        assert_eq!(input_slab.len(), self.n_inputs * width, "input slab size");
+        if buf.len() != self.ops.len() * width {
+            buf.resize(self.ops.len() * width, 0);
         }
-        let b = buf.as_mut_slice();
+        match width {
+            1 => self.run_w::<1>(buf, input_slab),
+            2 => self.run_w::<2>(buf, input_slab),
+            4 => self.run_w::<4>(buf, input_slab),
+            8 => self.run_w::<8>(buf, input_slab),
+            other => panic!("unsupported lane width {other} (supported: {SUPPORTED_WIDTHS:?})"),
+        }
+    }
+
+    /// The monomorphized stride-`W` sweep: per opcode, a straight-line
+    /// `W`-word loop over adjacent slab memory (SIMD-friendly).
+    fn run_w<const W: usize>(&self, buf: &mut [u64], input_slab: &[u64]) {
+        let p = buf.as_mut_ptr();
+        let inp = input_slab.as_ptr();
+        // SAFETY: the fanin records come straight from a `Netlist` whose
+        // construction (`Netlist::gate`) enforces `fanin < i < len`, so
+        // every `g` read at node `i` targets a block below `i*W` that this
+        // sweep already wrote; input ordinals are bounded by the asserted
+        // `input_slab` length. Reads and the write go through one raw
+        // pointer, so no reference aliasing is involved. Dropping the
+        // bounds checks is worth ~20% on the equivalence-sweep hot loop
+        // (EXPERIMENTS.md §Perf).
+        let g = |k: u32, w: usize| -> u64 { unsafe { *p.add(k as usize * W + w) } };
+        let st = |off: usize, v: u64| unsafe { *p.add(off) = v };
+        let ld = |k: u32, w: usize| -> u64 { unsafe { *inp.add(k as usize * W + w) } };
         for i in 0..self.ops.len() {
             let [f0, f1, f2] = self.fanin[i];
-            // SAFETY: the fanin records come straight from a `Netlist`
-            // whose construction (`Netlist::gate`) enforces `fanin < i <
-            // len`, and input ordinals are bounded by the asserted
-            // `input_words` length. Dropping the bounds checks is worth
-            // ~20% on the equivalence-sweep hot loop (EXPERIMENTS.md §Perf).
-            let v = unsafe {
-                let g = |k: u32| *b.get_unchecked(k as usize);
-                match self.ops[i] {
-                    0 => g(f0),
-                    1 => !g(f0),
-                    2 => g(f0) & g(f1),
-                    3 => g(f0) | g(f1),
-                    4 => !(g(f0) & g(f1)),
-                    5 => !(g(f0) | g(f1)),
-                    6 => g(f0) ^ g(f1),
-                    7 => !(g(f0) ^ g(f1)),
-                    8 => !((g(f0) & g(f1)) | g(f2)),
-                    9 => !((g(f0) | g(f1)) & g(f2)),
-                    10 => {
-                        let (a, bb, c) = (g(f0), g(f1), g(f2));
-                        (a & bb) | (a & c) | (bb & c)
+            let base = i * W;
+            match self.ops[i] {
+                0 => {
+                    for w in 0..W {
+                        st(base + w, g(f0, w));
                     }
-                    OP_CONST0 => 0,
-                    OP_CONST1 => !0,
-                    _ => *input_words.get_unchecked(f0 as usize),
                 }
-            };
-            b[i] = v;
+                1 => {
+                    for w in 0..W {
+                        st(base + w, !g(f0, w));
+                    }
+                }
+                2 => {
+                    for w in 0..W {
+                        st(base + w, g(f0, w) & g(f1, w));
+                    }
+                }
+                3 => {
+                    for w in 0..W {
+                        st(base + w, g(f0, w) | g(f1, w));
+                    }
+                }
+                4 => {
+                    for w in 0..W {
+                        st(base + w, !(g(f0, w) & g(f1, w)));
+                    }
+                }
+                5 => {
+                    for w in 0..W {
+                        st(base + w, !(g(f0, w) | g(f1, w)));
+                    }
+                }
+                6 => {
+                    for w in 0..W {
+                        st(base + w, g(f0, w) ^ g(f1, w));
+                    }
+                }
+                7 => {
+                    for w in 0..W {
+                        st(base + w, !(g(f0, w) ^ g(f1, w)));
+                    }
+                }
+                8 => {
+                    for w in 0..W {
+                        st(base + w, !((g(f0, w) & g(f1, w)) | g(f2, w)));
+                    }
+                }
+                9 => {
+                    for w in 0..W {
+                        st(base + w, !((g(f0, w) | g(f1, w)) & g(f2, w)));
+                    }
+                }
+                10 => {
+                    for w in 0..W {
+                        let (a, bb, c) = (g(f0, w), g(f1, w), g(f2, w));
+                        st(base + w, (a & bb) | (a & c) | (bb & c));
+                    }
+                }
+                OP_CONST0 => {
+                    for w in 0..W {
+                        st(base + w, 0);
+                    }
+                }
+                OP_CONST1 => {
+                    for w in 0..W {
+                        st(base + w, !0);
+                    }
+                }
+                _ => {
+                    for w in 0..W {
+                        st(base + w, ld(f0, w));
+                    }
+                }
+            }
         }
     }
 }
@@ -123,6 +249,15 @@ impl Simulator {
     pub fn run(&mut self, nl: &Netlist, input_words: &[u64]) -> &[u64] {
         let comp = CompiledNetlist::compile(nl);
         comp.run_into(&mut self.words, input_words);
+        &self.words
+    }
+
+    /// Evaluate the netlist on `width` 64-lane blocks at once. The input
+    /// slab and the returned node slab use stride `width` (node `i` at
+    /// `[i*width .. (i+1)*width]`); read lanes with [`wide_lane_value`].
+    pub fn run_wide(&mut self, nl: &Netlist, width: usize, input_slab: &[u64]) -> &[u64] {
+        let comp = CompiledNetlist::compile(nl);
+        comp.run_wide_into(width, &mut self.words, input_slab);
         &self.words
     }
 
@@ -159,13 +294,16 @@ pub struct ClockedSim<'a> {
     ops: &'a [u8],
     fanin: &'a [[u32; 3]],
     n_inputs: usize,
+    /// Lane width: words per node/register block (see [`SUPPORTED_WIDTHS`]).
+    width: usize,
     /// Dense register ordinal per node (`u32::MAX` for non-registers).
     state_ix: Vec<u32>,
     /// Lane-broadcast init word per register (all-ones or all-zeros).
     init_words: Vec<u64>,
-    /// Current register state, one word per register.
+    /// Current register state, `width` words per register (stride `width`).
     state: Vec<u64>,
-    /// Node values of the most recent [`ClockedSim::step`] sweep.
+    /// Node values of the most recent [`ClockedSim::step`] sweep
+    /// (`width` words per node, stride `width`).
     words: Vec<u64>,
     /// Clock edges since the last reset.
     cycles: u64,
@@ -174,8 +312,22 @@ pub struct ClockedSim<'a> {
 impl<'a> ClockedSim<'a> {
     /// Borrow a netlist (sequential or combinational — a register-free
     /// netlist simply has no state and `step` degenerates to one
-    /// combinational sweep per call).
+    /// combinational sweep per call). 64 lanes; see
+    /// [`ClockedSim::new_wide`] for the multi-word variant.
     pub fn new(nl: &'a Netlist) -> Self {
+        Self::new_wide(nl, 1)
+    }
+
+    /// As [`ClockedSim::new`] with `width` 64-lane blocks per node
+    /// (`width` ∈ [`SUPPORTED_WIDTHS`]). All slabs — inputs to
+    /// [`ClockedSim::step`], node values, register state — use stride
+    /// `width`. Each slot's lanes evolve exactly as an independent
+    /// width-1 simulator over that slot's stimulus would.
+    pub fn new_wide(nl: &'a Netlist, width: usize) -> Self {
+        assert!(
+            SUPPORTED_WIDTHS.contains(&width),
+            "unsupported lane width {width} (supported: {SUPPORTED_WIDTHS:?})"
+        );
         let n = nl.len();
         let mut state_ix = vec![u32::MAX; n];
         let mut init_words = Vec::with_capacity(nl.num_regs());
@@ -189,15 +341,19 @@ impl<'a> ClockedSim<'a> {
                 init_words.push(if init { !0u64 } else { 0 });
             }
         }
-        let state = init_words.clone();
+        let mut state = Vec::with_capacity(init_words.len() * width);
+        for &iw in &init_words {
+            state.extend(std::iter::repeat(iw).take(width));
+        }
         ClockedSim {
             ops: nl.ops(),
             fanin: nl.fanin_records(),
             n_inputs: nl.num_inputs(),
+            width,
             state_ix,
             init_words,
             state,
-            words: vec![0u64; n],
+            words: vec![0u64; n * width],
             cycles: 0,
         }
     }
@@ -206,48 +362,57 @@ impl<'a> ClockedSim<'a> {
     /// counter to zero. Node words keep their last sweep (stale until the
     /// next step).
     pub fn reset(&mut self) {
-        self.state.copy_from_slice(&self.init_words);
+        for (six, &iw) in self.init_words.iter().enumerate() {
+            self.state[six * self.width..(six + 1) * self.width].fill(iw);
+        }
         self.cycles = 0;
     }
 
     /// Advance one clock cycle: evaluate the combinational sweep against
-    /// `input_words` (one lane-packed word per primary input, creation
-    /// order) with registers presenting their current state, then latch.
-    /// Returns the node values of the sweep (the *pre-edge* view: a
-    /// register's own word is the state it held during this cycle).
+    /// `input_words` (`width` lane-packed words per primary input, stride
+    /// `width`, creation order) with registers presenting their current
+    /// state, then latch. Returns the node-value slab of the sweep (the
+    /// *pre-edge* view: a register's own block is the state it held during
+    /// this cycle).
     pub fn step(&mut self, input_words: &[u64]) -> &[u64] {
-        assert_eq!(input_words.len(), self.n_inputs, "input word count");
+        let wd = self.width;
+        assert_eq!(input_words.len(), self.n_inputs * wd, "input word count");
         let n = self.ops.len();
         for i in 0..n {
             let [f0, f1, f2] = self.fanin[i];
-            let v = match self.ops[i] {
-                0 => self.words[f0 as usize],
-                1 => !self.words[f0 as usize],
-                2 => self.words[f0 as usize] & self.words[f1 as usize],
-                3 => self.words[f0 as usize] | self.words[f1 as usize],
-                4 => !(self.words[f0 as usize] & self.words[f1 as usize]),
-                5 => !(self.words[f0 as usize] | self.words[f1 as usize]),
-                6 => self.words[f0 as usize] ^ self.words[f1 as usize],
-                7 => !(self.words[f0 as usize] ^ self.words[f1 as usize]),
-                8 => !((self.words[f0 as usize] & self.words[f1 as usize])
-                    | self.words[f2 as usize]),
-                9 => !((self.words[f0 as usize] | self.words[f1 as usize])
-                    & self.words[f2 as usize]),
-                10 => {
-                    let (a, b, c) = (
-                        self.words[f0 as usize],
-                        self.words[f1 as usize],
-                        self.words[f2 as usize],
-                    );
-                    (a & b) | (a & c) | (b & c)
-                }
-                OP_CONST0 => 0,
-                OP_CONST1 => !0,
-                OP_INPUT => input_words[f0 as usize],
-                OP_REG => self.state[self.state_ix[i] as usize],
-                other => panic!("unknown opcode {other} at node {i}"),
-            };
-            self.words[i] = v;
+            let base = i * wd;
+            for w in 0..wd {
+                let v = match self.ops[i] {
+                    0 => self.words[f0 as usize * wd + w],
+                    1 => !self.words[f0 as usize * wd + w],
+                    2 => self.words[f0 as usize * wd + w] & self.words[f1 as usize * wd + w],
+                    3 => self.words[f0 as usize * wd + w] | self.words[f1 as usize * wd + w],
+                    4 => !(self.words[f0 as usize * wd + w] & self.words[f1 as usize * wd + w]),
+                    5 => !(self.words[f0 as usize * wd + w] | self.words[f1 as usize * wd + w]),
+                    6 => self.words[f0 as usize * wd + w] ^ self.words[f1 as usize * wd + w],
+                    7 => !(self.words[f0 as usize * wd + w] ^ self.words[f1 as usize * wd + w]),
+                    8 => !((self.words[f0 as usize * wd + w]
+                        & self.words[f1 as usize * wd + w])
+                        | self.words[f2 as usize * wd + w]),
+                    9 => !((self.words[f0 as usize * wd + w]
+                        | self.words[f1 as usize * wd + w])
+                        & self.words[f2 as usize * wd + w]),
+                    10 => {
+                        let (a, b, c) = (
+                            self.words[f0 as usize * wd + w],
+                            self.words[f1 as usize * wd + w],
+                            self.words[f2 as usize * wd + w],
+                        );
+                        (a & b) | (a & c) | (b & c)
+                    }
+                    OP_CONST0 => 0,
+                    OP_CONST1 => !0,
+                    OP_INPUT => input_words[f0 as usize * wd + w],
+                    OP_REG => self.state[self.state_ix[i] as usize * wd + w],
+                    other => panic!("unknown opcode {other} at node {i}"),
+                };
+                self.words[base + w] = v;
+            }
         }
         // Latch phase: d/en/clr are read from the completed sweep, so a
         // feedback d (later node id) sees this cycle's settled value.
@@ -257,26 +422,39 @@ impl<'a> ClockedSim<'a> {
             }
             let [d, en, clr] = self.fanin[i];
             let six = self.state_ix[i] as usize;
-            let (dv, env, clrv) =
-                (self.words[d as usize], self.words[en as usize], self.words[clr as usize]);
-            let q = self.state[six];
             let iw = self.init_words[six];
-            self.state[six] = (clrv & iw) | (!clrv & ((env & dv) | (!env & q)));
+            for w in 0..wd {
+                let (dv, env, clrv) = (
+                    self.words[d as usize * wd + w],
+                    self.words[en as usize * wd + w],
+                    self.words[clr as usize * wd + w],
+                );
+                let q = self.state[six * wd + w];
+                self.state[six * wd + w] = (clrv & iw) | (!clrv & ((env & dv) | (!env & q)));
+            }
         }
         self.cycles += 1;
         &self.words
     }
 
-    /// Node values of the most recent sweep (index with [`NodeId::index`]).
+    /// Node-value slab of the most recent sweep (stride
+    /// [`ClockedSim::width`]; at width 1, index with [`NodeId::index`]).
     #[inline]
     pub fn values(&self) -> &[u64] {
         &self.words
     }
 
-    /// Packed word for one node after the most recent sweep.
+    /// First packed word (slot 0) for one node after the most recent
+    /// sweep.
     #[inline]
     pub fn word(&self, id: NodeId) -> u64 {
-        self.words[id.index()]
+        self.words[id.index() * self.width]
+    }
+
+    /// Lane width: words per node block.
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
     }
 
     /// Clock edges applied since construction or the last reset.
@@ -302,6 +480,24 @@ pub fn lane_value(words: &[u64], bits: &[NodeId], lane: u32) -> u128 {
     v
 }
 
+/// [`lane_value`] over a stride-`width` node slab: reads lane `lane` of
+/// slot `slot` (`slot < width`) for every output bit. `wide_lane_value(w,
+/// 1, 0, bits, lane)` is exactly `lane_value(w, bits, lane)`.
+pub fn wide_lane_value(
+    words: &[u64],
+    width: usize,
+    slot: usize,
+    bits: &[NodeId],
+    lane: u32,
+) -> u128 {
+    debug_assert!(slot < width);
+    let mut v = 0u128;
+    for (k, b) in bits.iter().enumerate() {
+        v |= u128::from(words[b.index() * width + slot] >> lane & 1) << k;
+    }
+    v
+}
+
 /// Interpret a slice of output nodes as a little-endian **two's-complement**
 /// integer for one specific lane (the MSB is the sign bit) — the signed
 /// counterpart of [`lane_value`] used to verify signed operand formats.
@@ -310,15 +506,24 @@ pub fn lane_value_signed(words: &[u64], bits: &[NodeId], lane: u32) -> i128 {
 }
 
 /// Pack per-lane bit values into input words: `assignments[lane][input]`.
+///
+/// Up to 64 assignments pack into one word per input (the classic layout,
+/// directly usable with [`Simulator::run`]). More than 64 emit a
+/// stride-`W` slab — `W` = [`width_for_lanes`]`(assignments.len())` words
+/// per input, lane `L` in slot `L / 64`, bit `L % 64` — for
+/// [`Simulator::run_wide`] / [`CompiledNetlist::run_wide_into`] at that
+/// width. Panics above `64 ·` [`MAX_WIDTH`] (512) assignments.
 pub fn pack_lanes(assignments: &[Vec<bool>]) -> Vec<u64> {
-    assert!(!assignments.is_empty() && assignments.len() <= 64);
+    assert!(!assignments.is_empty());
+    let width = width_for_lanes(assignments.len());
     let n_inputs = assignments[0].len();
-    let mut words = vec![0u64; n_inputs];
+    let mut words = vec![0u64; n_inputs * width];
     for (lane, assign) in assignments.iter().enumerate() {
         assert_eq!(assign.len(), n_inputs);
-        for (i, bit) in assign.iter().enumerate() {
-            if *bit {
-                words[i] |= 1u64 << lane;
+        let (slot, bit) = (lane / 64, 1u64 << (lane % 64));
+        for (i, b) in assign.iter().enumerate() {
+            if *b {
+                words[i * width + slot] |= bit;
             }
         }
     }
@@ -339,9 +544,29 @@ pub fn pack_lanes(assignments: &[Vec<bool>]) -> Vec<u64> {
 /// rounds — the seed implementation cloned the first round's buffer and
 /// allocated a fresh input-word `Vec` per round (EXPERIMENTS.md §Perf).
 pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
+    toggle_activity_wide(nl, rounds, seed, default_width())
+}
+
+/// [`toggle_activity`] with an explicit lane width: each wide sweep
+/// evaluates up to `width` consecutive 64-lane rounds of the *same*
+/// deterministic xorshift64* stimulus stream (slot `w` of sweep `g` holds
+/// the draws round `g·width + w` would consume), and toggles are counted
+/// between every consecutive round pair — within a sweep slot-to-slot,
+/// and across sweeps via the carried last-round values. The returned
+/// activities are therefore **bit-identical for every width** (pinned by
+/// tests); width only sets how many rounds amortize one netlist walk.
+///
+/// Sequential netlists route through [`clocked_toggle_activity`]
+/// regardless of `width`: cycles form a serial state recurrence, so there
+/// are no independent rounds to batch (see ARCHITECTURE.md §Hot paths).
+pub fn toggle_activity_wide(nl: &Netlist, rounds: usize, seed: u64, width: usize) -> Vec<f64> {
     if nl.is_sequential() {
         return clocked_toggle_activity(nl, rounds, seed);
     }
+    assert!(
+        SUPPORTED_WIDTHS.contains(&width),
+        "unsupported lane width {width} (supported: {SUPPORTED_WIDTHS:?})"
+    );
     let comp = CompiledNetlist::compile(nl);
     let mut state = seed | 1;
     let mut rng = move || {
@@ -352,23 +577,50 @@ pub fn toggle_activity(nl: &Netlist, rounds: usize, seed: u64) -> Vec<f64> {
         state.wrapping_mul(0x2545_F491_4F6C_DD1D)
     };
     let n_in = nl.num_inputs();
-    let mut toggles = vec![0u64; nl.len()];
+    let n = nl.len();
+    let mut toggles = vec![0u64; n];
     let mut total_pairs = 0u64;
     let mut cur: Vec<u64> = Vec::new();
-    let mut prev: Vec<u64> = Vec::new();
-    let mut words = vec![0u64; n_in];
-    for round in 0..rounds {
-        for w in words.iter_mut() {
-            *w = rng();
+    // Last finished round's node words — the cross-sweep toggle partner.
+    let mut prev_last = vec![0u64; n];
+    let mut slab = vec![0u64; n_in * width];
+    let mut done = 0usize;
+    while done < rounds {
+        let cnt = width.min(rounds - done);
+        // Slot w consumes exactly the n_in draws narrow round done+w
+        // would, in the same order — the per-round word streams (and so
+        // the counts) are width-independent.
+        for w in 0..cnt {
+            for k in 0..n_in {
+                slab[k * width + w] = rng();
+            }
         }
-        comp.run_into(&mut cur, &words);
-        if round > 0 {
-            for i in 0..cur.len() {
-                toggles[i] += (cur[i] ^ prev[i]).count_ones() as u64;
+        for w in cnt..width {
+            for k in 0..n_in {
+                slab[k * width + w] = 0;
+            }
+        }
+        comp.run_wide_into(width, &mut cur, &slab);
+        for w in 0..cnt {
+            if done + w == 0 {
+                continue; // the very first round has no predecessor
+            }
+            if w == 0 {
+                for i in 0..n {
+                    toggles[i] += (cur[i * width] ^ prev_last[i]).count_ones() as u64;
+                }
+            } else {
+                for i in 0..n {
+                    toggles[i] +=
+                        (cur[i * width + w] ^ cur[i * width + w - 1]).count_ones() as u64;
+                }
             }
             total_pairs += 64;
         }
-        std::mem::swap(&mut cur, &mut prev);
+        for i in 0..n {
+            prev_last[i] = cur[i * width + cnt - 1];
+        }
+        done += cnt;
     }
     toggles
         .iter()
@@ -607,6 +859,135 @@ mod tests {
         let inputs = nl.inputs();
         for id in inputs {
             assert!((act[id.index()] - 0.5).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn toggle_activity_is_width_independent() {
+        // The wide sweep replays the same per-round RNG stream and counts
+        // the same consecutive-round pairs, so every width reports
+        // bit-identical activities — including rounds that don't divide
+        // the width (trailing partial sweep).
+        let (nl, _) = adder2();
+        for rounds in [0usize, 1, 2, 5, 17, 32] {
+            let narrow = toggle_activity_wide(&nl, rounds, 42, 1);
+            for w in [2usize, 4, 8] {
+                let wide = toggle_activity_wide(&nl, rounds, 42, w);
+                assert_eq!(narrow, wide, "rounds={rounds} width={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_lanes_65_vectors_emits_stride_2_slab() {
+        // Satellite regression: the seed's hard `len <= 64` assert is gone.
+        // 65 assignments need two words per input; lane 64 lands in slot 1
+        // bit 0.
+        let n_inputs = 3;
+        let assigns: Vec<Vec<bool>> = (0..65u32)
+            .map(|v| (0..n_inputs).map(|k| (v >> k) & 1 != 0 || v == 64).collect())
+            .collect();
+        let words = pack_lanes(&assigns);
+        assert_eq!(words.len(), n_inputs * 2, "stride-2 slab");
+        for (lane, assign) in assigns.iter().enumerate() {
+            let (slot, bit) = (lane / 64, lane % 64);
+            for (i, &b) in assign.iter().enumerate() {
+                assert_eq!(words[i * 2 + slot] >> bit & 1 == 1, b, "lane {lane} input {i}");
+            }
+        }
+        // And the slab simulates: all 65 lanes of a wide run agree with
+        // narrow runs over each slot.
+        let (nl, bits) = adder2();
+        let assigns: Vec<Vec<bool>> = (0..65u32)
+            .map(|v| {
+                let v = v % 16;
+                vec![v & 1 != 0, v >> 1 & 1 != 0, v >> 2 & 1 != 0, v >> 3 & 1 != 0]
+            })
+            .collect();
+        let slab = pack_lanes(&assigns);
+        let mut sim = Simulator::new();
+        let vals = sim.run_wide(&nl, 2, &slab).to_vec();
+        for (lane, _) in assigns.iter().enumerate() {
+            let v = (lane % 16) as u32;
+            let got = wide_lane_value(&vals, 2, lane / 64, &bits, (lane % 64) as u32);
+            assert_eq!(got, u128::from((v & 3) + (v >> 2 & 3)), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn wide_run_slots_match_independent_narrow_runs() {
+        // Slot w of a width-W run must be bit-identical to a narrow run
+        // over slot w's input words — the invariant every wide consumer
+        // (equiv, toggle extraction) relies on.
+        let (nl, _) = adder2();
+        let comp = CompiledNetlist::compile(&nl);
+        let mut rng_state = 0x1234_5678_9ABC_DEFFu64;
+        let mut rng = move || {
+            rng_state ^= rng_state >> 12;
+            rng_state ^= rng_state << 25;
+            rng_state ^= rng_state >> 27;
+            rng_state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        let n_in = nl.num_inputs();
+        let blocks: Vec<Vec<u64>> =
+            (0..8).map(|_| (0..n_in).map(|_| rng()).collect()).collect();
+        let mut narrow: Vec<Vec<u64>> = Vec::new();
+        for b in &blocks {
+            let mut buf = Vec::new();
+            comp.run_into(&mut buf, b);
+            narrow.push(buf);
+        }
+        for width in [1usize, 2, 4, 8] {
+            let mut slab = vec![0u64; n_in * width];
+            for (w, b) in blocks.iter().take(width).enumerate() {
+                for (k, &word) in b.iter().enumerate() {
+                    slab[k * width + w] = word;
+                }
+            }
+            let mut buf = Vec::new();
+            comp.run_wide_into(width, &mut buf, &slab);
+            for w in 0..width {
+                for i in 0..nl.len() {
+                    assert_eq!(
+                        buf[i * width + w],
+                        narrow[w][i],
+                        "width {width} slot {w} node {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_clocked_slots_match_independent_narrow_sims() {
+        let (nl, q, _, _) = toggle_ff();
+        // Per-slot stimulus: slot w toggles en/clr with a different phase.
+        let stim: Vec<[Vec<u64>; 2]> = (0..4)
+            .map(|w| {
+                let en: Vec<u64> = (0..6).map(|c| if (c + w) % 2 == 0 { !0u64 } else { 0 }).collect();
+                let clr: Vec<u64> = (0..6).map(|c| if c == 3 + w { !0u64 } else { 0 }).collect();
+                [en, clr]
+            })
+            .collect();
+        // Narrow reference per slot.
+        let mut narrow_q: Vec<Vec<u64>> = Vec::new();
+        for s in &stim {
+            let mut sim = ClockedSim::new(&nl);
+            narrow_q.push((0..6).map(|c| sim.step(&[s[0][c], s[1][c]])[q.index()]).collect());
+        }
+        // One wide sim drives all four slots at once.
+        let mut wide = ClockedSim::new_wide(&nl, 4);
+        assert_eq!(wide.width(), 4);
+        for c in 0..6usize {
+            let mut slab = vec![0u64; 2 * 4];
+            for (w, s) in stim.iter().enumerate() {
+                slab[w] = s[0][c]; // en is input 0
+                slab[4 + w] = s[1][c]; // clr is input 1
+            }
+            let view = wide.step(&slab).to_vec();
+            for w in 0..4 {
+                assert_eq!(view[q.index() * 4 + w], narrow_q[w][c], "cycle {c} slot {w}");
+            }
         }
     }
 }

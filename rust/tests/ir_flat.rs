@@ -4,7 +4,8 @@
 //! identical area/gate-count/depth and byte-identical Verilog and
 //! serialization — across the tier-1 design families. The parallel
 //! equivalence sweep must report the identical counterexample and vector
-//! count for every worker count.
+//! count for every worker count and every lane width, and each slot of a
+//! wide-lane run must match an independent narrow run bit for bit.
 
 use ufo_mac::api::persist::{netlist_from_json, netlist_to_json};
 use ufo_mac::equiv::{self, EquivOptions};
@@ -179,33 +180,38 @@ fn persisted_netlist_roundtrips_from_flat_arrays() {
 
 #[test]
 fn parallel_equiv_reports_identical_counterexamples() {
-    // Inject a fault, then sweep with 1/2/4/7 workers: the counterexample,
-    // the vector count and the exhaustive flag must be identical — the
-    // batch plan and min-index failure selection are worker-count-free.
+    // Inject a fault, then sweep every lane width {1,2,4,8} with 1/2/4/7
+    // workers: the counterexample, the vector count and the exhaustive
+    // flag must be identical across the whole grid — the batch plan and
+    // min-index failure selection are worker-count- and width-free.
     let mut small = MultiplierSpec::new(8).build().unwrap();
     small.product[5] = small.product[6]; // exhaustive path (16 operand bits)
     let mut big = MultiplierSpec::new(16).build().unwrap();
     big.product[9] = big.product[3]; // sampled path (32 operand bits)
     for d in [&small, &big] {
-        let reports: Vec<_> = [1usize, 2, 4, 7]
-            .iter()
-            .map(|&threads| {
-                equiv::check_multiplier_opts(d, &EquivOptions { budget: 4096, threads })
-                    .unwrap()
-            })
-            .collect();
-        let first = &reports[0];
+        let first = equiv::check_multiplier_opts(
+            d,
+            &EquivOptions { budget: 4096, threads: 1, width: 1 },
+        )
+        .unwrap();
         assert!(!first.passed, "{}: fault not detected", d.netlist.name);
         assert!(first.counterexample.is_some());
-        for r in &reports[1..] {
-            assert_eq!(r.passed, first.passed, "{}", d.netlist.name);
-            assert_eq!(r.exhaustive, first.exhaustive, "{}", d.netlist.name);
-            assert_eq!(r.vectors, first.vectors, "{}", d.netlist.name);
-            assert_eq!(
-                r.counterexample, first.counterexample,
-                "{}: counterexample depends on worker count",
-                d.netlist.name
-            );
+        for width in [1usize, 2, 4, 8] {
+            for threads in [1usize, 2, 4, 7] {
+                let r = equiv::check_multiplier_opts(
+                    d,
+                    &EquivOptions { budget: 4096, threads, width },
+                )
+                .unwrap();
+                let ctx = format!("{} w={width} t={threads}", d.netlist.name);
+                assert_eq!(r.passed, first.passed, "{ctx}");
+                assert_eq!(r.exhaustive, first.exhaustive, "{ctx}");
+                assert_eq!(r.vectors, first.vectors, "{ctx}");
+                assert_eq!(
+                    r.counterexample, first.counterexample,
+                    "{ctx}: counterexample depends on width/worker count"
+                );
+            }
         }
     }
 }
@@ -213,12 +219,61 @@ fn parallel_equiv_reports_identical_counterexamples() {
 #[test]
 fn parallel_equiv_matches_serial_on_passing_designs() {
     let d = MultiplierSpec::new(16).fused_mac(true).build().unwrap();
-    let serial =
-        equiv::check_multiplier_opts(&d, &EquivOptions { budget: 2048, threads: 1 }).unwrap();
-    let parallel =
-        equiv::check_multiplier_opts(&d, &EquivOptions { budget: 2048, threads: 4 }).unwrap();
-    assert!(serial.passed && parallel.passed);
-    assert!(!serial.exhaustive && !parallel.exhaustive);
-    assert_eq!(serial.vectors, parallel.vectors);
+    let serial = equiv::check_multiplier_opts(
+        &d,
+        &EquivOptions { budget: 2048, threads: 1, width: 1 },
+    )
+    .unwrap();
+    assert!(serial.passed);
+    assert!(!serial.exhaustive);
     assert!(serial.vectors >= 2048);
+    for width in [1usize, 4, 8] {
+        let parallel = equiv::check_multiplier_opts(
+            &d,
+            &EquivOptions { budget: 2048, threads: 4, width },
+        )
+        .unwrap();
+        assert!(parallel.passed, "w={width}");
+        assert!(!parallel.exhaustive, "w={width}");
+        assert_eq!(serial.vectors, parallel.vectors, "w={width}");
+    }
+}
+
+#[test]
+fn wide_lane_slots_match_narrow_reference_on_tier1_families() {
+    // The width invariant: slot w of a width-W run over a stride-W slab is
+    // bit-identical to an independent 64-lane run over slot w's input
+    // words — for every node, every family, every supported width.
+    let mut rng = Rng::seed_from_u64(0x51DE);
+    for d in families() {
+        let nl = &d.netlist;
+        let comp = CompiledNetlist::compile(nl);
+        let n_in = nl.num_inputs();
+        for width in [2usize, 4, 8] {
+            // Independent random inputs per slot, interleaved stride-W.
+            let per_slot: Vec<Vec<u64>> = (0..width)
+                .map(|_| (0..n_in).map(|_| rng.next_u64()).collect())
+                .collect();
+            let mut slab = vec![0u64; n_in * width];
+            for (w, words) in per_slot.iter().enumerate() {
+                for (k, &word) in words.iter().enumerate() {
+                    slab[k * width + w] = word;
+                }
+            }
+            let mut wide = Vec::new();
+            comp.run_wide_into(width, &mut wide, &slab);
+            for (w, words) in per_slot.iter().enumerate() {
+                let mut narrow = Vec::new();
+                comp.run_into(&mut narrow, words);
+                for i in 0..nl.len() {
+                    assert_eq!(
+                        wide[i * width + w],
+                        narrow[i],
+                        "{}: node {i} slot {w} width {width}",
+                        nl.name
+                    );
+                }
+            }
+        }
+    }
 }

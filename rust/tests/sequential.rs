@@ -262,19 +262,20 @@ fn enable_and_clear_are_per_lane() {
 #[test]
 fn worker_count_never_changes_the_report() {
     let design = MultiplierSpec::new(4).fused_mac(true).pipeline_stages(2).build().unwrap();
-    let reports: Vec<_> = [1usize, 2, 4, 7]
+    let reports: Vec<_> = [(1usize, 1usize), (2, 1), (4, 4), (7, 8)]
         .iter()
-        .map(|&t| {
-            check_pipelined(&design, &EquivOptions { budget: 1 << 8, threads: t }).unwrap()
+        .map(|&(t, w)| {
+            check_pipelined(&design, &EquivOptions { budget: 1 << 8, threads: t, width: w })
+                .unwrap()
         })
         .collect();
     assert!(reports[0].passed && reports[0].exhaustive);
     assert_eq!(reports[0].vectors, 1 << 16, "4+4+8 operand bits sweep exhaustively");
     for (k, r) in reports.iter().enumerate().skip(1) {
-        assert_eq!(r.passed, reports[0].passed, "threads run {k}");
-        assert_eq!(r.vectors, reports[0].vectors, "threads run {k}");
-        assert_eq!(r.exhaustive, reports[0].exhaustive, "threads run {k}");
-        assert_eq!(r.counterexample, reports[0].counterexample, "threads run {k}");
+        assert_eq!(r.passed, reports[0].passed, "threads/width run {k}");
+        assert_eq!(r.vectors, reports[0].vectors, "threads/width run {k}");
+        assert_eq!(r.exhaustive, reports[0].exhaustive, "threads/width run {k}");
+        assert_eq!(r.counterexample, reports[0].counterexample, "threads/width run {k}");
     }
 }
 
@@ -321,10 +322,11 @@ fn injected_fault_counterexample_is_worker_count_independent() {
     design.netlist = nl;
     design.netlist.validate().unwrap();
 
-    let reports: Vec<_> = [1usize, 2, 4, 7]
+    let reports: Vec<_> = [(1usize, 1usize), (2, 2), (4, 4), (7, 8)]
         .iter()
-        .map(|&t| {
-            check_pipelined(&design, &EquivOptions { budget: 1 << 8, threads: t }).unwrap()
+        .map(|&(t, w)| {
+            check_pipelined(&design, &EquivOptions { budget: 1 << 8, threads: t, width: w })
+                .unwrap()
         })
         .collect();
     assert!(!reports[0].passed, "an inverted CPA xor must be caught");
@@ -333,7 +335,7 @@ fn injected_fault_counterexample_is_worker_count_independent() {
         assert_eq!(
             (r.passed, r.vectors, r.counterexample),
             (false, reports[0].vectors, Some(cex)),
-            "threads run {k} must report the identical first failure"
+            "threads/width run {k} must report the identical first failure"
         );
     }
 }
